@@ -1,0 +1,59 @@
+//! The memory-wall experiment (DESIGN.md F5): sweep memory bandwidth and
+//! watch ResNet-50 throughput hit the wall, then show how UniMem pooling
+//! and the cache-hierarchy baseline compare on raw streaming.
+//!
+//! Run: `cargo run --release --example memory_wall_sweep`
+
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::memory::cache::CacheHierarchy;
+use sunrise::memory::dram::Op;
+use sunrise::memory::unimem::UniMemPool;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let net = resnet50();
+
+    // ---- 1. Throughput vs DRAM bandwidth (the wall itself) ----
+    println!("== ResNet-50 throughput vs bonded-DRAM bandwidth (batch 8) ==");
+    println!("{:>12}  {:>10}  {:>8}  {}", "DRAM BW", "img/s", "util %", "bound-by (modal layer)");
+    for bw_tbps in [0.0125, 0.025, 0.05, 0.1, 0.225, 0.45, 0.9, 1.8, 3.6] {
+        let mut cfg = SunriseConfig::default();
+        cfg.dram_bw = bw_tbps * 1e12;
+        let chip = SunriseChip::new(cfg);
+        let s = chip.run(&net, 8);
+        // Most common binding phase across layers.
+        let mut counts = std::collections::BTreeMap::new();
+        for l in &s.layers {
+            *counts.entry(l.bound_by).or_insert(0u32) += 1;
+        }
+        let modal = counts.iter().max_by_key(|(_, c)| **c).map(|(k, _)| *k).unwrap();
+        println!(
+            "{:>9.3} TB/s  {:>10.1}  {:>8.1}  {}",
+            bw_tbps,
+            s.images_per_s(),
+            s.utilization() * 100.0,
+            modal
+        );
+    }
+
+    // ---- 2. UniMem pooling vs arrays (latency hiding, Fig. 5) ----
+    println!("\n== UniMem streaming bandwidth vs pool size (8 MiB stream) ==");
+    for n_arrays in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut pool = UniMemPool::new(n_arrays, 1024);
+        let bw = pool.effective_bandwidth(0, 8 * 1024 * 1024, Op::Read);
+        println!(
+            "  {n_arrays:3} arrays: {:>8.2} GB/s  ({:.0}% of peak)",
+            bw / 1e9,
+            bw / pool.peak_bandwidth() * 100.0
+        );
+    }
+
+    // ---- 3. UniMem vs the cache-hierarchy baseline ----
+    println!("\n== streaming 2 MiB: UniMem pool vs CPU-style cache hierarchy ==");
+    let mut cache = CacheHierarchy::typical();
+    let cache_bw = cache.streaming_bandwidth(0, 2 * 1024 * 1024);
+    let mut pool = UniMemPool::new(16, 1024);
+    let pool_bw = pool.effective_bandwidth(0, 2 * 1024 * 1024, Op::Read);
+    println!("  cache+1ch DRAM: {:>8.2} GB/s (AMAT {:.1} ns)", cache_bw / 1e9, cache.amat_ns());
+    println!("  UniMem 16-pool: {:>8.2} GB/s ({:.1}x)", pool_bw / 1e9, pool_bw / cache_bw);
+}

@@ -1,0 +1,71 @@
+//! The §VII projection experiment: normalize all four chips to 7 nm CMOS +
+//! 1y DRAM (Table VII), print the capacity projections (24 GB / 12 B
+//! params), and show the fabric ablation (HITOC vs TSV vs interposer on
+//! the same architecture).
+//!
+//! Run: `cargo run --release --example process_projection`
+
+use sunrise::analysis::comparison::{comparison_rows, sunrise_lead_factors};
+use sunrise::analysis::report;
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::interconnect::Technology;
+use sunrise::scaling::dram::{project_capacity, DramNode};
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    // ---- Table VII ----
+    println!("{}", report::table7().render());
+
+    let f = sunrise_lead_factors();
+    println!(
+        "Sunrise lead over best competitor (normalized): perf {:.1}x, bw {:.1}x, capacity {:.1}x, efficiency {:.1}x",
+        f.performance, f.bandwidth, f.capacity, f.efficiency
+    );
+    println!("(paper conclusion: \"7 to 20 times better on all major benchmarks\")\n");
+
+    // ---- power-rule detail ----
+    for row in comparison_rows() {
+        let p = &row.projected;
+        println!(
+            "{:8} projected power {:6.1} W{}",
+            row.spec.name,
+            p.projected_power_w,
+            if p.power_limited_steps.is_empty() {
+                String::new()
+            } else {
+                format!("  (power-limited at {})", p.power_limited_steps.join(", "))
+            }
+        );
+    }
+
+    // ---- capacity projections (§VII text) ----
+    println!("\n== memory-capacity projections ==");
+    for (area, node, label) in [
+        (110.0, DramNode::D3x, "Sunrise silicon (110 mm^2, 3x-nm DRAM)"),
+        (800.0, DramNode::D1y, "800 mm^2 die at 1y DRAM (paper: ~24 GB, 12 B params)"),
+    ] {
+        let p = project_capacity(area, node);
+        println!(
+            "  {label}: {:.1} GB, {:.1} B fp16 params",
+            p.capacity_bytes / 1e9,
+            p.params_fp16 / 1e9
+        );
+    }
+
+    // ---- fabric ablation ----
+    println!("\n== same architecture, different 3-D fabric (ResNet-50, batch 8) ==");
+    let net = resnet50();
+    for tech in [Technology::Hitoc, Technology::Tsv, Technology::Interposer] {
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = tech;
+        let chip = SunriseChip::new(cfg);
+        let s = chip.run(&net, 8);
+        println!(
+            "  {:10} {:>10.1} img/s  {:6.2} W  fabric {:.3} TB/s",
+            tech.name(),
+            s.images_per_s(),
+            s.avg_power_w(),
+            (chip.resources.broadcast_bw + chip.resources.collect_bw) / 1e12
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Load the AOT-compiled MLP artifact and run real inference via PJRT
+//!    (the production numerics path — python is not involved).
+//! 2. Run the same model through the Sunrise chip simulator for
+//!    silicon-speed estimates.
+//! 3. Print the paper's headline ResNet-50 numbers.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use sunrise::chip::sunrise::SunriseChip;
+use sunrise::runtime::artifact::Manifest;
+use sunrise::runtime::client::Runtime;
+use sunrise::workloads::{mlp, resnet};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Real numerics through PJRT -----------------------------------
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::load(&dir)?;
+        let model = rt.model("mlp784_b8").expect("mlp784_b8 artifact");
+        let input: Vec<f32> = (0..model.artifact.input_elems())
+            .map(|i| (i % 255) as f32 / 255.0)
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = model.execute(&input)?;
+        let dt = t0.elapsed();
+        println!("PJRT inference: batch 8 MLP -> {} logits in {dt:?}", out.len());
+        println!("  first row: {:?}", &out[..10]);
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT demo)");
+    }
+
+    // --- 2. The same model on the simulated chip --------------------------
+    let chip = SunriseChip::silicon();
+    let s = chip.run(&mlp::quickstart(), 8);
+    println!(
+        "\nSimulated Sunrise, MLP batch 8: {:.1} inferences/s, {:.3} ms latency",
+        s.images_per_s(),
+        s.latency_s() * 1e3
+    );
+
+    // --- 3. The paper's headline -------------------------------------------
+    let net = resnet::resnet50();
+    println!("\nResNet-50 on simulated Sunrise (paper §VI: 1500 img/s, 12 W):");
+    for batch in [1u32, 4, 8, 16] {
+        let s = chip.run(&net, batch);
+        println!(
+            "  batch {batch:2}: {:7.1} img/s  util {:4.1}%  power {:5.2} W",
+            s.images_per_s(),
+            s.utilization() * 100.0,
+            s.avg_power_w()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! End-to-end serving driver (the E2E validation experiment of DESIGN.md):
+//! load the AOT artifacts, start the coordinator with PJRT-backed
+//! replicas, replay a Poisson request trace, and report latency/throughput
+//! — real numerics on the request path, python nowhere in sight.
+//!
+//! Run: `make artifacts && cargo run --release --example serve -- --requests 2000`
+
+use std::time::Duration;
+use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::server::{Server, ServerConfig};
+use sunrise::runtime::artifact::Manifest;
+use sunrise::runtime::executor::{Executor, PjrtExecutor};
+use sunrise::util::cli::Cli;
+use sunrise::util::rng::Rng;
+use sunrise::workloads::generator::poisson_trace;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("serve", "serve the AOT MLP through the coordinator (PJRT replicas)")
+        .opt("requests", "2000", "number of requests to replay")
+        .opt("rate", "4000", "Poisson arrival rate (req/s)")
+        .opt("replicas", "2", "PJRT replicas (worker threads)")
+        .opt("max-batch", "8", "dynamic batcher limit (= artifact batch)")
+        .opt("max-wait-ms", "2", "batcher deadline, ms")
+        .opt("seed", "42", "trace seed")
+        .parse_or_exit();
+
+    let dir = Manifest::default_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let n = args.get_usize("requests");
+    let replicas = args.get_usize("replicas");
+    let model = "mlp784_b8";
+
+    let mut cfg = ServerConfig::default();
+    cfg.batcher = BatcherConfig {
+        max_batch: args.get_usize("max-batch") as u32,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms")),
+    };
+
+    let executors: Vec<Box<dyn Executor>> = (0..replicas)
+        .map(|_| Ok(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>))
+        .collect::<anyhow::Result<_>>()?;
+    let server = Server::start(executors, cfg);
+
+    // Poisson open-loop trace.
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let rate = args.get_f64("rate");
+    let trace = poisson_trace(&mut rng, rate, n as f64 / rate * 1.2 + 1.0, model, 1);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    for req in trace.iter().take(n) {
+        // Open-loop pacing: wait until the request's arrival time.
+        let target = Duration::from_secs_f64(req.arrival_s);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let sample: Vec<f32> = (0..784).map(|i| ((i + submitted) % 255) as f32 / 255.0).collect();
+        server.submit(model, sample);
+        submitted += 1;
+    }
+    let resps = server.collect(submitted, Duration::from_secs(120));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = server.metrics.snapshot();
+    println!("== end-to-end serving (PJRT numerics, {replicas} replicas) ==");
+    println!("requests: {submitted} in {wall:.2}s wall -> {:.1} req/s", submitted as f64 / wall);
+    println!("{}", snap.report());
+    let finite = resps
+        .iter()
+        .all(|r| r.output.iter().all(|v| v.is_finite()));
+    println!("all outputs finite: {finite}");
+    assert!(finite, "non-finite outputs from the artifact");
+    server.shutdown();
+    Ok(())
+}

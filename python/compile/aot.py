@@ -1,0 +1,137 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Run once by `make artifacts`; Python never touches the request path.
+
+HLO *text* (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the rust crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and aot_recipe.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants. The default printer elides big
+    # weight tensors as `constant({...})`, which the rust-side HLO text
+    # parser silently reads back as zeros — every output becomes 0.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and no metadata: jax's printer emits source_end_line/column
+    # attributes that xla_extension 0.5.1's parser rejects.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def build_variants():
+    """(name, fn(x), input_shape, output_shape, n_params, kernel) tuples.
+
+    Weights are baked as constants: the lowered fn closes over params.
+    """
+    key = jax.random.PRNGKey(0)
+    mlp_params = model.init_mlp_params(key)
+    cnn_params = model.init_cnn_params(jax.random.PRNGKey(1))
+    n_mlp = model.n_params(mlp_params)
+    n_cnn = model.n_params(cnn_params)
+
+    variants = []
+    for batch in (1, 8):
+        variants.append(
+            (
+                f"mlp784_b{batch}",
+                lambda x, p=mlp_params: (model.mlp_forward(p, x),),
+                (batch, 784),
+                (batch, 10),
+                n_mlp,
+                "systolic",
+            )
+        )
+    for batch in (1, 4):
+        variants.append(
+            (
+                f"cnn16_b{batch}",
+                lambda x, p=cnn_params: (model.cnn_forward(p, x),),
+                (batch, *model.CNN_IN),
+                (batch, 10),
+                n_cnn,
+                "conv",
+            )
+        )
+    dec_params = model.init_decoder_params(jax.random.PRNGKey(2))
+    variants.append(
+        (
+            "decoder128_b1",
+            lambda x, p=dec_params: (model.decoder_forward(p, x),),
+            (1, model.DEC_SEQ, model.DEC_D),
+            (1, model.DEC_SEQ, model.DEC_D),
+            model.n_params(dec_params),
+            "systolic+attention",
+        )
+    )
+    return variants
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower models to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": []}
+    for name, fn, in_shape, out_shape, n_params, kernel in build_variants():
+        spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["models"].append(
+            {
+                "name": name,
+                "path": path,
+                "batch": in_shape[0],
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+                "n_params": n_params,
+                "kernel": kernel,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest['models'])} models")
+
+    # Golden input/output pairs: the rust integration tests execute each
+    # artifact via PJRT and must match these python-side values exactly
+    # (cross-language numerics check).
+    goldens = {}
+    for name, fn, in_shape, out_shape, _n, _k in build_variants():
+        n_in = 1
+        for d in in_shape:
+            n_in *= d
+        x = (jnp.arange(n_in, dtype=jnp.float32) % 255.0) / 255.0
+        out = jax.jit(fn)(x.reshape(in_shape))[0]
+        goldens[name] = {
+            "input_head": [float(v) for v in x[:4]],
+            "output": [float(v) for v in jnp.ravel(out)[:8]],
+        }
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+    print("wrote golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""L1: im2col convolution on the systolic matmul kernel.
+
+The paper's chip executes convolutions as GEMMs on the VPU pool (the DSU
+broadcasts im2col'd feature columns; weight rows stay stationary). Here
+im2col is plain jnp (it is data movement — the DSU's job, not the MAC
+array's) and the GEMM is the Pallas systolic kernel, so the compute hot
+spot lowers through the same code path as dense layers.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import systolic
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """NHWC → (N·OH·OW, KH·KW·C) patch matrix."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    # Gather patches: (N, OH, OW, KH, KW, C).
+    rows = []
+    for i in range(kh):
+        for j in range(kw):
+            rows.append(
+                xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    patches = jnp.stack(rows, axis=3)  # (N, OH, OW, KH*KW, C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d(x, w, *, stride: int = 1, pad: int = 0):
+    """NHWC conv via im2col + systolic matmul.
+
+    x: (N, H, W, C); w: (KH, KW, C, OC). Returns (N, OH, OW, OC) f32.
+    """
+    kh, kw, c, oc = w.shape
+    cols, (n, oh, ow) = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(kh * kw * c, oc)
+    out = systolic.matmul_auto(cols, wmat)
+    return out.reshape(n, oh, ow, oc)

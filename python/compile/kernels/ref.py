@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every L1 kernel — the CORE correctness signal.
+
+Each function here is the mathematically-obvious implementation; pytest
+(python/tests/test_kernels.py) asserts the Pallas kernels match to float
+tolerance across hypothesis-swept shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    """Reference for systolic.matmul: plain f32-accumulated GEMM."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def bias_act(x, b, relu: bool = True):
+    """Reference for vector_ops.bias_act."""
+    y = x + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def residual_add_relu(x, r):
+    """Reference for vector_ops.residual_add_relu."""
+    return jnp.maximum(x + r, 0.0)
+
+
+def conv2d(x, w, stride: int = 1, pad: int = 0):
+    """Reference for conv.conv2d: lax conv in NHWC/HWIO layout."""
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,120 @@
+"""L1: weight-stationary blocked matmul Pallas kernel.
+
+This is the VPU systolic array of the Sunrise chip as a Pallas kernel. The
+paper's GPU-free mapping (DESIGN.md §Hardware-Adaptation):
+
+- The paper pins weights in each VPU's bonded DRAM and broadcasts feature
+  vectors. Here the *weight block* is the stationary operand: the grid
+  iterates (m, n, k) with the k-minor order, so a given weight tile
+  ``w[k, m]`` is resident in VMEM while the feature tiles stream past —
+  BlockSpec expresses the HBM→VMEM schedule the silicon does with bonded
+  DRAM arrays.
+- Tiles are MXU-shaped (128-lane multiples) so the same kernel structure
+  targets the TPU MXU systolic array; ``interpret=True`` is mandatory on
+  this CPU-only image (real TPU lowering emits a Mosaic custom-call the
+  CPU PJRT plugin cannot execute).
+
+VMEM budget at the default (bm, bk, bn) = (128, 128, 128), f32:
+3 tiles × 128×128×4 B = 196 KiB ≪ 16 MiB/core — deep headroom for
+double-buffering (see EXPERIMENTS.md §Perf L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes.
+BM, BK, BN = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_tiles: int):
+    """One (m, n, k) grid step: o[m, n] += x[m, k] @ w[k, n].
+
+    The k axis is the *minor* grid dimension, so for fixed (m, n) the
+    output tile stays resident while k streams — the accumulator never
+    leaves VMEM (the paper's "all intermediate data are localized in
+    VPUs").
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of input dtype (bf16-in/f32-acc is the
+    # MXU-native mode).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del k_tiles
+
+
+def matmul_tiled(x, w, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Blocked matmul via pallas_call. Requires dims divisible by tiles."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tiles ({bm},{bk},{bn})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_kernel, k_tiles=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-only image: Mosaic custom-calls can't run here
+    )(x, w)
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def pick_tiles(m: int, k: int, n: int, vmem_budget_bytes: int = 4 << 20):
+    """Adaptive tile policy (§Perf L1).
+
+    Grid-loop overhead dominates small problems (interpret-mode Pallas pays
+    a per-step cost; on TPU each grid step is a kernel re-entry), so use
+    whole-dimension blocks whenever the three tiles fit the VMEM budget
+    (x: bm×bk, w: bk×bn, acc: bm×bn, f32). Otherwise fall back to
+    MXU-aligned 128³ streaming blocks. Measured on the serving MLP chain:
+    17.1 ms → 0.43 ms per batch-8 forward (40×) — see EXPERIMENTS.md §Perf.
+    """
+    ceil8 = lambda v: _ceil_to(v, 8)
+    bm, bk, bn = ceil8(m), ceil8(k), ceil8(n)
+    if (bm * bk + bk * bn + bm * bn) * 4 <= vmem_budget_bytes:
+        return bm, bk, bn
+    return BM, BK, BN
+
+
+def matmul_auto(x, w):
+    """Shape-safe matmul with the adaptive tile policy."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = pick_tiles(m, k, n)
+    return matmul(x, w, bm=bm, bk=bk, bn=bn)
+
+
+def matmul(x, w, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Shape-safe weight-stationary matmul: zero-pads to tile multiples,
+    runs the Pallas kernel, slices the result back.
+
+    Padding with zeros is exact for matmul (zero rows/cols contribute
+    nothing), so this wrapper is bit-identical to the unpadded kernel on
+    the valid region.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = matmul_tiled(xp, wp, bm=bm, bk=bk, bn=bn)
+    return out[:m, :n]

@@ -1,0 +1,62 @@
+"""L1: VPU vector-unit post-ops as Pallas kernels.
+
+The Sunrise VPU applies bias/activation/residual on the way out of the MAC
+array (UCE CSR ``MUX_POST_OP``); these kernels are that vector unit.
+Row-blocked 1-D grids; interpret=True (see systolic.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BROWS = 128
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, relu: bool):
+    y = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(y, 0.0) if relu else y
+
+
+def bias_act(x, b, *, relu: bool = True, brows: int = BROWS):
+    """out = relu(x + b) (b broadcast over rows). x: (M, N), b: (N,)."""
+    m, n = x.shape
+    assert b.shape == (n,), f"bias {b.shape} vs width {n}"
+    mp = (m + brows - 1) // brows * brows
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        lambda x_ref, b_ref, o_ref: _bias_act_kernel(x_ref, b_ref, o_ref, relu=relu),
+        grid=(mp // brows,),
+        in_specs=[
+            pl.BlockSpec((brows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((brows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, b)
+    return out[:m]
+
+
+def _residual_kernel(x_ref, r_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + r_ref[...], 0.0)
+
+
+def residual_add_relu(x, r, *, brows: int = BROWS):
+    """out = relu(x + r), elementwise (the bottleneck-block add)."""
+    assert x.shape == r.shape
+    m, n = x.shape
+    mp = (m + brows - 1) // brows * brows
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    rp = jnp.pad(r, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        _residual_kernel,
+        grid=(mp // brows,),
+        in_specs=[
+            pl.BlockSpec((brows, n), lambda i: (i, 0)),
+            pl.BlockSpec((brows, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((brows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, rp)
+    return out[:m]

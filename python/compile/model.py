@@ -1,0 +1,119 @@
+"""L2: model forward passes composed from the L1 kernels.
+
+These are the compute graphs AOT-lowered to the artifacts the Rust
+coordinator serves. Weights are generated deterministically (seeded) and
+*baked into the HLO as constants* — the serving path passes activations
+only, mirroring the silicon where weights are resident in bonded DRAM and
+only features flow in.
+
+Shapes must match rust/src/workloads (the simulator and the artifacts
+describe the same models).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv as conv_kernel
+from compile.kernels import systolic, vector_ops
+
+# The quickstart MLP: 784 -> 512 -> 256 -> 10 (matches workloads::mlp).
+MLP_WIDTHS = (784, 512, 256, 10)
+
+
+def init_mlp_params(key, widths=MLP_WIDTHS):
+    """He-initialized dense weights + zero biases, deterministic per key."""
+    params = []
+    for i, (fin, fout) in enumerate(zip(widths[:-1], widths[1:])):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (fin, fout), jnp.float32) * jnp.sqrt(2.0 / fin)
+        b = jnp.zeros((fout,), jnp.float32)
+        params.append((w, b))
+        del i
+    return params
+
+
+def mlp_forward(params, x):
+    """x: (B, 784) → logits (B, 10). Hidden layers ReLU, output linear."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = systolic.matmul_auto(h, w)
+        h = vector_ops.bias_act(h, b, relu=(i < len(params) - 1))
+    return h
+
+
+# A small CNN: 16x16x3 → conv3x3(16) → conv3x3(32, stride 2) → GAP → dense 10.
+CNN_IN = (16, 16, 3)
+
+
+def init_cnn_params(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "c1": jax.random.normal(k1, (3, 3, 3, 16), jnp.float32) * 0.2,
+        "b1": jnp.zeros((16,), jnp.float32),
+        "c2": jax.random.normal(k2, (3, 3, 16, 32), jnp.float32) * 0.1,
+        "b2": jnp.zeros((32,), jnp.float32),
+        "fc": jax.random.normal(k3, (32, 10), jnp.float32) * 0.3,
+        "fcb": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def cnn_forward(params, x):
+    """x: (B, 16, 16, 3) → logits (B, 10)."""
+    b = x.shape[0]
+    h = conv_kernel.conv2d(x, params["c1"], stride=1, pad=1)
+    h = vector_ops.bias_act(h.reshape(-1, 16), params["b1"]).reshape(h.shape)
+    h = conv_kernel.conv2d(h, params["c2"], stride=2, pad=1)
+    h = vector_ops.bias_act(h.reshape(-1, 32), params["b2"]).reshape(h.shape)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool (DSU reduction)
+    h = systolic.matmul_auto(h, params["fc"])
+    return vector_ops.bias_act(h, params["fcb"], relu=False).reshape(b, 10)
+
+
+# A GPT-style decoder block (the paper's §I NLP motivation): d_model=128,
+# 4 heads, causal attention over seq positions, 4x FFN.
+DEC_D = 128
+DEC_SEQ = 16
+DEC_HEADS = 4
+
+
+def init_decoder_params(key):
+    ks = jax.random.split(key, 6)
+    d = DEC_D
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "qkv": jax.random.normal(ks[0], (d, 3 * d), jnp.float32) * s,
+        "proj": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "up": jax.random.normal(ks[2], (d, 4 * d), jnp.float32) * s,
+        "up_b": jnp.zeros((4 * d,), jnp.float32),
+        "down": jax.random.normal(ks[3], (4 * d, d), jnp.float32) * s / 2.0,
+        "down_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def decoder_forward(params, x):
+    """x: (B, SEQ, D) → (B, SEQ, D). One pre-LN-free decoder block.
+
+    The GEMMs (QKV, proj, FFN) run on the systolic kernel — they are the
+    VPU work; softmax/masking are jnp (the DSU/vector-unit side).
+    """
+    b, s, d = x.shape
+    h = DEC_HEADS
+    hd = d // h
+    flat = x.reshape(b * s, d)
+    qkv = systolic.matmul_auto(flat, params["qkv"]).reshape(b, s, 3, h, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (b, s, h, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+    attn_out = systolic.matmul_auto(ctx, params["proj"])
+    x1 = flat + attn_out  # residual (vector unit)
+    ff = vector_ops.bias_act(systolic.matmul_auto(x1, params["up"]), params["up_b"])
+    ff = systolic.matmul_auto(ff, params["down"]) + params["down_b"][None, :]
+    return (x1 + ff).reshape(b, s, d)
+
+
+def n_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(leaf.size for leaf in leaves))

@@ -1,0 +1,157 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against the reference is
+the core correctness signal for everything the Rust side executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref, systolic, vector_ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+class TestSystolicMatmul:
+    def test_exact_tile_multiple(self):
+        # k=256 spans 2 tiles: accumulation order differs from the oracle's
+        # single dot, so tolerance is float-accumulation-noise sized.
+        x, w = rand(0, (256, 256)), rand(1, (256, 384))
+        got = systolic.matmul(x, w)
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_ragged_shapes_pad_correctly(self):
+        x, w = rand(2, (100, 333)), rand(3, (333, 17))
+        got = systolic.matmul(x, w)
+        assert got.shape == (100, 17)
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_single_row(self):
+        x, w = rand(4, (1, 784)), rand(5, (784, 10))
+        np.testing.assert_allclose(
+            systolic.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_bf16_inputs_accumulate_f32(self):
+        x, w = rand(6, (128, 128), jnp.bfloat16), rand(7, (128, 128), jnp.bfloat16)
+        got = systolic.matmul(x, w)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=2e-2, atol=2e-2)
+
+    def test_custom_small_tiles(self):
+        x, w = rand(8, (64, 64)), rand(9, (64, 64))
+        got = systolic.matmul(x, w, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_zero_input_gives_zero(self):
+        x = jnp.zeros((40, 70))
+        w = rand(10, (70, 30))
+        assert float(jnp.abs(systolic.matmul(x, w)).max()) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 300),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, n, seed):
+        x, w = rand(seed, (m, k)), rand(seed + 1, (k, n))
+        got = systolic.matmul(x, w)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        m=st.integers(1, 96),
+        n=st.integers(1, 96),
+    )
+    def test_hypothesis_dtype_sweep(self, dtype, m, n):
+        x, w = rand(11, (m, 64), dtype), rand(12, (64, n), dtype)
+        got = systolic.matmul(x, w)
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=tol, atol=tol)
+
+
+class TestVectorOps:
+    def test_bias_relu(self):
+        x, b = rand(20, (100, 64)), rand(21, (64,))
+        np.testing.assert_allclose(
+            vector_ops.bias_act(x, b), ref.bias_act(x, b), rtol=1e-6, atol=1e-6
+        )
+
+    def test_bias_linear(self):
+        x, b = rand(22, (7, 10)), rand(23, (10,))
+        got = vector_ops.bias_act(x, b, relu=False)
+        np.testing.assert_allclose(got, ref.bias_act(x, b, relu=False), rtol=1e-6, atol=1e-6)
+        assert float(got.min()) < 0.0  # linear output keeps negatives
+
+    def test_relu_clamps(self):
+        x = jnp.full((5, 8), -3.0)
+        b = jnp.zeros((8,))
+        assert float(jnp.abs(vector_ops.bias_act(x, b)).max()) == 0.0
+
+    def test_residual_add(self):
+        x, r = rand(24, (130, 32)), rand(25, (130, 32))
+        np.testing.assert_allclose(
+            vector_ops.residual_add_relu(x, r),
+            ref.residual_add_relu(x, r),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 300), n=st.integers(1, 128))
+    def test_hypothesis_bias_shapes(self, m, n):
+        x, b = rand(m * 1000 + n, (m, n)), rand(n, (n,))
+        np.testing.assert_allclose(
+            vector_ops.bias_act(x, b), ref.bias_act(x, b), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestConv:
+    @pytest.mark.parametrize(
+        "hw,cin,cout,k,stride,pad",
+        [
+            (8, 3, 8, 3, 1, 1),
+            (16, 3, 16, 3, 2, 1),
+            (8, 4, 4, 1, 1, 0),
+            (10, 2, 6, 5, 1, 2),
+            (9, 3, 5, 3, 2, 1),  # odd spatial
+        ],
+    )
+    def test_conv_matches_lax(self, hw, cin, cout, k, stride, pad):
+        x = rand(30, (2, hw, hw, cin))
+        w = rand(31, (k, k, cin, cout))
+        got = conv.conv2d(x, w, stride=stride, pad=pad)
+        want = ref.conv2d(x, w, stride=stride, pad=pad)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_shape(self):
+        x = rand(32, (2, 8, 8, 3))
+        cols, (n, oh, ow) = conv.im2col(x, 3, 3, 1, 1)
+        assert (n, oh, ow) == (2, 8, 8)
+        assert cols.shape == (2 * 8 * 8, 27)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        hw=st.integers(4, 12),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 8),
+        stride=st.sampled_from([1, 2]),
+    )
+    def test_hypothesis_conv_sweep(self, hw, cin, cout, stride):
+        x = rand(33, (1, hw, hw, cin))
+        w = rand(34, (3, 3, cin, cout))
+        got = conv.conv2d(x, w, stride=stride, pad=1)
+        want = ref.conv2d(x, w, stride=stride, pad=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

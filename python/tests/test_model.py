@@ -1,0 +1,100 @@
+"""L2 model tests: shapes, determinism, and agreement with a plain-jnp
+forward pass (the model built on ref kernels)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def ref_mlp_forward(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = ref.matmul(h, w)
+        h = ref.bias_act(h, b, relu=(i < len(params) - 1))
+    return h
+
+
+class TestMlp:
+    def test_shapes(self):
+        params = model.init_mlp_params(jax.random.PRNGKey(0))
+        x = jnp.ones((8, 784))
+        out = model.mlp_forward(params, x)
+        assert out.shape == (8, 10)
+
+    def test_matches_reference_model(self):
+        params = model.init_mlp_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 784))
+        got = model.mlp_forward(params, x)
+        want = ref_mlp_forward(params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_deterministic_params(self):
+        a = model.init_mlp_params(jax.random.PRNGKey(0))
+        b = model.init_mlp_params(jax.random.PRNGKey(0))
+        for (wa, ba), (wb, bb) in zip(a, b):
+            np.testing.assert_array_equal(wa, wb)
+            np.testing.assert_array_equal(ba, bb)
+
+    def test_param_count_matches_rust_workload(self):
+        # rust workloads::mlp::quickstart: 784*512 + 512*256 + 256*10 weights.
+        params = model.init_mlp_params(jax.random.PRNGKey(0))
+        weights = sum(int(w.size) for w, _ in params)
+        assert weights == 784 * 512 + 512 * 256 + 256 * 10
+
+
+class TestDecoder:
+    def test_shapes_preserved(self):
+        p = model.init_decoder_params(jax.random.PRNGKey(2))
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, model.DEC_SEQ, model.DEC_D))
+        out = model.decoder_forward(p, x)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_causality(self):
+        # Changing a later token must not affect earlier positions.
+        p = model.init_decoder_params(jax.random.PRNGKey(2))
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, model.DEC_SEQ, model.DEC_D))
+        y1 = model.decoder_forward(p, x)
+        x2 = x.at[0, -1].set(x[0, -1] + 10.0)
+        y2 = model.decoder_forward(p, x2)
+        np.testing.assert_allclose(
+            y1[0, : model.DEC_SEQ - 1], y2[0, : model.DEC_SEQ - 1], rtol=1e-4, atol=1e-5
+        )
+        assert not np.allclose(y1[0, -1], y2[0, -1])
+
+    def test_param_count_matches_rust_model(self):
+        # rust workloads::transformer: 12·d² weights per block.
+        p = model.init_decoder_params(jax.random.PRNGKey(2))
+        weights = (
+            int(p["qkv"].size) + int(p["proj"].size) + int(p["up"].size) + int(p["down"].size)
+        )
+        assert weights == 12 * model.DEC_D * model.DEC_D
+
+
+class TestCnn:
+    def test_shapes(self):
+        params = model.init_cnn_params(jax.random.PRNGKey(1))
+        x = jnp.ones((4, *model.CNN_IN))
+        out = model.cnn_forward(params, x)
+        assert out.shape == (4, 10)
+
+    def test_finite_and_input_dependent(self):
+        params = model.init_cnn_params(jax.random.PRNGKey(1))
+        a = model.cnn_forward(params, jnp.zeros((1, *model.CNN_IN)))
+        b = model.cnn_forward(params, jnp.ones((1, *model.CNN_IN)))
+        assert np.isfinite(np.asarray(a)).all() and np.isfinite(np.asarray(b)).all()
+        assert not np.allclose(a, b)
+
+    def test_batch_rows_independent(self):
+        # Row i of a batch must equal the same sample alone (batching is
+        # transparent — what the dynamic batcher relies on).
+        params = model.init_cnn_params(jax.random.PRNGKey(1))
+        x = jax.random.normal(jax.random.PRNGKey(9), (4, *model.CNN_IN))
+        full = model.cnn_forward(params, x)
+        one = model.cnn_forward(params, x[2:3])
+        np.testing.assert_allclose(full[2:3], one, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,109 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization loop —
+//! the simulator's layer scheduler, the event engine, the UniMem pool,
+//! the dynamic batcher, the router, and (when artifacts exist) the PJRT
+//! execute path. Before/after numbers land in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench hotpath_microbench`
+
+use std::time::{Duration, Instant};
+use sunrise::chip::sunrise::SunriseChip;
+use sunrise::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use sunrise::coordinator::request::InferRequest;
+use sunrise::coordinator::router::{Policy, Router};
+use sunrise::memory::dram::Op;
+use sunrise::memory::unimem::UniMemPool;
+use sunrise::runtime::artifact::Manifest;
+use sunrise::sim::engine::{Engine, Scheduler};
+use sunrise::util::bench::Bencher;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- L3 simulator core ---
+    let chip = SunriseChip::silicon();
+    let net = resnet50();
+    b.bench("scheduler: resnet50 full net (b=8)", || chip.run(&net, 8).total_ps);
+    let conv = &net.layers[2];
+    b.bench("scheduler: single conv layer", || {
+        sunrise::dataflow::schedule::schedule_network(
+            std::slice::from_ref(conv),
+            64,
+            8,
+            sunrise::dataflow::mapping::Dataflow::WeightStationary,
+            1,
+            &chip.resources,
+        )
+        .total_ps
+    });
+
+    // --- event engine throughput ---
+    b.bench("sim engine: 10k-event ripple chain", || {
+        struct W {
+            count: u64,
+        }
+        fn tick(w: &mut W, sch: &mut Scheduler<W>) {
+            w.count += 1;
+            if w.count < 10_000 {
+                sch.after(1, tick);
+            }
+        }
+        let mut e: Engine<W> = Engine::new();
+        let mut w = W { count: 0 };
+        e.schedule(0, tick);
+        e.run(&mut w);
+        w.count
+    });
+
+    // --- UniMem pool streaming ---
+    b.bench("unimem: 1 MiB streaming transfer (16 arrays)", || {
+        let mut p = UniMemPool::new(16, 1024);
+        p.transfer(0, 0, 1 << 20, Op::Read).done_at
+    });
+
+    // --- dynamic batcher ---
+    b.bench("batcher: push 64 requests -> 8 batches", || {
+        let mut batcher = DynamicBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+        });
+        let now = Instant::now();
+        let mut dispatched = 0;
+        for i in 0..64u64 {
+            let req = InferRequest::new(i, "m", vec![0.0; 4]);
+            if batcher.push(req, now).is_some() {
+                dispatched += 1;
+            }
+        }
+        dispatched
+    });
+
+    // --- router ---
+    b.bench("router: 1k route+complete (least-loaded, 8 replicas)", || {
+        let mut r = Router::new(Policy::LeastLoaded, 8);
+        for i in 0..1000u64 {
+            let idx = r.route(1 + (i % 16));
+            r.complete(idx, 1 + (i % 16));
+        }
+        r.routed
+    });
+
+    // --- PJRT execute (artifact-gated) ---
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = sunrise::runtime::client::Runtime::load(&dir).expect("artifacts");
+        let m = rt.model("mlp784_b8").expect("mlp784_b8");
+        let input: Vec<f32> = (0..m.artifact.input_elems()).map(|i| (i % 255) as f32 / 255.0).collect();
+        b.bench("pjrt: mlp784_b8 execute", || m.execute(&input).unwrap().len());
+        let m1 = rt.model("mlp784_b1").expect("mlp784_b1");
+        let input1: Vec<f32> = (0..m1.artifact.input_elems()).map(|i| (i % 255) as f32 / 255.0).collect();
+        b.bench("pjrt: mlp784_b1 execute", || m1.execute(&input1).unwrap().len());
+        let cnn = rt.model("cnn16_b4").expect("cnn16_b4");
+        let ci: Vec<f32> = (0..cnn.artifact.input_elems()).map(|i| (i % 255) as f32 / 255.0).collect();
+        b.bench("pjrt: cnn16_b4 execute", || cnn.execute(&ci).unwrap().len());
+    } else {
+        println!("(artifacts missing — PJRT benches skipped; run `make artifacts`)");
+    }
+
+    b.summary("hotpath_microbench");
+}

@@ -1,0 +1,65 @@
+//! Bench: the paper's §VI headline — ResNet-50 at 1500 img/s on the
+//! simulated Sunrise silicon — as a batch sweep, a fabric ablation
+//! (HITOC / TSV / interposer), a dataflow ablation (weight- vs
+//! output-stationary), and a bandwidth sweep locating the memory wall.
+//!
+//! Run: `cargo bench --bench resnet50_throughput`
+
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::dataflow::mapping::Dataflow;
+use sunrise::interconnect::Technology;
+use sunrise::util::bench::Bencher;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let net = resnet50();
+    let chip = SunriseChip::silicon();
+
+    println!("== batch sweep (paper: 1500 img/s, 12 W typical) ==");
+    println!("{:>6} {:>10} {:>8} {:>8} {:>9}", "batch", "img/s", "util%", "power W", "ms/batch");
+    let mut at8 = 0.0;
+    for batch in [1u32, 2, 4, 8, 16, 32] {
+        let s = chip.run(&net, batch);
+        if batch == 8 {
+            at8 = s.images_per_s();
+        }
+        println!(
+            "{batch:>6} {:>10.1} {:>8.1} {:>8.2} {:>9.3}",
+            s.images_per_s(),
+            s.utilization() * 100.0,
+            s.avg_power_w(),
+            s.latency_s() * 1e3
+        );
+    }
+    assert!(at8 > 1100.0 && at8 < 2000.0, "batch-8 throughput {at8} vs paper 1500");
+
+    println!("\n== fabric ablation (batch 8) ==");
+    for tech in [Technology::Hitoc, Technology::Tsv, Technology::Interposer] {
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = tech;
+        let s = SunriseChip::new(cfg).run(&net, 8);
+        println!("  {:10} {:>10.1} img/s  {:6.2} W", tech.name(), s.images_per_s(), s.avg_power_w());
+    }
+
+    println!("\n== dataflow ablation (batch 8) ==");
+    for (name, flow) in [
+        ("weight-stationary", Dataflow::WeightStationary),
+        ("output-stationary", Dataflow::OutputStationary),
+    ] {
+        let s = chip.run_with_flow(&net, 8, flow);
+        let wgb: f64 = s.layers.iter().map(|l| l.traffic.weight_bytes as f64).sum::<f64>() / 1e9;
+        println!("  {name:18} {:>10.1} img/s  weight traffic {:.2} GB/batch", s.images_per_s(), wgb);
+    }
+
+    println!("\n== DRAM bandwidth sweep: locating the memory wall (batch 8) ==");
+    for bw in [0.0125f64, 0.05, 0.225, 0.9, 1.8, 3.6] {
+        let mut cfg = SunriseConfig::default();
+        cfg.dram_bw = bw * 1e12;
+        let s = SunriseChip::new(cfg).run(&net, 8);
+        println!("  {bw:>7.4} TB/s: {:>9.1} img/s", s.images_per_s());
+    }
+
+    let mut b = Bencher::new();
+    b.bench("resnet50 schedule (b=8)", || chip.run(&net, 8).total_ps);
+    b.summary("resnet50_throughput");
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate paper Table I (Interposer / TSV / HITOC data paths)
+//! plus the §III energy calibration, and time the link models.
+//!
+//! Run: `cargo bench --bench table1_interconnect`
+
+use sunrise::analysis::report;
+use sunrise::interconnect::link::Link;
+use sunrise::interconnect::technology::{Technology, PAPER_TABLE_I};
+use sunrise::util::bench::Bencher;
+
+fn main() {
+    println!("{}", report::table1().render());
+
+    // Shape assertions: the paper's density jumps must reproduce.
+    let density = |t: Technology| t.params().wire_density_per_mm2();
+    let d_i = density(Technology::Interposer);
+    let d_t = density(Technology::Tsv);
+    let d_h = density(Technology::Hitoc);
+    println!("density jumps: TSV/interposer = {:.0}x, HITOC/TSV = {:.0}x", d_t / d_i, d_h / d_t);
+    assert!(d_t / d_i > 100.0 && d_h / d_t > 50.0);
+
+    println!("\npaper bandwidth column (its own units): {:?} TB/s", PAPER_TABLE_I.map(|r| r.bandwidth_tb_s));
+
+    // Energy per GB across technologies.
+    println!("\nenergy to move 1 GB across the stack:");
+    for tech in [Technology::Interposer, Technology::Tsv, Technology::Hitoc] {
+        let l = Link::from_area("x", tech, 1.0);
+        println!("  {:10} {:>9.4} J", tech.name(), l.transfer_energy_j(1e9));
+    }
+
+    // Micro-bench the models themselves (they sit on the sim hot path).
+    let mut b = Bencher::new();
+    b.bench("link::from_area(hitoc)", || {
+        Link::from_area("bench", Technology::Hitoc, 1.0).bandwidth_bytes()
+    });
+    let link = Link::from_area("bench", Technology::Hitoc, 1.0);
+    b.bench("link::transfer_time+energy", || {
+        (link.transfer_time_s(1e6), link.transfer_energy_j(1e6))
+    });
+    b.summary("table1_interconnect");
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Table II (die-level specs) and validate the
+//! simulated Sunrise silicon against its own row — 25 TOPS, 1.8 TB/s,
+//! 562.5 MB, ~12 W, 1500 img/s ResNet-50.
+//!
+//! Run: `cargo bench --bench table2_chip_benchmarks`
+
+use sunrise::analysis::report;
+use sunrise::chip::sunrise::SunriseChip;
+use sunrise::util::bench::Bencher;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    println!("{}", report::table2().render());
+
+    let chip = SunriseChip::silicon();
+    let net = resnet50();
+    let s = chip.run(&net, 8);
+    println!("simulated Sunrise vs its Table II row:");
+    println!("  peak TOPS      {:8.2}   (paper 25)", chip.peak_tops());
+    println!("  memory MB      {:8.1}   (paper 560)", chip.memory_mb());
+    println!(
+        "  DRAM BW TB/s   {:8.2}   (paper 1.8)",
+        (chip.resources.weight_pool_bw + chip.resources.dsu_pool_bw) / 1e12
+    );
+    println!("  ResNet50 img/s {:8.1}   (paper 1500)", s.images_per_s());
+    println!("  power W        {:8.2}   (paper 12 typical)", s.avg_power_w());
+    assert!((chip.peak_tops() - 25.0).abs() < 1e-6);
+    assert!(s.images_per_s() > 1100.0 && s.images_per_s() < 2000.0);
+    assert!(s.avg_power_w() > 8.0 && s.avg_power_w() < 16.0);
+
+    // Time the full-network scheduler (the simulator's core op).
+    let mut b = Bencher::new();
+    b.bench("schedule resnet50 batch=8", || chip.run(&net, 8).total_ps);
+    b.bench("schedule resnet50 batch=1", || chip.run(&net, 1).total_ps);
+    let mini = sunrise::workloads::resnet::resnet_mini();
+    b.bench("schedule resnet_mini batch=8", || chip.run(&mini, 8).total_ps);
+    b.summary("table2_chip_benchmarks");
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table III (die-to-die normalized comparison)
+//! and assert the paper's §VI claims about who wins what.
+//!
+//! Run: `cargo bench --bench table3_die_normalized`
+
+use sunrise::analysis::comparison::comparison_rows;
+use sunrise::analysis::report;
+use sunrise::util::bench::Bencher;
+
+fn main() {
+    println!("{}", report::table3().render());
+
+    let rows = comparison_rows();
+    let s = &rows[0].die;
+    // §VI: Sunrise wins capacity + efficiency; loses peak perf to C and
+    // bandwidth to A.
+    assert!(rows[1..].iter().all(|r| s.mem_mb_per_mm2 > r.die.mem_mb_per_mm2));
+    assert!(rows[1..].iter().all(|r| s.tops_per_w > r.die.tops_per_w));
+    assert!(rows[3].die.tops_per_mm2 > s.tops_per_mm2, "chip C wins peak perf");
+    assert!(
+        rows[1].die.bw_gbps_per_mm2.unwrap() > s.bw_gbps_per_mm2.unwrap(),
+        "chip A wins bandwidth"
+    );
+    println!("§VI claims verified: Sunrise wins capacity ({:.2} MB/mm2) and efficiency ({:.2} TOPS/W)",
+        s.mem_mb_per_mm2, s.tops_per_w);
+
+    let mut b = Bencher::new();
+    b.bench("comparison_rows (tables II+III+VII)", || comparison_rows().len());
+    b.summary("table3_die_normalized");
+}

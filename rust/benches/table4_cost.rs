@@ -1,0 +1,49 @@
+//! Bench: regenerate paper Table IV (NRE / die cost / $-per-TOPS) from the
+//! wafer-economics model, with a yield-curve sweep and the DRAM-repair
+//! yield experiment (§V) that underwrites the two-wafer stack's cost.
+//!
+//! Run: `cargo bench --bench table4_cost`
+
+use sunrise::analysis::report;
+use sunrise::memory::repair::repair_yield;
+use sunrise::scaling::cost::{gross_dies_per_wafer, hitoc_stack_cost, murphy_yield, single_wafer_cost};
+use sunrise::scaling::process::Node;
+use sunrise::util::bench::Bencher;
+
+fn main() {
+    println!("{}", report::table4().render());
+
+    // Paper's ordering claims: Sunrise best $/TOPS despite oldest node.
+    let sun = hitoc_stack_cost("sunrise", Node::N40, 110.0, 25.0);
+    for (n, a, t) in [(Node::N16, 800.0, 122.0), (Node::N12, 709.0, 125.0), (Node::N7, 456.0, 512.0)] {
+        let r = single_wafer_cost("x", n, a, t);
+        assert!(sun.cost_per_tops_usd < r.cost_per_tops_usd);
+        assert!(sun.die_cost_usd < r.die_cost_usd);
+        assert!(sun.nre_usd < r.nre_usd);
+    }
+    println!("ordering verified: Sunrise cheapest on NRE, die cost and $/TOPS\n");
+
+    // Yield curve: why big dies on young nodes are expensive.
+    println!("Murphy yield vs die area (D0 = 0.25 /cm^2):");
+    for area in [50.0, 110.0, 200.0, 456.0, 709.0, 800.0] {
+        println!(
+            "  {area:>5.0} mm^2: yield {:5.1}%  gross {:4.0} dies/wafer",
+            murphy_yield(area, 0.25) * 100.0,
+            gross_dies_per_wafer(area)
+        );
+    }
+
+    // §V DRAM repair: the knob that keeps the memory wafer yielding.
+    println!("\nDRAM-repair yield (4096 arrays x 1024 rows, defect 1e-6/row):");
+    for spares in [0u32, 1, 2, 4] {
+        println!(
+            "  {spares} spare rows/array: {:5.1}% of chips repairable",
+            repair_yield(7, 40, 4096, 1024, 1e-6, spares) * 100.0
+        );
+    }
+
+    let mut b = Bencher::new();
+    b.bench("hitoc_stack_cost", || hitoc_stack_cost("s", Node::N40, 110.0, 25.0).die_cost_usd);
+    b.bench("repair_yield(10 trials)", || repair_yield(7, 10, 1024, 1024, 1e-6, 4));
+    b.summary("table4_cost");
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate paper Table VII (all chips normalized to 7 nm CMOS +
+//! 1y DRAM) with the Table V/VI scaling chains, assert the paper's
+//! conclusion ordering, and report where our re-derivation differs from
+//! the paper's own (internally inconsistent) rows.
+//!
+//! Run: `cargo bench --bench table7_projection`
+
+use sunrise::analysis::comparison::{comparison_rows, sunrise_lead_factors};
+use sunrise::analysis::report;
+use sunrise::scaling::normalize::PAPER_TABLE_VII;
+use sunrise::util::bench::Bencher;
+
+fn main() {
+    println!("{}", report::table7().render());
+
+    // The paper's headline: normalized, Sunrise surpasses all chips on all
+    // benchmarks.
+    let rows = comparison_rows();
+    let s = &rows[0].projected.metrics;
+    for r in &rows[1..] {
+        let o = &r.projected.metrics;
+        assert!(s.tops_per_mm2 > o.tops_per_mm2, "perf vs {}", r.spec.name);
+        assert!(s.mem_mb_per_mm2 > o.mem_mb_per_mm2, "capacity vs {}", r.spec.name);
+        assert!(s.tops_per_w > o.tops_per_w, "efficiency vs {}", r.spec.name);
+        if let (Some(sb), Some(ob)) = (s.bw_gbps_per_mm2, o.bw_gbps_per_mm2) {
+            assert!(sb > ob, "bandwidth vs {}", r.spec.name);
+        }
+    }
+    println!("Table VII ordering verified: Sunrise leads every metric after normalization");
+
+    let f = sunrise_lead_factors();
+    println!(
+        "lead factors: perf {:.1}x  bw {:.1}x  capacity {:.1}x  efficiency {:.1}x  (paper: 7-20x)",
+        f.performance, f.bandwidth, f.capacity, f.efficiency
+    );
+
+    // Model-vs-paper deltas (the exactly-derivable cells must be tight).
+    println!("\nmodel vs paper per cell (ratio model/paper):");
+    for (row, paper) in rows.iter().zip(PAPER_TABLE_VII.iter()) {
+        let m = &row.projected.metrics;
+        let bw = match (m.bw_gbps_per_mm2, paper.bw_gbps_per_mm2) {
+            (Some(a), Some(b)) => format!("{:.2}", a / b),
+            _ => "n/a".to_string(),
+        };
+        println!(
+            "  {:8} perf {:.2}  bw {}  cap {:.2}  eff {:.2}",
+            paper.name,
+            m.tops_per_mm2 / paper.tops_per_mm2,
+            bw,
+            m.mem_mb_per_mm2 / paper.mem_mb_per_mm2,
+            m.tops_per_w / paper.tops_per_w,
+        );
+    }
+    // Exactly-derivable cells: Sunrise bandwidth (x13.2) and capacity (x5.93).
+    let sun = &rows[0].projected.metrics;
+    assert!((sun.bw_gbps_per_mm2.unwrap() - 216.0).abs() / 216.0 < 0.01);
+    assert!((sun.mem_mb_per_mm2 - 30.3).abs() / 30.3 < 0.01);
+
+    let mut b = Bencher::new();
+    b.bench("project all chips to 7nm", || {
+        comparison_rows().iter().map(|r| r.projected.metrics.tops_per_w).sum::<f64>()
+    });
+    b.summary("table7_projection");
+}

@@ -1,0 +1,10 @@
+//! Analysis + reporting: the code that regenerates the paper's tables.
+//!
+//! - [`comparison`] — Tables II/III (die-level and die-normalized rows).
+//! - [`roofline`] — arithmetic-intensity roofline for the Sunrise config
+//!   (where the memory wall sits, and why 1.8 TB/s clears it).
+//! - [`report`] — table renderers shared by the benches and examples.
+
+pub mod comparison;
+pub mod report;
+pub mod roofline;

@@ -1,0 +1,163 @@
+//! Table renderers for the paper's tables — shared by the benches, the
+//! `sunrise report` subcommand, and the integration tests (which parse the
+//! cells back).
+
+use crate::analysis::comparison::comparison_rows;
+use crate::interconnect::technology::{
+    Technology, PAPER_TABLE_I, TABLE1_CONN_FRAC, TABLE1_DIE_MM2, TABLE1_FREQ_HZ,
+};
+use crate::scaling::cost::{hitoc_stack_cost, single_wafer_cost, PAPER_TABLE_IV};
+use crate::scaling::normalize::PAPER_TABLE_VII;
+use crate::scaling::process::Node;
+use crate::util::table::{sci, sig3, Table};
+
+/// Table I: interconnect comparison (computed next to paper values).
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — Data path comparisons (100 mm² die, 1% connect area, 1 GHz)",
+        &["", "Pitch (um)", "Density (/mm2)", "BW (Tb/s)", "pJ/b", "paper density", "paper pJ/b"],
+    );
+    let area = TABLE1_DIE_MM2 * TABLE1_CONN_FRAC;
+    for (tech, paper) in [
+        (Technology::Interposer, &PAPER_TABLE_I[0]),
+        (Technology::Tsv, &PAPER_TABLE_I[1]),
+        (Technology::Hitoc, &PAPER_TABLE_I[2]),
+    ] {
+        let p = tech.params();
+        t.row(&[
+            tech.name().to_string(),
+            sig3(p.pitch_um),
+            sci(p.wire_density_per_mm2()),
+            sig3(p.bandwidth_bits(area, TABLE1_FREQ_HZ) / 1e12),
+            sig3(p.energy_pj_per_bit()),
+            sci(paper.density_per_mm2),
+            sig3(paper.energy_pj_per_bit),
+        ]);
+    }
+    t
+}
+
+/// Table II: die-level specs.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II — Benchmark results (die level)",
+        &["", "Process", "Die (mm2)", "TOPS", "Mem (MB)", "Power (W)", "BW (TB/s)"],
+    );
+    for row in comparison_rows() {
+        let s = &row.spec;
+        t.row(&[
+            s.name.clone(),
+            format!("{}", s.logic_node),
+            sig3(s.die_mm2),
+            sig3(s.peak_tops),
+            sig3(s.memory_mb),
+            sig3(s.power_w),
+            s.bandwidth_tbps.map(sig3).unwrap_or_else(|| "no data".into()),
+        ]);
+    }
+    t
+}
+
+/// Table III: die-normalized comparison.
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table III — Die-to-die benchmark comparisons",
+        &["", "TOPS/mm2", "BW (GB/s/mm2)", "Mem (MB/mm2)", "TOPS/W"],
+    );
+    for row in comparison_rows() {
+        t.row(&[
+            row.spec.name.clone(),
+            sig3(row.die.tops_per_mm2),
+            row.die.bw_gbps_per_mm2.map(sig3).unwrap_or_else(|| "no data".into()),
+            sig3(row.die.mem_mb_per_mm2),
+            sig3(row.die.tops_per_w),
+        ]);
+    }
+    t
+}
+
+/// Table IV: cost comparison (model next to paper values).
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table IV — Cost comparison (USD)",
+        &["", "NRE", "Die Cost", "$/TOPS", "paper NRE", "paper die", "paper $/TOPS"],
+    );
+    let reports = [
+        hitoc_stack_cost("SUNRISE (40nm)", Node::N40, 110.0, 25.0),
+        single_wafer_cost("Chip A (16nm)", Node::N16, 800.0, 122.0),
+        single_wafer_cost("Chip B (12nm)", Node::N12, 709.0, 125.0),
+        single_wafer_cost("Chip C (7nm)", Node::N7, 456.0, 512.0),
+    ];
+    for (r, p) in reports.iter().zip(PAPER_TABLE_IV.iter()) {
+        t.row(&[
+            r.name.clone(),
+            sci(r.nre_usd),
+            sig3(r.die_cost_usd),
+            sig3(r.cost_per_tops_usd),
+            sci(p.nre_usd),
+            sig3(p.die_cost_usd),
+            sig3(p.cost_per_tops_usd),
+        ]);
+    }
+    t
+}
+
+/// Table VII: normalized-to-7nm projection (model next to paper values).
+pub fn table7() -> Table {
+    let mut t = Table::new(
+        "Table VII — Benchmarks normalized to 7nm CMOS + 1y DRAM",
+        &["", "TOPS/mm2", "BW (GB/s/mm2)", "Mem (MB/mm2)", "TOPS/W", "paper TOPS/mm2", "paper TOPS/W"],
+    );
+    for (row, paper) in comparison_rows().iter().zip(PAPER_TABLE_VII.iter()) {
+        let m = &row.projected.metrics;
+        t.row(&[
+            row.spec.name.clone(),
+            sig3(m.tops_per_mm2),
+            m.bw_gbps_per_mm2.map(sig3).unwrap_or_else(|| "no data".into()),
+            sig3(m.mem_mb_per_mm2),
+            sig3(m.tops_per_w),
+            sig3(paper.tops_per_mm2),
+            sig3(paper.tops_per_w),
+        ]);
+    }
+    t
+}
+
+/// All tables rendered together (the `sunrise report` command).
+pub fn full_report() -> String {
+    [table1(), table2(), table3(), table4(), table7()]
+        .iter()
+        .map(Table::render)
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_have_expected_rows() {
+        assert_eq!(table1().num_rows(), 3);
+        assert_eq!(table2().num_rows(), 4);
+        assert_eq!(table3().num_rows(), 4);
+        assert_eq!(table4().num_rows(), 4);
+        assert_eq!(table7().num_rows(), 4);
+    }
+
+    #[test]
+    fn table3_sunrise_row_matches_paper() {
+        let t = table3();
+        assert_eq!(t.cell(0, 1), "0.227"); // 25/110
+        assert_eq!(t.cell(0, 4), "2.08"); // 25/12
+        assert_eq!(t.cell(2, 2), "no data"); // chip B bandwidth
+    }
+
+    #[test]
+    fn report_renders_all_titles() {
+        let r = full_report();
+        for title in ["Table I", "Table II", "Table III", "Table IV", "Table VII"] {
+            assert!(r.contains(title), "missing {title}");
+        }
+    }
+}

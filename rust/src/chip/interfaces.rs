@@ -1,0 +1,131 @@
+//! Host interfaces (paper §V): "There are two chip interfaces. One is a
+//! standard SPI interface, and the other is a proprietary high-speed-port
+//! (HSP) interface. SPI is for the host to transfer commands to the chip.
+//! The HSP interface is for data transfer with a transfer rate of
+//! 200 MB/s."
+
+use crate::memory::Ps;
+
+/// SPI command opcodes (host → chip).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpiCommand {
+    /// Load firmware into the 13-bit core's IMEM.
+    LoadFirmware,
+    /// Start the control processor.
+    Start,
+    /// Read a status register.
+    ReadStatus,
+    /// Soft reset.
+    Reset,
+    /// Read back the NVM defect table.
+    ReadNvm,
+}
+
+/// SPI link model: command+payload frames at SPI clock rate.
+#[derive(Debug, Clone)]
+pub struct SpiPort {
+    /// SPI clock, Hz (mode-0, single data line).
+    pub clock_hz: f64,
+    busy_until: Ps,
+    pub frames: u64,
+}
+
+impl Default for SpiPort {
+    fn default() -> Self {
+        SpiPort {
+            clock_hz: 50e6, // 50 MHz SPI
+            busy_until: 0,
+            frames: 0,
+        }
+    }
+}
+
+impl SpiPort {
+    /// Send a command with `payload_bytes`; returns completion time.
+    /// Frame = 1 cmd byte + 3 addr bytes + payload, one bit per clock.
+    pub fn send(&mut self, now: Ps, _cmd: SpiCommand, payload_bytes: u64) -> Ps {
+        let bits = (4 + payload_bytes) * 8;
+        let dur = (bits as f64 / self.clock_hz * 1e12).ceil() as Ps;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + dur;
+        self.frames += 1;
+        self.busy_until
+    }
+}
+
+/// HSP data port: 200 MB/s bulk transfer (the chip's data umbilical).
+#[derive(Debug, Clone)]
+pub struct HspPort {
+    pub bytes_per_s: f64,
+    busy_until: Ps,
+    pub bytes_moved: u64,
+}
+
+impl Default for HspPort {
+    fn default() -> Self {
+        HspPort {
+            bytes_per_s: 200e6,
+            busy_until: 0,
+            bytes_moved: 0,
+        }
+    }
+}
+
+impl HspPort {
+    /// Transfer `bytes`; returns completion time.
+    pub fn transfer(&mut self, now: Ps, bytes: u64) -> Ps {
+        let dur = (bytes as f64 / self.bytes_per_s * 1e12).ceil() as Ps;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + dur;
+        self.bytes_moved += bytes;
+        self.busy_until
+    }
+
+    /// Time to upload a model's weights (the deployment-time cost of the
+    /// slow host port — weights load once, then inference is self-
+    /// contained; the paper's architecture makes this a non-issue).
+    pub fn weight_upload_s(&self, weight_bytes: u64) -> f64 {
+        weight_bytes as f64 / self.bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spi_frame_timing() {
+        let mut spi = SpiPort::default();
+        // 4-byte header at 50 MHz = 32 bits = 640 ns.
+        let done = spi.send(0, SpiCommand::ReadStatus, 0);
+        assert_eq!(done, 640_000);
+    }
+
+    #[test]
+    fn hsp_is_200_mbps() {
+        let mut hsp = HspPort::default();
+        let done = hsp.transfer(0, 200_000_000);
+        assert_eq!(done, 1_000_000_000_000); // 1 s in ps
+    }
+
+    #[test]
+    fn resnet50_weight_upload_takes_fraction_of_second() {
+        // 25.5 MB of int8 weights over 200 MB/s ≈ 0.13 s, once.
+        let hsp = HspPort::default();
+        let t = hsp.weight_upload_s(25_500_000);
+        assert!(t > 0.1 && t < 0.2, "upload {t}");
+    }
+
+    #[test]
+    fn ports_serialize() {
+        let mut hsp = HspPort::default();
+        let a = hsp.transfer(0, 1000);
+        let b = hsp.transfer(0, 1000);
+        assert_eq!(b, 2 * a);
+        let mut spi = SpiPort::default();
+        let x = spi.send(0, SpiCommand::Start, 0);
+        let y = spi.send(0, SpiCommand::Start, 0);
+        assert_eq!(y, 2 * x);
+        assert_eq!(spi.frames, 2);
+    }
+}

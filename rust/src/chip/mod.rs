@@ -1,0 +1,17 @@
+//! Chip models: Sunrise itself plus the comparison chips of Table II.
+//!
+//! - [`spec`] — published die-level specs (Table II) and conversions for
+//!   the analysis/projection engines.
+//! - [`sunrise`] — the full Sunrise model: configuration → simulated
+//!   resources → network schedules → headline numbers (§VI).
+//! - [`power`] — the power breakdown model (12 W typical).
+//! - [`interfaces`] — SPI command interface + HSP data port (§V).
+
+pub mod interfaces;
+pub mod pipeline;
+pub mod power;
+pub mod spec;
+pub mod sunrise;
+
+pub use spec::{chip_a, chip_b, chip_c, sunrise_spec, ChipSpec, MemoryKind};
+pub use sunrise::{SunriseChip, SunriseConfig};

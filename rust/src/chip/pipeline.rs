@@ -1,0 +1,242 @@
+//! Event-driven serving simulation: a request trace through one or more
+//! Sunrise chips, on the discrete-event engine.
+//!
+//! The analytic scheduler ([`crate::dataflow::schedule`]) gives per-batch
+//! latency; this module answers the *queueing* questions a deployment
+//! cares about (and which the paper's bare 1500 img/s number hides):
+//! latency percentiles under Poisson load, saturation points, and how
+//! many chips a target rate needs. Service times come from the same chip
+//! model, so the two views are consistent by construction.
+
+use crate::chip::sunrise::SunriseChip;
+use crate::sim::engine::{Engine, Scheduler};
+use crate::sim::stats::Histogram;
+use crate::sim::{from_seconds, to_seconds, Time};
+use crate::workloads::generator::TraceRequest;
+use crate::workloads::Network;
+
+/// Result of a queueing simulation.
+#[derive(Debug, Clone)]
+pub struct QueueSimResult {
+    pub served: u64,
+    pub dropped: u64,
+    /// End-to-end latency stats, seconds.
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub max_queue_depth: usize,
+    /// Wall (simulated) duration, seconds.
+    pub duration_s: f64,
+    /// Served samples per second.
+    pub throughput: f64,
+    /// Fraction of time chips were busy.
+    pub chip_utilization: f64,
+}
+
+struct World {
+    /// FIFO of (arrival time, samples) waiting for a chip.
+    queue: std::collections::VecDeque<(Time, u32)>,
+    /// Per-chip busy flag.
+    busy: Vec<bool>,
+    /// Per-batch service time for a given sample count, ps.
+    service_ps: Vec<Time>,
+    max_batch: u32,
+    queue_cap: usize,
+    // stats
+    latency: Histogram,
+    served: u64,
+    dropped: u64,
+    max_depth: usize,
+    busy_time: Time,
+    last_done: Time,
+}
+
+impl World {
+    /// Try to start a batch on a free chip.
+    fn try_dispatch(w: &mut World, sch: &mut Scheduler<World>) {
+        while let Some(chip) = w.busy.iter().position(|b| !b) {
+            if w.queue.is_empty() {
+                return;
+            }
+            // Form a batch of up to max_batch queued requests.
+            let mut samples = 0u32;
+            let mut arrivals = Vec::new();
+            while samples < w.max_batch {
+                match w.queue.front() {
+                    Some(&(at, s)) if samples + s <= w.max_batch => {
+                        arrivals.push((at, s));
+                        samples += s;
+                        w.queue.pop_front();
+                    }
+                    _ => break,
+                }
+            }
+            if samples == 0 {
+                return;
+            }
+            w.busy[chip] = true;
+            let service = w.service_ps[samples as usize];
+            w.busy_time += service;
+            let done = sch.now() + service;
+            sch.at(done, move |w: &mut World, sch| {
+                for (at, s) in &arrivals {
+                    let lat = to_seconds(done - at);
+                    for _ in 0..*s {
+                        w.latency.record(lat);
+                    }
+                    w.served += *s as u64;
+                }
+                w.busy[chip] = false;
+                w.last_done = w.last_done.max(done);
+                World::try_dispatch(w, sch);
+            });
+        }
+    }
+}
+
+/// Simulate `trace` against `n_chips` chips running `net`.
+///
+/// `max_batch` bounds batch formation; `queue_cap` drops arrivals beyond
+/// it (admission control — the HSP port's finite buffering).
+pub fn simulate_queue(
+    chip: &SunriseChip,
+    net: &Network,
+    trace: &[TraceRequest],
+    n_chips: usize,
+    max_batch: u32,
+    queue_cap: usize,
+) -> QueueSimResult {
+    assert!(n_chips > 0 && max_batch > 0);
+    // Precompute service time per batch size from the chip model.
+    let mut service_ps: Vec<Time> = vec![0];
+    for b in 1..=max_batch {
+        service_ps.push(chip.run(net, b).total_ps);
+    }
+
+    let mut world = World {
+        queue: std::collections::VecDeque::new(),
+        busy: vec![false; n_chips],
+        service_ps,
+        max_batch,
+        queue_cap,
+        latency: Histogram::latency(),
+        served: 0,
+        dropped: 0,
+        max_depth: 0,
+        busy_time: 0,
+        last_done: 0,
+    };
+
+    let mut engine: Engine<World> = Engine::new();
+    for req in trace {
+        let at = from_seconds(req.arrival_s);
+        let samples = req.samples;
+        engine.schedule(at, move |w: &mut World, sch| {
+            if w.queue.len() >= w.queue_cap {
+                w.dropped += samples as u64;
+                return;
+            }
+            w.queue.push_back((sch.now(), samples));
+            w.max_depth = w.max_depth.max(w.queue.len());
+            World::try_dispatch(w, sch);
+        });
+    }
+    engine.run(&mut world);
+
+    let duration_s = to_seconds(world.last_done.max(1));
+    QueueSimResult {
+        served: world.served,
+        dropped: world.dropped,
+        mean_latency_s: world.latency.mean(),
+        p50_latency_s: world.latency.quantile(0.5),
+        p99_latency_s: world.latency.quantile(0.99),
+        max_queue_depth: world.max_depth,
+        duration_s,
+        throughput: world.served as f64 / duration_s,
+        chip_utilization: to_seconds(world.busy_time) / (duration_s * n_chips as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workloads::generator::poisson_trace;
+    use crate::workloads::resnet::resnet50;
+
+    fn run(rate: f64, n_chips: usize) -> QueueSimResult {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let mut rng = Rng::new(42);
+        let trace = poisson_trace(&mut rng, rate, 0.5, "resnet50", 1);
+        simulate_queue(&chip, &net, &trace, n_chips, 8, 10_000)
+    }
+
+    #[test]
+    fn light_load_latency_is_service_time() {
+        // 100 req/s on a ~1578 img/s chip: no queueing, latency ≈ batch-1
+        // service time (~3 ms).
+        let r = run(100.0, 1);
+        assert_eq!(r.dropped, 0);
+        assert!(r.mean_latency_s < 0.01, "latency {}", r.mean_latency_s);
+        assert!(r.chip_utilization < 0.5, "util {}", r.chip_utilization);
+    }
+
+    #[test]
+    fn saturation_grows_queue_and_latency() {
+        let light = run(400.0, 1);
+        let heavy = run(3000.0, 1); // ~2x the chip's capacity
+        assert!(heavy.p99_latency_s > light.p99_latency_s * 3.0);
+        assert!(heavy.max_queue_depth > light.max_queue_depth);
+        assert!(heavy.chip_utilization > 0.9, "util {}", heavy.chip_utilization);
+    }
+
+    #[test]
+    fn second_chip_relieves_saturation() {
+        let one = run(2500.0, 1);
+        let two = run(2500.0, 2);
+        assert!(two.throughput >= one.throughput * 0.95);
+        assert!(two.p99_latency_s < one.p99_latency_s);
+        assert!(two.chip_utilization < one.chip_utilization);
+    }
+
+    #[test]
+    fn admission_control_drops_over_capacity() {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let mut rng = Rng::new(7);
+        let trace = poisson_trace(&mut rng, 10_000.0, 0.2, "resnet50", 1);
+        let r = simulate_queue(&chip, &net, &trace, 1, 8, 16);
+        assert!(r.dropped > 0, "expected drops under 6x overload");
+        assert!(r.max_queue_depth <= 16);
+    }
+
+    #[test]
+    fn conservation_served_plus_dropped_equals_offered() {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let mut rng = Rng::new(9);
+        let trace = poisson_trace(&mut rng, 2000.0, 0.3, "resnet50", 2);
+        let offered: u64 = trace.iter().map(|t| t.samples as u64).sum();
+        let r = simulate_queue(&chip, &net, &trace, 2, 8, 64);
+        assert_eq!(r.served + r.dropped, offered);
+    }
+
+    #[test]
+    fn queue_sim_agrees_with_analytic_at_saturation() {
+        // Under sustained overload with full batches, the queueing sim's
+        // throughput must approach the analytic batch-8 images/s.
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let analytic = chip.run(&net, 8).images_per_s();
+        let mut rng = Rng::new(11);
+        let trace = poisson_trace(&mut rng, 4000.0, 0.5, "resnet50", 1);
+        let r = simulate_queue(&chip, &net, &trace, 1, 8, 100_000);
+        assert!(
+            (r.throughput - analytic).abs() / analytic < 0.1,
+            "queue sim {} vs analytic {}",
+            r.throughput,
+            analytic
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! The Sunrise chip model: configuration → simulated resources →
+//! network schedules → the §VI headline numbers.
+//!
+//! The chip is 64 VPUs × 512 MAC lanes (= 32,768 MACs) at ~381 MHz
+//! (25 TOPS), a 1.8 TB/s bonded-DRAM interface split between VPU weight
+//! pools and DSU feature pools, a 13 TB/s DSU↔VPU fabric, UCE-sequenced
+//! layers, SPI command + HSP data interfaces, and DRAM repair at power-up.
+
+use crate::dataflow::mapping::Dataflow;
+use crate::dataflow::schedule::{schedule_network, ChipResources, NetworkSchedule};
+use crate::interconnect::noc::Fabric;
+use crate::interconnect::Technology;
+use crate::memory::{ns, Ps};
+use crate::units::mac::MacArray;
+use crate::workloads::Network;
+
+/// Sunrise configuration (defaults = the fabricated silicon of §VI).
+#[derive(Debug, Clone)]
+pub struct SunriseConfig {
+    pub n_vpus: u32,
+    pub lanes_per_vpu: u32,
+    pub peak_tops: f64,
+    /// Aggregate DRAM interface bandwidth (logic↔memory wafer), bytes/s.
+    pub dram_bw: f64,
+    /// Fraction of DRAM bandwidth (and capacity) on the VPU/weight side.
+    pub weight_side_frac: f64,
+    /// DSU↔VPU fabric aggregate bandwidth, bytes/s.
+    pub fabric_bw: f64,
+    /// Total bonded DRAM capacity, bits.
+    pub dram_bits: f64,
+    /// Integration technology of the 3-D stack (HITOC; swap for ablation).
+    pub stack_tech: Technology,
+    /// Per-layer UCE reconfiguration overhead.
+    pub reconfig: Ps,
+    /// Static power (control, clocks, leakage, refresh), W.
+    pub static_w: f64,
+    /// MAC energy, pJ/MAC (int8).
+    pub mac_pj: f64,
+    /// DRAM access energy, pJ/byte (near-memory, no PHY).
+    pub dram_pj_per_byte: f64,
+}
+
+impl Default for SunriseConfig {
+    fn default() -> Self {
+        SunriseConfig {
+            n_vpus: 64,
+            lanes_per_vpu: 512,
+            peak_tops: 25.0,
+            dram_bw: 1.8e12,
+            weight_side_frac: 0.5,
+            fabric_bw: 13.0e12,
+            dram_bits: 4.5e9,
+            stack_tech: Technology::Hitoc,
+            // Per-layer pipeline fill/drain + UCE reconfiguration of 64
+            // VPUs + DSU mux paths through the central (single) control
+            // engine — calibrated against §VI's 1500 img/s (a 25 TOPS chip
+            // at 100% utilization would do ~3200; the gap is per-layer
+            // overhead + lane under-fill on small-spatial layers).
+            reconfig: ns(25_000),
+            static_w: 8.0,
+            // 40 nm int8 MAC (multiply + accumulate + pipeline registers).
+            mac_pj: 0.5,
+            dram_pj_per_byte: 2.0,
+        }
+    }
+}
+
+/// The instantiated chip.
+pub struct SunriseChip {
+    pub config: SunriseConfig,
+    pub resources: ChipResources,
+    pub fabric: Fabric,
+}
+
+impl SunriseChip {
+    pub fn new(config: SunriseConfig) -> SunriseChip {
+        let n_macs = config.n_vpus * config.lanes_per_vpu;
+        let macs = MacArray {
+            n_macs,
+            freq_hz: crate::util::units::freq_for_tops(n_macs as u64, config.peak_tops),
+            pj_per_mac: config.mac_pj,
+        };
+        // Fabric bandwidth scales with the stack technology's wire density
+        // relative to HITOC (the ablation knob): same connection area, a
+        // sparser technology delivers proportionally less bandwidth and
+        // costs more energy per bit.
+        let hitoc = Technology::Hitoc.params();
+        let tech = config.stack_tech.params();
+        let density_scale = tech.wire_density_per_mm2() / hitoc.wire_density_per_mm2();
+        let freq_scale = tech.max_freq_hz() / hitoc.max_freq_hz();
+        let scale = density_scale * freq_scale;
+        let fabric_bw = config.fabric_bw * scale;
+        let dram_bw = config.dram_bw * scale;
+        let fabric_pj_per_byte = tech.energy_pj_per_bit() * 8.0;
+
+        let weight_capacity =
+            (config.dram_bits / 8.0 * config.weight_side_frac) as u64 / config.n_vpus as u64;
+
+        let resources = ChipResources {
+            macs,
+            n_vpus: config.n_vpus,
+            lanes_per_vpu: config.lanes_per_vpu,
+            weight_pool_bw: dram_bw * config.weight_side_frac,
+            dsu_pool_bw: dram_bw * (1.0 - config.weight_side_frac),
+            broadcast_bw: fabric_bw * 2.0 / 3.0,
+            collect_bw: fabric_bw / 3.0,
+            reconfig: config.reconfig,
+            weight_capacity_per_vpu: weight_capacity,
+            dram_pj_per_byte: config.dram_pj_per_byte,
+            fabric_pj_per_byte,
+            static_w: config.static_w,
+        };
+        let fabric = Fabric::with_technology(config.stack_tech, config.n_vpus as usize, 2.0);
+
+        SunriseChip {
+            config,
+            resources,
+            fabric,
+        }
+    }
+
+    /// Default silicon.
+    pub fn silicon() -> SunriseChip {
+        SunriseChip::new(SunriseConfig::default())
+    }
+
+    /// Peak TOPS of this instance.
+    pub fn peak_tops(&self) -> f64 {
+        self.resources.macs.n_macs as f64 * 2.0 * self.resources.macs.freq_hz / 1e12
+    }
+
+    /// Total memory capacity, MB (decimal).
+    pub fn memory_mb(&self) -> f64 {
+        self.config.dram_bits / 8.0 / 1e6
+    }
+
+    /// Run a network at `batch` under the paper's weight-stationary flow.
+    pub fn run(&self, net: &Network, batch: u32) -> NetworkSchedule {
+        self.run_with_flow(net, batch, Dataflow::WeightStationary)
+    }
+
+    /// Run with an explicit dataflow (ablations).
+    pub fn run_with_flow(&self, net: &Network, batch: u32, flow: Dataflow) -> NetworkSchedule {
+        schedule_network(&net.layers, net.channels_in, batch, flow, 1, &self.resources)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet::resnet50;
+
+    #[test]
+    fn silicon_matches_table_ii() {
+        let chip = SunriseChip::silicon();
+        assert!((chip.peak_tops() - 25.0).abs() < 1e-9);
+        assert!((chip.memory_mb() - 562.5).abs() < 1e-9);
+        assert_eq!(chip.resources.macs.n_macs, 32_768);
+        assert!((chip.resources.weight_pool_bw + chip.resources.dsu_pool_bw - 1.8e12).abs() < 1.0);
+    }
+
+    #[test]
+    fn resnet50_throughput_near_paper_1500() {
+        // §VI: "inference of 1500 images per second with ResNet50". Run at
+        // the serving batch the coordinator uses (8).
+        let chip = SunriseChip::silicon();
+        let s = chip.run(&resnet50(), 8);
+        let ips = s.images_per_s();
+        assert!(
+            ips > 1100.0 && ips < 2000.0,
+            "images/s {ips} (paper: 1500)"
+        );
+    }
+
+    #[test]
+    fn resnet50_power_near_paper_12w() {
+        let chip = SunriseChip::silicon();
+        let s = chip.run(&resnet50(), 8);
+        let p = s.avg_power_w();
+        assert!(p > 8.0 && p < 16.0, "power {p} W (paper: 12 W typical)");
+    }
+
+    #[test]
+    fn utilization_explains_gap_to_peak() {
+        // 25 TOPS ÷ 2 ops ÷ 3.87 GMAC ≈ 3230 img/s at 100% utilization;
+        // the paper's 1500 implies ~46%. Our mapper should land nearby.
+        let chip = SunriseChip::silicon();
+        let s = chip.run(&resnet50(), 8);
+        let u = s.utilization();
+        assert!(u > 0.3 && u < 0.75, "utilization {u}");
+    }
+
+    #[test]
+    fn interposer_stack_collapses_throughput() {
+        // The HITOC-vs-interposer ablation: same architecture on an
+        // interposer's wire budget loses orders of magnitude of bandwidth.
+        let hitoc = SunriseChip::silicon();
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = Technology::Interposer;
+        let interposer = SunriseChip::new(cfg);
+        let net = resnet50();
+        let fast = hitoc.run(&net, 8).images_per_s();
+        let slow = interposer.run(&net, 8).images_per_s();
+        assert!(fast / slow > 50.0, "hitoc {fast} interposer {slow}");
+    }
+
+    #[test]
+    fn tsv_stack_sits_between() {
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = Technology::Tsv;
+        let tsv = SunriseChip::new(cfg);
+        let net = resnet50();
+        let t = tsv.run(&net, 8).images_per_s();
+        let h = SunriseChip::silicon().run(&net, 8).images_per_s();
+        let mut icfg = SunriseConfig::default();
+        icfg.stack_tech = Technology::Interposer;
+        let i = SunriseChip::new(icfg).run(&net, 8).images_per_s();
+        assert!(i < t && t <= h, "i {i} t {t} h {h}");
+    }
+
+    #[test]
+    fn batch_sweep_monotone_until_saturation() {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let mut prev = 0.0;
+        for b in [1u32, 2, 4, 8] {
+            let ips = chip.run(&net, b).images_per_s();
+            assert!(ips >= prev * 0.98, "batch {b}: {ips} < {prev}");
+            prev = ips;
+        }
+    }
+
+    #[test]
+    fn weights_fit_resident() {
+        let chip = SunriseChip::silicon();
+        let total: u64 = resnet50().total_params();
+        assert!(
+            total <= chip.resources.weight_capacity_per_vpu * chip.config.n_vpus as u64
+        );
+    }
+}

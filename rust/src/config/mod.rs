@@ -1,0 +1,159 @@
+//! Typed configuration: JSON files → chip / serving / experiment configs.
+//!
+//! The `sunrise` binary and the benches are config-driven so experiments
+//! in EXPERIMENTS.md are reproducible from checked-in JSON rather than
+//! code edits. Defaults (no file) are the paper's silicon values.
+
+use crate::chip::sunrise::SunriseConfig;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::router::Policy;
+use crate::coordinator::server::ServerConfig;
+use crate::interconnect::Technology;
+use crate::memory::ns;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Parse a chip config JSON (all fields optional; defaults = silicon).
+///
+/// ```json
+/// {"n_vpus": 64, "lanes_per_vpu": 512, "peak_tops": 25.0,
+///  "dram_bw_tbps": 1.8, "fabric_bw_tbps": 13.0, "dram_gbit": 4.5,
+///  "stack_tech": "hitoc", "reconfig_us": 25.0, "static_w": 8.0}
+/// ```
+pub fn chip_config(j: &Json) -> Result<SunriseConfig, String> {
+    let mut c = SunriseConfig::default();
+    if let Some(v) = j.get("n_vpus").and_then(Json::as_u64) {
+        c.n_vpus = v as u32;
+    }
+    if let Some(v) = j.get("lanes_per_vpu").and_then(Json::as_u64) {
+        c.lanes_per_vpu = v as u32;
+    }
+    if let Some(v) = j.get("peak_tops").and_then(Json::as_f64) {
+        c.peak_tops = v;
+    }
+    if let Some(v) = j.get("dram_bw_tbps").and_then(Json::as_f64) {
+        c.dram_bw = v * 1e12;
+    }
+    if let Some(v) = j.get("fabric_bw_tbps").and_then(Json::as_f64) {
+        c.fabric_bw = v * 1e12;
+    }
+    if let Some(v) = j.get("dram_gbit").and_then(Json::as_f64) {
+        c.dram_bits = v * 1e9;
+    }
+    if let Some(v) = j.get("reconfig_us").and_then(Json::as_f64) {
+        c.reconfig = ns((v * 1000.0) as u64);
+    }
+    if let Some(v) = j.get("static_w").and_then(Json::as_f64) {
+        c.static_w = v;
+    }
+    if let Some(v) = j.get("stack_tech").and_then(Json::as_str) {
+        c.stack_tech = match v {
+            "hitoc" => Technology::Hitoc,
+            "tsv" => Technology::Tsv,
+            "interposer" => Technology::Interposer,
+            other => return Err(format!("unknown stack_tech `{other}`")),
+        };
+    }
+    if c.n_vpus == 0 || c.lanes_per_vpu == 0 {
+        return Err("n_vpus and lanes_per_vpu must be positive".to_string());
+    }
+    Ok(c)
+}
+
+/// Parse a server config JSON.
+///
+/// ```json
+/// {"max_batch": 8, "max_wait_ms": 2.0, "routing": "least_loaded",
+///  "queue_capacity": 1024}
+/// ```
+pub fn server_config(j: &Json) -> Result<ServerConfig, String> {
+    let mut c = ServerConfig::default();
+    let mut b = BatcherConfig::default();
+    if let Some(v) = j.get("max_batch").and_then(Json::as_u64) {
+        if v == 0 {
+            return Err("max_batch must be ≥ 1".to_string());
+        }
+        b.max_batch = v as u32;
+    }
+    if let Some(v) = j.get("max_wait_ms").and_then(Json::as_f64) {
+        b.max_wait = Duration::from_secs_f64(v / 1e3);
+    }
+    if let Some(v) = j.get("queue_capacity").and_then(Json::as_u64) {
+        c.queue_capacity = v as usize;
+    }
+    if let Some(v) = j.get("routing").and_then(Json::as_str) {
+        c.routing = match v {
+            "round_robin" => Policy::RoundRobin,
+            "least_loaded" => Policy::LeastLoaded,
+            other => return Err(format!("unknown routing `{other}`")),
+        };
+    }
+    c.batcher = b;
+    Ok(c)
+}
+
+/// Load a config file, or defaults when `path` is `None`.
+pub fn load_chip(path: Option<&str>) -> Result<SunriseConfig, String> {
+    match path {
+        None => Ok(SunriseConfig::default()),
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+            chip_config(&Json::parse(&text).map_err(|e| e.to_string())?)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_gives_silicon_defaults() {
+        let c = chip_config(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.n_vpus, 64);
+        assert_eq!(c.peak_tops, 25.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let j = Json::parse(
+            r#"{"n_vpus": 32, "dram_bw_tbps": 0.9, "stack_tech": "tsv", "reconfig_us": 10.0}"#,
+        )
+        .unwrap();
+        let c = chip_config(&j).unwrap();
+        assert_eq!(c.n_vpus, 32);
+        assert_eq!(c.dram_bw, 0.9e12);
+        assert_eq!(c.stack_tech, Technology::Tsv);
+        assert_eq!(c.reconfig, ns(10_000));
+    }
+
+    #[test]
+    fn rejects_bad_tech() {
+        let j = Json::parse(r#"{"stack_tech": "wormhole"}"#).unwrap();
+        assert!(chip_config(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_vpus() {
+        let j = Json::parse(r#"{"n_vpus": 0}"#).unwrap();
+        assert!(chip_config(&j).is_err());
+    }
+
+    #[test]
+    fn server_config_parses() {
+        let j = Json::parse(
+            r#"{"max_batch": 16, "max_wait_ms": 5.0, "routing": "round_robin"}"#,
+        )
+        .unwrap();
+        let c = server_config(&j).unwrap();
+        assert_eq!(c.batcher.max_batch, 16);
+        assert_eq!(c.batcher.max_wait, Duration::from_millis(5));
+        assert_eq!(c.routing, Policy::RoundRobin);
+    }
+
+    #[test]
+    fn server_rejects_zero_batch() {
+        let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(server_config(&j).is_err());
+    }
+}

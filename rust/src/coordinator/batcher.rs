@@ -1,0 +1,256 @@
+//! Dynamic batching policy: accumulate requests per model, dispatch when
+//! the batch is full or the oldest request's deadline expires.
+//!
+//! Pure logic (no threads, no clocks of its own) so the policy is
+//! property-testable; the server drives it with real time.
+
+use crate::coordinator::request::InferRequest;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Dispatch as soon as this many requests are waiting.
+    pub max_batch: u32,
+    /// Dispatch a partial batch once the oldest request has waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A dispatched batch for one model.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    pub requests: Vec<InferRequest>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Concatenated input rows in request order.
+    pub fn concat_inputs(&self) -> Vec<f32> {
+        let total: usize = self.requests.iter().map(|r| r.input.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for r in &self.requests {
+            out.extend_from_slice(&r.input);
+        }
+        out
+    }
+}
+
+/// The dynamic batcher: per-model pending queues.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    pub config: BatcherConfig,
+    pending: BTreeMap<String, Vec<InferRequest>>,
+    /// Dispatch counters for metrics: (full, timeout) batches.
+    pub full_batches: u64,
+    pub timeout_batches: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> DynamicBatcher {
+        assert!(config.max_batch >= 1);
+        DynamicBatcher {
+            config,
+            pending: BTreeMap::new(),
+            full_batches: 0,
+            timeout_batches: 0,
+        }
+    }
+
+    /// Queue depth for a model.
+    pub fn depth(&self, model: &str) -> usize {
+        self.pending.get(model).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Total queued requests.
+    pub fn total_depth(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+
+    /// Add a request; returns a full batch if one formed.
+    pub fn push(&mut self, req: InferRequest, now: Instant) -> Option<Batch> {
+        let q = self.pending.entry(req.model.clone()).or_default();
+        q.push(req);
+        if q.len() >= self.config.max_batch as usize {
+            let model = q[0].model.clone();
+            let requests = std::mem::take(q);
+            self.full_batches += 1;
+            return Some(Batch {
+                model,
+                requests,
+                formed_at: now,
+            });
+        }
+        None
+    }
+
+    /// Dispatch any queues whose oldest request exceeded `max_wait`.
+    pub fn poll_timeouts(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let expired: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|r| now.duration_since(r.enqueued_at) >= self.config.max_wait)
+                    .unwrap_or(false)
+            })
+            .map(|(m, _)| m.clone())
+            .collect();
+        for model in expired {
+            let requests = std::mem::take(self.pending.get_mut(&model).unwrap());
+            if !requests.is_empty() {
+                self.timeout_batches += 1;
+                out.push(Batch {
+                    model,
+                    requests,
+                    formed_at: now,
+                });
+            }
+        }
+        out
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (model, q) in std::mem::take(&mut self.pending) {
+            if !q.is_empty() {
+                out.push(Batch {
+                    model,
+                    requests: q,
+                    formed_at: now,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: &str) -> InferRequest {
+        InferRequest::new(id, model, vec![id as f32])
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        assert!(b.push(req(1, "m"), now).is_none());
+        assert!(b.push(req(2, "m"), now).is_none());
+        let batch = b.push(req(3, "m"), now).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.depth("m"), 0);
+        assert_eq!(b.full_batches, 1);
+    }
+
+    #[test]
+    fn models_batch_independently() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        assert!(b.push(req(1, "a"), now).is_none());
+        assert!(b.push(req(2, "b"), now).is_none());
+        assert_eq!(b.depth("a"), 1);
+        assert_eq!(b.depth("b"), 1);
+        let batch = b.push(req(3, "a"), now).unwrap();
+        assert_eq!(batch.model, "a");
+        assert_eq!(b.depth("b"), 1);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        let now = Instant::now();
+        b.push(req(1, "m"), now);
+        assert!(b.poll_timeouts(now).is_empty());
+        let later = now + Duration::from_millis(5);
+        let batches = b.poll_timeouts(later);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 1);
+        assert_eq!(b.timeout_batches, 1);
+    }
+
+    #[test]
+    fn concat_preserves_order() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(1),
+        });
+        let now = Instant::now();
+        b.push(req(10, "m"), now);
+        b.push(req(20, "m"), now);
+        let batch = b.push(req(30, "m"), now).unwrap();
+        assert_eq!(batch.concat_inputs(), vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, "a"), now);
+        b.push(req(2, "b"), now);
+        let drained = b.drain(now);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.total_depth(), 0);
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        use crate::util::proptest::check;
+        check(0xBA7C, 40, |g| {
+            let max_batch = g.usize("max_batch", 1, 9) as u32;
+            let n = g.usize("n", 1, 120);
+            let models = ["a", "b", "c"];
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_secs(100),
+            });
+            let now = Instant::now();
+            let mut seen = Vec::new();
+            for id in 0..n as u64 {
+                let m = g.pick("model", &models);
+                if let Some(batch) = b.push(req(id, m), now) {
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            for batch in b.drain(now) {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            seen.sort_unstable();
+            let expect: Vec<u64> = (0..n as u64).collect();
+            crate::prop_assert!(seen == expect, "lost/dup requests: {} vs {}", seen.len(), n);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Wall-clock serving metrics: latency percentiles, throughput,
+//! batch-size distribution. Thread-safe via interior locking (updates are
+//! off the execute path's critical section).
+
+use crate::sim::stats::Histogram;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Snapshot of serving metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_batch_size: f64,
+    pub mean_queue_s: f64,
+}
+
+struct Inner {
+    latency: Histogram,
+    queue: Histogram,
+    batch_sizes: u64,
+    batches: u64,
+    requests: u64,
+    errors: u64,
+    started: Instant,
+}
+
+/// Serving metrics collector.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                latency: Histogram::latency(),
+                queue: Histogram::latency(),
+                batch_sizes: 0,
+                batches: 0,
+                requests: 0,
+                errors: 0,
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    /// Record a completed batch of `size` with per-request latencies.
+    pub fn record_batch(&self, size: u32, queue_s: &[f64], total_s: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes += size as u64;
+        g.requests += total_s.len() as u64;
+        for &q in queue_s {
+            g.queue.record(q);
+        }
+        for &t in total_s {
+            g.latency.record(t);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            errors: g.errors,
+            throughput_rps: g.requests as f64 / elapsed,
+            mean_latency_s: g.latency.mean(),
+            p50_latency_s: g.latency.quantile(0.5),
+            p99_latency_s: g.latency.quantile(0.99),
+            mean_batch_size: if g.batches == 0 {
+                0.0
+            } else {
+                g.batch_sizes as f64 / g.batches as f64
+            },
+            mean_queue_s: g.queue.mean(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} errors={} throughput={:.1} req/s \
+             batch-size(mean)={:.2} latency mean={:.3} ms p50={:.3} ms p99={:.3} ms queue(mean)={:.3} ms",
+            self.requests,
+            self.batches,
+            self.errors,
+            self.throughput_rps,
+            self.mean_batch_size,
+            self.mean_latency_s * 1e3,
+            self.p50_latency_s * 1e3,
+            self.p99_latency_s * 1e3,
+            self.mean_queue_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(4, &[1e-4, 2e-4, 1e-4, 2e-4], &[1e-3, 2e-3, 1e-3, 2e-3]);
+        m.record_batch(2, &[1e-4, 1e-4], &[3e-3, 3e-3]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch_size, 3.0);
+        assert!(s.mean_latency_s > 1e-3 && s.mean_latency_s < 3e-3);
+        assert!(s.p99_latency_s >= s.p50_latency_s);
+    }
+
+    #[test]
+    fn errors_counted() {
+        let m = Metrics::new();
+        m.record_error();
+        m.record_error();
+        assert_eq!(m.snapshot().errors, 2);
+    }
+
+    #[test]
+    fn report_is_renderable() {
+        let m = Metrics::new();
+        m.record_batch(1, &[1e-5], &[1e-4]);
+        let r = m.snapshot().report();
+        assert!(r.contains("requests=1"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The inference-serving coordinator (L3).
+//!
+//! The paper's chip serves inference through a host; this module is the
+//! host-side serving stack a deployment would actually run: a request
+//! queue, a dynamic batcher (the chip's utilization lives or dies on
+//! batch size — see the batch sweep in EXPERIMENTS.md), a router across
+//! chip replicas, worker threads driving [`crate::runtime::Executor`]s,
+//! and latency/throughput metrics. Pure std: threads + channels.
+//!
+//! - [`request`] — request/response types.
+//! - [`batcher`] — dynamic batching policy (size + deadline), pure logic.
+//! - [`router`] — replica selection (round-robin / least-loaded).
+//! - [`metrics`] — wall-clock serving metrics.
+//! - [`server`] — the threaded serving loop tying it together.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use server::{Server, ServerConfig};

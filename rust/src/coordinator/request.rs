@@ -1,0 +1,57 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// Monotonically-assigned request identifier.
+pub type RequestId = u64;
+
+/// One inference request (one sample per request; client-side batches are
+/// split upstream so the dynamic batcher owns all batching decisions).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: RequestId,
+    pub model: String,
+    pub input: Vec<f32>,
+    pub enqueued_at: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: RequestId, model: &str, input: Vec<f32>) -> InferRequest {
+        InferRequest {
+            id,
+            model: model.to_string(),
+            input,
+            enqueued_at: Instant::now(),
+        }
+    }
+}
+
+/// The response: output rows + timing breakdown.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    pub output: Vec<f32>,
+    /// Queue wait (enqueue → batch dispatch), seconds.
+    pub queue_s: f64,
+    /// Execution time of the batch this request rode in, seconds.
+    pub exec_s: f64,
+    /// Total latency, seconds.
+    pub total_s: f64,
+    /// Batch size the request was served in.
+    pub batch_size: u32,
+    /// Which replica served it.
+    pub replica: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_carries_payload() {
+        let r = InferRequest::new(7, "mlp", vec![1.0, 2.0]);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.model, "mlp");
+        assert_eq!(r.input.len(), 2);
+    }
+}

@@ -1,0 +1,304 @@
+//! The threaded serving loop: submit channel → batcher thread → per-replica
+//! worker threads (each owning an [`Executor`]) → response channel.
+//!
+//! Backpressure: the submit channel is bounded; when all replicas are
+//! saturated, `submit` blocks the client (the paper's HSP port is the
+//! analogous physical throttle).
+
+use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse, RequestId};
+use crate::coordinator::router::{Policy, Router};
+use crate::runtime::executor::Executor;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub routing: Policy,
+    /// Bound on the submit queue (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            routing: Policy::LeastLoaded,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+enum WorkerMsg {
+    Run(Batch),
+    Stop,
+}
+
+/// The running server.
+pub struct Server {
+    submit_tx: SyncSender<InferRequest>,
+    resp_rx: Receiver<InferResponse>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    batcher_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub router: Arc<Mutex<Router>>,
+}
+
+impl Server {
+    /// Start with one worker thread per executor (each executor = one chip
+    /// replica).
+    pub fn start(executors: Vec<Box<dyn Executor>>, config: ServerConfig) -> Server {
+        assert!(!executors.is_empty());
+        let n = executors.len();
+        let (submit_tx, submit_rx) = sync_channel::<InferRequest>(config.queue_capacity);
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel::<InferResponse>();
+        let metrics = Arc::new(Metrics::new());
+        let router = Arc::new(Mutex::new(Router::new(config.routing, n)));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Workers.
+        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(n);
+        let mut worker_handles = Vec::with_capacity(n);
+        for (idx, mut exec) in executors.into_iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let resp_tx = resp_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let router = Arc::clone(&router);
+            worker_handles.push(std::thread::spawn(move || {
+                while let Ok(WorkerMsg::Run(batch)) = rx.recv() {
+                    let samples = batch.len();
+                    let input = batch.concat_inputs();
+                    let t0 = Instant::now();
+                    match exec.execute(&batch.model, &input, samples) {
+                        Ok(output) => {
+                            let exec_s = t0.elapsed().as_secs_f64();
+                            let per_out = output.len() / samples;
+                            let done = Instant::now();
+                            let mut queue_ls = Vec::with_capacity(samples);
+                            let mut total_ls = Vec::with_capacity(samples);
+                            for req in &batch.requests {
+                                queue_ls.push(
+                                    batch.formed_at.duration_since(req.enqueued_at).as_secs_f64(),
+                                );
+                                total_ls.push(done.duration_since(req.enqueued_at).as_secs_f64());
+                            }
+                            // Record metrics BEFORE sending responses so a
+                            // client that has collected all responses sees
+                            // complete metrics (no snapshot race).
+                            metrics.record_batch(samples as u32, &queue_ls, &total_ls);
+                            for (i, req) in batch.requests.iter().enumerate() {
+                                let _ = resp_tx.send(InferResponse {
+                                    id: req.id,
+                                    output: output[i * per_out..(i + 1) * per_out].to_vec(),
+                                    queue_s: queue_ls[i],
+                                    exec_s,
+                                    total_s: total_ls[i],
+                                    batch_size: samples as u32,
+                                    replica: idx as u32,
+                                });
+                            }
+                        }
+                        Err(_) => {
+                            for _ in 0..samples {
+                                metrics.record_error();
+                            }
+                        }
+                    }
+                    router.lock().unwrap().complete(idx, samples as u64);
+                }
+            }));
+        }
+
+        // Batcher thread.
+        let stop_b = Arc::clone(&stop);
+        let router_b = Arc::clone(&router);
+        let batcher_cfg = config.batcher;
+        let batcher_handle = std::thread::spawn(move || {
+            let mut batcher = DynamicBatcher::new(batcher_cfg);
+            let dispatch = |batch: Batch, router: &Mutex<Router>, txs: &[Sender<WorkerMsg>]| {
+                let replica = router.lock().unwrap().route(batch.len() as u64);
+                let _ = txs[replica].send(WorkerMsg::Run(batch));
+            };
+            loop {
+                match submit_rx.recv_timeout(Duration::from_micros(200)) {
+                    Ok(req) => {
+                        if let Some(batch) = batcher.push(req, Instant::now()) {
+                            dispatch(batch, &router_b, &worker_txs);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                for batch in batcher.poll_timeouts(Instant::now()) {
+                    dispatch(batch, &router_b, &worker_txs);
+                }
+                if stop_b.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            // Drain remaining requests, then stop workers.
+            for batch in batcher.drain(Instant::now()) {
+                dispatch(batch, &router_b, &worker_txs);
+            }
+            for tx in &worker_txs {
+                let _ = tx.send(WorkerMsg::Stop);
+            }
+        });
+
+        Server {
+            submit_tx,
+            resp_rx,
+            next_id: AtomicU64::new(0),
+            stop,
+            batcher_handle: Some(batcher_handle),
+            worker_handles,
+            metrics,
+            router,
+        }
+    }
+
+    /// Submit one request; blocks when the queue is full (backpressure).
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> RequestId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_tx
+            .send(InferRequest::new(id, model, input))
+            .expect("server stopped");
+        id
+    }
+
+    /// Receive the next response (any request order).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<InferResponse> {
+        self.resp_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Collect exactly `n` responses (panics on timeout).
+    pub fn collect(&self, n: usize, timeout: Duration) -> Vec<InferResponse> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let remain = deadline
+                .checked_duration_since(Instant::now())
+                .unwrap_or_else(|| panic!("timed out with {}/{n} responses", out.len()));
+            if let Some(r) = self.recv_timeout(remain) {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    /// Stop the server, joining all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::sunrise::SunriseChip;
+    use crate::runtime::executor::SimExecutor;
+    use crate::workloads::mlp;
+
+    fn sim_exec() -> Box<dyn Executor> {
+        let mut e = SimExecutor::new(SunriseChip::silicon());
+        e.register("mlp", mlp::quickstart(), 784, 10);
+        Box::new(e)
+    }
+
+    fn input(v: f32) -> Vec<f32> {
+        vec![v; 784]
+    }
+
+    #[test]
+    fn serves_responses_for_all_requests() {
+        let server = Server::start(vec![sim_exec()], ServerConfig::default());
+        let n = 40;
+        for i in 0..n {
+            server.submit("mlp", input(i as f32 / 100.0));
+        }
+        let resps = server.collect(n, Duration::from_secs(20));
+        assert_eq!(resps.len(), n);
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        for r in &resps {
+            assert_eq!(r.output.len(), 10);
+            assert!(r.total_s >= r.queue_s);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 8;
+        cfg.batcher.max_wait = Duration::from_millis(50);
+        let server = Server::start(vec![sim_exec()], cfg);
+        for i in 0..32 {
+            server.submit("mlp", input(i as f32));
+        }
+        let resps = server.collect(32, Duration::from_secs(20));
+        let snap = server.metrics.snapshot();
+        assert!(snap.mean_batch_size > 2.0, "mean batch {}", snap.mean_batch_size);
+        assert!(resps.iter().any(|r| r.batch_size >= 4));
+        server.shutdown();
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_timeout() {
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 64; // will never fill
+        cfg.batcher.max_wait = Duration::from_millis(2);
+        let server = Server::start(vec![sim_exec()], cfg);
+        server.submit("mlp", input(0.5));
+        let r = server
+            .recv_timeout(Duration::from_secs(10))
+            .expect("timeout flush");
+        assert_eq!(r.batch_size, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_replicas_all_serve() {
+        let server = Server::start(
+            vec![sim_exec(), sim_exec(), sim_exec()],
+            ServerConfig::default(),
+        );
+        for i in 0..60 {
+            server.submit("mlp", input(i as f32 / 60.0));
+        }
+        let resps = server.collect(60, Duration::from_secs(30));
+        let replicas: std::collections::BTreeSet<u32> =
+            resps.iter().map(|r| r.replica).collect();
+        assert!(replicas.len() >= 2, "only replicas {replicas:?} served");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_counts_errors_not_hangs() {
+        let server = Server::start(vec![sim_exec()], ServerConfig::default());
+        server.submit("nope", vec![1.0; 784]);
+        // Wait for the error to be recorded.
+        let t0 = Instant::now();
+        while server.metrics.snapshot().errors == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "error never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,202 @@
+//! Layer IR: the network description consumed by the mappers and by the
+//! AOT compile path (the same shapes are exported to `python/compile` so
+//! the PJRT artifacts and the simulator agree on the workload).
+
+/// Layer kinds supported by the datapath (paper §V: "implements a wide
+/// range of neural networks through a combination of firmware and
+/// configuration").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution (im2col-GEMM on the VPU pool).
+    Conv {
+        in_c: u32,
+        out_c: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        /// "same"-style padding amount (symmetric).
+        pad: u32,
+    },
+    /// Fully-connected.
+    Dense { in_f: u32, out_f: u32 },
+    /// Max/avg pooling (vector unit).
+    Pool { k: u32, stride: u32 },
+    /// Residual add (vector unit).
+    EltwiseAdd,
+    /// Activation (fused in practice; kept for completeness).
+    Activation,
+    /// Global average pool.
+    GlobalPool,
+}
+
+/// One layer instance with its input spatial extent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map height/width (1 for dense).
+    pub in_h: u32,
+    pub in_w: u32,
+}
+
+/// The GEMM view of a layer: out = W(M×K) · X(K×N), N scaled by batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+}
+
+impl Layer {
+    pub fn conv(name: &str, in_h: u32, in_w: u32, in_c: u32, out_c: u32, k: u32, stride: u32, pad: u32) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { in_c, out_c, kh: k, kw: k, stride, pad },
+            in_h,
+            in_w,
+        }
+    }
+
+    pub fn dense(name: &str, in_f: u32, out_f: u32) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Dense { in_f, out_f },
+            in_h: 1,
+            in_w: 1,
+        }
+    }
+
+    /// Output spatial extent.
+    pub fn out_hw(&self) -> (u32, u32) {
+        match self.kind {
+            LayerKind::Conv { kh, kw, stride, pad, .. } => (
+                (self.in_h + 2 * pad - kh) / stride + 1,
+                (self.in_w + 2 * pad - kw) / stride + 1,
+            ),
+            LayerKind::Pool { k, stride } => (
+                (self.in_h.saturating_sub(k)) / stride + 1,
+                (self.in_w.saturating_sub(k)) / stride + 1,
+            ),
+            LayerKind::GlobalPool => (1, 1),
+            LayerKind::Dense { .. } | LayerKind::EltwiseAdd | LayerKind::Activation => {
+                (self.in_h, self.in_w)
+            }
+        }
+    }
+
+    /// Output channel count (input channels for non-compute layers is the
+    /// caller's bookkeeping; we only need it where it changes).
+    pub fn out_channels(&self, in_channels: u32) -> u32 {
+        match self.kind {
+            LayerKind::Conv { out_c, .. } => out_c,
+            LayerKind::Dense { out_f, .. } => out_f,
+            _ => in_channels,
+        }
+    }
+
+    /// GEMM shape at `batch` images. `None` for non-GEMM layers.
+    pub fn gemm(&self, batch: u32) -> Option<GemmShape> {
+        let (oh, ow) = self.out_hw();
+        match self.kind {
+            LayerKind::Conv { in_c, out_c, kh, kw, .. } => Some(GemmShape {
+                m: out_c,
+                k: in_c * kh * kw,
+                n: oh * ow * batch,
+            }),
+            LayerKind::Dense { in_f, out_f } => Some(GemmShape {
+                m: out_f,
+                k: in_f,
+                n: batch,
+            }),
+            _ => None,
+        }
+    }
+
+    /// MAC count per single-image invocation.
+    pub fn macs(&self, batch: u32) -> u64 {
+        self.gemm(batch)
+            .map(|g| g.m as u64 * g.k as u64 * g.n as u64)
+            .unwrap_or(0)
+    }
+
+    /// Weight parameter count.
+    pub fn weight_params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { in_c, out_c, kh, kw, .. } => {
+                in_c as u64 * out_c as u64 * kh as u64 * kw as u64
+            }
+            LayerKind::Dense { in_f, out_f } => in_f as u64 * out_f as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output element count at `batch` (channels must be supplied for
+    /// pass-through layers).
+    pub fn out_elems(&self, in_channels: u32, batch: u32) -> u64 {
+        let (oh, ow) = self.out_hw();
+        self.out_channels(in_channels) as u64 * oh as u64 * ow as u64 * batch as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shape() {
+        // ResNet conv1: 224×224×3, 7×7/2 pad 3 → 112×112×64.
+        let l = Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3);
+        assert_eq!(l.out_hw(), (112, 112));
+        assert_eq!(l.out_channels(3), 64);
+    }
+
+    #[test]
+    fn conv_gemm_view() {
+        let l = Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3);
+        let g = l.gemm(1).unwrap();
+        assert_eq!(g, GemmShape { m: 64, k: 147, n: 12544 });
+        assert_eq!(l.macs(1), 64 * 147 * 12544);
+    }
+
+    #[test]
+    fn dense_gemm_view() {
+        let l = Layer::dense("fc", 2048, 1000);
+        assert_eq!(l.gemm(8).unwrap(), GemmShape { m: 1000, k: 2048, n: 8 });
+        assert_eq!(l.weight_params(), 2048 * 1000);
+    }
+
+    #[test]
+    fn pool_halves_spatial() {
+        let l = Layer {
+            name: "pool".into(),
+            kind: LayerKind::Pool { k: 2, stride: 2 },
+            in_h: 112,
+            in_w: 112,
+        };
+        assert_eq!(l.out_hw(), (56, 56));
+        assert_eq!(l.gemm(1), None);
+        assert_eq!(l.macs(1), 0);
+    }
+
+    #[test]
+    fn global_pool_to_1x1() {
+        let l = Layer {
+            name: "gap".into(),
+            kind: LayerKind::GlobalPool,
+            in_h: 7,
+            in_w: 7,
+        };
+        assert_eq!(l.out_hw(), (1, 1));
+        assert_eq!(l.out_elems(2048, 4), 2048 * 4);
+    }
+
+    #[test]
+    fn batch_scales_n_not_weights() {
+        let l = Layer::conv("c", 56, 56, 64, 64, 3, 1, 1);
+        let g1 = l.gemm(1).unwrap();
+        let g8 = l.gemm(8).unwrap();
+        assert_eq!(g8.n, g1.n * 8);
+        assert_eq!(g8.m, g1.m);
+        assert_eq!(l.weight_params(), 64 * 64 * 9);
+    }
+}

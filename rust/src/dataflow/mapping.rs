@@ -1,0 +1,139 @@
+//! Dataflow mappers: how much data moves where, per layer invocation.
+//!
+//! **Weight-stationary** (the paper's choice, §IV): weights are fetched
+//! from VPU-local DRAM once per layer invocation regardless of N
+//! ("operations on the same weights are grouped so that access to weight
+//! data from memory is minimized"); features are broadcast once; partial
+//! sums never leave the VPU.
+//!
+//! **Output-stationary** (ablation baseline): outputs accumulate in place,
+//! but weights must be re-streamed for every tile of N positions that
+//! exceeds what the MAC array holds — weight traffic multiplies by the
+//! number of N-tiles.
+
+use crate::dataflow::layer::GemmShape;
+
+/// Which dataflow a mapping uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    WeightStationary,
+    OutputStationary,
+}
+
+/// Bytes moved per layer invocation, by stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerTraffic {
+    /// Weight bytes read from (VPU-local) DRAM.
+    pub weight_bytes: u64,
+    /// Feature bytes broadcast DSU → VPUs.
+    pub input_bytes: u64,
+    /// Result bytes collected VPUs → DSU.
+    pub output_bytes: u64,
+    /// Partial-sum bytes crossing the fabric (0 for weight-stationary).
+    pub psum_bytes: u64,
+}
+
+impl LayerTraffic {
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.input_bytes + self.output_bytes + self.psum_bytes
+    }
+}
+
+/// Map a GEMM-shaped layer under the given dataflow.
+///
+/// `elem_bytes`: activation/weight element size. `lane_buffer_n`: how many
+/// output positions the MAC array holds at once (the N-tile size for
+/// output-stationary re-streaming).
+pub fn map_layer(
+    flow: Dataflow,
+    g: GemmShape,
+    elem_bytes: u32,
+    lane_buffer_n: u32,
+) -> LayerTraffic {
+    let eb = elem_bytes as u64;
+    let weights_once = g.m as u64 * g.k as u64 * eb;
+    let inputs_once = g.k as u64 * g.n as u64 * eb;
+    let outputs_once = g.m as u64 * g.n as u64 * eb;
+    match flow {
+        Dataflow::WeightStationary => LayerTraffic {
+            weight_bytes: weights_once,
+            input_bytes: inputs_once,
+            output_bytes: outputs_once,
+            psum_bytes: 0,
+        },
+        Dataflow::OutputStationary => {
+            // Outputs stay put; weights re-stream once per N-tile.
+            let n_tiles = (g.n as u64).div_ceil(lane_buffer_n as u64);
+            LayerTraffic {
+                weight_bytes: weights_once * n_tiles,
+                input_bytes: inputs_once,
+                output_bytes: outputs_once,
+                psum_bytes: 0,
+            }
+        }
+    }
+}
+
+/// Weight-traffic amplification of output-stationary over
+/// weight-stationary for a shape (the ablation's headline number).
+pub fn weight_traffic_ratio(g: GemmShape, lane_buffer_n: u32) -> f64 {
+    let ws = map_layer(Dataflow::WeightStationary, g, 1, lane_buffer_n);
+    let os = map_layer(Dataflow::OutputStationary, g, 1, lane_buffer_n);
+    os.weight_bytes as f64 / ws.weight_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: GemmShape = GemmShape { m: 256, k: 2304, n: 3136 };
+
+    #[test]
+    fn weight_stationary_reads_weights_once() {
+        let t = map_layer(Dataflow::WeightStationary, G, 1, 512);
+        assert_eq!(t.weight_bytes, 256 * 2304);
+        assert_eq!(t.input_bytes, 2304 * 3136);
+        assert_eq!(t.output_bytes, 256 * 3136);
+        assert_eq!(t.psum_bytes, 0);
+    }
+
+    #[test]
+    fn output_stationary_amplifies_weight_traffic() {
+        // N = 3136 over 512-position buffers → 7 tiles → 7× weight reads.
+        let t = map_layer(Dataflow::OutputStationary, G, 1, 512);
+        assert_eq!(t.weight_bytes, 256 * 2304 * 7);
+        assert!((weight_traffic_ratio(G, 512) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn big_spatial_layers_suffer_most_under_os() {
+        let early = GemmShape { m: 64, k: 576, n: 112 * 112 };
+        let late = GemmShape { m: 512, k: 4608, n: 49 };
+        assert!(weight_traffic_ratio(early, 512) > 20.0);
+        assert!((weight_traffic_ratio(late, 512) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elem_bytes_scales_everything() {
+        let t1 = map_layer(Dataflow::WeightStationary, G, 1, 512);
+        let t2 = map_layer(Dataflow::WeightStationary, G, 2, 512);
+        assert_eq!(t2.weight_bytes, 2 * t1.weight_bytes);
+        assert_eq!(t2.total(), 2 * t1.total());
+    }
+
+    #[test]
+    fn property_ws_never_worse_than_os() {
+        use crate::util::proptest::check;
+        check(0x600D, 80, |g| {
+            let shape = GemmShape {
+                m: g.usize("m", 1, 2048) as u32,
+                k: g.usize("k", 1, 8192) as u32,
+                n: g.usize("n", 1, 50_000) as u32,
+            };
+            let buf = *g.pick("buf", &[128u32, 512, 2048]);
+            let r = weight_traffic_ratio(shape, buf);
+            crate::prop_assert!(r >= 1.0 - 1e-12, "ratio {r} < 1");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! Neural-network layer IR and the dataflow mappers.
+//!
+//! The paper adopts **weight-stationary** dataflow (§IV, citing Eyeriss):
+//! weights pinned in VPU-local DRAM, features broadcast, partial sums kept
+//! inside the VPU. We implement that mapper plus an **output-stationary**
+//! baseline for the ablation DESIGN.md calls out (weight-traffic
+//! comparison is the whole point of the choice).
+//!
+//! - [`layer`] — layer IR (conv/dense/pool/eltwise/activation) and its
+//!   GEMM view (im2col).
+//! - [`tiling`] — tile the GEMM view to fit VPU lanes and DRAM capacity.
+//! - [`mapping`] — the two dataflow mappers producing per-layer traffic
+//!   (weight/input/output bytes moved per invocation).
+//! - [`schedule`] — compose layer timings into a network schedule
+//!   (pipelined phases per layer, sequential across layers).
+
+pub mod layer;
+pub mod mapping;
+pub mod partition;
+pub mod schedule;
+pub mod tiling;
+
+pub use layer::{Layer, LayerKind};
+pub use mapping::{Dataflow, LayerTraffic};
+pub use schedule::{LayerTiming, NetworkSchedule};

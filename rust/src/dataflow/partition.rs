@@ -1,0 +1,273 @@
+//! Multi-chip scale-out: partition a model whose weights exceed one chip's
+//! DRAM across a pipeline of Sunrise chips.
+//!
+//! The paper's §I/§VII motivation is exactly this regime (Megatron 8.5 B →
+//! GPT-3 174 B parameters vs 0.56 GB on silicon / 24 GB projected). The
+//! partitioner does contiguous layer-granular pipeline splits balanced by
+//! compute, subject to per-chip weight residency; the pipeline model gives
+//! steady-state throughput (bounded by the slowest stage) and fill
+//! latency.
+
+use crate::dataflow::schedule::NetworkSchedule;
+use crate::workloads::Network;
+
+/// One pipeline stage: a contiguous layer range on one chip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub chip: u32,
+    /// Layer index range `[start, end)`.
+    pub start: usize,
+    pub end: usize,
+    pub weight_bytes: u64,
+    pub macs: u64,
+}
+
+/// A pipeline partition.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub stages: Vec<Stage>,
+}
+
+/// Partitioning failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionError {
+    /// A single layer's weights exceed one chip's capacity.
+    LayerTooLarge { layer: usize, bytes: u64, capacity: u64 },
+    /// More chips needed than provided.
+    InsufficientChips { needed_at_least: usize, given: usize },
+}
+
+/// Partition `net` across `n_chips` chips with `capacity_bytes` weight
+/// residency each, at `bytes_per_param` precision.
+///
+/// Greedy contiguous split targeting equal MACs per stage (pipeline
+/// throughput is max-stage-bound), falling back to cutting early when the
+/// capacity would overflow.
+pub fn partition(
+    net: &Network,
+    n_chips: usize,
+    capacity_bytes: u64,
+    bytes_per_param: u64,
+) -> Result<Partition, PartitionError> {
+    assert!(n_chips > 0);
+    let weights: Vec<u64> = net
+        .layers
+        .iter()
+        .map(|l| l.weight_params() * bytes_per_param)
+        .collect();
+    let macs: Vec<u64> = net.layers.iter().map(|l| l.macs(1)).collect();
+
+    // Feasibility: every layer must individually fit.
+    for (i, &w) in weights.iter().enumerate() {
+        if w > capacity_bytes {
+            return Err(PartitionError::LayerTooLarge {
+                layer: i,
+                bytes: w,
+                capacity: capacity_bytes,
+            });
+        }
+    }
+    let total_weights: u64 = weights.iter().sum();
+    let min_chips = total_weights.div_ceil(capacity_bytes.max(1)) as usize;
+    if min_chips > n_chips {
+        return Err(PartitionError::InsufficientChips {
+            needed_at_least: min_chips,
+            given: n_chips,
+        });
+    }
+
+    let total_macs: u64 = macs.iter().sum();
+    let target = total_macs / n_chips as u64 + 1;
+
+    let mut stages = Vec::new();
+    let mut start = 0usize;
+    let mut acc_w = 0u64;
+    let mut acc_m = 0u64;
+    for i in 0..net.layers.len() {
+        let chips_left = n_chips - stages.len();
+        let layers_left = net.layers.len() - i;
+        let must_cut_for_capacity = acc_w + weights[i] > capacity_bytes;
+        let reached_target = acc_m >= target && stages.len() + 1 < n_chips;
+        // Keep enough layers for remaining chips? Not required (stages may
+        // be empty-tailed), but never exceed capacity and never leave more
+        // weight than remaining chips can hold.
+        let remaining_after: u64 = weights[i..].iter().sum::<u64>() - weights[i];
+        let must_cut_for_feasibility = chips_left > 1
+            && remaining_after > (chips_left as u64 - 1) * capacity_bytes
+            && false; // contiguous greedy handles this via capacity cuts
+        let _ = (layers_left, must_cut_for_feasibility);
+        if i > start && (must_cut_for_capacity || reached_target) {
+            stages.push(Stage {
+                chip: stages.len() as u32,
+                start,
+                end: i,
+                weight_bytes: acc_w,
+                macs: acc_m,
+            });
+            start = i;
+            acc_w = 0;
+            acc_m = 0;
+        }
+        acc_w += weights[i];
+        acc_m += macs[i];
+    }
+    stages.push(Stage {
+        chip: stages.len() as u32,
+        start,
+        end: net.layers.len(),
+        weight_bytes: acc_w,
+        macs: acc_m,
+    });
+
+    if stages.len() > n_chips {
+        return Err(PartitionError::InsufficientChips {
+            needed_at_least: stages.len(),
+            given: n_chips,
+        });
+    }
+    Ok(Partition { stages })
+}
+
+impl Partition {
+    /// Steady-state pipeline throughput given per-stage schedules:
+    /// bounded by the slowest stage.
+    pub fn pipeline_throughput(&self, stage_schedules: &[NetworkSchedule]) -> f64 {
+        assert_eq!(stage_schedules.len(), self.stages.len());
+        let slowest = stage_schedules
+            .iter()
+            .map(|s| s.latency_s() / s.batch as f64)
+            .fold(0.0f64, f64::max);
+        1.0 / slowest
+    }
+
+    /// Fill latency: sum of stage latencies (first sample through).
+    pub fn fill_latency(&self, stage_schedules: &[NetworkSchedule]) -> f64 {
+        stage_schedules.iter().map(|s| s.latency_s()).sum()
+    }
+
+    /// MAC balance quality: max/mean stage MACs (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.stages.iter().map(|s| s.macs).max().unwrap_or(0) as f64;
+        let mean = self.stages.iter().map(|s| s.macs).sum::<u64>() as f64
+            / self.stages.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::sunrise::SunriseChip;
+    use crate::workloads::{mlp, resnet, transformer};
+
+    #[test]
+    fn resnet50_fits_one_chip() {
+        let net = resnet::resnet50();
+        let p = partition(&net, 1, 280_000_000, 1).unwrap();
+        assert_eq!(p.stages.len(), 1);
+        assert_eq!(p.stages[0].end, net.layers.len());
+    }
+
+    #[test]
+    fn split_across_four_chips_is_balanced_and_complete() {
+        let net = resnet::resnet50();
+        let p = partition(&net, 4, 280_000_000, 1).unwrap();
+        assert_eq!(p.stages.len(), 4);
+        // Contiguous, complete cover.
+        assert_eq!(p.stages[0].start, 0);
+        assert_eq!(p.stages.last().unwrap().end, net.layers.len());
+        for w in p.stages.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        assert!(p.imbalance() < 1.6, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn capacity_forces_more_stages() {
+        // A 96-layer GPT-ish stack at fp16 must split by capacity.
+        let mut layers = Vec::new();
+        for _ in 0..12 {
+            layers.extend(transformer::decoder_block(2048, 128).layers);
+        }
+        let net = crate::workloads::Network {
+            name: "gpt_small".into(),
+            channels_in: 2048,
+            layers,
+        };
+        let total = net.total_params() * 2;
+        let cap = 280_000_000u64;
+        let min_chips = total.div_ceil(cap) as usize;
+        assert!(min_chips >= 3, "test net too small: {min_chips}");
+        let err = partition(&net, min_chips - 1, cap, 2).unwrap_err();
+        assert!(matches!(err, PartitionError::InsufficientChips { .. }));
+        let p = partition(&net, min_chips + 1, cap, 2).unwrap();
+        for s in &p.stages {
+            assert!(s.weight_bytes <= cap, "stage over capacity");
+        }
+    }
+
+    #[test]
+    fn oversized_single_layer_rejected() {
+        let net = mlp::mlp(&[20_000, 20_000]);
+        let err = partition(&net, 64, 1_000_000, 2).unwrap_err();
+        assert!(matches!(err, PartitionError::LayerTooLarge { .. }));
+    }
+
+    #[test]
+    fn pipeline_throughput_bounded_by_slowest_stage() {
+        let net = resnet::resnet50();
+        let chip = SunriseChip::silicon();
+        let p = partition(&net, 2, 280_000_000, 1).unwrap();
+        let scheds: Vec<_> = p
+            .stages
+            .iter()
+            .map(|s| {
+                let sub = crate::workloads::Network {
+                    name: "stage".into(),
+                    channels_in: 3,
+                    layers: net.layers[s.start..s.end].to_vec(),
+                };
+                chip.run(&sub, 8)
+            })
+            .collect();
+        let tput = p.pipeline_throughput(&scheds);
+        let single = chip.run(&net, 8).images_per_s();
+        // Two-stage pipeline beats one chip but can't exceed 2×.
+        assert!(tput > single, "pipeline {tput} <= single {single}");
+        assert!(tput < single * 2.2, "pipeline {tput} vs single {single}");
+        assert!(p.fill_latency(&scheds) > 0.0);
+    }
+
+    #[test]
+    fn property_partition_covers_and_respects_capacity() {
+        use crate::util::proptest::check;
+        check(0x9A27, 30, |g| {
+            let widths: Vec<u32> = (0..g.usize("n", 2, 10))
+                .map(|_| *g.pick("w", &[64u32, 256, 512, 1024]))
+                .collect();
+            let mut ws = vec![128u32];
+            ws.extend(widths);
+            let net = mlp::mlp(&ws);
+            let cap = 1 << g.usize("cap_log", 18, 24);
+            let n_chips = g.usize("chips", 1, 9);
+            match partition(&net, n_chips, cap as u64, 1) {
+                Ok(p) => {
+                    crate::prop_assert!(p.stages[0].start == 0, "start");
+                    crate::prop_assert!(
+                        p.stages.last().unwrap().end == net.layers.len(),
+                        "end"
+                    );
+                    for s in &p.stages {
+                        crate::prop_assert!(s.weight_bytes <= cap as u64, "capacity");
+                    }
+                }
+                Err(_) => {} // infeasible inputs are allowed to fail
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,360 @@
+//! Network scheduling: compose per-layer phase timings into an end-to-end
+//! execution estimate on a configured chip.
+//!
+//! Per layer (steady state, double-buffered — paper §V's "high bandwidth
+//! ensures that data transfer between DSU and VPU is not a bottleneck"
+//! claim is checked, not assumed):
+//!
+//! ```text
+//! t_layer = max(t_compute, t_weights, t_broadcast, t_collect) + t_reconfig
+//! ```
+//!
+//! Layers execute sequentially (the whole pool works one layer at a time —
+//! the paper's centralized UCE model).
+
+use crate::dataflow::layer::{Layer, LayerKind};
+use crate::dataflow::mapping::{map_layer, Dataflow, LayerTraffic};
+use crate::dataflow::tiling::{plan, PoolLimits};
+use crate::memory::Ps;
+use crate::units::mac::MacArray;
+
+/// The chip resources the scheduler works against (built by
+/// `chip::sunrise` from its configuration).
+#[derive(Debug, Clone, Copy)]
+pub struct ChipResources {
+    pub macs: MacArray,
+    pub n_vpus: u32,
+    pub lanes_per_vpu: u32,
+    /// Aggregate VPU-side weight-pool bandwidth, bytes/s.
+    pub weight_pool_bw: f64,
+    /// Aggregate DSU-side feature-pool bandwidth, bytes/s.
+    pub dsu_pool_bw: f64,
+    /// Fabric broadcast / collect bandwidths, bytes/s.
+    pub broadcast_bw: f64,
+    pub collect_bw: f64,
+    /// Per-layer reconfiguration overhead.
+    pub reconfig: Ps,
+    /// Weight bytes resident per VPU.
+    pub weight_capacity_per_vpu: u64,
+    // ---- energy coefficients ----
+    pub dram_pj_per_byte: f64,
+    pub fabric_pj_per_byte: f64,
+    /// Static (leakage + clocking + control) power, W.
+    pub static_w: f64,
+}
+
+impl ChipResources {
+    pub fn limits(&self) -> PoolLimits {
+        PoolLimits {
+            n_vpus: self.n_vpus,
+            lanes_per_vpu: self.lanes_per_vpu,
+            weight_capacity_per_vpu: self.weight_capacity_per_vpu,
+        }
+    }
+
+    /// Vector-unit throughput (elements/s) for non-GEMM layers: one
+    /// element per lane per cycle.
+    pub fn vector_elems_per_s(&self) -> f64 {
+        self.n_vpus as f64 * self.lanes_per_vpu as f64 * self.macs.freq_hz
+    }
+}
+
+/// Timing and energy of one layer invocation.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub compute_ps: Ps,
+    pub weights_ps: Ps,
+    pub broadcast_ps: Ps,
+    pub collect_ps: Ps,
+    pub total_ps: Ps,
+    /// Which phase bound this layer ("compute", "weights", "broadcast",
+    /// "collect").
+    pub bound_by: &'static str,
+    pub utilization: f64,
+    pub macs: u64,
+    pub traffic: LayerTraffic,
+    pub energy_j: f64,
+}
+
+/// Whole-network schedule.
+#[derive(Debug, Clone)]
+pub struct NetworkSchedule {
+    pub layers: Vec<LayerTiming>,
+    pub batch: u32,
+    pub total_ps: Ps,
+    pub total_macs: u64,
+    pub energy_j: f64,
+    /// Peak MAC rate of the chip (MACs/s) for utilization computation.
+    pub peak_mac_rate: f64,
+}
+
+impl NetworkSchedule {
+    /// Images per second (batch / total time).
+    pub fn images_per_s(&self) -> f64 {
+        self.batch as f64 / (self.total_ps as f64 * 1e-12)
+    }
+
+    /// Latency for the batch, seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.total_ps as f64 * 1e-12
+    }
+
+    /// Whole-run MAC utilization vs peak.
+    pub fn utilization(&self) -> f64 {
+        let seconds = self.total_ps as f64 * 1e-12;
+        self.total_macs as f64 / (self.peak_mac_rate * seconds)
+    }
+
+    /// Average power over the run, W.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy_j / (self.total_ps as f64 * 1e-12)
+    }
+
+    /// Effective TOPS achieved.
+    pub fn effective_tops(&self) -> f64 {
+        self.total_macs as f64 * 2.0 / (self.total_ps as f64 * 1e-12) / 1e12
+    }
+}
+
+fn ps_from_bytes(bytes: u64, bw_bytes_per_s: f64) -> Ps {
+    if bytes == 0 {
+        return 0;
+    }
+    (bytes as f64 / bw_bytes_per_s * 1e12).ceil() as Ps
+}
+
+/// Schedule one GEMM layer.
+fn schedule_gemm(
+    l: &Layer,
+    batch: u32,
+    flow: Dataflow,
+    elem_bytes: u32,
+    r: &ChipResources,
+) -> LayerTiming {
+    let g = l.gemm(batch).expect("gemm layer");
+    let tp = plan(g, elem_bytes, r.limits());
+    let traffic = map_layer(flow, g, elem_bytes, r.lanes_per_vpu);
+
+    let compute_cycles = tp.cycles();
+    let compute_ps = r.macs.cycles_to_ps(compute_cycles);
+    let weights_ps = ps_from_bytes(traffic.weight_bytes, r.weight_pool_bw);
+    // Broadcast is bounded by the slower of fabric and DSU pool read.
+    let bcast_bw = r.broadcast_bw.min(r.dsu_pool_bw);
+    let broadcast_ps = ps_from_bytes(traffic.input_bytes, bcast_bw);
+    let collect_bw = r.collect_bw.min(r.dsu_pool_bw);
+    let collect_ps = ps_from_bytes(traffic.output_bytes + traffic.psum_bytes, collect_bw);
+
+    let (total_wo, bound_by) = [
+        (compute_ps, "compute"),
+        (weights_ps, "weights"),
+        (broadcast_ps, "broadcast"),
+        (collect_ps, "collect"),
+    ]
+    .into_iter()
+    .max_by_key(|(t, _)| *t)
+    .unwrap();
+    let total_ps = total_wo + r.reconfig;
+
+    let macs = g.m as u64 * g.k as u64 * g.n as u64;
+    let pool_macs = r.n_vpus as u64 * r.lanes_per_vpu as u64;
+    let utilization = macs as f64 / (compute_cycles.max(1) as f64 * pool_macs as f64);
+
+    let energy_j = r.macs.energy_j(macs as f64)
+        + traffic.weight_bytes as f64 * r.dram_pj_per_byte * 1e-12
+        + (traffic.input_bytes + traffic.output_bytes) as f64
+            * (r.dram_pj_per_byte + r.fabric_pj_per_byte)
+            * 1e-12;
+
+    LayerTiming {
+        name: l.name.clone(),
+        compute_ps,
+        weights_ps,
+        broadcast_ps,
+        collect_ps,
+        total_ps,
+        bound_by,
+        utilization,
+        macs,
+        traffic,
+        energy_j,
+    }
+}
+
+/// Schedule a vector-unit (non-GEMM) layer.
+fn schedule_vector(l: &Layer, in_channels: u32, batch: u32, r: &ChipResources) -> LayerTiming {
+    let elems = l.out_elems(in_channels, batch);
+    // Each output element costs ~k² reads for pooling; charge one vector op
+    // per input element touched (upper bound: kernel area × outputs).
+    let work_elems = match l.kind {
+        LayerKind::Pool { k, .. } => elems * (k as u64 * k as u64),
+        LayerKind::GlobalPool => in_channels as u64 * l.in_h as u64 * l.in_w as u64 * batch as u64,
+        _ => elems * 2,
+    };
+    let compute_ps = (work_elems as f64 / r.vector_elems_per_s() * 1e12).ceil() as Ps;
+    let io_bytes = elems * 2; // read + write through the DSU pool
+    let io_ps = ps_from_bytes(io_bytes, r.dsu_pool_bw);
+    let (total_wo, bound_by) = if compute_ps >= io_ps {
+        (compute_ps, "compute")
+    } else {
+        (io_ps, "collect")
+    };
+    let traffic = LayerTraffic {
+        weight_bytes: 0,
+        input_bytes: elems,
+        output_bytes: elems,
+        psum_bytes: 0,
+    };
+    LayerTiming {
+        name: l.name.clone(),
+        compute_ps,
+        weights_ps: 0,
+        broadcast_ps: 0,
+        collect_ps: io_ps,
+        total_ps: total_wo + r.reconfig,
+        bound_by,
+        utilization: 0.0,
+        macs: 0,
+        traffic,
+        energy_j: io_bytes as f64 * (r.dram_pj_per_byte + r.fabric_pj_per_byte) * 1e-12,
+    }
+}
+
+/// Schedule a whole network. `channels_in` is the input channel count
+/// (3 for RGB images); channel counts thread through the layer list.
+pub fn schedule_network(
+    layers: &[Layer],
+    channels_in: u32,
+    batch: u32,
+    flow: Dataflow,
+    elem_bytes: u32,
+    r: &ChipResources,
+) -> NetworkSchedule {
+    assert!(batch > 0);
+    let mut timings = Vec::with_capacity(layers.len());
+    let mut channels = channels_in;
+    let mut total_ps: Ps = 0;
+    let mut total_macs = 0u64;
+    let mut energy = 0.0;
+
+    for l in layers {
+        let t = if l.gemm(batch).is_some() {
+            schedule_gemm(l, batch, flow, elem_bytes, r)
+        } else {
+            schedule_vector(l, channels, batch, r)
+        };
+        channels = l.out_channels(channels);
+        total_ps += t.total_ps;
+        total_macs += t.macs;
+        energy += t.energy_j;
+        timings.push(t);
+    }
+    // Static power over the whole run.
+    energy += r.static_w * total_ps as f64 * 1e-12;
+
+    NetworkSchedule {
+        layers: timings,
+        batch,
+        total_ps,
+        total_macs,
+        energy_j: energy,
+        peak_mac_rate: r.macs.n_macs as f64 * r.macs.freq_hz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::layer::Layer;
+
+    pub fn test_resources() -> ChipResources {
+        ChipResources {
+            macs: MacArray::sunrise_total(),
+            n_vpus: 64,
+            lanes_per_vpu: 512,
+            weight_pool_bw: 0.9e12,
+            dsu_pool_bw: 0.9e12,
+            broadcast_bw: 13.0e12 * 2.0 / 3.0,
+            collect_bw: 13.0e12 / 3.0,
+            reconfig: crate::memory::ns(2000),
+            weight_capacity_per_vpu: 4_394_531,
+            dram_pj_per_byte: 2.0,
+            fabric_pj_per_byte: 0.16,
+            static_w: 6.0,
+        }
+    }
+
+    #[test]
+    fn conv1_is_compute_bound() {
+        let l = Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3);
+        let s = schedule_network(&[l], 3, 1, Dataflow::WeightStationary, 1, &test_resources());
+        assert_eq!(s.layers[0].bound_by, "compute");
+        assert!(s.layers[0].utilization > 0.9);
+    }
+
+    #[test]
+    fn total_is_sum_of_layers() {
+        let layers = vec![
+            Layer::conv("a", 56, 56, 64, 64, 3, 1, 1),
+            Layer::conv("b", 56, 56, 64, 64, 3, 1, 1),
+        ];
+        let r = test_resources();
+        let s = schedule_network(&layers, 64, 1, Dataflow::WeightStationary, 1, &r);
+        assert_eq!(s.total_ps, s.layers[0].total_ps + s.layers[1].total_ps);
+        assert_eq!(s.total_macs, s.layers[0].macs + s.layers[1].macs);
+    }
+
+    #[test]
+    fn batching_improves_throughput() {
+        let layers = vec![Layer::conv("late", 7, 7, 512, 512, 3, 1, 1)];
+        let r = test_resources();
+        let s1 = schedule_network(&layers, 512, 1, Dataflow::WeightStationary, 1, &r);
+        let s16 = schedule_network(&layers, 512, 16, Dataflow::WeightStationary, 1, &r);
+        assert!(
+            s16.images_per_s() > s1.images_per_s() * 4.0,
+            "b1 {} b16 {}",
+            s1.images_per_s(),
+            s16.images_per_s()
+        );
+    }
+
+    #[test]
+    fn output_stationary_can_become_weight_bound() {
+        // Early layer with huge N: OS re-streams weights per N-tile.
+        let l = Layer::conv("early", 112, 112, 64, 64, 3, 1, 1);
+        let r = test_resources();
+        let ws = schedule_network(&[l.clone()], 64, 1, Dataflow::WeightStationary, 1, &r);
+        let os = schedule_network(&[l], 64, 1, Dataflow::OutputStationary, 1, &r);
+        assert!(os.layers[0].traffic.weight_bytes > 10 * ws.layers[0].traffic.weight_bytes);
+        assert!(os.total_ps >= ws.total_ps);
+    }
+
+    #[test]
+    fn vector_layers_cost_time_but_no_macs() {
+        let l = Layer {
+            name: "pool".into(),
+            kind: LayerKind::Pool { k: 3, stride: 2 },
+            in_h: 112,
+            in_w: 112,
+        };
+        let s = schedule_network(&[l], 64, 1, Dataflow::WeightStationary, 1, &test_resources());
+        assert_eq!(s.total_macs, 0);
+        assert!(s.total_ps > 0);
+    }
+
+    #[test]
+    fn power_is_positive_and_bounded() {
+        let l = Layer::conv("c", 56, 56, 256, 256, 3, 1, 1);
+        let s = schedule_network(&[l], 256, 8, Dataflow::WeightStationary, 1, &test_resources());
+        let p = s.avg_power_w();
+        assert!(p > 5.0 && p < 50.0, "power {p}");
+    }
+
+    #[test]
+    fn effective_tops_below_peak() {
+        let l = Layer::conv("c", 28, 28, 256, 512, 3, 1, 1);
+        let s = schedule_network(&[l], 256, 4, Dataflow::WeightStationary, 1, &test_resources());
+        assert!(s.effective_tops() <= 25.0 + 1e-9);
+        assert!(s.utilization() <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiling: fit a GEMM-shaped layer into the pool's physical limits.
+//!
+//! Two constraints bind (paper §IV–V):
+//! 1. **Weight residency** — each VPU's owned rows must fit its local DRAM
+//!    slice (weight-stationary requires residency).
+//! 2. **Lane buffer** — the N dimension is processed `lanes` positions at
+//!    a time.
+//!
+//! The tiler splits M across VPUs (ownership) and, if a layer's weights
+//! exceed total residency, splits K into resident passes (each pass
+//! streams partial inputs and accumulates — the only case where partial
+//! sums cross the fabric).
+
+use crate::dataflow::layer::GemmShape;
+
+/// Physical limits the tiler packs against.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolLimits {
+    pub n_vpus: u32,
+    pub lanes_per_vpu: u32,
+    /// Weight bytes each VPU can hold resident.
+    pub weight_capacity_per_vpu: u64,
+}
+
+/// A tiled layer plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TilePlan {
+    /// Rows (output channels) owned by the busiest VPU.
+    pub m_per_vpu: u32,
+    /// Number of K passes (1 = fully resident; >1 = K split, psums move).
+    pub k_passes: u32,
+    /// K elements per pass.
+    pub k_per_pass: u32,
+    /// Lane batches per row pass: ceil(N / lanes).
+    pub n_batches: u32,
+    /// VPUs that receive work.
+    pub active_vpus: u32,
+}
+
+impl TilePlan {
+    /// Total cycles on the critical-path VPU.
+    pub fn cycles(&self) -> u64 {
+        self.m_per_vpu as u64 * self.k_per_pass as u64 * self.n_batches as u64 * self.k_passes as u64
+    }
+}
+
+/// Plan a layer. `elem_bytes` is the weight element size.
+pub fn plan(g: GemmShape, elem_bytes: u32, lim: PoolLimits) -> TilePlan {
+    assert!(g.m > 0 && g.k > 0 && g.n > 0);
+    let active_vpus = g.m.min(lim.n_vpus);
+    let m_per_vpu = g.m.div_ceil(lim.n_vpus).max(1);
+
+    // Weight residency per VPU: m_per_vpu × k × elem_bytes must fit.
+    let bytes_per_vpu = m_per_vpu as u64 * g.k as u64 * elem_bytes as u64;
+    let k_passes = bytes_per_vpu.div_ceil(lim.weight_capacity_per_vpu).max(1) as u32;
+    let k_per_pass = g.k.div_ceil(k_passes);
+
+    TilePlan {
+        m_per_vpu,
+        k_passes,
+        k_per_pass,
+        n_batches: g.n.div_ceil(lim.lanes_per_vpu),
+        active_vpus,
+    }
+}
+
+/// Does the whole network fit weight-resident? (The paper's capacity
+/// argument: Sunrise holds entire models in bonded DRAM.)
+pub fn fits_resident(total_weight_bytes: u64, lim: PoolLimits) -> bool {
+    total_weight_bytes <= lim.weight_capacity_per_vpu * lim.n_vpus as u64
+}
+
+/// Sunrise pool limits (64 VPUs × 512 lanes; 4.5 Gb DRAM split: half to
+/// VPU weight pools, half to DSU feature pools).
+pub fn sunrise_limits() -> PoolLimits {
+    PoolLimits {
+        n_vpus: 64,
+        lanes_per_vpu: 512,
+        weight_capacity_per_vpu: (4.5e9 / 8.0 / 2.0) as u64 / 64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_layer_single_pass() {
+        let g = GemmShape { m: 64, k: 147, n: 12544 };
+        let p = plan(g, 1, sunrise_limits());
+        assert_eq!(p.k_passes, 1);
+        assert_eq!(p.m_per_vpu, 1);
+        assert_eq!(p.active_vpus, 64);
+        assert_eq!(p.n_batches, 25); // ceil(12544/512)
+        assert_eq!(p.cycles(), 147 * 25);
+    }
+
+    #[test]
+    fn narrow_layer_leaves_vpus_idle() {
+        let g = GemmShape { m: 8, k: 512, n: 1000 };
+        let p = plan(g, 1, sunrise_limits());
+        assert_eq!(p.active_vpus, 8);
+    }
+
+    #[test]
+    fn huge_dense_layer_splits_k() {
+        // A GPT-like 12288×49152 dense layer at fp16: 1.2 GB of weights —
+        // beyond one VPU's slice for its rows → K passes > 1.
+        let g = GemmShape { m: 49152, k: 12288, n: 64 };
+        let lim = sunrise_limits();
+        let p = plan(g, 2, lim);
+        assert!(p.k_passes > 1, "passes {}", p.k_passes);
+        assert!(p.k_per_pass as u64 * p.m_per_vpu as u64 * 2 <= lim.weight_capacity_per_vpu + g.k as u64 * 2);
+    }
+
+    #[test]
+    fn resnet50_fits_resident() {
+        // 25.5 M params at int8 ≪ ~281 MB of VPU weight DRAM.
+        assert!(fits_resident(25_500_000, sunrise_limits()));
+    }
+
+    #[test]
+    fn gpt3_does_not_fit() {
+        // 174 B params at fp16 = 348 GB ≫ capacity (paper §I).
+        assert!(!fits_resident(348_000_000_000, sunrise_limits()));
+    }
+
+    #[test]
+    fn property_plan_covers_all_work() {
+        use crate::util::proptest::check;
+        check(0x7111, 80, |gen| {
+            let g = GemmShape {
+                m: gen.usize("m", 1, 4096) as u32,
+                k: gen.usize("k", 1, 16384) as u32,
+                n: gen.usize("n", 1, 65536) as u32,
+            };
+            let lim = sunrise_limits();
+            let p = plan(g, 1, lim);
+            // Coverage: per-VPU rows × vpus ≥ m; k passes cover k; lanes cover n.
+            crate::prop_assert!(p.m_per_vpu as u64 * lim.n_vpus as u64 >= g.m as u64, "m uncovered");
+            crate::prop_assert!(p.k_per_pass as u64 * p.k_passes as u64 >= g.k as u64, "k uncovered");
+            crate::prop_assert!(p.n_batches as u64 * lim.lanes_per_vpu as u64 >= g.n as u64, "n uncovered");
+            crate::prop_assert!(p.active_vpus <= lim.n_vpus, "too many vpus");
+            Ok(())
+        });
+    }
+}

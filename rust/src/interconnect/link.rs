@@ -1,0 +1,124 @@
+//! Concrete link model: a provisioned set of wires between two endpoints.
+//!
+//! The chip simulator carves links out of a [`Technology`]'s connection
+//! area (e.g. each VPU's private slice of the bonded DRAM interface) and
+//! charges transfer time + energy per message through them.
+
+use crate::interconnect::technology::{TechParams, Technology};
+use crate::util::units::BITS_PER_BYTE;
+
+/// A point-to-point (or broadcast) link built from `wires` wires of a given
+/// technology clocked at `freq_hz`.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    pub params: TechParams,
+    pub wires: f64,
+    pub freq_hz: f64,
+    /// Achievable fraction of raw bandwidth (protocol + ECC overhead).
+    pub utilization: f64,
+}
+
+impl Link {
+    /// Build a link from a connection area budget; frequency defaults to
+    /// the technology's RC-limited maximum.
+    pub fn from_area(name: &str, tech: Technology, area_mm2: f64) -> Link {
+        let params = tech.params();
+        Link {
+            name: name.to_string(),
+            wires: params.wires(area_mm2),
+            freq_hz: params.max_freq_hz(),
+            params,
+            utilization: 0.9,
+        }
+    }
+
+    /// Build a link sized to hit a target bandwidth (bytes/s) at the
+    /// technology's max frequency; returns the required connection area as
+    /// well (used to check feasibility against the die's area budget).
+    pub fn for_bandwidth(name: &str, tech: Technology, bytes_per_s: f64) -> (Link, f64) {
+        let params = tech.params();
+        let freq = params.max_freq_hz();
+        let wires = bytes_per_s * BITS_PER_BYTE / freq / 0.9;
+        let area = wires / params.wire_density_per_mm2();
+        (
+            Link {
+                name: name.to_string(),
+                params,
+                wires,
+                freq_hz: freq,
+                utilization: 0.9,
+            },
+            area,
+        )
+    }
+
+    /// Effective bandwidth in bytes/s.
+    pub fn bandwidth_bytes(&self) -> f64 {
+        self.wires * self.freq_hz * self.utilization / BITS_PER_BYTE
+    }
+
+    /// Time (s) to move `bytes` across the link.
+    pub fn transfer_time_s(&self, bytes: f64) -> f64 {
+        bytes / self.bandwidth_bytes()
+    }
+
+    /// Energy (J) to move `bytes` across the link.
+    pub fn transfer_energy_j(&self, bytes: f64) -> f64 {
+        bytes * BITS_PER_BYTE * self.params.energy_pj_per_bit() * 1e-12
+    }
+
+    /// Static + dynamic link power (W) at a sustained `bytes_per_s` load.
+    pub fn power_w(&self, bytes_per_s: f64) -> f64 {
+        bytes_per_s * BITS_PER_BYTE * self.params.energy_pj_per_bit() * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_approx;
+
+    #[test]
+    fn from_area_bandwidth() {
+        // 1 mm² of HITOC at 5 GHz, 90% utilization.
+        let l = Link::from_area("dsu-vpu", Technology::Hitoc, 1.0);
+        let expect = l.wires * l.freq_hz * 0.9 / 8.0;
+        assert_approx!(l.bandwidth_bytes(), expect, 1e-12);
+        assert!(l.bandwidth_bytes() > 1e12, "HITOC mm² should exceed 1 TB/s");
+    }
+
+    #[test]
+    fn for_bandwidth_inverts() {
+        // Sunrise's 1.8 TB/s DRAM interface over HITOC.
+        let (l, area) = Link::for_bandwidth("dram", Technology::Hitoc, 1.8e12);
+        assert_approx!(l.bandwidth_bytes(), 1.8e12, 1e-9);
+        // Must fit in a tiny fraction of a 110 mm² die.
+        assert!(area < 5.0, "area {area} mm²");
+    }
+
+    #[test]
+    fn interposer_cannot_feasibly_match_hitoc() {
+        // The memory-wall argument: the same 1.8 TB/s over interposer needs
+        // more beachfront area than the whole die.
+        let (_, area) = Link::for_bandwidth("dram", Technology::Interposer, 1.8e12);
+        assert!(area > 110.0, "interposer area {area} mm² should exceed the die");
+    }
+
+    #[test]
+    fn transfer_time_and_energy() {
+        let l = Link::from_area("x", Technology::Tsv, 1.0);
+        let bytes = 1e9;
+        assert_approx!(l.transfer_time_s(bytes), bytes / l.bandwidth_bytes(), 1e-12);
+        // TSV at 0.55 pJ/b: 1 GB = 8e9 b × 0.55 pJ = 4.4 mJ.
+        assert_approx!(l.transfer_energy_j(bytes), 4.4e-3, 0.02);
+    }
+
+    #[test]
+    fn hitoc_energy_advantage_is_two_orders() {
+        let h = Link::from_area("h", Technology::Hitoc, 1.0);
+        let i = Link::from_area("i", Technology::Interposer, 1.0);
+        let ratio = i.transfer_energy_j(1e6) / h.transfer_energy_j(1e6);
+        assert!(ratio > 80.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Die-to-die / wafer-to-wafer interconnect models (paper §III, Table I).
+//!
+//! The paper's central physical argument: hybrid wafer bonding (HITOC)
+//! packs vertical connections at ~1 µm pitch — two dimensions of area
+//! pitch instead of the interposer's one-dimensional beachfront — which
+//! multiplies wire density by ~10⁴ over interposer and ~10² over TSV, and
+//! shortens the data path enough to cut transfer energy from pJ/b to
+//! hundredths of pJ/b.
+//!
+//! - [`technology`] — the three bonding technologies and their Table I
+//!   parameters (pitch → density → bandwidth → energy).
+//! - [`link`] — a concrete link model (wires, frequency, utilization,
+//!   transfer time/energy) used by the chip simulator.
+//! - [`noc`] — the on-chip broadcast/collect fabric between the DSU pool
+//!   and the VPU pool (13 TB/s in the paper).
+
+pub mod link;
+pub mod noc;
+pub mod technology;
+
+pub use link::Link;
+pub use technology::{Technology, TechParams};

@@ -1,0 +1,140 @@
+//! The DSU-pool ↔ VPU-pool fabric (paper §V).
+//!
+//! Feature data is *broadcast* from the DSU pool to all VPUs; each VPU
+//! computes its output channels independently and sends results back to
+//! the central (DSU) memory pool. The paper provisions 13 TB/s on this
+//! fabric so that DSU↔VPU transfer "is not a bottleneck".
+//!
+//! The model: one broadcast channel (writes reach every VPU
+//! simultaneously — physically a fan-out tree over HITOC wiring) and a
+//! collect channel arbitrated round-robin between VPUs.
+
+use crate::interconnect::Technology;
+
+/// Fabric between the DSU pool and `n_vpus` VPUs.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub tech: Technology,
+    pub n_vpus: usize,
+    /// Broadcast-direction aggregate bandwidth, bytes/s.
+    pub broadcast_bytes_per_s: f64,
+    /// Collect-direction aggregate bandwidth, bytes/s.
+    pub collect_bytes_per_s: f64,
+}
+
+/// Outcome of a fabric transaction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+impl Fabric {
+    /// Sunrise's fabric: 13 TB/s aggregate, split 2:1 broadcast:collect
+    /// (features out dominate results back for weight-stationary conv).
+    pub fn sunrise(n_vpus: usize) -> Fabric {
+        let total = 13.0e12;
+        Fabric {
+            tech: Technology::Hitoc,
+            n_vpus,
+            broadcast_bytes_per_s: total * 2.0 / 3.0,
+            collect_bytes_per_s: total / 3.0,
+        }
+    }
+
+    /// Same-topology fabric built from a different integration technology
+    /// and a connection-area budget (for the HITOC-vs-TSV-vs-interposer
+    /// ablation). Area is split like Sunrise's 2:1.
+    pub fn with_technology(tech: Technology, n_vpus: usize, area_mm2: f64) -> Fabric {
+        let p = tech.params();
+        let total = p.bandwidth_bytes(area_mm2, p.max_freq_hz()) * 0.9;
+        Fabric {
+            tech,
+            n_vpus,
+            broadcast_bytes_per_s: total * 2.0 / 3.0,
+            collect_bytes_per_s: total / 3.0,
+        }
+    }
+
+    /// Broadcast `bytes` of feature data to every VPU. One physical
+    /// traversal (fan-out tree): time charged once, energy charged per
+    /// receiving endpoint's bond crossing.
+    pub fn broadcast(&self, bytes: f64) -> Transfer {
+        let time_s = bytes / self.broadcast_bytes_per_s;
+        let pj_per_bit = self.tech.params().energy_pj_per_bit();
+        let energy_j = bytes * 8.0 * pj_per_bit * 1e-12 * self.n_vpus as f64;
+        Transfer { time_s, energy_j }
+    }
+
+    /// Collect `bytes_per_vpu` of results from each of `active_vpus` VPUs.
+    /// The collect channel is shared: total bytes serialize through it.
+    pub fn collect(&self, bytes_per_vpu: f64, active_vpus: usize) -> Transfer {
+        assert!(active_vpus <= self.n_vpus);
+        let total = bytes_per_vpu * active_vpus as f64;
+        let time_s = total / self.collect_bytes_per_s;
+        let pj_per_bit = self.tech.params().energy_pj_per_bit();
+        Transfer {
+            time_s,
+            energy_j: total * 8.0 * pj_per_bit * 1e-12,
+        }
+    }
+
+    /// Total aggregate bandwidth in bytes/s.
+    pub fn total_bandwidth(&self) -> f64 {
+        self.broadcast_bytes_per_s + self.collect_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_approx;
+
+    #[test]
+    fn sunrise_fabric_is_13_tbps() {
+        let f = Fabric::sunrise(64);
+        assert_approx!(f.total_bandwidth(), 13.0e12, 1e-9);
+    }
+
+    #[test]
+    fn broadcast_time_independent_of_fanout() {
+        let f = Fabric::sunrise(64);
+        let t1 = f.broadcast(1e6).time_s;
+        let f2 = Fabric::sunrise(128);
+        assert_approx!(f2.broadcast(1e6).time_s, t1, 1e-12);
+        // ... but energy scales with receivers.
+        assert!(f2.broadcast(1e6).energy_j > f.broadcast(1e6).energy_j);
+    }
+
+    #[test]
+    fn collect_serializes() {
+        let f = Fabric::sunrise(64);
+        let one = f.collect(1e5, 1).time_s;
+        let all = f.collect(1e5, 64).time_s;
+        assert_approx!(all, one * 64.0, 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn collect_rejects_too_many_vpus() {
+        Fabric::sunrise(4).collect(1.0, 5);
+    }
+
+    #[test]
+    fn interposer_fabric_is_orders_slower() {
+        // Same 2 mm² of connect area: HITOC vs interposer fabric.
+        let h = Fabric::with_technology(Technology::Hitoc, 64, 2.0);
+        let i = Fabric::with_technology(Technology::Interposer, 64, 2.0);
+        let ratio = h.total_bandwidth() / i.total_bandwidth();
+        assert!(ratio > 1e3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sunrise_13tbps_feasible_in_hitoc_area() {
+        // 13 TB/s at HITOC density must fit in a small connection area —
+        // the physical feasibility claim behind §V.
+        let p = Technology::Hitoc.params();
+        let area_needed = 13.0e12 * 8.0 / p.max_freq_hz() / 0.9 / p.wire_density_per_mm2();
+        assert!(area_needed < 31.0, "needed {area_needed} mm² of a 110 mm² die");
+    }
+}

@@ -1,0 +1,240 @@
+//! Two-pass assembler for the 13-bit control processor.
+//!
+//! Syntax: one instruction per line; `label:` lines; `;` or `#` comments;
+//! registers `r0`–`r7`; decimal or `0x` immediates; labels usable in
+//! `jmp`/`jal`/`bnz`.
+//!
+//! Mnemonics: `nop halt wait ldi lui addi mov add sub and or xor shl shr
+//! ld st jmp jal jr bnz csrr csrw`.
+
+use crate::isa::encoding::{encode, AluOp, Instr};
+use std::collections::BTreeMap;
+
+/// Assembly error with line context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err(line: usize, message: impl Into<String>) -> AsmError {
+    AsmError { line, message: message.into() }
+}
+
+fn parse_reg(tok: &str, line: usize) -> Result<u8, AsmError> {
+    let t = tok.trim_end_matches(',');
+    if let Some(n) = t.strip_prefix('r').and_then(|n| n.parse::<u8>().ok()) {
+        if n < 8 {
+            return Ok(n);
+        }
+    }
+    Err(err(line, format!("bad register `{tok}`")))
+}
+
+fn parse_imm(tok: &str, line: usize) -> Result<i32, AsmError> {
+    let t = tok.trim_end_matches(',');
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t),
+    };
+    let v = if let Some(hex) = t.strip_prefix("0x") {
+        i32::from_str_radix(hex, 16)
+    } else {
+        t.parse::<i32>()
+    }
+    .map_err(|_| err(line, format!("bad immediate `{tok}`")))?;
+    Ok(if neg { -v } else { v })
+}
+
+/// Assemble `src` into 13-bit words.
+pub fn assemble(src: &str) -> Result<Vec<u16>, AsmError> {
+    // Pass 1: collect labels.
+    let mut labels: BTreeMap<String, u16> = BTreeMap::new();
+    let mut addr: u16 = 0;
+    let lines: Vec<(usize, String)> = src
+        .lines()
+        .enumerate()
+        .map(|(i, l)| {
+            let no_comment = l.split(&[';', '#'][..]).next().unwrap_or("");
+            (i + 1, no_comment.trim().to_string())
+        })
+        .filter(|(_, l)| !l.is_empty())
+        .collect();
+
+    for (ln, line) in &lines {
+        if let Some(label) = line.strip_suffix(':') {
+            if labels.insert(label.to_string(), addr).is_some() {
+                return Err(err(*ln, format!("duplicate label `{label}`")));
+            }
+        } else {
+            addr += 1;
+        }
+    }
+
+    // Pass 2: encode.
+    let mut words = Vec::new();
+    let mut pc: u16 = 0;
+    for (ln, line) in &lines {
+        if line.ends_with(':') {
+            continue;
+        }
+        let ln = *ln;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let mnemonic = toks[0].to_ascii_lowercase();
+        let need = |n: usize| -> Result<(), AsmError> {
+            if toks.len() != n + 1 {
+                Err(err(ln, format!("`{mnemonic}` expects {n} operand(s)")))
+            } else {
+                Ok(())
+            }
+        };
+        let resolve = |tok: &str| -> Result<u16, AsmError> {
+            if let Some(&a) = labels.get(tok.trim_end_matches(',')) {
+                Ok(a)
+            } else {
+                parse_imm(tok, ln).map(|v| v as u16 & 0x1FF)
+            }
+        };
+        let alu = |f: AluOp| -> Result<Instr, AsmError> {
+            need(2)?;
+            Ok(Instr::Alu { funct: f, rd: parse_reg(toks[1], ln)?, rs: parse_reg(toks[2], ln)? })
+        };
+
+        let instr = match mnemonic.as_str() {
+            "nop" => { need(0)?; Instr::Nop }
+            "halt" => { need(0)?; Instr::Halt }
+            "wait" => { need(0)?; Instr::Wait }
+            "ldi" => {
+                need(2)?;
+                let imm = parse_imm(toks[2], ln)?;
+                if !(0..64).contains(&imm) {
+                    return Err(err(ln, format!("ldi immediate {imm} out of [0,63]")));
+                }
+                Instr::Ldi { rd: parse_reg(toks[1], ln)?, imm: imm as u8 }
+            }
+            "lui" => {
+                need(2)?;
+                let imm = parse_imm(toks[2], ln)?;
+                if !(0..64).contains(&imm) {
+                    return Err(err(ln, format!("lui immediate {imm} out of [0,63]")));
+                }
+                Instr::Lui { rd: parse_reg(toks[1], ln)?, imm: imm as u8 }
+            }
+            "addi" => {
+                need(2)?;
+                let imm = parse_imm(toks[2], ln)?;
+                if !(-32..32).contains(&imm) {
+                    return Err(err(ln, format!("addi immediate {imm} out of [-32,31]")));
+                }
+                Instr::Addi { rd: parse_reg(toks[1], ln)?, imm: imm as i8 }
+            }
+            "mov" => alu(AluOp::Mov)?,
+            "add" => alu(AluOp::Add)?,
+            "sub" => alu(AluOp::Sub)?,
+            "and" => alu(AluOp::And)?,
+            "or" => alu(AluOp::Or)?,
+            "xor" => alu(AluOp::Xor)?,
+            "shl" => alu(AluOp::Shl)?,
+            "shr" => alu(AluOp::Shr)?,
+            "ld" => { need(2)?; Instr::Ld { rd: parse_reg(toks[1], ln)?, rs: parse_reg(toks[2], ln)? } }
+            "st" => { need(2)?; Instr::St { rd: parse_reg(toks[1], ln)?, rs: parse_reg(toks[2], ln)? } }
+            "csrr" => { need(2)?; Instr::Csrr { rd: parse_reg(toks[1], ln)?, rs: parse_reg(toks[2], ln)? } }
+            "csrw" => { need(2)?; Instr::Csrw { rd: parse_reg(toks[1], ln)?, rs: parse_reg(toks[2], ln)? } }
+            "jmp" => { need(1)?; Instr::Jmp { addr: resolve(toks[1])? } }
+            "jal" => { need(1)?; Instr::Jal { addr: resolve(toks[1])? } }
+            "jr" => { need(1)?; Instr::Jr { rs: parse_reg(toks[1], ln)? } }
+            "bnz" => {
+                need(2)?;
+                let rd = parse_reg(toks[1], ln)?;
+                let target = resolve(toks[2])?;
+                let off = target as i32 - pc as i32;
+                if !(-32..32).contains(&off) {
+                    return Err(err(ln, format!("bnz target out of range (offset {off})")));
+                }
+                Instr::Bnz { rd, off: off as i8 }
+            }
+            other => return Err(err(ln, format!("unknown mnemonic `{other}`"))),
+        };
+        words.push(encode(instr));
+        pc += 1;
+    }
+    Ok(words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encoding::decode;
+
+    #[test]
+    fn assembles_with_labels_and_comments() {
+        let prog = assemble(
+            "; init\n\
+             ldi r1, 3   # counter\n\
+             loop:\n\
+             addi r1, -1\n\
+             bnz r1, loop\n\
+             halt\n",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 4);
+        assert_eq!(decode(prog[0]), Some(Instr::Ldi { rd: 1, imm: 3 }));
+        assert_eq!(decode(prog[2]), Some(Instr::Bnz { rd: 1, off: -1 }));
+    }
+
+    #[test]
+    fn hex_immediates() {
+        let prog = assemble("ldi r2, 0x2A\nhalt\n").unwrap();
+        assert_eq!(decode(prog[0]), Some(Instr::Ldi { rd: 2, imm: 42 }));
+    }
+
+    #[test]
+    fn forward_label_reference() {
+        let prog = assemble("jmp end\nnop\nend:\nhalt\n").unwrap();
+        assert_eq!(decode(prog[0]), Some(Instr::Jmp { addr: 2 }));
+    }
+
+    #[test]
+    fn rejects_bad_register() {
+        assert!(assemble("ldi r9, 1\n").is_err());
+        assert!(assemble("ldi x1, 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_imm() {
+        assert!(assemble("ldi r1, 64\n").is_err());
+        assert!(assemble("addi r1, 40\n").is_err());
+        assert!(assemble("addi r1, -33\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_label() {
+        let e = assemble("a:\nnop\na:\nhalt\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        assert!(assemble("frobnicate r1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_operand_count() {
+        assert!(assemble("add r1\n").is_err());
+        assert!(assemble("halt r1\n").is_err());
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let e = assemble("nop\nnop\nbadop\n").unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+}

@@ -1,0 +1,316 @@
+//! The 13-bit control-processor core: a straightforward interpreter with a
+//! CSR bus through which firmware programs the UCE.
+
+use crate::isa::encoding::{decode, AluOp, Instr};
+
+/// CSR bus: the UCE (or a test double) sits on the other side.
+pub trait CsrBus {
+    /// Read CSR `addr`.
+    fn csr_read(&mut self, addr: u16) -> u16;
+    /// Write CSR `addr`.
+    fn csr_write(&mut self, addr: u16, value: u16);
+    /// `WAIT` polls this; `true` lets the core proceed.
+    fn poll_done(&mut self) -> bool;
+}
+
+/// A no-op bus for tests and standalone programs.
+#[derive(Debug, Default)]
+pub struct NullBus {
+    pub csrs: std::collections::BTreeMap<u16, u16>,
+}
+
+impl CsrBus for NullBus {
+    fn csr_read(&mut self, addr: u16) -> u16 {
+        self.csrs.get(&addr).copied().unwrap_or(0)
+    }
+    fn csr_write(&mut self, addr: u16, value: u16) {
+        self.csrs.insert(addr, value);
+    }
+    fn poll_done(&mut self) -> bool {
+        true
+    }
+}
+
+/// Result of stepping the core once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepResult {
+    /// Executed one instruction.
+    Ran,
+    /// Blocked on `WAIT` (PC not advanced).
+    Waiting,
+    /// Executed `HALT`.
+    Halted,
+    /// Hit an undecodable word or PC out of range.
+    Fault,
+}
+
+/// Firmware memory sizes.
+pub const IMEM_WORDS: usize = 512; // 9-bit instruction addresses
+pub const DMEM_WORDS: usize = 1024;
+
+/// The control-processor core.
+pub struct Cpu {
+    pub regs: [u16; 8],
+    pub pc: u16,
+    pub imem: Vec<u16>,
+    pub dmem: Vec<u16>,
+    pub halted: bool,
+    /// Cycles retired (each step that `Ran` or `Waiting` costs one).
+    pub cycles: u64,
+}
+
+impl Cpu {
+    pub fn new(program: &[u16]) -> Cpu {
+        assert!(program.len() <= IMEM_WORDS, "program too large");
+        let mut imem = program.to_vec();
+        imem.resize(IMEM_WORDS, 0); // pad with NOP (0 decodes to NOP)
+        Cpu {
+            regs: [0; 8],
+            pc: 0,
+            imem,
+            dmem: vec![0; DMEM_WORDS],
+            halted: false,
+            cycles: 0,
+        }
+    }
+
+    /// Step one instruction against `bus`.
+    pub fn step(&mut self, bus: &mut impl CsrBus) -> StepResult {
+        if self.halted {
+            return StepResult::Halted;
+        }
+        let Some(&word) = self.imem.get(self.pc as usize) else {
+            self.halted = true;
+            return StepResult::Fault;
+        };
+        let Some(instr) = decode(word) else {
+            self.halted = true;
+            return StepResult::Fault;
+        };
+        self.cycles += 1;
+        let mut next_pc = self.pc.wrapping_add(1);
+        match instr {
+            Instr::Nop => {}
+            Instr::Halt => {
+                self.halted = true;
+                return StepResult::Halted;
+            }
+            Instr::Wait => {
+                if !bus.poll_done() {
+                    return StepResult::Waiting; // PC stays; retry next step
+                }
+            }
+            Instr::Ldi { rd, imm } => self.regs[rd as usize] = imm as u16,
+            Instr::Lui { rd, imm } => {
+                let low = self.regs[rd as usize] & 0x3F;
+                self.regs[rd as usize] = low | ((imm as u16) << 6);
+            }
+            Instr::Addi { rd, imm } => {
+                self.regs[rd as usize] = self.regs[rd as usize].wrapping_add(imm as u16);
+            }
+            Instr::Alu { funct, rd, rs } => {
+                let a = self.regs[rd as usize];
+                let b = self.regs[rs as usize];
+                self.regs[rd as usize] = match funct {
+                    AluOp::Mov => b,
+                    AluOp::Add => a.wrapping_add(b),
+                    AluOp::Sub => a.wrapping_sub(b),
+                    AluOp::And => a & b,
+                    AluOp::Or => a | b,
+                    AluOp::Xor => a ^ b,
+                    AluOp::Shl => a.wrapping_shl(b as u32 & 15),
+                    AluOp::Shr => a.wrapping_shr(b as u32 & 15),
+                };
+            }
+            Instr::Ld { rd, rs } => {
+                let addr = self.regs[rs as usize] as usize % DMEM_WORDS;
+                self.regs[rd as usize] = self.dmem[addr];
+            }
+            Instr::St { rd, rs } => {
+                let addr = self.regs[rs as usize] as usize % DMEM_WORDS;
+                self.dmem[addr] = self.regs[rd as usize];
+            }
+            Instr::Jmp { addr } => next_pc = addr,
+            Instr::Jal { addr } => {
+                self.regs[7] = next_pc;
+                next_pc = addr;
+            }
+            Instr::Jr { rs } => next_pc = self.regs[rs as usize] & 0x1FF,
+            Instr::Bnz { rd, off } => {
+                if self.regs[rd as usize] != 0 {
+                    next_pc = self.pc.wrapping_add(off as u16) & 0x1FF;
+                }
+            }
+            Instr::Csrr { rd, rs } => {
+                let addr = self.regs[rs as usize];
+                self.regs[rd as usize] = bus.csr_read(addr);
+            }
+            Instr::Csrw { rd, rs } => {
+                let addr = self.regs[rs as usize];
+                bus.csr_write(addr, self.regs[rd as usize]);
+            }
+        }
+        self.pc = next_pc & 0x1FF;
+        StepResult::Ran
+    }
+
+    /// Run until halt/fault or `max_steps`. Returns the last step result.
+    pub fn run(&mut self, bus: &mut impl CsrBus, max_steps: u64) -> StepResult {
+        let mut last = StepResult::Ran;
+        for _ in 0..max_steps {
+            last = self.step(bus);
+            if matches!(last, StepResult::Halted | StepResult::Fault) {
+                return last;
+            }
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+
+    fn run_asm(src: &str) -> Cpu {
+        let prog = assemble(src).expect("assembles");
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = NullBus::default();
+        let r = cpu.run(&mut bus, 100_000);
+        assert_eq!(r, StepResult::Halted, "program did not halt");
+        cpu
+    }
+
+    #[test]
+    fn arithmetic_program() {
+        let cpu = run_asm(
+            "ldi r1, 10\n\
+             ldi r2, 32\n\
+             add r1, r2\n\
+             halt\n",
+        );
+        assert_eq!(cpu.regs[1], 42);
+    }
+
+    #[test]
+    fn sum_loop_1_to_10() {
+        // r1 = counter, r2 = accumulator
+        let cpu = run_asm(
+            "ldi r1, 10\n\
+             ldi r2, 0\n\
+             loop:\n\
+             add r2, r1\n\
+             addi r1, -1\n\
+             bnz r1, loop\n\
+             halt\n",
+        );
+        assert_eq!(cpu.regs[2], 55);
+    }
+
+    #[test]
+    fn lui_builds_12bit_constants() {
+        let cpu = run_asm(
+            "ldi r3, 21\n\
+             lui r3, 42\n\
+             halt\n",
+        );
+        assert_eq!(cpu.regs[3], (42 << 6) | 21);
+    }
+
+    #[test]
+    fn memory_store_load() {
+        let cpu = run_asm(
+            "ldi r1, 42\n\
+             ldi r2, 7\n\
+             st r1, r2\n\
+             ldi r3, 7\n\
+             ld r4, r3\n\
+             halt\n",
+        );
+        assert_eq!(cpu.regs[4], 42);
+        assert_eq!(cpu.dmem[7], 42);
+    }
+
+    #[test]
+    fn call_and_return() {
+        let cpu = run_asm(
+            "ldi r1, 1\n\
+             jal fn\n\
+             ldi r2, 5\n\
+             halt\n\
+             fn:\n\
+             ldi r3, 9\n\
+             jr r7\n",
+        );
+        assert_eq!(cpu.regs[3], 9);
+        assert_eq!(cpu.regs[2], 5, "returned past the call site");
+    }
+
+    #[test]
+    fn csr_write_reaches_bus() {
+        let prog = assemble(
+            "ldi r1, 42\n\
+             ldi r2, 16\n\
+             csrw r1, r2\n\
+             csrr r3, r2\n\
+             halt\n",
+        )
+        .unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = NullBus::default();
+        cpu.run(&mut bus, 1000);
+        assert_eq!(bus.csrs.get(&16), Some(&42));
+        assert_eq!(cpu.regs[3], 42);
+    }
+
+    #[test]
+    fn wait_blocks_until_done() {
+        struct SlowBus {
+            polls: u32,
+        }
+        impl CsrBus for SlowBus {
+            fn csr_read(&mut self, _: u16) -> u16 {
+                0
+            }
+            fn csr_write(&mut self, _: u16, _: u16) {}
+            fn poll_done(&mut self) -> bool {
+                self.polls += 1;
+                self.polls > 3
+            }
+        }
+        let prog = assemble("wait\nhalt\n").unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = SlowBus { polls: 0 };
+        assert_eq!(cpu.step(&mut bus), StepResult::Waiting);
+        assert_eq!(cpu.step(&mut bus), StepResult::Waiting);
+        assert_eq!(cpu.step(&mut bus), StepResult::Waiting);
+        assert_eq!(cpu.step(&mut bus), StepResult::Ran); // 4th poll passes
+        assert_eq!(cpu.step(&mut bus), StepResult::Halted);
+    }
+
+    #[test]
+    fn fault_on_undecodable_word() {
+        let mut cpu = Cpu::new(&[15 << 9]); // unassigned opcode
+        let mut bus = NullBus::default();
+        assert_eq!(cpu.step(&mut bus), StepResult::Fault);
+        assert!(cpu.halted);
+    }
+
+    #[test]
+    fn fibonacci() {
+        // fib(12) = 144: r1,r2 rolling pair, r3 counter.
+        let cpu = run_asm(
+            "ldi r1, 0\n\
+             ldi r2, 1\n\
+             ldi r3, 12\n\
+             loop:\n\
+             mov r4, r2\n\
+             add r2, r1\n\
+             mov r1, r4\n\
+             addi r3, -1\n\
+             bnz r3, loop\n\
+             halt\n",
+        );
+        assert_eq!(cpu.regs[1], 144);
+    }
+}

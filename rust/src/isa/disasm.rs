@@ -1,0 +1,101 @@
+//! Disassembler: 13-bit words back to assembler syntax. Round-trips with
+//! [`crate::isa::assembler`] — used for firmware debugging and the
+//! `sunrise firmware` CLI.
+
+use crate::isa::encoding::{decode, AluOp, Instr};
+
+/// Disassemble one instruction.
+pub fn disasm_one(word: u16) -> Option<String> {
+    Some(match decode(word)? {
+        Instr::Nop => "nop".to_string(),
+        Instr::Halt => "halt".to_string(),
+        Instr::Wait => "wait".to_string(),
+        Instr::Ldi { rd, imm } => format!("ldi r{rd}, {imm}"),
+        Instr::Lui { rd, imm } => format!("lui r{rd}, {imm}"),
+        Instr::Addi { rd, imm } => format!("addi r{rd}, {imm}"),
+        Instr::Alu { funct, rd, rs } => {
+            let m = match funct {
+                AluOp::Mov => "mov",
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::And => "and",
+                AluOp::Or => "or",
+                AluOp::Xor => "xor",
+                AluOp::Shl => "shl",
+                AluOp::Shr => "shr",
+            };
+            format!("{m} r{rd}, r{rs}")
+        }
+        Instr::Ld { rd, rs } => format!("ld r{rd}, r{rs}"),
+        Instr::St { rd, rs } => format!("st r{rd}, r{rs}"),
+        Instr::Jmp { addr } => format!("jmp {addr}"),
+        Instr::Jal { addr } => format!("jal {addr}"),
+        Instr::Jr { rs } => format!("jr r{rs}"),
+        Instr::Bnz { rd, off } => format!("bnz r{rd}, {off}"), // relative form
+        Instr::Csrr { rd, rs } => format!("csrr r{rd}, r{rs}"),
+        Instr::Csrw { rd, rs } => format!("csrw r{rd}, r{rs}"),
+    })
+}
+
+/// Disassemble a program with addresses; undecodable words are flagged.
+pub fn disasm(words: &[u16]) -> String {
+    words
+        .iter()
+        .enumerate()
+        .map(|(pc, &w)| match disasm_one(w) {
+            Some(s) => format!("{pc:4}: {s}"),
+            None => format!("{pc:4}: .word {w:#06x} ; undecodable"),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+    use crate::isa::encoding::encode;
+
+    #[test]
+    fn disasm_basics() {
+        assert_eq!(disasm_one(encode(Instr::Ldi { rd: 3, imm: 42 })).unwrap(), "ldi r3, 42");
+        assert_eq!(
+            disasm_one(encode(Instr::Alu { funct: AluOp::Xor, rd: 1, rs: 2 })).unwrap(),
+            "xor r1, r2"
+        );
+        assert_eq!(disasm_one(encode(Instr::Halt)).unwrap(), "halt");
+    }
+
+    #[test]
+    fn undecodable_flagged() {
+        let out = disasm(&[15 << 9]);
+        assert!(out.contains("undecodable"));
+    }
+
+    #[test]
+    fn roundtrip_through_assembler_except_branches() {
+        // Non-branch instructions disassemble to re-assemblable text.
+        let src = "ldi r1, 5\nlui r1, 2\naddi r1, -3\nmov r2, r1\nld r3, r2\nst r3, r2\ncsrw r1, r2\njr r7\nhalt\n";
+        let words = assemble(src).unwrap();
+        let dis = disasm(&words);
+        let re_src: String = dis
+            .lines()
+            .map(|l| l.split_once(": ").unwrap().1)
+            .collect::<Vec<_>>()
+            .join("\n");
+        let words2 = assemble(&re_src).unwrap();
+        assert_eq!(words, words2);
+    }
+
+    #[test]
+    fn property_every_decodable_word_disassembles() {
+        use crate::util::proptest::check;
+        check(0xD15A, 400, |g| {
+            let w = g.u64_below("word", 1 << 13) as u16;
+            if decode(w).is_some() {
+                crate::prop_assert!(disasm_one(w).is_some(), "decodable but not printable: {w:#x}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! 13-bit instruction encoding.
+//!
+//! Word layout (bit 12 is the MSB):
+//!
+//! ```text
+//! R-type   [12:9 op][8:6 rd][5:3 rs][2:0 funct]
+//! I-type   [12:9 op][8:6 rd][5:0 imm6]            (LDI/LUI/BNZ/ADDI)
+//! J-type   [12:9 op][8:0 addr9]                   (JMP/JAL)
+//! ```
+//!
+//! 8 general registers `r0..r7` (16-bit wide; the *instruction* word is
+//! 13-bit, the datapath is not), 9-bit instruction address space
+//! (512 words of firmware — the paper's firmware tier is small), and a
+//! CSR space addressed through a register for UCE configuration.
+
+/// Register name, `r0`–`r7`. `r0` is general-purpose (not hardwired).
+pub type Reg = u8;
+
+/// Decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// No operation.
+    Nop,
+    /// `rd = imm6` (zero-extended).
+    Ldi { rd: Reg, imm: u8 },
+    /// `rd = (rd & 0x3F) | (imm6 << 6)` — builds 12-bit constants.
+    Lui { rd: Reg, imm: u8 },
+    /// `rd = rd + imm6` (imm sign-extended from 6 bits).
+    Addi { rd: Reg, imm: i8 },
+    /// `rd = rs` (funct 0), `rd = rd + rs` (1), `rd = rd - rs` (2),
+    /// `rd = rd & rs` (3), `rd = rd | rs` (4), `rd = rd ^ rs` (5),
+    /// `rd = rd << rs` (6), `rd = rd >> rs` (7).
+    Alu { funct: AluOp, rd: Reg, rs: Reg },
+    /// `rd = mem[rs]`.
+    Ld { rd: Reg, rs: Reg },
+    /// `mem[rs] = rd`.
+    St { rd: Reg, rs: Reg },
+    /// `pc = addr9`.
+    Jmp { addr: u16 },
+    /// `r7 = pc + 1; pc = addr9` (call; return via `Alu Mov pc…` is not
+    /// needed — `Jr` below).
+    Jal { addr: u16 },
+    /// `pc = rs` (funct 0 of the JR group).
+    Jr { rs: Reg },
+    /// `if rd != 0 { pc += simm6 }` (sign-extended, relative).
+    Bnz { rd: Reg, off: i8 },
+    /// `rd = csr[rs]`.
+    Csrr { rd: Reg, rs: Reg },
+    /// `csr[rs] = rd`.
+    Csrw { rd: Reg, rs: Reg },
+    /// Stop the core.
+    Halt,
+    /// Wait for UCE completion signal (re-checked each step).
+    Wait,
+}
+
+/// ALU function selector for R-type group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Mov = 0,
+    Add = 1,
+    Sub = 2,
+    And = 3,
+    Or = 4,
+    Xor = 5,
+    Shl = 6,
+    Shr = 7,
+}
+
+impl AluOp {
+    fn from_bits(b: u16) -> AluOp {
+        match b & 7 {
+            0 => AluOp::Mov,
+            1 => AluOp::Add,
+            2 => AluOp::Sub,
+            3 => AluOp::And,
+            4 => AluOp::Or,
+            5 => AluOp::Xor,
+            6 => AluOp::Shl,
+            _ => AluOp::Shr,
+        }
+    }
+}
+
+// Opcode assignments (4 bits).
+const OP_SYS: u16 = 0; // funct in rd field: 0=NOP 1=HALT 2=WAIT
+const OP_LDI: u16 = 1;
+const OP_LUI: u16 = 2;
+const OP_ADDI: u16 = 3;
+const OP_ALU: u16 = 4;
+const OP_LD: u16 = 5;
+const OP_ST: u16 = 6;
+const OP_JMP: u16 = 7;
+const OP_JAL: u16 = 8;
+const OP_JR: u16 = 9;
+const OP_BNZ: u16 = 10;
+const OP_CSRR: u16 = 11;
+const OP_CSRW: u16 = 12;
+
+/// The 13-bit mask.
+pub const WORD_MASK: u16 = 0x1FFF;
+
+fn sext6(v: u16) -> i8 {
+    let v = (v & 0x3F) as i8;
+    if v & 0x20 != 0 {
+        v | !0x3F_u8 as i8
+    } else {
+        v
+    }
+}
+
+/// Encode an instruction into a 13-bit word.
+pub fn encode(i: Instr) -> u16 {
+    let w = match i {
+        Instr::Nop => OP_SYS << 9,
+        Instr::Halt => (OP_SYS << 9) | (1 << 6),
+        Instr::Wait => (OP_SYS << 9) | (2 << 6),
+        Instr::Ldi { rd, imm } => (OP_LDI << 9) | ((rd as u16 & 7) << 6) | (imm as u16 & 0x3F),
+        Instr::Lui { rd, imm } => (OP_LUI << 9) | ((rd as u16 & 7) << 6) | (imm as u16 & 0x3F),
+        Instr::Addi { rd, imm } => {
+            (OP_ADDI << 9) | ((rd as u16 & 7) << 6) | (imm as u16 & 0x3F)
+        }
+        Instr::Alu { funct, rd, rs } => {
+            (OP_ALU << 9) | ((rd as u16 & 7) << 6) | ((rs as u16 & 7) << 3) | funct as u16
+        }
+        Instr::Ld { rd, rs } => (OP_LD << 9) | ((rd as u16 & 7) << 6) | ((rs as u16 & 7) << 3),
+        Instr::St { rd, rs } => (OP_ST << 9) | ((rd as u16 & 7) << 6) | ((rs as u16 & 7) << 3),
+        Instr::Jmp { addr } => (OP_JMP << 9) | (addr & 0x1FF),
+        Instr::Jal { addr } => (OP_JAL << 9) | (addr & 0x1FF),
+        Instr::Jr { rs } => (OP_JR << 9) | ((rs as u16 & 7) << 3),
+        Instr::Bnz { rd, off } => (OP_BNZ << 9) | ((rd as u16 & 7) << 6) | (off as u16 & 0x3F),
+        Instr::Csrr { rd, rs } => (OP_CSRR << 9) | ((rd as u16 & 7) << 6) | ((rs as u16 & 7) << 3),
+        Instr::Csrw { rd, rs } => (OP_CSRW << 9) | ((rd as u16 & 7) << 6) | ((rs as u16 & 7) << 3),
+    };
+    w & WORD_MASK
+}
+
+/// Decode a 13-bit word. Unknown encodings decode to `Nop` semantics is
+/// NOT acceptable for firmware debugging — they return `None`.
+pub fn decode(w: u16) -> Option<Instr> {
+    let w = w & WORD_MASK;
+    let op = w >> 9;
+    let rd = ((w >> 6) & 7) as Reg;
+    let rs = ((w >> 3) & 7) as Reg;
+    let imm6 = w & 0x3F;
+    let addr9 = w & 0x1FF;
+    Some(match op {
+        OP_SYS => match rd {
+            0 => Instr::Nop,
+            1 => Instr::Halt,
+            2 => Instr::Wait,
+            _ => return None,
+        },
+        OP_LDI => Instr::Ldi { rd, imm: imm6 as u8 },
+        OP_LUI => Instr::Lui { rd, imm: imm6 as u8 },
+        OP_ADDI => Instr::Addi { rd, imm: sext6(imm6) },
+        OP_ALU => Instr::Alu { funct: AluOp::from_bits(w), rd, rs },
+        OP_LD => Instr::Ld { rd, rs },
+        OP_ST => Instr::St { rd, rs },
+        OP_JMP => Instr::Jmp { addr: addr9 },
+        OP_JAL => Instr::Jal { addr: addr9 },
+        OP_JR => Instr::Jr { rs },
+        OP_BNZ => Instr::Bnz { rd, off: sext6(imm6) },
+        OP_CSRR => Instr::Csrr { rd, rs },
+        OP_CSRW => Instr::Csrw { rd, rs },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_sample_instrs() -> Vec<Instr> {
+        let mut v = vec![Instr::Nop, Instr::Halt, Instr::Wait];
+        for rd in 0..8u8 {
+            v.push(Instr::Ldi { rd, imm: (rd * 7) & 0x3F });
+            v.push(Instr::Lui { rd, imm: 0x3F - rd });
+            v.push(Instr::Addi { rd, imm: -(rd as i8) });
+            for rs in 0..8u8 {
+                for f in [AluOp::Mov, AluOp::Add, AluOp::Sub, AluOp::And, AluOp::Or, AluOp::Xor, AluOp::Shl, AluOp::Shr] {
+                    v.push(Instr::Alu { funct: f, rd, rs });
+                }
+                v.push(Instr::Ld { rd, rs });
+                v.push(Instr::St { rd, rs });
+                v.push(Instr::Csrr { rd, rs });
+                v.push(Instr::Csrw { rd, rs });
+            }
+            v.push(Instr::Bnz { rd, off: -32 });
+            v.push(Instr::Bnz { rd, off: 31 });
+        }
+        for addr in [0u16, 1, 255, 511] {
+            v.push(Instr::Jmp { addr });
+            v.push(Instr::Jal { addr });
+        }
+        for rs in 0..8u8 {
+            v.push(Instr::Jr { rs });
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip_every_instruction() {
+        for i in all_sample_instrs() {
+            let w = encode(i);
+            assert!(w <= WORD_MASK, "{i:?} encodes beyond 13 bits: {w:#x}");
+            assert_eq!(decode(w), Some(i), "roundtrip failed for {i:?} (word {w:#06x})");
+        }
+    }
+
+    #[test]
+    fn words_fit_13_bits() {
+        for i in all_sample_instrs() {
+            assert_eq!(encode(i) & !WORD_MASK, 0);
+        }
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sext6(0x3F), -1);
+        assert_eq!(sext6(0x20), -32);
+        assert_eq!(sext6(0x1F), 31);
+        assert_eq!(sext6(0), 0);
+    }
+
+    #[test]
+    fn invalid_sys_funct_rejected() {
+        // SYS with rd=5 is unassigned.
+        assert_eq!(decode((0 << 9) | (5 << 6)), None);
+        // Opcodes 13–15 unassigned.
+        assert_eq!(decode(13 << 9), None);
+        assert_eq!(decode(15 << 9), None);
+    }
+
+    #[test]
+    fn property_decode_encode_fixed_point() {
+        use crate::util::proptest::check;
+        check(0x15A, 500, |g| {
+            let w = g.u64_below("word", 1 << 13) as u16;
+            if let Some(i) = decode(w) {
+                let w2 = encode(i);
+                let i2 = decode(w2);
+                crate::prop_assert!(i2 == Some(i), "decode(encode({i:?})) = {i2:?}");
+            }
+            Ok(())
+        });
+    }
+}

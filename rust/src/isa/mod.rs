@@ -1,0 +1,22 @@
+//! The proprietary 13-bit control processor (paper §V).
+//!
+//! "There is a proprietary 13-bit processor on Sunrise chip. It mainly
+//! controls high-level tasks such as data batch movement and UCE
+//! configuration." — i.e. a tiny firmware core whose job is writing UCE
+//! configuration registers, kicking DMA batches, and sequencing
+//! coarse-grained operations. This module implements it end to end:
+//!
+//! - [`encoding`] — the 13-bit instruction formats (encode/decode).
+//! - [`assembler`] — a two-pass assembler for the firmware mnemonics.
+//! - [`cpu`] — the interpreter core with a CSR bus to the UCE.
+//! - [`program`] — canned firmware routines used by the chip model.
+
+pub mod assembler;
+pub mod cpu;
+pub mod disasm;
+pub mod encoding;
+pub mod program;
+
+pub use assembler::assemble;
+pub use cpu::{Cpu, CsrBus, StepResult};
+pub use encoding::{decode, encode, Instr, Reg};

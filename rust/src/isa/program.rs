@@ -1,0 +1,151 @@
+//! Firmware generation: the top tier of the paper's three-layer
+//! implementation stack (Fig. 8 — logic blocks / configuration /
+//! firmware). Firmware "mainly modifies operation register values, changes
+//! configurations, or calls out configurations [and] initiates large
+//! operations whose sequence is controlled by configuration".
+//!
+//! These builders emit assembly for the 13-bit core that programs UCE CSRs
+//! and kicks/waits on operations. Keeping them as *generators* (rather
+//! than hand-written blobs) is what lets the chip model configure
+//! arbitrary layer sequences.
+
+use crate::isa::assembler::{assemble, AsmError};
+
+/// Emit instructions that load a full 16-bit constant into `reg`.
+///
+/// `ldi`+`lui` build 12 bits; the top nibble goes through scratch
+/// registers r5/r6 (`ldi`+`shl`+`or`). Firmware register convention:
+/// r1 = value, r2 = address, r5/r6 = loader scratch, r7 = link.
+fn emit_load_const(out: &mut String, reg: u8, value: u16) {
+    assert!(reg != 5 && reg != 6, "r5/r6 are loader scratch");
+    let low = value & 0x3F;
+    let mid = (value >> 6) & 0x3F;
+    let hi = (value >> 12) & 0xF;
+    out.push_str(&format!("ldi r{reg}, {low}\n"));
+    if mid != 0 {
+        out.push_str(&format!("lui r{reg}, {mid}\n"));
+    }
+    if hi != 0 {
+        out.push_str(&format!("ldi r6, {hi}\n"));
+        out.push_str("ldi r5, 12\n");
+        out.push_str("shl r6, r5\n");
+        out.push_str(&format!("or r{reg}, r6\n"));
+    }
+}
+
+/// Firmware that writes `(addr, value)` pairs to the CSR bus, pulses the
+/// `start` CSR with 1, waits for completion, then halts.
+pub fn fw_configure_and_run(writes: &[(u16, u16)], start_csr: u16) -> String {
+    let mut s = String::from("; auto-generated configure-and-run firmware\n");
+    for &(addr, value) in writes {
+        emit_load_const(&mut s, 1, value);
+        emit_load_const(&mut s, 2, addr);
+        s.push_str("csrw r1, r2\n");
+    }
+    emit_load_const(&mut s, 1, 1);
+    emit_load_const(&mut s, 2, start_csr);
+    s.push_str("csrw r1, r2\n");
+    s.push_str("wait\n");
+    s.push_str("halt\n");
+    s
+}
+
+/// Firmware that runs `n_batches` rounds: each round re-arms the start CSR
+/// and waits — the "data batch movement" loop of paper §V.
+pub fn fw_batch_loop(n_batches: u16, start_csr: u16) -> String {
+    assert!(n_batches > 0 && n_batches < (1 << 12));
+    let mut s = String::from("; auto-generated batch loop firmware\n");
+    emit_load_const(&mut s, 3, n_batches);
+    s.push_str("loop:\n");
+    emit_load_const(&mut s, 1, 1);
+    emit_load_const(&mut s, 2, start_csr);
+    s.push_str("csrw r1, r2\n");
+    s.push_str("wait\n");
+    s.push_str("addi r3, -1\n");
+    s.push_str("bnz r3, loop\n");
+    s.push_str("halt\n");
+    s
+}
+
+/// Assemble a generated firmware, mapping assembler errors.
+pub fn build(src: &str) -> Result<Vec<u16>, AsmError> {
+    assemble(src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::cpu::{Cpu, CsrBus, StepResult};
+
+    /// Records CSR writes in order; completion needs 2 polls.
+    #[derive(Default)]
+    struct RecordingBus {
+        pub writes: Vec<(u16, u16)>,
+        polls: u32,
+    }
+    impl CsrBus for RecordingBus {
+        fn csr_read(&mut self, _: u16) -> u16 {
+            0
+        }
+        fn csr_write(&mut self, addr: u16, value: u16) {
+            self.writes.push((addr, value));
+        }
+        fn poll_done(&mut self) -> bool {
+            self.polls += 1;
+            self.polls % 2 == 0
+        }
+    }
+
+    #[test]
+    fn configure_and_run_writes_in_order() {
+        let fw = fw_configure_and_run(&[(0x10, 5), (0x11, 300), (0x20, 4095)], 0x0F);
+        let prog = build(&fw).unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = RecordingBus::default();
+        assert_eq!(cpu.run(&mut bus, 10_000), StepResult::Halted);
+        assert_eq!(
+            bus.writes,
+            vec![(0x10, 5), (0x11, 300), (0x20, 4095), (0x0F, 1)]
+        );
+    }
+
+    #[test]
+    fn batch_loop_arms_n_times() {
+        let fw = fw_batch_loop(5, 0x0F);
+        let prog = build(&fw).unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = RecordingBus::default();
+        assert_eq!(cpu.run(&mut bus, 100_000), StepResult::Halted);
+        let starts = bus.writes.iter().filter(|w| **w == (0x0F, 1)).count();
+        assert_eq!(starts, 5);
+    }
+
+    #[test]
+    fn twelve_bit_constants_supported() {
+        let fw = fw_configure_and_run(&[(4095, 4095)], 1);
+        let prog = build(&fw).unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut bus = RecordingBus::default();
+        cpu.run(&mut bus, 10_000);
+        assert!(bus.writes.contains(&(4095, 4095)));
+    }
+
+    #[test]
+    fn full_16_bit_constants_supported() {
+        for v in [4096u16, 0x8001, 0xFFFF, 0xF000] {
+            let fw = fw_configure_and_run(&[(100, v)], 1);
+            let prog = build(&fw).unwrap();
+            let mut cpu = Cpu::new(&prog);
+            let mut bus = RecordingBus::default();
+            cpu.run(&mut bus, 10_000);
+            assert!(bus.writes.contains(&(100, v)), "value {v:#x} not written");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "loader scratch")]
+    fn scratch_registers_protected() {
+        let mut s = String::new();
+        super::emit_load_const(&mut s, 6, 1);
+    }
+}

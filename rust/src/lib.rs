@@ -1,0 +1,52 @@
+//! # Sunrise — breaking the memory wall with a new (vertical) dimension
+//!
+//! A full-system reproduction of *"Breaking the Memory Wall for AI Chip with
+//! a New Dimension"* (Tam et al., CS.AR 2020): the **Sunrise** 3D AI chip
+//! built from a logic wafer hybrid-bonded to a DRAM wafer (HITOC), a
+//! DRAM-only memory system (UniMem), a weight-stationary VPU/DSU dataflow,
+//! and the control stack around it (UCE, 13-bit control processor, SPI/HSP).
+//!
+//! Since the paper's artifact is silicon, this crate rebuilds every hardware
+//! layer as a simulated substrate:
+//!
+//! - [`interconnect`] — analytical wire/bandwidth/energy models for
+//!   Interposer, TSV and HITOC bonding (paper Table I).
+//! - [`memory`] — DRAM bank timing, SRAM, the UniMem pooled-DRAM scheduler
+//!   and the SRAM-cache baseline the paper removes.
+//! - [`isa`] — the proprietary 13-bit control processor (assembler +
+//!   interpreter).
+//! - [`uce`] — the Unified Control Engine (DMA, muxes, sequencer,
+//!   configuration store).
+//! - [`units`] — MAC / VPU / DSU models and pool abstractions.
+//! - [`sim`] — the discrete-event engine that ties the above into a
+//!   cycle-approximate chip simulation.
+//! - [`dataflow`] — NN layer IR + weight-stationary (and baseline) mappers.
+//! - [`workloads`] — ResNet-50, MLP and transformer layer tables.
+//! - [`chip`] — the Sunrise chip model plus the comparison chips A/B/C.
+//! - [`scaling`] — process normalization (Tables V–VII) and cost (Table IV).
+//! - [`analysis`] — die-normalized benchmark computation and report tables.
+//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//! - [`coordinator`] — the inference-serving loop (batcher, router, metrics).
+//! - [`config`] — typed configuration on top of the in-tree JSON parser.
+//! - [`util`] — JSON, PRNG, property testing, table rendering, bench harness.
+//!
+//! The compute *numerics* of the chip (what the VPU systolic array actually
+//! calculates) live in AOT-compiled XLA executables produced from JAX/Pallas
+//! kernels at build time (`make artifacts`); [`runtime`] loads and runs them
+//! so that Python is never on the request path.
+
+pub mod analysis;
+pub mod chip;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod interconnect;
+pub mod isa;
+pub mod memory;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod uce;
+pub mod units;
+pub mod util;
+pub mod workloads;

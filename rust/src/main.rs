@@ -1,0 +1,228 @@
+//! `sunrise` — the leader binary: reports, simulations, and serving.
+//!
+//! Subcommands:
+//!   report                  render all paper tables (I–IV, VII)
+//!   simulate                run a workload on the simulated chip
+//!   serve                   run the serving demo (SimExecutor replicas)
+//!   roofline                print ridge points + memory-wall summary
+//!   capacity                parameter-capacity projections (§VII)
+//!
+//! Examples: `sunrise simulate --model resnet50 --batch 8`
+//!           `sunrise simulate --model resnet50 --tech interposer`
+
+use sunrise::analysis::{report, roofline};
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::config;
+use sunrise::coordinator::server::{Server, ServerConfig};
+use sunrise::interconnect::Technology;
+use sunrise::runtime::executor::{Executor, SimExecutor};
+use sunrise::scaling::dram::{project_capacity, DramNode};
+use sunrise::util::cli::Cli;
+use sunrise::workloads::{mlp, resnet, transformer, Network};
+
+fn net_by_name(name: &str) -> Option<Network> {
+    Some(match name {
+        "resnet50" => resnet::resnet50(),
+        "resnet_mini" => resnet::resnet_mini(),
+        "mlp" => mlp::quickstart(),
+        "decoder" => transformer::decoder_block(1024, 128),
+        _ => return None,
+    })
+}
+
+fn cmd_report() {
+    println!("{}", report::full_report());
+}
+
+fn cmd_simulate(args: &[String]) {
+    let cli = Cli::new("sunrise simulate", "run a workload on the simulated Sunrise chip")
+        .opt("model", "resnet50", "workload: resnet50|resnet_mini|mlp|decoder")
+        .opt("batch", "8", "batch size")
+        .opt("tech", "hitoc", "stack technology: hitoc|tsv|interposer")
+        .opt("config", "", "chip config JSON path (overrides --tech)")
+        .flag("layers", "print per-layer breakdown");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let net = net_by_name(a.get("model")).unwrap_or_else(|| {
+        eprintln!("unknown model {}", a.get("model"));
+        std::process::exit(2);
+    });
+    let mut cfg = if a.get("config").is_empty() {
+        SunriseConfig::default()
+    } else {
+        config::load_chip(Some(a.get("config"))).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    };
+    if a.get("config").is_empty() {
+        cfg.stack_tech = match a.get("tech") {
+            "hitoc" => Technology::Hitoc,
+            "tsv" => Technology::Tsv,
+            "interposer" => Technology::Interposer,
+            other => {
+                eprintln!("unknown tech {other}");
+                std::process::exit(2);
+            }
+        };
+    }
+    let chip = SunriseChip::new(cfg);
+    let batch = a.get_usize("batch") as u32;
+    let s = chip.run(&net, batch);
+    println!(
+        "{} batch={batch} tech={:?}: {:.1} img/s, latency {:.3} ms, util {:.1}%, {:.2} W, {:.2} eff-TOPS",
+        net.name,
+        chip.config.stack_tech,
+        s.images_per_s(),
+        s.latency_s() * 1e3,
+        s.utilization() * 100.0,
+        s.avg_power_w(),
+        s.effective_tops(),
+    );
+    if a.flag("layers") {
+        for l in &s.layers {
+            println!(
+                "  {:24} {:>10} ps  bound by {:9}  util {:.2}",
+                l.name, l.total_ps, l.bound_by, l.utilization
+            );
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) {
+    let cli = Cli::new("sunrise serve", "serving demo over simulated chip replicas")
+        .opt("replicas", "2", "number of chip replicas")
+        .opt("requests", "200", "requests to serve")
+        .opt("max-batch", "8", "dynamic batcher max batch");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let replicas = a.get_usize("replicas");
+    let n = a.get_usize("requests");
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.max_batch = a.get_usize("max-batch") as u32;
+    let execs: Vec<Box<dyn Executor>> = (0..replicas)
+        .map(|_| {
+            let mut e = SimExecutor::new(SunriseChip::silicon());
+            e.register("mlp", mlp::quickstart(), 784, 10);
+            Box::new(e) as Box<dyn Executor>
+        })
+        .collect();
+    let server = Server::start(execs, cfg);
+    for i in 0..n {
+        server.submit("mlp", vec![(i % 100) as f32 / 100.0; 784]);
+    }
+    let _ = server.collect(n, std::time::Duration::from_secs(60));
+    println!("{}", server.metrics.snapshot().report());
+    server.shutdown();
+}
+
+fn cmd_queue_sim(args: &[String]) {
+    let cli = Cli::new("sunrise queue-sim", "event-driven queueing simulation of chips under load")
+        .opt("model", "resnet50", "workload")
+        .opt("rate", "1200", "Poisson arrival rate, req/s")
+        .opt("duration", "1.0", "trace duration, s")
+        .opt("chips", "1", "number of chips")
+        .opt("max-batch", "8", "batch cap")
+        .opt("queue-cap", "10000", "admission-control queue bound")
+        .opt("seed", "42", "trace seed");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let net = net_by_name(a.get("model")).unwrap_or_else(|| {
+        eprintln!("unknown model {}", a.get("model"));
+        std::process::exit(2);
+    });
+    let chip = SunriseChip::silicon();
+    let mut rng = sunrise::util::rng::Rng::new(a.get_u64("seed"));
+    let trace = sunrise::workloads::generator::poisson_trace(
+        &mut rng,
+        a.get_f64("rate"),
+        a.get_f64("duration"),
+        a.get("model"),
+        1,
+    );
+    let r = sunrise::chip::pipeline::simulate_queue(
+        &chip,
+        &net,
+        &trace,
+        a.get_usize("chips"),
+        a.get_usize("max-batch") as u32,
+        a.get_usize("queue-cap"),
+    );
+    println!(
+        "served {} ({} dropped) in {:.3}s sim: {:.1} samples/s, latency mean {:.2} ms p50 {:.2} ms p99 {:.2} ms, chip util {:.1}%, max queue {}",
+        r.served,
+        r.dropped,
+        r.duration_s,
+        r.throughput,
+        r.mean_latency_s * 1e3,
+        r.p50_latency_s * 1e3,
+        r.p99_latency_s * 1e3,
+        r.chip_utilization * 100.0,
+        r.max_queue_depth
+    );
+}
+
+fn cmd_roofline() {
+    let s = roofline::sunrise();
+    let h = roofline::conventional_hbm();
+    println!("Sunrise ridge point: {:.1} ops/byte (25 TOPS / 1.8 TB/s)", s.ridge());
+    println!("HBM-chip ridge point: {:.1} ops/byte (25 TOPS / 256 GB/s)", h.ridge());
+    for i in [1.0, 5.0, 10.0, 14.0, 50.0, 100.0, 500.0] {
+        println!(
+            "  intensity {i:>6.1} ops/B: sunrise {:.2} TOPS, hbm-chip {:.2} TOPS ({:.1}x)",
+            s.attainable(i) / 1e12,
+            h.attainable(i) / 1e12,
+            s.attainable(i) / h.attainable(i)
+        );
+    }
+}
+
+fn cmd_capacity() {
+    for (area, node, label) in [
+        (110.0, DramNode::D3x, "Sunrise silicon (110 mm², 3x nm)"),
+        (110.0, DramNode::D1y, "Sunrise die at 1y DRAM"),
+        (800.0, DramNode::D1y, "800 mm² die at 1y DRAM (§VII projection)"),
+    ] {
+        let p = project_capacity(area, node);
+        println!(
+            "{label}: {:.1} GB, {:.2} B params fp16",
+            p.capacity_bytes / 1e9,
+            p.params_fp16 / 1e9
+        );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(|s| s.as_str()) {
+        Some("report") => cmd_report(),
+        Some("simulate") => cmd_simulate(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("queue-sim") => cmd_queue_sim(&argv[1..]),
+        Some("roofline") => cmd_roofline(),
+        Some("capacity") => cmd_capacity(),
+        _ => {
+            eprintln!(
+                "sunrise — 3D near-memory AI chip framework\n\n\
+                 USAGE: sunrise <report|simulate|serve|queue-sim|roofline|capacity> [options]\n\
+                 Try `sunrise simulate --help`."
+            );
+            std::process::exit(2);
+        }
+    }
+}

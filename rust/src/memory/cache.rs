@@ -1,0 +1,288 @@
+//! Baseline: a conventional CPU-style cache hierarchy over one DRAM
+//! channel — the "conventional CPU-cache-memory architecture" the paper's
+//! UniMem explicitly circumvents (§IV). Kept as the ablation comparator:
+//! same workload trace, cache+single-channel vs pooled UniMem.
+//!
+//! Two levels, set-associative, LRU, write-back/write-allocate, with an
+//! AMAT (average memory access time) report.
+
+use crate::memory::dram::{DramArray, Op};
+use crate::memory::{ns, Ps};
+
+/// One set-associative cache level.
+#[derive(Debug, Clone)]
+pub struct CacheLevel {
+    pub name: String,
+    pub line_bytes: u32,
+    pub n_sets: u32,
+    pub ways: u32,
+    pub hit_latency: Ps,
+    /// tag storage: tags[set][way] = Some((tag, dirty, lru_stamp))
+    tags: Vec<Vec<Option<(u64, bool, u64)>>>,
+    stamp: u64,
+    pub n_hits: u64,
+    pub n_misses: u64,
+    pub n_writebacks: u64,
+}
+
+impl CacheLevel {
+    pub fn new(name: &str, capacity_bytes: u32, line_bytes: u32, ways: u32, hit_latency: Ps) -> Self {
+        let n_sets = capacity_bytes / line_bytes / ways;
+        assert!(n_sets.is_power_of_two(), "sets must be a power of two, got {n_sets}");
+        CacheLevel {
+            name: name.to_string(),
+            line_bytes,
+            n_sets,
+            ways,
+            hit_latency,
+            tags: vec![vec![None; ways as usize]; n_sets as usize],
+            stamp: 0,
+            n_hits: 0,
+            n_misses: 0,
+            n_writebacks: 0,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.line_bytes as u64 * self.n_sets as u64 * self.ways as u64
+    }
+
+    fn set_and_tag(&self, addr: u64) -> (usize, u64) {
+        let line = addr / self.line_bytes as u64;
+        ((line % self.n_sets as u64) as usize, line / self.n_sets as u64)
+    }
+
+    /// Look up `addr`; on hit refresh LRU. Returns hit?
+    fn lookup(&mut self, addr: u64, write: bool) -> bool {
+        let (set, tag) = self.set_and_tag(addr);
+        self.stamp += 1;
+        for way in self.tags[set].iter_mut() {
+            if let Some((t, dirty, stamp)) = way {
+                if *t == tag {
+                    *stamp = self.stamp;
+                    if write {
+                        *dirty = true;
+                    }
+                    self.n_hits += 1;
+                    return true;
+                }
+            }
+        }
+        self.n_misses += 1;
+        false
+    }
+
+    /// Install `addr`'s line, evicting LRU. Returns evicted dirty line's
+    /// address if a writeback is needed.
+    fn install(&mut self, addr: u64, write: bool) -> Option<u64> {
+        let (set, tag) = self.set_and_tag(addr);
+        self.stamp += 1;
+        let stamp = self.stamp;
+        // Find empty way or LRU victim.
+        let slot = {
+            let set_ways = &mut self.tags[set];
+            if let Some(i) = set_ways.iter().position(|w| w.is_none()) {
+                i
+            } else {
+                set_ways
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, w)| w.map(|(_, _, s)| s).unwrap_or(0))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+        };
+        let victim = self.tags[set][slot];
+        self.tags[set][slot] = Some((tag, write, stamp));
+        match victim {
+            Some((vtag, true, _)) => {
+                self.n_writebacks += 1;
+                let line = vtag * self.n_sets as u64 + set as u64;
+                Some(line * self.line_bytes as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.n_hits + self.n_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.n_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Two-level hierarchy over one DRAM channel.
+#[derive(Debug, Clone)]
+pub struct CacheHierarchy {
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+    pub dram: DramArray,
+    /// Total access time accumulated (for AMAT).
+    pub total_time: Ps,
+    pub n_accesses: u64,
+    now: Ps,
+}
+
+impl CacheHierarchy {
+    /// A typical accelerator-adjacent hierarchy: 32 KiB L1, 1 MiB L2.
+    pub fn typical() -> Self {
+        CacheHierarchy {
+            l1: CacheLevel::new("L1", 32 * 1024, 64, 8, ns(1)),
+            l2: CacheLevel::new("L2", 1024 * 1024, 64, 16, ns(5)),
+            dram: DramArray::default_array(),
+            total_time: 0,
+            n_accesses: 0,
+            now: 0,
+        }
+    }
+
+    /// Access one address (a full cache line's worth of use is assumed).
+    /// Returns the latency of this access.
+    pub fn access(&mut self, addr: u64, write: bool) -> Ps {
+        self.n_accesses += 1;
+        let mut latency = self.l1.hit_latency;
+        if !self.l1.lookup(addr, write) {
+            latency += self.l2.hit_latency;
+            if !self.l2.lookup(addr, false) {
+                // Miss to DRAM.
+                let geom_rows = self.dram.geometry.rows as u64;
+                let row_bytes = self.dram.geometry.row_bytes as u64;
+                let row = ((addr / row_bytes) % geom_rows) as u32;
+                let acc = self.dram.access(self.now, row, self.l2.line_bytes, Op::Read);
+                latency += acc.latency;
+                if let Some(wb) = self.l2.install(addr, false) {
+                    let wb_row = ((wb / row_bytes) % geom_rows) as u32;
+                    self.dram.access(self.now, wb_row, self.l2.line_bytes, Op::Write);
+                }
+            }
+            if let Some(wb) = self.l1.install(addr, write) {
+                // L1 victim goes to L2.
+                self.l2.lookup(wb, true);
+            }
+        }
+        self.now += latency;
+        self.total_time += latency;
+        latency
+    }
+
+    /// Average memory access time over everything seen so far, in ns.
+    pub fn amat_ns(&self) -> f64 {
+        if self.n_accesses == 0 {
+            0.0
+        } else {
+            self.total_time as f64 / 1000.0 / self.n_accesses as f64
+        }
+    }
+
+    /// Effective bandwidth for a streaming read of `bytes` starting at
+    /// `addr` (touching each line once — the NN-inference access pattern
+    /// that defeats caches).
+    pub fn streaming_bandwidth(&mut self, addr: u64, bytes: u64) -> f64 {
+        let line = self.l1.line_bytes as u64;
+        let t0 = self.now;
+        let mut a = addr;
+        while a < addr + bytes {
+            self.access(a, false);
+            a += line;
+        }
+        bytes as f64 / ((self.now - t0) as f64 * 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits_l1() {
+        let mut h = CacheHierarchy::typical();
+        h.access(0x1000, false);
+        let lat = h.access(0x1000, false);
+        assert_eq!(lat, ns(1));
+        assert!(h.l1.hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn cold_miss_goes_to_dram() {
+        let mut h = CacheHierarchy::typical();
+        let lat = h.access(0x2000, false);
+        assert!(lat > ns(30), "cold miss latency {lat}");
+    }
+
+    #[test]
+    fn working_set_beyond_l1_hits_l2() {
+        let mut h = CacheHierarchy::typical();
+        // 256 KiB working set: misses L1 (32 KiB) on re-walk, fits L2.
+        let lines = 256 * 1024 / 64;
+        for i in 0..lines {
+            h.access(i * 64, false);
+        }
+        let before = h.l2.n_hits;
+        for i in 0..lines {
+            h.access(i * 64, false);
+        }
+        assert!(h.l2.n_hits > before, "L2 should absorb the re-walk");
+    }
+
+    #[test]
+    fn streaming_defeats_cache() {
+        // The paper's core motivation: inference streams weights once; a
+        // cache hierarchy over one DRAM channel delivers DRAM-channel
+        // bandwidth at best, far below a UniMem pool.
+        let mut h = CacheHierarchy::typical();
+        let cache_bw = h.streaming_bandwidth(0, 2 * 1024 * 1024);
+        let mut pool = crate::memory::unimem::UniMemPool::new(16, 1024);
+        let pool_bw = pool.effective_bandwidth(0, 2 * 1024 * 1024, Op::Read);
+        assert!(
+            pool_bw / cache_bw > 4.0,
+            "pool {pool_bw:.2e} vs cache {cache_bw:.2e}"
+        );
+    }
+
+    #[test]
+    fn writeback_happens_on_dirty_eviction() {
+        let mut h = CacheHierarchy::typical();
+        // Dirty a line, then blow through L1 and L2 to force eviction.
+        h.access(0, true);
+        for i in 1..40_000u64 {
+            h.access(i * 64, false);
+        }
+        assert!(h.l1.n_writebacks + h.l2.n_writebacks > 0);
+    }
+
+    #[test]
+    fn amat_between_l1_and_dram() {
+        let mut h = CacheHierarchy::typical();
+        for i in 0..10_000u64 {
+            h.access((i % 2048) * 64, false);
+        }
+        let amat = h.amat_ns();
+        assert!(amat >= 1.0 && amat < 60.0, "amat {amat}");
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = CacheLevel::new("t", 4 * 64, 64, 4, ns(1));
+        // 4-way single set: fill 4 ways, touch first, install 5th → evicts
+        // the least-recently-used (the 2nd).
+        for a in [0u64, 4 * 64, 8 * 64, 12 * 64] {
+            assert!(!c.lookup(a, false));
+            c.install(a, false);
+        }
+        assert!(c.lookup(0, false)); // refresh way 0
+        assert!(!c.lookup(16 * 64, false));
+        c.install(16 * 64, false);
+        assert!(c.lookup(0, false), "recently used line must survive");
+        assert!(!c.lookup(4 * 64, false), "LRU line must be evicted");
+    }
+
+    #[test]
+    fn capacity_math() {
+        let c = CacheLevel::new("t", 32 * 1024, 64, 8, ns(1));
+        assert_eq!(c.capacity_bytes(), 32 * 1024);
+        assert_eq!(c.n_sets, 64);
+    }
+}

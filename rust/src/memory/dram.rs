@@ -1,0 +1,335 @@
+//! DRAM array timing + energy model.
+//!
+//! One *array* is the unit bonded under a logic unit in Sunrise: a small
+//! bank with its own row buffer and a wide HITOC interface. Timing follows
+//! the classic state machine — a column access hits the open row (tCAS) or
+//! pays precharge + activate first (tRP + tRCD + tCAS) — plus periodic
+//! refresh that steals availability (paper §IV: DRAM is 50–90× slower than
+//! SRAM per access; pooling hides it).
+
+use crate::memory::{ns, Ps};
+
+/// Timing parameters of one DRAM array (38 nm-class embedded DRAM).
+#[derive(Debug, Clone, Copy)]
+pub struct DramTimings {
+    /// Row activate (RAS-to-CAS) delay.
+    pub t_rcd: Ps,
+    /// Column access latency.
+    pub t_cas: Ps,
+    /// Precharge latency.
+    pub t_rp: Ps,
+    /// Minimum row-open time (activate to precharge).
+    pub t_ras: Ps,
+    /// Refresh interval (one row refresh issued every tREFI).
+    pub t_refi: Ps,
+    /// Refresh cycle time (array blocked per refresh).
+    pub t_rfc: Ps,
+}
+
+impl Default for DramTimings {
+    fn default() -> Self {
+        // Embedded 38nm DRAM-class numbers; an access is ~45–60 ns on a row
+        // miss, ~15 ns on a row hit — inside the paper's 50–90× band
+        // relative to ~1 ns SRAM.
+        DramTimings {
+            t_rcd: ns(15),
+            t_cas: ns(15),
+            t_rp: ns(15),
+            t_ras: ns(38),
+            t_refi: ns(7_800),
+            t_rfc: ns(180),
+        }
+    }
+}
+
+/// Geometry of one array.
+#[derive(Debug, Clone, Copy)]
+pub struct DramGeometry {
+    pub rows: u32,
+    /// Row (page) size in bytes.
+    pub row_bytes: u32,
+    /// Interface width in bytes per cycle.
+    pub io_bytes_per_cycle: u32,
+    /// Interface clock, Hz.
+    pub io_freq_hz: f64,
+}
+
+impl Default for DramGeometry {
+    fn default() -> Self {
+        // 8 Mb array: 1024 rows × 1 KiB row; 8 B/cycle at 1 GHz = 8 GB/s
+        // per array. 64 arrays/unit × ~... pooled to the chip's 1.8 TB/s.
+        DramGeometry {
+            rows: 1024,
+            row_bytes: 1024,
+            io_bytes_per_cycle: 8,
+            io_freq_hz: 1.0e9,
+        }
+    }
+}
+
+/// Energy parameters (pJ). Near-memory: no off-chip PHY.
+#[derive(Debug, Clone, Copy)]
+pub struct DramEnergy {
+    pub activate_pj: f64,
+    pub read_pj_per_byte: f64,
+    pub write_pj_per_byte: f64,
+    pub refresh_pj: f64,
+    /// Background (leakage+periphery) power in W per array.
+    pub background_w: f64,
+}
+
+impl Default for DramEnergy {
+    fn default() -> Self {
+        DramEnergy {
+            activate_pj: 900.0,
+            read_pj_per_byte: 2.0,
+            write_pj_per_byte: 2.2,
+            refresh_pj: 1_800.0,
+            background_w: 0.25e-3,
+        }
+    }
+}
+
+/// Kind of access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Read,
+    Write,
+}
+
+/// Result of one access against an array.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    /// When the data transfer completes.
+    pub done_at: Ps,
+    /// First-word latency (request → first beat).
+    pub latency: Ps,
+    pub row_hit: bool,
+    pub energy_pj: f64,
+}
+
+/// One DRAM array with an open-row policy and refresh accounting.
+#[derive(Debug, Clone)]
+pub struct DramArray {
+    pub timings: DramTimings,
+    pub geometry: DramGeometry,
+    pub energy: DramEnergy,
+    open_row: Option<u32>,
+    /// Array busy until this time.
+    busy_until: Ps,
+    /// Next scheduled refresh.
+    next_refresh: Ps,
+    // --- statistics ---
+    pub n_accesses: u64,
+    pub n_row_hits: u64,
+    pub n_refreshes: u64,
+    pub total_energy_pj: f64,
+    pub busy_time: Ps,
+}
+
+impl DramArray {
+    pub fn new(timings: DramTimings, geometry: DramGeometry, energy: DramEnergy) -> Self {
+        DramArray {
+            timings,
+            geometry,
+            energy,
+            open_row: None,
+            busy_until: 0,
+            next_refresh: timings.t_refi,
+            n_accesses: 0,
+            n_row_hits: 0,
+            n_refreshes: 0,
+            total_energy_pj: 0.0,
+            busy_time: 0,
+        }
+    }
+
+    pub fn default_array() -> Self {
+        Self::new(DramTimings::default(), DramGeometry::default(), DramEnergy::default())
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.geometry.rows as u64 * self.geometry.row_bytes as u64
+    }
+
+    /// Peak interface bandwidth, bytes/s.
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.geometry.io_bytes_per_cycle as f64 * self.geometry.io_freq_hz
+    }
+
+    /// Transfer time for `bytes` once the column is open.
+    fn burst_time(&self, bytes: u32) -> Ps {
+        let cycles = (bytes as u64).div_ceil(self.geometry.io_bytes_per_cycle as u64);
+        let ps_per_cycle = (1e12 / self.geometry.io_freq_hz) as u64;
+        cycles * ps_per_cycle
+    }
+
+    /// Catch up on refreshes due before time `now`.
+    fn do_refresh(&mut self, now: Ps) {
+        while self.next_refresh <= now {
+            // Refresh blocks the array for tRFC starting when it is free.
+            let start = self.busy_until.max(self.next_refresh);
+            self.busy_until = start + self.timings.t_rfc;
+            self.busy_time += self.timings.t_rfc;
+            self.open_row = None; // refresh closes the row
+            self.next_refresh += self.timings.t_refi;
+            self.n_refreshes += 1;
+            self.total_energy_pj += self.energy.refresh_pj;
+        }
+    }
+
+    /// Issue an access of `bytes` (≤ row size) to `row` at time `now`.
+    /// Returns completion info; the array serializes internally.
+    pub fn access(&mut self, now: Ps, row: u32, bytes: u32, op: Op) -> Access {
+        assert!(row < self.geometry.rows, "row {row} out of range");
+        assert!(bytes <= self.geometry.row_bytes, "burst larger than row");
+        self.do_refresh(now);
+
+        let start = self.busy_until.max(now);
+        let row_hit = self.open_row == Some(row);
+        let mut t = start;
+        let mut energy = 0.0;
+        if !row_hit {
+            if self.open_row.is_some() {
+                t += self.timings.t_rp;
+            }
+            t += self.timings.t_rcd;
+            energy += self.energy.activate_pj;
+            self.open_row = Some(row);
+        }
+        t += self.timings.t_cas;
+        let latency = t - now + self.burst_time(self.geometry.io_bytes_per_cycle.min(bytes));
+        let done_at = t + self.burst_time(bytes);
+        energy += bytes as f64
+            * match op {
+                Op::Read => self.energy.read_pj_per_byte,
+                Op::Write => self.energy.write_pj_per_byte,
+            };
+
+        self.busy_time += done_at - start;
+        self.busy_until = done_at;
+        self.n_accesses += 1;
+        if row_hit {
+            self.n_row_hits += 1;
+        }
+        self.total_energy_pj += energy;
+
+        Access {
+            done_at,
+            latency,
+            row_hit,
+            energy_pj: energy,
+        }
+    }
+
+    /// Time at which the array can next accept work.
+    pub fn free_at(&self) -> Ps {
+        self.busy_until
+    }
+
+    /// Row-hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        if self.n_accesses == 0 {
+            0.0
+        } else {
+            self.n_row_hits as f64 / self.n_accesses as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr() -> DramArray {
+        DramArray::default_array()
+    }
+
+    #[test]
+    fn first_access_is_row_miss() {
+        let mut a = arr();
+        let acc = a.access(0, 3, 64, Op::Read);
+        assert!(!acc.row_hit);
+        // tRCD + tCAS + one beat = 15 + 15 ns + 8ns transfer window
+        assert!(acc.latency >= ns(30), "latency {}", acc.latency);
+    }
+
+    #[test]
+    fn second_access_same_row_hits() {
+        let mut a = arr();
+        let first = a.access(0, 3, 64, Op::Read);
+        let second = a.access(first.done_at, 3, 64, Op::Read);
+        assert!(second.row_hit);
+        assert!(second.latency < first.latency);
+    }
+
+    #[test]
+    fn row_conflict_pays_precharge() {
+        let mut a = arr();
+        let first = a.access(0, 3, 64, Op::Read);
+        let conflict = a.access(first.done_at, 7, 64, Op::Read);
+        assert!(!conflict.row_hit);
+        // precharge + activate + cas ≥ 45 ns
+        assert!(conflict.latency >= ns(45), "latency {}", conflict.latency);
+    }
+
+    #[test]
+    fn dram_latency_in_papers_band_vs_sram() {
+        // Paper §IV: DRAM 50–90× slower than SRAM (~1 ns). Our row-miss
+        // with conflict is 45 ns + burst; a miss after idle is ~38 ns.
+        let mut a = arr();
+        let acc = a.access(0, 0, 8, Op::Read);
+        let sram_ns = 1.0;
+        let ratio = acc.latency as f64 / 1000.0 / sram_ns;
+        assert!(ratio > 20.0 && ratio < 100.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn serializes_back_to_back() {
+        let mut a = arr();
+        let x = a.access(0, 0, 1024, Op::Read);
+        let y = a.access(0, 0, 1024, Op::Read); // issued at t=0 but array busy
+        assert!(y.done_at > x.done_at);
+    }
+
+    #[test]
+    fn refresh_fires_and_closes_row() {
+        let mut a = arr();
+        a.access(0, 5, 64, Op::Read);
+        let refi = a.timings.t_refi;
+        let acc = a.access(refi + 1, 5, 64, Op::Read);
+        assert!(!acc.row_hit, "refresh should close the open row");
+        assert!(a.n_refreshes >= 1);
+    }
+
+    #[test]
+    fn refresh_overhead_is_small_fraction() {
+        // tRFC / tREFI ≈ 2.3% availability loss — sane for embedded DRAM.
+        let t = DramTimings::default();
+        let frac = t.t_rfc as f64 / t.t_refi as f64;
+        assert!(frac < 0.05, "refresh overhead {frac}");
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let mut a = arr();
+        a.access(0, 0, 64, Op::Read);
+        let e1 = a.total_energy_pj;
+        a.access(ns(100), 0, 64, Op::Write);
+        assert!(a.total_energy_pj > e1);
+    }
+
+    #[test]
+    fn capacity_and_bandwidth() {
+        let a = arr();
+        assert_eq!(a.capacity_bytes(), 1024 * 1024); // 1 MiB = 8 Mb
+        assert_eq!(a.peak_bandwidth(), 8.0e9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_row() {
+        arr().access(0, 4096, 8, Op::Read);
+    }
+}

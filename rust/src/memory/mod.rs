@@ -1,0 +1,31 @@
+//! Memory substrates (paper §IV "UNIMEM" + §V DRAM repair).
+//!
+//! The paper's memory system is DRAM-only: no SRAM cache anywhere. Slow
+//! DRAM latency is countered by *pooling* — many localized DRAM arrays per
+//! logic unit, accessed in parallel and pipelined, so aggregate bandwidth
+//! (not single-access latency) sets the compute feed rate.
+//!
+//! - [`dram`] — bank/array timing model (row activation, CAS, precharge,
+//!   refresh) with energy accounting.
+//! - [`sram`] — the SRAM model used by the *baseline* chips (and by the
+//!   cache hierarchy the paper removes).
+//! - [`unimem`] — the pooled-DRAM scheduler: interleaving, per-array
+//!   queues, latency hiding.
+//! - [`cache`] — a conventional L1/L2 cache hierarchy over a single DRAM
+//!   channel: the architecture UniMem replaces, kept as the ablation
+//!   baseline.
+//! - [`repair`] — DRAM defect map + NVM + power-up row repair (paper §V).
+
+pub mod cache;
+pub mod dram;
+pub mod repair;
+pub mod sram;
+pub mod unimem;
+
+/// Global time unit for memory/sim models: picoseconds.
+pub type Ps = u64;
+
+/// Convenience: nanoseconds → picoseconds.
+pub const fn ns(n: u64) -> Ps {
+    n * 1000
+}

@@ -1,0 +1,145 @@
+//! SRAM model — used by the comparison chips (A/B/C keep weights in
+//! on-die SRAM) and by the baseline cache hierarchy in [`crate::memory::cache`].
+//!
+//! The paper's argument against SRAM is *area*: a ~140 F² cell vs DRAM's
+//! 6–12 F², i.e. ≥14× worse bit density [paper §IV, §VII], which is why
+//! chip A spends most of an 800 mm² die to hold 300 MB. The win is speed:
+//! ~1 ns access, no refresh.
+
+use crate::memory::{ns, Ps};
+
+/// SRAM macro parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SramParams {
+    /// Access latency (read or write).
+    pub t_access: Ps,
+    /// Interface width, bytes per cycle.
+    pub io_bytes_per_cycle: u32,
+    /// Clock, Hz.
+    pub freq_hz: f64,
+    /// Energy per byte accessed, pJ.
+    pub pj_per_byte: f64,
+    /// Leakage power per MB, W (SRAM leaks; DRAM pays refresh instead).
+    pub leakage_w_per_mb: f64,
+}
+
+impl Default for SramParams {
+    fn default() -> Self {
+        SramParams {
+            t_access: ns(1),
+            io_bytes_per_cycle: 64,
+            freq_hz: 1.0e9,
+            pj_per_byte: 0.8,
+            leakage_w_per_mb: 30e-3,
+        }
+    }
+}
+
+/// An SRAM macro of a given capacity.
+#[derive(Debug, Clone)]
+pub struct Sram {
+    pub params: SramParams,
+    pub capacity_bytes: u64,
+    busy_until: Ps,
+    pub n_accesses: u64,
+    pub total_energy_pj: f64,
+}
+
+/// Completion record for one SRAM access.
+#[derive(Debug, Clone, Copy)]
+pub struct SramAccess {
+    pub done_at: Ps,
+    pub latency: Ps,
+    pub energy_pj: f64,
+}
+
+impl Sram {
+    pub fn new(capacity_bytes: u64, params: SramParams) -> Self {
+        Sram {
+            params,
+            capacity_bytes,
+            busy_until: 0,
+            n_accesses: 0,
+            total_energy_pj: 0.0,
+        }
+    }
+
+    /// Cell-density ratio vs DRAM (paper §IV): 140 F² / ~10 F².
+    pub const CELL_AREA_F2: f64 = 140.0;
+    pub const DRAM_CELL_AREA_F2: f64 = 10.0;
+
+    /// Access `bytes` at time `now`.
+    pub fn access(&mut self, now: Ps, bytes: u32) -> SramAccess {
+        let start = self.busy_until.max(now);
+        let beats = (bytes as u64).div_ceil(self.params.io_bytes_per_cycle as u64);
+        let ps_per_cycle = (1e12 / self.params.freq_hz) as u64;
+        let done_at = start + self.params.t_access + beats * ps_per_cycle;
+        let energy_pj = bytes as f64 * self.params.pj_per_byte;
+        self.busy_until = done_at;
+        self.n_accesses += 1;
+        self.total_energy_pj += energy_pj;
+        SramAccess {
+            done_at,
+            latency: done_at - now,
+            energy_pj,
+        }
+    }
+
+    /// Peak bandwidth, bytes/s.
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.params.io_bytes_per_cycle as f64 * self.params.freq_hz
+    }
+
+    /// Standing leakage power for this macro, W.
+    pub fn leakage_w(&self) -> f64 {
+        self.capacity_bytes as f64 / 1e6 * self.params.leakage_w_per_mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_access() {
+        let mut s = Sram::new(1 << 20, SramParams::default());
+        let a = s.access(0, 64);
+        // 1 ns access + 1 cycle transfer = 2 ns.
+        assert_eq!(a.latency, ns(2));
+    }
+
+    #[test]
+    fn density_disadvantage_is_14x() {
+        assert!(Sram::CELL_AREA_F2 / Sram::DRAM_CELL_AREA_F2 >= 14.0);
+    }
+
+    #[test]
+    fn serializes() {
+        let mut s = Sram::new(1 << 20, SramParams::default());
+        let a = s.access(0, 1024);
+        let b = s.access(0, 1024);
+        assert!(b.done_at > a.done_at);
+    }
+
+    #[test]
+    fn leakage_scales_with_capacity() {
+        let small = Sram::new(1_000_000, SramParams::default());
+        let big = Sram::new(300_000_000, SramParams::default());
+        assert!(big.leakage_w() > small.leakage_w() * 100.0);
+        // Chip A's 300 MB of SRAM leaks ~9 W in this model — a visible
+        // slice of its 120 W budget, which UniMem avoids entirely.
+        assert!(big.leakage_w() > 5.0 && big.leakage_w() < 15.0);
+    }
+
+    #[test]
+    fn sram_vs_dram_latency_ratio_in_band() {
+        use crate::memory::dram::{DramArray, Op};
+        let mut s = Sram::new(1 << 20, SramParams::default());
+        let mut d = DramArray::default_array();
+        let sa = s.access(0, 8);
+        let da = d.access(0, 0, 8, Op::Read);
+        let ratio = da.latency as f64 / sa.latency as f64;
+        // Paper §IV: "50–90 times slower" (we land within the broad band).
+        assert!(ratio > 10.0 && ratio < 100.0, "ratio {ratio}");
+    }
+}

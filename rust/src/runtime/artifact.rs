@@ -1,0 +1,168 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` schema:
+//! ```json
+//! {
+//!   "version": 1,
+//!   "models": [
+//!     {"name": "mlp784_b8", "path": "mlp784_b8.hlo.txt",
+//!      "batch": 8, "input_shape": [8, 784], "output_shape": [8, 10],
+//!      "n_params": 535818, "kernel": "systolic"}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One compiled model artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    pub name: String,
+    /// Path to the HLO text, relative to the manifest.
+    pub path: PathBuf,
+    pub batch: u32,
+    pub input_shape: Vec<i64>,
+    pub output_shape: Vec<i64>,
+    pub n_params: u64,
+    /// Which L1 kernel the model was built on.
+    pub kernel: String,
+}
+
+impl ModelArtifact {
+    /// Elements in one input batch.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product::<i64>() as usize
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product::<i64>() as usize
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelArtifact>,
+}
+
+fn shape_from(j: &Json, key: &str) -> Result<Vec<i64>, String> {
+    j.req_arr(key)
+        .map_err(|e| e.to_string())?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|f| f.fract() == 0.0)
+                .map(|f| f as i64)
+                .ok_or_else(|| format!("non-integer dim in {key}"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.req_u64("version").map_err(|e| e.to_string())?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let models = j
+            .req_arr("models")
+            .map_err(|e| e.to_string())?
+            .iter()
+            .map(|m| {
+                Ok(ModelArtifact {
+                    name: m.req_str("name").map_err(|e| e.to_string())?.to_string(),
+                    path: PathBuf::from(m.req_str("path").map_err(|e| e.to_string())?),
+                    batch: m.req_u64("batch").map_err(|e| e.to_string())? as u32,
+                    input_shape: shape_from(m, "input_shape")?,
+                    output_shape: shape_from(m, "output_shape")?,
+                    n_params: m.req_u64("n_params").map_err(|e| e.to_string())?,
+                    kernel: m.req_str("kernel").map_err(|e| e.to_string())?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest { dir, models })
+    }
+
+    /// Find a model by name.
+    pub fn model(&self, name: &str) -> Option<&ModelArtifact> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Absolute path of a model's HLO file.
+    pub fn hlo_path(&self, m: &ModelArtifact) -> PathBuf {
+        self.dir.join(&m.path)
+    }
+
+    /// The default artifacts directory (workspace-relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "models": [
+            {"name": "mlp784_b8", "path": "mlp784_b8.hlo.txt", "batch": 8,
+             "input_shape": [8, 784], "output_shape": [8, 10],
+             "n_params": 535818, "kernel": "systolic"},
+            {"name": "cnn_b4", "path": "cnn_b4.hlo.txt", "batch": 4,
+             "input_shape": [4, 16, 16, 3], "output_shape": [4, 10],
+             "n_params": 12345, "kernel": "conv"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.models.len(), 2);
+        let mlp = m.model("mlp784_b8").unwrap();
+        assert_eq!(mlp.batch, 8);
+        assert_eq!(mlp.input_elems(), 8 * 784);
+        assert_eq!(mlp.output_elems(), 80);
+        assert_eq!(m.hlo_path(mlp), PathBuf::from("/tmp/a/mlp784_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_model_is_none() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert!(m.model("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version": 2, "models": []}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "models": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_fractional_dims() {
+        let bad = r#"{"version": 1, "models": [
+            {"name": "x", "path": "x.hlo.txt", "batch": 1,
+             "input_shape": [1.5], "output_shape": [1],
+             "n_params": 0, "kernel": "k"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/x")).is_err());
+    }
+}

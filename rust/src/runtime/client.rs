@@ -1,0 +1,148 @@
+//! The `xla`-crate wrapper: compile an HLO-text artifact once on the PJRT
+//! CPU client, execute it many times from the hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with outputs lowered as a 1-tuple
+//! (`return_tuple=True` on the python side → `to_tuple1()` here).
+
+use crate::runtime::artifact::{Manifest, ModelArtifact};
+use anyhow::{Context, Result};
+
+/// A compiled, ready-to-run model.
+pub struct PjrtModel {
+    pub artifact: ModelArtifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Execute on a full batch (`input.len() == artifact.input_elems()`).
+    /// Returns the flattened f32 output.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.artifact.input_elems(),
+            "input length {} != expected {} for {}",
+            input.len(),
+            self.artifact.input_elems(),
+            self.artifact.name
+        );
+        let lit = xla::Literal::vec1(input).reshape(&self.artifact.input_shape)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a partially-filled batch: `samples` rows of real data,
+    /// remainder zero-padded (the dynamic batcher's short-batch path).
+    /// Returns only the first `samples` rows of output.
+    pub fn execute_padded(&self, rows: &[f32], samples: usize) -> Result<Vec<f32>> {
+        let per_in = self.artifact.input_elems() / self.artifact.batch as usize;
+        let per_out = self.artifact.output_elems() / self.artifact.batch as usize;
+        anyhow::ensure!(
+            rows.len() == per_in * samples && samples <= self.artifact.batch as usize,
+            "bad padded execute: {} rows of {per_in}, batch {}",
+            samples,
+            self.artifact.batch
+        );
+        let mut full = vec![0.0f32; self.artifact.input_elems()];
+        full[..rows.len()].copy_from_slice(rows);
+        let out = self.execute(&full)?;
+        Ok(out[..per_out * samples].to_vec())
+    }
+}
+
+/// The runtime: one PJRT client + all compiled models from a manifest.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub models: Vec<PjrtModel>,
+}
+
+impl Runtime {
+    /// Load every model in the manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut models = Vec::new();
+        for artifact in &manifest.models {
+            let path = manifest.hlo_path(artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", artifact.name))?;
+            models.push(PjrtModel {
+                artifact: artifact.clone(),
+                exe,
+            });
+        }
+        Ok(Runtime { client, models })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&PjrtModel> {
+        self.models.iter().find(|m| m.artifact.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they skip (pass
+    /// trivially with a notice) when artifacts are absent so `cargo test`
+    /// works standalone.
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(dir).expect("artifacts load"))
+    }
+
+    #[test]
+    fn loads_all_manifest_models() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.models.is_empty());
+        assert!(rt.model("mlp784_b8").is_some());
+    }
+
+    #[test]
+    fn mlp_executes_and_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model("mlp784_b8").unwrap();
+        let input: Vec<f32> = (0..m.artifact.input_elems())
+            .map(|i| (i % 97) as f32 / 97.0)
+            .collect();
+        let a = m.execute(&input).unwrap();
+        let b = m.execute(&input).unwrap();
+        assert_eq!(a.len(), m.artifact.output_elems());
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn padded_execution_matches_full() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model("mlp784_b8").unwrap();
+        let per_in = m.artifact.input_elems() / m.artifact.batch as usize;
+        let per_out = m.artifact.output_elems() / m.artifact.batch as usize;
+        let rows: Vec<f32> = (0..per_in * 3).map(|i| (i % 31) as f32 / 31.0).collect();
+        let padded = m.execute_padded(&rows, 3).unwrap();
+        // Same rows through a full batch.
+        let mut full = vec![0.0f32; m.artifact.input_elems()];
+        full[..rows.len()].copy_from_slice(&rows);
+        let full_out = m.execute(&full).unwrap();
+        assert_eq!(padded.len(), per_out * 3);
+        assert_eq!(&padded[..], &full_out[..per_out * 3]);
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model("mlp784_b8").unwrap();
+        assert!(m.execute(&[1.0, 2.0]).is_err());
+    }
+}

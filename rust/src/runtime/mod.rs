@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, producing
+//! `artifacts/<model>.hlo.txt` (HLO *text* — the interchange format that
+//! survives the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch) plus
+//! `artifacts/manifest.json`. This module loads the manifest, compiles
+//! each module on the PJRT CPU client, and executes them from the serving
+//! hot path. Python is never involved at runtime.
+//!
+//! - [`artifact`] — manifest parsing and artifact discovery.
+//! - [`client`] — the `xla`-crate wrapper (compile once, execute many).
+//! - [`executor`] — the [`Executor`] trait the coordinator drives, with
+//!   PJRT-backed and simulator-backed implementations.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{Manifest, ModelArtifact};
+pub use client::PjrtModel;
+pub use executor::{Executor, PjrtExecutor, SimExecutor};

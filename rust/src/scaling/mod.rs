@@ -1,0 +1,17 @@
+//! Process-technology scaling and cost models (paper §VII + Table IV–VII).
+//!
+//! The paper's projection methodology normalizes every chip to a 7 nm CMOS
+//! process and a 1y DRAM process using per-generation density /
+//! performance / power factors (Tables V and VI) and a power-ceiling rule
+//! ("use performance-improvement parameters while power stays within the
+//! common ASIC range, otherwise power-reduction parameters").
+//!
+//! - [`process`] — CMOS node steps and cumulative scaling chains (Table V).
+//! - [`dram`] — DRAM node densities and parameter-capacity math (Table VI).
+//! - [`normalize`] — the normalization engine producing Table VII.
+//! - [`cost`] — NRE / wafer / yield / die-cost model producing Table IV.
+
+pub mod cost;
+pub mod dram;
+pub mod normalize;
+pub mod process;

@@ -1,0 +1,358 @@
+//! The projection engine behind paper Table VII: normalize every chip to a
+//! 7 nm CMOS process and a 1y DRAM process.
+//!
+//! Methodology (paper §VII): apply Table V factors generation by
+//! generation. Density gains pack proportionally more compute into the same
+//! area (performance and bandwidth scale with density); per-unit
+//! performance-improvement factors are applied **only while the projected
+//! chip power stays within the common ASIC envelope** — otherwise that
+//! generation's power-reduction factor is taken instead (no per-unit speed
+//! gain). Memory capacity scales with the *memory* technology: the DRAM
+//! density ratio of Table VI for DRAM-based chips, the logic density ratio
+//! for SRAM-based chips.
+//!
+//! The paper's own Table VII cannot be exactly re-derived from Tables II/V/
+//! VI (the rows are mutually inconsistent — see EXPERIMENTS.md); this
+//! module implements the stated methodology and the tests pin both the
+//! exactly-derivable quantities (bandwidth ×13.2, capacity ×5.93) and the
+//! orderings the paper claims.
+
+use crate::scaling::dram::{self, DramNode};
+use crate::scaling::process::{chain_to_7nm, scaling_to_7nm, Node, Scaling, Step};
+
+/// Memory technology of a chip, deciding which density ladder its capacity
+/// climbs during normalization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTech {
+    /// On-chip SRAM (scales with the logic node).
+    Sram,
+    /// Bonded / stacked DRAM at the given DRAM node.
+    Dram(DramNode),
+}
+
+/// Normalization input: the die-level facts of Table II.
+#[derive(Debug, Clone)]
+pub struct NormInput {
+    pub name: String,
+    pub logic_node: Node,
+    pub mem_tech: MemTech,
+    pub die_area_mm2: f64,
+    pub peak_tops: f64,
+    pub memory_mb: f64,
+    pub power_w: f64,
+    /// `None` when unpublished (chip B).
+    pub bandwidth_tbps: Option<f64>,
+}
+
+/// Die-normalized metrics (paper Table III rows).
+#[derive(Debug, Clone, Copy)]
+pub struct DieMetrics {
+    pub tops_per_mm2: f64,
+    /// GB/s per mm² (the paper's Table III column is labeled MB/s/mm² but
+    /// its values are GB/s/mm²; we use the unit that matches the values).
+    pub bw_gbps_per_mm2: Option<f64>,
+    pub mem_mb_per_mm2: f64,
+    pub tops_per_w: f64,
+}
+
+/// Compute the die-normalized metrics of Table III from a spec.
+pub fn die_metrics(c: &NormInput) -> DieMetrics {
+    DieMetrics {
+        tops_per_mm2: c.peak_tops / c.die_area_mm2,
+        bw_gbps_per_mm2: c.bandwidth_tbps.map(|b| b * 1000.0 / c.die_area_mm2),
+        mem_mb_per_mm2: c.memory_mb / c.die_area_mm2,
+        tops_per_w: c.peak_tops / c.power_w,
+    }
+}
+
+/// Power envelope rule: the "common range as seen in ASIC chips". The
+/// largest chip in the paper's comparison set draws 350 W; we take that as
+/// the ceiling.
+pub const ASIC_POWER_CEILING_W: f64 = 350.0;
+
+/// Outcome of projecting one chip to 7 nm / 1y DRAM.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub name: String,
+    /// Cumulative factors actually applied (after the power rule).
+    pub applied: Scaling,
+    /// Which generations took the power-reduction branch.
+    pub power_limited_steps: Vec<String>,
+    pub projected_power_w: f64,
+    pub metrics: DieMetrics,
+}
+
+/// Project a chip to 7 nm CMOS + 1y DRAM under the power-ceiling rule.
+///
+/// Per generation step the chip gains `density_ratio` more units in the
+/// same area. If running those units at the improved per-unit speed keeps
+/// total power under `ceiling_w`, the performance branch is taken
+/// (power grows with density, shrinks with the power factor, and grows with
+/// the perf factor — dynamic power tracks frequency). Otherwise the power
+/// branch is taken: per-unit speed stays, power takes the reduction factor.
+pub fn project_to_7nm(c: &NormInput, ceiling_w: f64) -> Projection {
+    let steps: Vec<&'static Step> = if c.logic_node == Node::N12 {
+        // 12 nm first un-applies 16→12, then follows 16→10→7. The
+        // un-application is a pure re-basing, not a generation gain, so we
+        // fold it into the starting state.
+        chain_to_7nm(Node::N16)
+    } else {
+        chain_to_7nm(c.logic_node)
+    };
+
+    // Re-base 12 nm chips to their 16 nm equivalent.
+    let base = if c.logic_node == Node::N12 {
+        let inv = scaling_to_7nm(Node::N12);
+        let to7_from16 = scaling_to_7nm(Node::N16);
+        // scaling 12→16 = scaling(12→7) / scaling(16→7)
+        Scaling {
+            density: inv.density / to7_from16.density,
+            performance: inv.performance / to7_from16.performance,
+            power: inv.power / to7_from16.power,
+        }
+    } else {
+        Scaling::IDENTITY
+    };
+
+    let mut applied = base;
+    let mut power = c.power_w * base.density * base.performance * base.power;
+    let mut power_limited = Vec::new();
+
+    for s in steps {
+        // Candidate: performance branch.
+        let perf_gain = 1.0 + s.perf_improvement;
+        let pow_fact = 1.0 - s.power_reduction;
+        let perf_branch_power = power * s.density_ratio * perf_gain * pow_fact;
+        if perf_branch_power <= ceiling_w {
+            applied = Scaling {
+                density: applied.density * s.density_ratio,
+                performance: applied.performance * perf_gain,
+                power: applied.power * pow_fact,
+            };
+            power = perf_branch_power;
+        } else {
+            // Power branch: density still grows, per-unit speed flat,
+            // power-reduction factor taken.
+            applied = Scaling {
+                density: applied.density * s.density_ratio,
+                performance: applied.performance,
+                power: applied.power * pow_fact,
+            };
+            power = power * s.density_ratio * pow_fact;
+            power_limited.push(format!("{}->{}", s.from, s.to));
+        }
+    }
+
+    // Performance and bandwidth per mm² scale with density × per-unit perf
+    // (for 12 nm inputs `applied` already folds in the re-basing to 16 nm).
+    let perf_scale = applied.density * applied.performance;
+
+    let mem_scale = match c.mem_tech {
+        MemTech::Sram => applied.density,
+        MemTech::Dram(from) => dram::density_ratio(from, DramNode::D1y),
+    };
+
+    let base_m = die_metrics(c);
+    let tops = c.peak_tops * perf_scale;
+    let metrics = DieMetrics {
+        tops_per_mm2: base_m.tops_per_mm2 * perf_scale,
+        bw_gbps_per_mm2: base_m.bw_gbps_per_mm2.map(|b| b * applied.density),
+        mem_mb_per_mm2: base_m.mem_mb_per_mm2 * mem_scale,
+        tops_per_w: tops / power,
+    };
+
+    Projection {
+        name: c.name.clone(),
+        applied,
+        power_limited_steps: power_limited,
+        projected_power_w: power,
+        metrics,
+    }
+}
+
+/// Paper Table VII, verbatim, for side-by-side reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperTable7Row {
+    pub name: &'static str,
+    pub tops_per_mm2: f64,
+    pub bw_gbps_per_mm2: Option<f64>,
+    pub mem_mb_per_mm2: f64,
+    pub tops_per_w: f64,
+}
+
+pub const PAPER_TABLE_VII: [PaperTable7Row; 4] = [
+    PaperTable7Row { name: "SUNRISE", tops_per_mm2: 7.58, bw_gbps_per_mm2: Some(216.0), mem_mb_per_mm2: 30.3, tops_per_w: 50.10 },
+    PaperTable7Row { name: "Chip A", tops_per_mm2: 0.86, bw_gbps_per_mm2: Some(122.0), mem_mb_per_mm2: 1.50, tops_per_w: 5.38 },
+    PaperTable7Row { name: "Chip B", tops_per_mm2: 0.19, bw_gbps_per_mm2: None, mem_mb_per_mm2: 0.90, tops_per_w: 0.83 },
+    PaperTable7Row { name: "Chip C", tops_per_mm2: 1.12, bw_gbps_per_mm2: Some(6.6), mem_mb_per_mm2: 0.07, tops_per_w: 1.46 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_approx;
+
+    fn sunrise() -> NormInput {
+        NormInput {
+            name: "SUNRISE".into(),
+            logic_node: Node::N40,
+            mem_tech: MemTech::Dram(DramNode::D3x),
+            die_area_mm2: 110.0,
+            peak_tops: 25.0,
+            memory_mb: 562.5,
+            power_w: 12.0,
+            bandwidth_tbps: Some(1.8),
+        }
+    }
+
+    fn chip_a() -> NormInput {
+        NormInput {
+            name: "Chip A".into(),
+            logic_node: Node::N16,
+            mem_tech: MemTech::Sram,
+            die_area_mm2: 800.0,
+            peak_tops: 122.0,
+            memory_mb: 300.0,
+            power_w: 120.0,
+            bandwidth_tbps: Some(45.0),
+        }
+    }
+
+    fn chip_c() -> NormInput {
+        NormInput {
+            name: "Chip C".into(),
+            logic_node: Node::N7,
+            mem_tech: MemTech::Sram,
+            die_area_mm2: 456.0,
+            peak_tops: 512.0,
+            memory_mb: 32.0,
+            power_w: 350.0,
+            bandwidth_tbps: Some(3.0),
+        }
+    }
+
+    #[test]
+    fn die_metrics_match_table_iii() {
+        // Table III row for Sunrise: 0.23 / 16.3 / 5.11 / 2.08.
+        let m = die_metrics(&sunrise());
+        assert_approx!(m.tops_per_mm2, 0.23, 0.02);
+        assert_approx!(m.bw_gbps_per_mm2.unwrap(), 16.3, 0.01);
+        assert_approx!(m.mem_mb_per_mm2, 5.11, 0.01);
+        assert_approx!(m.tops_per_w, 2.08, 0.01);
+    }
+
+    #[test]
+    fn sunrise_bandwidth_scales_by_13_2() {
+        // The one Table VII entry that is exactly derivable: 16.36 GB/s/mm²
+        // × density 13.2 = 216 GB/s/mm².
+        let p = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        assert_approx!(p.metrics.bw_gbps_per_mm2.unwrap(), 216.0, 0.01);
+    }
+
+    #[test]
+    fn sunrise_capacity_scales_by_dram_ratio() {
+        // 5.11 × 5.925 = 30.3 MB/mm² (Table VII, exact).
+        let p = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        assert_approx!(p.metrics.mem_mb_per_mm2, 30.3, 0.01);
+    }
+
+    #[test]
+    fn sunrise_projected_perf_in_paper_band() {
+        // Paper: 7.58 TOPS/mm². Full perf-branch chain gives
+        // 0.227 × 13.2 × 2.747 = 8.24; the paper's 7.58 sits within 10%.
+        let p = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        let got = p.metrics.tops_per_mm2;
+        assert!(got > 6.0 && got < 9.0, "got {got}");
+        assert!((got - 7.58).abs() / 7.58 < 0.15, "got {got} vs paper 7.58");
+    }
+
+    #[test]
+    fn sunrise_power_stays_modest() {
+        let p = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        assert!(p.projected_power_w < 50.0, "power {}", p.projected_power_w);
+        assert!(p.power_limited_steps.is_empty());
+    }
+
+    #[test]
+    fn chip_c_is_identity() {
+        let p = project_to_7nm(&chip_c(), ASIC_POWER_CEILING_W);
+        let m0 = die_metrics(&chip_c());
+        assert_approx!(p.metrics.tops_per_mm2, m0.tops_per_mm2, 1e-12);
+        assert_approx!(p.metrics.tops_per_w, m0.tops_per_w, 1e-12);
+        assert_approx!(p.metrics.mem_mb_per_mm2, m0.mem_mb_per_mm2, 1e-12);
+    }
+
+    #[test]
+    fn sunrise_wins_all_metrics_after_normalization() {
+        // The paper's Table VII headline: Sunrise surpasses all three chips
+        // in all benchmarks once normalized.
+        let s = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        for other in [chip_a(), chip_c()] {
+            let o = project_to_7nm(&other, ASIC_POWER_CEILING_W);
+            assert!(s.metrics.tops_per_mm2 > o.metrics.tops_per_mm2, "perf vs {}", o.name);
+            assert!(s.metrics.mem_mb_per_mm2 > o.metrics.mem_mb_per_mm2, "cap vs {}", o.name);
+            assert!(s.metrics.tops_per_w > o.metrics.tops_per_w, "eff vs {}", o.name);
+            if let (Some(sb), Some(ob)) = (s.metrics.bw_gbps_per_mm2, o.metrics.bw_gbps_per_mm2) {
+                assert!(sb > ob, "bw vs {}", o.name);
+            }
+        }
+    }
+
+    #[test]
+    fn chip_a_projection_in_band() {
+        // Paper: 0.86 TOPS/mm², 5.38 TOPS/W, 1.50 MB/mm². The paper's own
+        // Table VII rows cannot all be re-derived from Tables II/V (see
+        // module doc); we require the same order of magnitude (factor 2)
+        // and pin the tighter bands where the derivation is unambiguous.
+        let p = project_to_7nm(&chip_a(), ASIC_POWER_CEILING_W);
+        assert!((p.metrics.tops_per_mm2 - 0.86).abs() / 0.86 < 0.25, "{}", p.metrics.tops_per_mm2);
+        assert!((p.metrics.mem_mb_per_mm2 - 1.50).abs() / 1.50 < 0.25, "{}", p.metrics.mem_mb_per_mm2);
+        let eff = p.metrics.tops_per_w;
+        assert!(eff > 5.38 / 2.0 && eff < 5.38 * 2.0, "eff {eff} vs paper 5.38");
+    }
+
+    #[test]
+    fn sunrise_efficiency_in_paper_band() {
+        // Paper: 50.10 TOPS/W. Our power model charges the perf-branch
+        // frequency gain to dynamic power (the paper appears not to), so we
+        // land lower; require same order of magnitude and the dominant win.
+        let p = project_to_7nm(&sunrise(), ASIC_POWER_CEILING_W);
+        let eff = p.metrics.tops_per_w;
+        assert!(eff > 50.10 / 2.5 && eff < 50.10 * 2.5, "eff {eff} vs paper 50.10");
+        // Sunrise's efficiency lead over chip A must be large (paper: ~9×).
+        let a = project_to_7nm(&chip_a(), ASIC_POWER_CEILING_W);
+        assert!(eff / a.metrics.tops_per_w > 4.0);
+    }
+
+    #[test]
+    fn power_ceiling_switches_branch() {
+        // A hot chip must take the power branch somewhere.
+        let mut hot = chip_a();
+        hot.power_w = 300.0;
+        let p = project_to_7nm(&hot, ASIC_POWER_CEILING_W);
+        assert!(
+            !p.power_limited_steps.is_empty(),
+            "expected power-limited steps, power={}",
+            p.projected_power_w
+        );
+        assert!(p.projected_power_w <= ASIC_POWER_CEILING_W * 1.001);
+    }
+
+    #[test]
+    fn twelve_nm_rebases_through_16() {
+        let b = NormInput {
+            name: "Chip B".into(),
+            logic_node: Node::N12,
+            mem_tech: MemTech::Sram,
+            die_area_mm2: 709.0,
+            peak_tops: 125.0,
+            memory_mb: 190.0,
+            power_w: 280.0,
+            bandwidth_tbps: None,
+        };
+        let p = project_to_7nm(&b, ASIC_POWER_CEILING_W);
+        // Density 12→7 = 3.3/1.2 = 2.75.
+        assert_approx!(p.applied.density, 2.75, 1e-9);
+        assert!(p.metrics.bw_gbps_per_mm2.is_none());
+    }
+}

@@ -1,0 +1,226 @@
+//! CMOS process nodes and per-generation scaling factors (paper Table V).
+//!
+//! Table V gives pairwise factors between specific nodes; the canonical
+//! scaling chain used by the paper's projection is
+//! `40 → 28 → 16 → 10 → 7`, with `16 → 12` as a side branch (chip B sits
+//! on 12 nm). Chains that start at 12 nm compose through 16 nm (divide out
+//! the 16→12 step), which is the only path expressible from the published
+//! factors.
+
+use std::fmt;
+
+/// CMOS process node. Ordered from oldest/largest to newest/smallest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Node {
+    N40,
+    N28,
+    N16,
+    N12,
+    N10,
+    N7,
+}
+
+impl Node {
+    pub fn nm(self) -> u32 {
+        match self {
+            Node::N40 => 40,
+            Node::N28 => 28,
+            Node::N16 => 16,
+            Node::N12 => 12,
+            Node::N10 => 10,
+            Node::N7 => 7,
+        }
+    }
+
+    pub fn from_nm(nm: u32) -> Option<Node> {
+        Some(match nm {
+            40 => Node::N40,
+            28 => Node::N28,
+            16 => Node::N16,
+            12 => Node::N12,
+            10 => Node::N10,
+            7 => Node::N7,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Node {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}nm", self.nm())
+    }
+}
+
+/// One generation step of Table V.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    pub from: Node,
+    pub to: Node,
+    /// Transistor-density multiplier (×).
+    pub density_ratio: f64,
+    /// Per-unit performance improvement (e.g. 0.45 = +45%).
+    pub perf_improvement: f64,
+    /// Per-unit power reduction (e.g. 0.40 = −40%).
+    pub power_reduction: f64,
+}
+
+/// Paper Table V, verbatim.
+pub const TABLE_V: [Step; 5] = [
+    Step { from: Node::N40, to: Node::N28, density_ratio: 2.0, perf_improvement: 0.45, power_reduction: 0.40 },
+    Step { from: Node::N28, to: Node::N16, density_ratio: 2.0, perf_improvement: 0.35, power_reduction: 0.55 },
+    Step { from: Node::N16, to: Node::N12, density_ratio: 1.2, perf_improvement: 0.28, power_reduction: 0.35 },
+    Step { from: Node::N16, to: Node::N10, density_ratio: 2.0, perf_improvement: 0.15, power_reduction: 0.35 },
+    Step { from: Node::N10, to: Node::N7, density_ratio: 1.65, perf_improvement: 0.22, power_reduction: 0.54 },
+];
+
+/// Cumulative scaling factors across a chain of steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scaling {
+    /// Transistor-density multiplier.
+    pub density: f64,
+    /// Per-unit performance multiplier (1 + improvements composed).
+    pub performance: f64,
+    /// Per-unit power multiplier (1 − reductions composed; < 1 means less
+    /// power per transistor-unit).
+    pub power: f64,
+}
+
+impl Scaling {
+    pub const IDENTITY: Scaling = Scaling { density: 1.0, performance: 1.0, power: 1.0 };
+
+    fn compose(self, s: &Step) -> Scaling {
+        Scaling {
+            density: self.density * s.density_ratio,
+            performance: self.performance * (1.0 + s.perf_improvement),
+            power: self.power * (1.0 - s.power_reduction),
+        }
+    }
+
+    fn uncompose(self, s: &Step) -> Scaling {
+        Scaling {
+            density: self.density / s.density_ratio,
+            performance: self.performance / (1.0 + s.perf_improvement),
+            power: self.power / (1.0 - s.power_reduction),
+        }
+    }
+}
+
+fn step(from: Node, to: Node) -> &'static Step {
+    TABLE_V
+        .iter()
+        .find(|s| s.from == from && s.to == to)
+        .unwrap_or_else(|| panic!("no Table V step {from:?} -> {to:?}"))
+}
+
+/// The canonical forward chain from `from` down to 7 nm, as a list of
+/// Table V steps. 12 nm is handled by composing *backwards* to 16 nm first
+/// (the published factors define 12 nm only relative to 16 nm).
+pub fn chain_to_7nm(from: Node) -> Vec<&'static Step> {
+    match from {
+        Node::N40 => vec![
+            step(Node::N40, Node::N28),
+            step(Node::N28, Node::N16),
+            step(Node::N16, Node::N10),
+            step(Node::N10, Node::N7),
+        ],
+        Node::N28 => vec![
+            step(Node::N28, Node::N16),
+            step(Node::N16, Node::N10),
+            step(Node::N10, Node::N7),
+        ],
+        Node::N16 => vec![step(Node::N16, Node::N10), step(Node::N10, Node::N7)],
+        Node::N10 => vec![step(Node::N10, Node::N7)],
+        Node::N7 => vec![],
+        Node::N12 => vec![], // handled specially in `scaling_to_7nm`
+    }
+}
+
+/// Cumulative scaling from `from` to 7 nm. For 12 nm the chain is
+/// `12 → (inverse of 16→12) → 16 → 10 → 7`.
+pub fn scaling_to_7nm(from: Node) -> Scaling {
+    if from == Node::N12 {
+        let to16 = Scaling::IDENTITY.uncompose(step(Node::N16, Node::N12));
+        chain_to_7nm(Node::N16)
+            .into_iter()
+            .fold(to16, |acc, s| acc.compose(s))
+    } else {
+        chain_to_7nm(from)
+            .into_iter()
+            .fold(Scaling::IDENTITY, |acc, s| acc.compose(s))
+    }
+}
+
+/// Scaling between two arbitrary nodes (composes through the 7 nm chains).
+pub fn scaling_between(from: Node, to: Node) -> Scaling {
+    let a = scaling_to_7nm(from);
+    let b = scaling_to_7nm(to);
+    Scaling {
+        density: a.density / b.density,
+        performance: a.performance / b.performance,
+        power: a.power / b.power,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_approx;
+
+    #[test]
+    fn table_v_is_verbatim() {
+        // Guard against accidental edits to the paper's constants.
+        assert_eq!(TABLE_V[0].density_ratio, 2.0);
+        assert_eq!(TABLE_V[0].perf_improvement, 0.45);
+        assert_eq!(TABLE_V[0].power_reduction, 0.40);
+        assert_eq!(TABLE_V[4].density_ratio, 1.65);
+        assert_eq!(TABLE_V[4].power_reduction, 0.54);
+    }
+
+    #[test]
+    fn chain_40_to_7_density_is_13_2() {
+        // 2 × 2 × 2 × 1.65 = 13.2 — this is the paper's implied logic
+        // density gain for Sunrise, and exactly the Table VII bandwidth
+        // ratio (216 / 16.36 = 13.2).
+        let s = scaling_to_7nm(Node::N40);
+        assert_approx!(s.density, 13.2, 1e-12);
+        assert_approx!(s.performance, 1.45 * 1.35 * 1.15 * 1.22, 1e-12);
+        assert_approx!(s.power, 0.60 * 0.45 * 0.65 * 0.46, 1e-12);
+    }
+
+    #[test]
+    fn chain_16_to_7() {
+        let s = scaling_to_7nm(Node::N16);
+        assert_approx!(s.density, 3.3, 1e-12);
+        assert_approx!(s.performance, 1.15 * 1.22, 1e-12);
+        assert_approx!(s.power, 0.65 * 0.46, 1e-12);
+    }
+
+    #[test]
+    fn chain_12_to_7_composes_through_16() {
+        let s = scaling_to_7nm(Node::N12);
+        assert_approx!(s.density, 3.3 / 1.2, 1e-12);
+        assert_approx!(s.performance, (1.15 * 1.22) / 1.28, 1e-12);
+        assert_approx!(s.power, (0.65 * 0.46) / 0.65, 1e-12);
+    }
+
+    #[test]
+    fn identity_at_7() {
+        assert_eq!(scaling_to_7nm(Node::N7), Scaling::IDENTITY);
+    }
+
+    #[test]
+    fn between_is_consistent() {
+        let s = scaling_between(Node::N40, Node::N16);
+        assert_approx!(s.density, 4.0, 1e-12);
+        let roundtrip = scaling_between(Node::N16, Node::N40);
+        assert_approx!(s.density * roundtrip.density, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn node_parse_display() {
+        assert_eq!(Node::from_nm(40), Some(Node::N40));
+        assert_eq!(Node::from_nm(5), None);
+        assert_eq!(Node::N7.to_string(), "7nm");
+        assert!(Node::N7 > Node::N40); // ordering: newer > older
+    }
+}

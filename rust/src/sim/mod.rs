@@ -1,0 +1,29 @@
+//! Discrete-event simulation engine.
+//!
+//! The chip model (pools, fabric, UCE sequencing) runs on this engine:
+//! events are closures over a user `World`, ordered by (time, insertion
+//! sequence) so same-time events run deterministically in schedule order.
+//!
+//! - [`engine`] — the event queue and run loop.
+//! - [`stats`] — counters, gauges, and streaming histograms.
+//! - [`trace`] — bounded execution trace for debugging/inspection.
+
+pub mod engine;
+pub mod stats;
+pub mod trace;
+
+/// Simulation time in picoseconds (matches [`crate::memory::Ps`]).
+pub type Time = u64;
+
+/// Picoseconds per second.
+pub const PS_PER_S: f64 = 1e12;
+
+/// Convert simulation time to seconds.
+pub fn to_seconds(t: Time) -> f64 {
+    t as f64 / PS_PER_S
+}
+
+/// Convert seconds to simulation time.
+pub fn from_seconds(s: f64) -> Time {
+    (s * PS_PER_S) as Time
+}

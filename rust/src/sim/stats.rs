@@ -1,0 +1,222 @@
+//! Simulation statistics: counters, gauges, and streaming histograms.
+//!
+//! Used by the chip model and coordinator for throughput/latency/energy
+//! reporting; kept allocation-light because stats updates sit on the sim
+//! hot path (see EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+/// A streaming histogram with fixed log-spaced buckets, tracking count,
+/// sum, min, max — enough for median/p99 estimates without storing samples.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds (exclusive), log-spaced.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    /// Log-spaced buckets covering `[lo, hi]` with `n` buckets.
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = lo;
+        for _ in 0..n {
+            b *= ratio;
+            bounds.push(b);
+        }
+        Histogram {
+            counts: vec![0; n + 1],
+            bounds,
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 1 ns .. 10 s.
+    pub fn latency() -> Histogram {
+        Histogram::log_spaced(1e-9, 10.0, 60)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b <= v);
+        self.counts[idx] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i == 0 {
+                    self.min
+                } else if i >= self.bounds.len() {
+                    self.max
+                } else {
+                    self.bounds[i - 1]
+                };
+            }
+        }
+        self.max
+    }
+}
+
+/// A named collection of counters + histograms.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(Histogram::latency)
+            .record(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Render a compact report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            s.push_str(&format!("{k}: {v:.6}\n"));
+        }
+        for (k, h) in &self.histograms {
+            s.push_str(&format!(
+                "{k}: n={} mean={:.3e} p50={:.3e} p99={:.3e} max={:.3e}\n",
+                h.n,
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.max
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_min_max() {
+        let mut h = Histogram::log_spaced(1e-6, 1.0, 30);
+        for v in [1e-3, 2e-3, 3e-3] {
+            h.record(v);
+        }
+        assert_eq!(h.n, 3);
+        assert!((h.mean() - 2e-3).abs() < 1e-9);
+        assert_eq!(h.min, 1e-3);
+        assert_eq!(h.max, 3e-3);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        // p50 around 500 µs within a bucket's tolerance.
+        assert!(p50 > 2e-4 && p50 < 9e-4, "p50 {p50}");
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_to_edge_buckets() {
+        let mut h = Histogram::log_spaced(1.0, 10.0, 4);
+        h.record(0.01);
+        h.record(1e6);
+        assert_eq!(h.n, 2);
+        assert_eq!(h.quantile(0.0), 0.01);
+        assert_eq!(h.quantile(1.0), 1e6);
+    }
+
+    #[test]
+    fn stats_counters_and_gauges() {
+        let mut s = Stats::new();
+        s.inc("requests", 2);
+        s.inc("requests", 3);
+        s.set("power_w", 12.0);
+        s.add("energy_j", 1.5);
+        s.add("energy_j", 0.5);
+        assert_eq!(s.counter("requests"), 5);
+        assert_eq!(s.gauge("power_w"), 12.0);
+        assert_eq!(s.gauge("energy_j"), 2.0);
+        assert_eq!(s.counter("missing"), 0);
+    }
+
+    #[test]
+    fn report_contains_everything() {
+        let mut s = Stats::new();
+        s.inc("x", 1);
+        s.set("y", 2.0);
+        s.observe("lat", 1e-3);
+        let r = s.report();
+        assert!(r.contains("x: 1"));
+        assert!(r.contains("y: 2"));
+        assert!(r.contains("lat: n=1"));
+    }
+}

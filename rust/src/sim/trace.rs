@@ -1,0 +1,114 @@
+//! Bounded execution trace: a ring buffer of `(time, tag, detail)` entries
+//! for debugging chip-model runs without unbounded memory growth.
+
+use crate::sim::Time;
+use std::collections::VecDeque;
+
+/// One trace entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub time: Time,
+    pub tag: &'static str,
+    pub detail: String,
+}
+
+/// Ring-buffer trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    entries: VecDeque<Entry>,
+    capacity: usize,
+    /// Total entries ever emitted (including evicted ones).
+    pub emitted: u64,
+    /// When false, `emit` is a no-op (hot-path kill switch).
+    pub enabled: bool,
+}
+
+impl Trace {
+    pub fn new(capacity: usize) -> Trace {
+        Trace {
+            entries: VecDeque::with_capacity(capacity),
+            capacity,
+            emitted: 0,
+            enabled: true,
+        }
+    }
+
+    /// Disabled trace (zero overhead beyond the branch).
+    pub fn disabled() -> Trace {
+        let mut t = Trace::new(0);
+        t.enabled = false;
+        t
+    }
+
+    pub fn emit(&mut self, time: Time, tag: &'static str, detail: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        self.emitted += 1;
+        if self.entries.len() == self.capacity {
+            self.entries.pop_front();
+        }
+        self.entries.push_back(Entry {
+            time,
+            tag,
+            detail: detail.into(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries with a given tag.
+    pub fn with_tag(&self, tag: &str) -> Vec<&Entry> {
+        self.entries.iter().filter(|e| e.tag == tag).collect()
+    }
+
+    /// Render the trace (newest last).
+    pub fn render(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| format!("[{:>12} ps] {:<12} {}", e.time, e.tag, e.detail))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_last_n() {
+        let mut t = Trace::new(3);
+        for i in 0..10u64 {
+            t.emit(i, "tick", format!("{i}"));
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.emitted, 10);
+        assert_eq!(t.with_tag("tick")[0].detail, "7");
+    }
+
+    #[test]
+    fn disabled_is_noop() {
+        let mut t = Trace::disabled();
+        t.emit(0, "x", "y");
+        assert!(t.is_empty());
+        assert_eq!(t.emitted, 0);
+    }
+
+    #[test]
+    fn tag_filter_and_render() {
+        let mut t = Trace::new(10);
+        t.emit(1, "dma", "start");
+        t.emit(2, "vpu", "mac");
+        t.emit(3, "dma", "done");
+        assert_eq!(t.with_tag("dma").len(), 2);
+        let r = t.render();
+        assert!(r.contains("start") && r.contains("mac") && r.contains("done"));
+    }
+}

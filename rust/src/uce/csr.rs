@@ -1,0 +1,134 @@
+//! UCE configuration-register (CSR) address map and store.
+//!
+//! The firmware tier writes these; the configuration tier (sequencer +
+//! function selector) reads them. Addresses are 12-bit (loadable by the
+//! 13-bit core's `ldi`+`lui` pair).
+
+use std::collections::BTreeMap;
+
+// ---- control / status ----
+/// Write 1: launch the configured sequence.
+pub const START: u16 = 0x00F;
+/// Read: 1 while a sequence is running.
+pub const STATUS: u16 = 0x010;
+/// Read: completed-sequence counter (low 16 bits).
+pub const SEQ_COUNT: u16 = 0x011;
+
+// ---- function selection ----
+/// Operation kind (see [`crate::uce::selector::FunctionId`]).
+pub const F_FUNC: u16 = 0x020;
+/// GEMM-shape registers: M (output channels), K (reduction), N (positions).
+/// 16-bit each; *_HI extends to 32-bit where needed.
+pub const F_M: u16 = 0x021;
+pub const F_K: u16 = 0x022;
+pub const F_N: u16 = 0x023;
+pub const F_N_HI: u16 = 0x024;
+/// Bytes per element (1 = int8, 2 = fp16).
+pub const F_ELEM_BYTES: u16 = 0x025;
+
+// ---- datapath mux configuration ----
+/// Broadcast source select (which DSU feeds the fabric).
+pub const MUX_BCAST_SRC: u16 = 0x030;
+/// Collect destination select.
+pub const MUX_COLLECT_DST: u16 = 0x031;
+/// Vector-unit post-op: 0 none, 1 relu, 2 add-residual, 3 pool.
+pub const MUX_POST_OP: u16 = 0x032;
+
+// ---- DMA ----
+pub const DMA_SRC_LO: u16 = 0x040;
+pub const DMA_SRC_HI: u16 = 0x041;
+pub const DMA_DST_LO: u16 = 0x042;
+pub const DMA_DST_HI: u16 = 0x043;
+pub const DMA_LEN_LO: u16 = 0x044;
+pub const DMA_LEN_HI: u16 = 0x045;
+pub const DMA_CHANNEL: u16 = 0x046;
+
+/// The configuration store: a sparse 12-bit register file.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigStore {
+    regs: BTreeMap<u16, u16>,
+}
+
+impl ConfigStore {
+    pub fn read(&self, addr: u16) -> u16 {
+        self.regs.get(&addr).copied().unwrap_or(0)
+    }
+
+    pub fn write(&mut self, addr: u16, value: u16) {
+        self.regs.insert(addr, value);
+    }
+
+    /// Read a 32-bit value from a (LO, HI) register pair.
+    pub fn read32(&self, lo: u16, hi: u16) -> u32 {
+        (self.read(hi) as u32) << 16 | self.read(lo) as u32
+    }
+
+    /// Write a 32-bit value to a (LO, HI) register pair.
+    pub fn write32(&mut self, lo: u16, hi: u16, value: u32) {
+        self.write(lo, (value & 0xFFFF) as u16);
+        self.write(hi, (value >> 16) as u16);
+    }
+
+    /// The configured GEMM shape (M, K, N) with N extended to 32 bits.
+    pub fn gemm_shape(&self) -> (u32, u32, u32) {
+        (
+            self.read(F_M) as u32,
+            self.read(F_K) as u32,
+            self.read32(F_N, F_N_HI),
+        )
+    }
+
+    pub fn n_regs(&self) -> usize {
+        self.regs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reads_zero() {
+        let c = ConfigStore::default();
+        assert_eq!(c.read(F_M), 0);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut c = ConfigStore::default();
+        c.write(F_M, 512);
+        assert_eq!(c.read(F_M), 512);
+    }
+
+    #[test]
+    fn pair_registers_32bit() {
+        let mut c = ConfigStore::default();
+        c.write32(DMA_LEN_LO, DMA_LEN_HI, 0x0012_3456);
+        assert_eq!(c.read(DMA_LEN_LO), 0x3456);
+        assert_eq!(c.read(DMA_LEN_HI), 0x0012);
+        assert_eq!(c.read32(DMA_LEN_LO, DMA_LEN_HI), 0x0012_3456);
+    }
+
+    #[test]
+    fn gemm_shape_reads_all_three() {
+        let mut c = ConfigStore::default();
+        c.write(F_M, 64);
+        c.write(F_K, 147);
+        c.write32(F_N, F_N_HI, 100_000);
+        assert_eq!(c.gemm_shape(), (64, 147, 100_000));
+    }
+
+    #[test]
+    fn csr_addresses_are_12_bit_and_unique() {
+        let all = [
+            START, STATUS, SEQ_COUNT, F_FUNC, F_M, F_K, F_N, F_N_HI, F_ELEM_BYTES,
+            MUX_BCAST_SRC, MUX_COLLECT_DST, MUX_POST_OP, DMA_SRC_LO, DMA_SRC_HI,
+            DMA_DST_LO, DMA_DST_HI, DMA_LEN_LO, DMA_LEN_HI, DMA_CHANNEL,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for a in all {
+            assert!(a < (1 << 12), "CSR {a:#x} beyond 12 bits");
+            assert!(seen.insert(a), "duplicate CSR {a:#x}");
+        }
+    }
+}

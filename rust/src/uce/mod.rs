@@ -1,0 +1,137 @@
+//! The Unified Control Engine (paper §V).
+//!
+//! "All data flow and module operations are centrally controlled by a
+//! single unit called the Unified Control Engine (UCE). It consists of
+//! modules such as a Direct Memory Access controller (DMA), data path
+//! multiplexer controllers, and function selector. All modules are fully
+//! configurable to implement different neural networks."
+//!
+//! Implementation-layer mapping (paper Fig. 8):
+//! - *logic blocks* — [`crate::units`] + [`crate::memory`];
+//! - *unified data flow control configuration* — [`csr`] + [`selector`]
+//!   (register settings that choose datapath routing and sequences);
+//! - *firmware* — [`crate::isa::program`] (writes these CSRs and kicks
+//!   [`sequencer`] operations).
+//!
+//! - [`csr`] — the configuration-register address map + store.
+//! - [`dma`] — DMA descriptor queue and channel engine.
+//! - [`selector`] — function selector: operation kind → datapath config.
+//! - [`sequencer`] — predetermined operation sequences with phase timing.
+
+pub mod csr;
+pub mod dma;
+pub mod selector;
+pub mod sequencer;
+
+use crate::isa::cpu::CsrBus;
+use crate::memory::Ps;
+
+/// The UCE as seen by the 13-bit control processor: a CSR bus. Writing 1
+/// to [`csr::START`] launches the configured sequence; `WAIT` polls until
+/// the sequence's simulated end time passes.
+pub struct Uce {
+    pub config: csr::ConfigStore,
+    pub sequencer: sequencer::Sequencer,
+    /// Simulated time advanced by each firmware poll (models the
+    /// processor's poll loop granularity).
+    pub poll_interval: Ps,
+    now: Ps,
+    busy_until: Option<Ps>,
+    /// Completed sequence count (for batch loops).
+    pub sequences_run: u64,
+}
+
+impl Uce {
+    pub fn new(sequencer: sequencer::Sequencer) -> Uce {
+        Uce {
+            config: csr::ConfigStore::default(),
+            sequencer,
+            poll_interval: crate::memory::ns(100),
+            now: 0,
+            busy_until: None,
+            sequences_run: 0,
+        }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+}
+
+impl CsrBus for Uce {
+    fn csr_read(&mut self, addr: u16) -> u16 {
+        match addr {
+            csr::STATUS => u16::from(self.busy_until.is_some()),
+            csr::SEQ_COUNT => (self.sequences_run & 0xFFFF) as u16,
+            a => self.config.read(a),
+        }
+    }
+
+    fn csr_write(&mut self, addr: u16, value: u16) {
+        if addr == csr::START && value != 0 {
+            let dur = self.sequencer.run(&self.config);
+            self.busy_until = Some(self.now + dur);
+        } else {
+            self.config.write(addr, value);
+        }
+    }
+
+    fn poll_done(&mut self) -> bool {
+        self.now += self.poll_interval;
+        match self.busy_until {
+            Some(t) if self.now >= t => {
+                self.busy_until = None;
+                self.sequences_run += 1;
+                true
+            }
+            Some(_) => false,
+            // Nothing running: WAIT falls through (firmware bug tolerated).
+            None => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::cpu::{Cpu, StepResult};
+    use crate::isa::program::{build, fw_batch_loop, fw_configure_and_run};
+
+    fn uce_with_fixed_sequence(ps: Ps) -> Uce {
+        Uce::new(sequencer::Sequencer::fixed(ps))
+    }
+
+    #[test]
+    fn firmware_configures_and_runs_sequence() {
+        let fw = fw_configure_and_run(&[(csr::F_M, 64), (csr::F_K, 147)], csr::START);
+        let prog = build(&fw).unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut uce = uce_with_fixed_sequence(crate::memory::ns(1000));
+        assert_eq!(cpu.run(&mut uce, 100_000), StepResult::Halted);
+        assert_eq!(uce.config.read(csr::F_M), 64);
+        assert_eq!(uce.config.read(csr::F_K), 147);
+        assert_eq!(uce.sequences_run, 1);
+        // 1000 ns sequence at 100 ns polls → ≥ 10 polls elapsed.
+        assert!(uce.now() >= crate::memory::ns(1000));
+    }
+
+    #[test]
+    fn batch_loop_runs_n_sequences() {
+        let fw = fw_batch_loop(7, csr::START);
+        let prog = build(&fw).unwrap();
+        let mut cpu = Cpu::new(&prog);
+        let mut uce = uce_with_fixed_sequence(crate::memory::ns(300));
+        assert_eq!(cpu.run(&mut uce, 1_000_000), StepResult::Halted);
+        assert_eq!(uce.sequences_run, 7);
+    }
+
+    #[test]
+    fn status_csr_reflects_busy() {
+        let mut uce = uce_with_fixed_sequence(crate::memory::ns(500));
+        assert_eq!(uce.csr_read(csr::STATUS), 0);
+        uce.csr_write(csr::START, 1);
+        assert_eq!(uce.csr_read(csr::STATUS), 1);
+        while !uce.poll_done() {}
+        assert_eq!(uce.csr_read(csr::STATUS), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Function selector: maps an operation kind to the datapath configuration
+//! (mux settings + sequence template) that implements it. "All modules are
+//! fully configurable to implement different neural networks" (paper §V) —
+//! this is the table that makes that configurability concrete.
+
+use crate::uce::csr::{self, ConfigStore};
+
+/// Operation kinds the datapath implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionId {
+    /// Dense / im2col-conv GEMM on the VPU pool.
+    Gemm = 1,
+    /// Elementwise add (residual connections).
+    EltwiseAdd = 2,
+    /// Max/avg pooling on the vector unit.
+    Pool = 3,
+    /// Activation only (fused relu pass).
+    Activation = 4,
+    /// Bulk data movement (no compute).
+    Copy = 5,
+}
+
+impl FunctionId {
+    pub fn from_u16(v: u16) -> Option<FunctionId> {
+        Some(match v {
+            1 => FunctionId::Gemm,
+            2 => FunctionId::EltwiseAdd,
+            3 => FunctionId::Pool,
+            4 => FunctionId::Activation,
+            5 => FunctionId::Copy,
+            _ => return None,
+        })
+    }
+}
+
+/// Post-op applied by the VPU vector unit on the way out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PostOp {
+    None = 0,
+    Relu = 1,
+    AddResidual = 2,
+    PoolReduce = 3,
+}
+
+impl PostOp {
+    pub fn from_u16(v: u16) -> PostOp {
+        match v {
+            1 => PostOp::Relu,
+            2 => PostOp::AddResidual,
+            3 => PostOp::PoolReduce,
+            _ => PostOp::None,
+        }
+    }
+}
+
+/// A fully-resolved datapath selection, decoded from the config store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Selection {
+    pub function: FunctionId,
+    pub post_op: PostOp,
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+    pub elem_bytes: u32,
+}
+
+/// Decode the current configuration into a [`Selection`].
+pub fn decode(config: &ConfigStore) -> Result<Selection, String> {
+    let f = config.read(csr::F_FUNC);
+    let function =
+        FunctionId::from_u16(f).ok_or_else(|| format!("invalid function id {f}"))?;
+    let (m, k, n) = config.gemm_shape();
+    let elem = config.read(csr::F_ELEM_BYTES).max(1) as u32;
+    if function == FunctionId::Gemm && (m == 0 || k == 0 || n == 0) {
+        return Err(format!("GEMM with zero dim: m={m} k={k} n={n}"));
+    }
+    Ok(Selection {
+        function,
+        post_op: PostOp::from_u16(config.read(csr::MUX_POST_OP)),
+        m,
+        k,
+        n,
+        elem_bytes: elem,
+    })
+}
+
+/// Encode a selection into CSR writes (what firmware generators emit).
+pub fn encode(sel: &Selection) -> Vec<(u16, u16)> {
+    vec![
+        (csr::F_FUNC, sel.function as u16),
+        (csr::F_M, (sel.m & 0xFFFF) as u16),
+        (csr::F_K, (sel.k & 0xFFFF) as u16),
+        (csr::F_N, (sel.n & 0xFFFF) as u16),
+        (csr::F_N_HI, (sel.n >> 16) as u16),
+        (csr::F_ELEM_BYTES, sel.elem_bytes as u16),
+        (csr::MUX_POST_OP, sel.post_op as u16),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let sel = Selection {
+            function: FunctionId::Gemm,
+            post_op: PostOp::Relu,
+            m: 512,
+            k: 4608,
+            n: 100_000,
+            elem_bytes: 1,
+        };
+        let mut cfg = ConfigStore::default();
+        for (a, v) in encode(&sel) {
+            cfg.write(a, v);
+        }
+        assert_eq!(decode(&cfg).unwrap(), sel);
+    }
+
+    #[test]
+    fn invalid_function_rejected() {
+        let cfg = ConfigStore::default(); // F_FUNC = 0
+        assert!(decode(&cfg).is_err());
+    }
+
+    #[test]
+    fn zero_dim_gemm_rejected() {
+        let mut cfg = ConfigStore::default();
+        cfg.write(crate::uce::csr::F_FUNC, FunctionId::Gemm as u16);
+        assert!(decode(&cfg).is_err());
+    }
+
+    #[test]
+    fn n_extends_past_16_bits() {
+        let sel = Selection {
+            function: FunctionId::Copy,
+            post_op: PostOp::None,
+            m: 1,
+            k: 1,
+            n: 1 << 20,
+            elem_bytes: 2,
+        };
+        let mut cfg = ConfigStore::default();
+        for (a, v) in encode(&sel) {
+            cfg.write(a, v);
+        }
+        assert_eq!(decode(&cfg).unwrap().n, 1 << 20);
+    }
+
+    #[test]
+    fn function_ids_roundtrip() {
+        for f in [FunctionId::Gemm, FunctionId::EltwiseAdd, FunctionId::Pool, FunctionId::Activation, FunctionId::Copy] {
+            assert_eq!(FunctionId::from_u16(f as u16), Some(f));
+        }
+        assert_eq!(FunctionId::from_u16(77), None);
+    }
+}

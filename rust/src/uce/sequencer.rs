@@ -1,0 +1,154 @@
+//! Operation sequencer: "the unified data flow control configuration ...
+//! initiates predetermined sequences of operations" (paper §V / Fig. 8).
+//!
+//! A sequence is a list of phases (weight load, broadcast, compute,
+//! collect, ...). In steady state the chip double-buffers, so a pipelined
+//! sequence costs `max(phase durations)`; a non-pipelined (first-batch /
+//! reconfiguration) sequence costs their sum. The phase durations come
+//! from a pluggable [`TimingModel`] — the chip model supplies the real
+//! one; tests use fixed models.
+
+use crate::memory::Ps;
+use crate::uce::csr::ConfigStore;
+
+/// One timed phase of a sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: &'static str,
+    pub duration: Ps,
+}
+
+/// Provides phase durations for the currently-configured operation.
+pub trait TimingModel {
+    fn phases(&self, config: &ConfigStore) -> Vec<Phase>;
+}
+
+/// Fixed-duration model (tests, control-plane demos).
+pub struct FixedModel {
+    pub total: Ps,
+}
+
+impl TimingModel for FixedModel {
+    fn phases(&self, _config: &ConfigStore) -> Vec<Phase> {
+        vec![Phase { name: "fixed", duration: self.total }]
+    }
+}
+
+/// Closure-backed model (lets the chip model supply timing without a
+/// circular type dependency).
+pub struct FnModel<F: Fn(&ConfigStore) -> Vec<Phase>>(pub F);
+
+impl<F: Fn(&ConfigStore) -> Vec<Phase>> TimingModel for FnModel<F> {
+    fn phases(&self, config: &ConfigStore) -> Vec<Phase> {
+        self.0(config)
+    }
+}
+
+/// Record of one executed sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SequenceRecord {
+    pub phases: Vec<Phase>,
+    pub total: Ps,
+}
+
+/// The sequencer.
+pub struct Sequencer {
+    model: Box<dyn TimingModel>,
+    /// Steady-state double-buffering: overlap phases (take max) instead of
+    /// serializing (take sum).
+    pub pipelined: bool,
+    /// Fixed per-sequence reconfiguration overhead.
+    pub reconfig_overhead: Ps,
+    pub history: Vec<SequenceRecord>,
+}
+
+impl Sequencer {
+    pub fn new(model: Box<dyn TimingModel>, pipelined: bool, reconfig_overhead: Ps) -> Sequencer {
+        Sequencer {
+            model,
+            pipelined,
+            reconfig_overhead,
+            history: Vec::new(),
+        }
+    }
+
+    /// Fixed-duration sequencer for tests.
+    pub fn fixed(total: Ps) -> Sequencer {
+        Sequencer::new(Box::new(FixedModel { total }), true, 0)
+    }
+
+    /// Execute the configured sequence; returns its duration.
+    pub fn run(&mut self, config: &ConfigStore) -> Ps {
+        let phases = self.model.phases(config);
+        let total = if self.pipelined {
+            phases.iter().map(|p| p.duration).max().unwrap_or(0)
+        } else {
+            phases.iter().map(|p| p.duration).sum()
+        } + self.reconfig_overhead;
+        self.history.push(SequenceRecord { phases, total });
+        total
+    }
+
+    /// Sum of all executed sequence durations.
+    pub fn total_time(&self) -> Ps {
+        self.history.iter().map(|r| r.total).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::ns;
+
+    fn three_phase_model() -> Box<dyn TimingModel> {
+        Box::new(FnModel(|_: &ConfigStore| {
+            vec![
+                Phase { name: "broadcast", duration: ns(100) },
+                Phase { name: "compute", duration: ns(700) },
+                Phase { name: "collect", duration: ns(50) },
+            ]
+        }))
+    }
+
+    #[test]
+    fn pipelined_takes_max() {
+        let mut s = Sequencer::new(three_phase_model(), true, 0);
+        assert_eq!(s.run(&ConfigStore::default()), ns(700));
+    }
+
+    #[test]
+    fn sequential_takes_sum() {
+        let mut s = Sequencer::new(three_phase_model(), false, 0);
+        assert_eq!(s.run(&ConfigStore::default()), ns(850));
+    }
+
+    #[test]
+    fn reconfig_overhead_added() {
+        let mut s = Sequencer::new(three_phase_model(), true, ns(10));
+        assert_eq!(s.run(&ConfigStore::default()), ns(710));
+    }
+
+    #[test]
+    fn history_accumulates() {
+        let mut s = Sequencer::fixed(ns(5));
+        let cfg = ConfigStore::default();
+        s.run(&cfg);
+        s.run(&cfg);
+        assert_eq!(s.history.len(), 2);
+        assert_eq!(s.total_time(), ns(10));
+    }
+
+    #[test]
+    fn model_sees_configuration() {
+        let model = FnModel(|c: &ConfigStore| {
+            let (m, k, n) = c.gemm_shape();
+            vec![Phase { name: "compute", duration: (m * k) as Ps * n as Ps }]
+        });
+        let mut s = Sequencer::new(Box::new(model), true, 0);
+        let mut cfg = ConfigStore::default();
+        cfg.write(crate::uce::csr::F_M, 2);
+        cfg.write(crate::uce::csr::F_K, 3);
+        cfg.write(crate::uce::csr::F_N, 5);
+        assert_eq!(s.run(&cfg), 30);
+    }
+}

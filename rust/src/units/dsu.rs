@@ -1,0 +1,85 @@
+//! Data Serving Unit: feature-map DRAM pool + the serve/absorb endpoints
+//! of the DSU↔VPU fabric (paper §V: "feature data are stored in the DRAM
+//! of the DSU pool and are sent to the VPU pool for computation; the
+//! results are sent back to the DSU pool").
+
+use crate::memory::dram::Op;
+use crate::memory::unimem::UniMemPool;
+use crate::memory::Ps;
+
+/// One DSU with its bonded DRAM arrays.
+#[derive(Debug)]
+pub struct Dsu {
+    pub id: u32,
+    pub feature_pool: UniMemPool,
+}
+
+/// Outcome of a serve (read features) or absorb (write results) step.
+#[derive(Debug, Clone, Copy)]
+pub struct DsuTransfer {
+    pub done_at: Ps,
+    pub energy_j: f64,
+}
+
+impl Dsu {
+    pub fn new(id: u32, n_dram_arrays: usize) -> Dsu {
+        Dsu {
+            id,
+            feature_pool: UniMemPool::new(n_dram_arrays, 1024),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.feature_pool.capacity_bytes()
+    }
+
+    /// Read `bytes` of feature data starting at `addr` (to feed broadcast).
+    pub fn serve(&mut self, now: Ps, addr: u64, bytes: u64) -> DsuTransfer {
+        let t = self.feature_pool.transfer(now, addr, bytes, Op::Read);
+        DsuTransfer {
+            done_at: t.done_at,
+            energy_j: t.energy_pj * 1e-12,
+        }
+    }
+
+    /// Write `bytes` of results starting at `addr` (absorbing collect).
+    pub fn absorb(&mut self, now: Ps, addr: u64, bytes: u64) -> DsuTransfer {
+        let t = self.feature_pool.transfer(now, addr, bytes, Op::Write);
+        DsuTransfer {
+            done_at: t.done_at,
+            energy_j: t.energy_pj * 1e-12,
+        }
+    }
+
+    /// Peak pool bandwidth, bytes/s.
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.feature_pool.peak_bandwidth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_and_absorb_advance_time() {
+        let mut d = Dsu::new(0, 8);
+        let s = d.serve(0, 0, 1 << 20);
+        let a = d.absorb(s.done_at, 1 << 21, 1 << 19);
+        assert!(a.done_at > s.done_at);
+        assert!(s.energy_j > 0.0 && a.energy_j > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_scales_with_arrays() {
+        let d8 = Dsu::new(0, 8);
+        let d32 = Dsu::new(1, 32);
+        assert!((d32.peak_bandwidth() / d8.peak_bandwidth() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_reported() {
+        let d = Dsu::new(0, 16);
+        assert_eq!(d.capacity(), 16 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,103 @@
+//! MAC array primitive: the 32,768 multiply-accumulate units of §VI.
+//!
+//! Rate model: one MAC per unit per cycle (2 ops). Energy model: pJ/MAC
+//! calibrated so that the whole chip lands at the paper's 12 W typical
+//! under ResNet-50 load (see `chip::power`).
+
+use crate::sim::Time;
+
+/// A bank of MAC units clocked together.
+#[derive(Debug, Clone, Copy)]
+pub struct MacArray {
+    pub n_macs: u32,
+    pub freq_hz: f64,
+    /// Energy per MAC operation (int8), pJ.
+    pub pj_per_mac: f64,
+}
+
+impl MacArray {
+    /// Sunrise totals: 32,768 MACs; frequency set so the chip peaks at
+    /// 25 TOPS (§VI): 25e12 / 2 / 32768 ≈ 381.47 MHz.
+    pub fn sunrise_total() -> MacArray {
+        MacArray {
+            n_macs: 32_768,
+            freq_hz: crate::util::units::freq_for_tops(32_768, 25.0),
+            pj_per_mac: 0.5,
+        }
+    }
+
+    /// Peak throughput in ops/s (1 MAC = 2 ops).
+    pub fn peak_ops_per_s(&self) -> f64 {
+        self.n_macs as f64 * 2.0 * self.freq_hz
+    }
+
+    /// Peak TOPS.
+    pub fn peak_tops(&self) -> f64 {
+        self.peak_ops_per_s() / 1e12
+    }
+
+    /// Time to retire `cycles` cycles, in ps.
+    pub fn cycles_to_ps(&self, cycles: u64) -> Time {
+        (cycles as f64 * 1e12 / self.freq_hz).round() as Time
+    }
+
+    /// Energy to perform `n_macs_done` MAC operations, J.
+    pub fn energy_j(&self, n_macs_done: f64) -> f64 {
+        n_macs_done * self.pj_per_mac * 1e-12
+    }
+
+    /// Split this array into `n` equal banks (for per-VPU views).
+    pub fn split(&self, n: u32) -> MacArray {
+        assert!(n > 0 && self.n_macs % n == 0, "can't split {} MACs into {n}", self.n_macs);
+        MacArray {
+            n_macs: self.n_macs / n,
+            freq_hz: self.freq_hz,
+            pj_per_mac: self.pj_per_mac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_approx;
+
+    #[test]
+    fn sunrise_peaks_at_25_tops() {
+        let m = MacArray::sunrise_total();
+        assert_approx!(m.peak_tops(), 25.0, 1e-9);
+        assert_eq!(m.n_macs, 32_768);
+    }
+
+    #[test]
+    fn cycles_to_time() {
+        let m = MacArray::sunrise_total();
+        let ps = m.cycles_to_ps(1);
+        // ~381 MHz → ~2621 ps/cycle.
+        assert!((ps as f64 - 2621.0).abs() < 2.0, "{ps}");
+    }
+
+    #[test]
+    fn split_preserves_rate() {
+        let m = MacArray::sunrise_total();
+        let v = m.split(64);
+        assert_eq!(v.n_macs, 512);
+        assert_approx!(v.peak_tops() * 64.0, 25.0, 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_requires_divisibility() {
+        MacArray::sunrise_total().split(7);
+    }
+
+    #[test]
+    fn energy_scale_sane() {
+        // 3.86e9 MACs (one ResNet-50 image) at 0.5 pJ ≈ 1.9 mJ compute
+        // energy — at 1500 img/s that is ~3 W of MAC power, leaving room
+        // for memory + fabric + static inside the 12 W envelope.
+        let m = MacArray::sunrise_total();
+        let e = m.energy_j(3.86e9);
+        assert!(e > 1e-3 && e < 3e-3, "{e}");
+    }
+}

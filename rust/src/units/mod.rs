@@ -1,0 +1,16 @@
+//! Logic units of the Sunrise chip (paper §V).
+//!
+//! "There are two types of logic units: data serving unit (DSU) and vector
+//! processing unit (VPU). VPUs perform computation on data. DSUs serve
+//! data to VPU. Each DSU and VPU has their own multiple DRAM arrays
+//! directly bonded below the units from the DRAM wafer."
+//!
+//! - [`mac`] — the MAC array primitive (rate + energy).
+//! - [`vpu`] — Vector Processing Unit: MAC lanes + local weight DRAM pool.
+//! - [`dsu`] — Data Serving Unit: feature DRAM pool + broadcast/collect.
+//! - [`pool`] — homogeneous unit pools with work assignment.
+
+pub mod dsu;
+pub mod mac;
+pub mod pool;
+pub mod vpu;

@@ -1,0 +1,195 @@
+//! Unit pools: the paper's "all VPUs and DSUs form their respective pool"
+//! (§V). A pool assigns work slices across homogeneous units and
+//! aggregates their outcomes.
+
+use crate::units::mac::MacArray;
+use crate::units::vpu::{SliceOutcome, SliceWork, Vpu};
+
+/// A pool of VPUs executing a GEMM-shaped layer in parallel.
+#[derive(Debug)]
+pub struct VpuPool {
+    pub vpus: Vec<Vpu>,
+}
+
+/// Pool-level outcome for one layer: the pool finishes when its slowest
+/// VPU finishes (VPUs run independently — paper §IV: "each VPU computes
+/// and generates output channels independently from other cores").
+#[derive(Debug, Clone, Copy)]
+pub struct PoolOutcome {
+    /// Max cycles over VPUs (the critical path).
+    pub cycles: u64,
+    /// Max weight-stream time over VPUs, ps.
+    pub weight_stream_ps: u64,
+    pub total_macs: f64,
+    pub compute_energy_j: f64,
+    pub weight_energy_j: f64,
+    /// MAC utilization across the whole pool for this layer.
+    pub utilization: f64,
+    /// Number of VPUs that received work.
+    pub active_vpus: u32,
+}
+
+impl VpuPool {
+    /// Build the Sunrise pool: `n_vpus` equal slices of the chip's MACs,
+    /// each with `arrays_per_vpu` bonded DRAM arrays.
+    pub fn new(n_vpus: u32, total_macs: MacArray, arrays_per_vpu: usize) -> VpuPool {
+        let per = total_macs.split(n_vpus);
+        VpuPool {
+            vpus: (0..n_vpus).map(|i| Vpu::new(i, per, arrays_per_vpu)).collect(),
+        }
+    }
+
+    pub fn n_vpus(&self) -> u32 {
+        self.vpus.len() as u32
+    }
+
+    /// Total MAC count across the pool.
+    pub fn total_macs(&self) -> u32 {
+        self.vpus.iter().map(|v| v.macs.n_macs).sum()
+    }
+
+    /// Aggregate weight capacity, bytes.
+    pub fn weight_capacity(&self) -> u64 {
+        self.vpus.iter().map(|v| v.weight_capacity()).sum()
+    }
+
+    /// Run a `(M, K) × (K, N)` layer: M output channels dealt round-robin
+    /// across VPUs (`ceil(M / n_vpus)` rows to the first `M % n` or all).
+    pub fn run_layer(&mut self, m: u32, k: u32, n: u32, weight_bytes: u32) -> PoolOutcome {
+        assert!(m > 0 && k > 0 && n > 0);
+        let n_vpus = self.n_vpus();
+        let base = m / n_vpus;
+        let extra = m % n_vpus;
+
+        let mut cycles = 0u64;
+        let mut weight_ps = 0u64;
+        let mut total_macs = 0.0;
+        let mut e_compute = 0.0;
+        let mut e_weights = 0.0;
+        let mut active = 0u32;
+
+        for (i, vpu) in self.vpus.iter_mut().enumerate() {
+            let rows = base + if (i as u32) < extra { 1 } else { 0 };
+            if rows == 0 {
+                continue;
+            }
+            active += 1;
+            let o: SliceOutcome = vpu.run_slice(SliceWork { m_rows: rows, k, n, weight_bytes });
+            cycles = cycles.max(o.cycles);
+            weight_ps = weight_ps.max(o.weight_stream_ps);
+            total_macs += o.macs_done;
+            e_compute += o.compute_energy_j;
+            e_weights += o.weight_energy_j;
+        }
+
+        let pool_capacity = self.total_macs() as f64 * cycles as f64;
+        PoolOutcome {
+            cycles,
+            weight_stream_ps: weight_ps,
+            total_macs,
+            compute_energy_j: e_compute,
+            weight_energy_j: e_weights,
+            utilization: total_macs / pool_capacity,
+            active_vpus: active,
+        }
+    }
+
+    /// Analytic version of [`Self::run_layer`] (no DRAM state mutation):
+    /// returns (cycles, utilization, active VPUs).
+    pub fn estimate_layer(&self, m: u32, k: u32, n: u32) -> (u64, f64, u32) {
+        let n_vpus = self.n_vpus();
+        let base = m / n_vpus;
+        let extra = m % n_vpus;
+        let mut cycles = 0u64;
+        let mut active = 0u32;
+        for (i, vpu) in self.vpus.iter().enumerate() {
+            let rows = base + if (i as u32) < extra { 1 } else { 0 };
+            if rows == 0 {
+                continue;
+            }
+            active += 1;
+            let (c, _) = vpu.estimate_slice(SliceWork { m_rows: rows, k, n, weight_bytes: 1 });
+            cycles = cycles.max(c);
+        }
+        let util = (m as f64 * k as f64 * n as f64) / (self.total_macs() as f64 * cycles as f64);
+        (cycles, util, active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> VpuPool {
+        VpuPool::new(64, MacArray::sunrise_total(), 8)
+    }
+
+    #[test]
+    fn pool_preserves_mac_count() {
+        assert_eq!(pool().total_macs(), 32_768);
+    }
+
+    #[test]
+    fn wide_layer_uses_all_vpus() {
+        let mut p = pool();
+        let o = p.run_layer(256, 1152, 2048, 1);
+        assert_eq!(o.active_vpus, 64);
+        assert!(o.utilization > 0.9, "util {}", o.utilization);
+    }
+
+    #[test]
+    fn narrow_layer_idles_vpus() {
+        let mut p = pool();
+        // Only 8 output channels: 56 VPUs idle.
+        let o = p.run_layer(8, 512, 4096, 1);
+        assert_eq!(o.active_vpus, 8);
+        assert!(o.utilization < 0.2, "util {}", o.utilization);
+    }
+
+    #[test]
+    fn uneven_split_takes_ceiling_cycles() {
+        let p = pool();
+        // 65 rows over 64 VPUs: one VPU does 2 rows → ~2× the cycles.
+        let (c64, _, _) = p.estimate_layer(64, 100, 5000);
+        let (c65, _, _) = p.estimate_layer(65, 100, 5000);
+        assert_eq!(c65, 2 * c64);
+    }
+
+    #[test]
+    fn estimate_agrees_with_run() {
+        let mut p = pool();
+        let (c, u, a) = p.estimate_layer(100, 300, 1000);
+        let o = p.run_layer(100, 300, 1000, 1);
+        assert_eq!(c, o.cycles);
+        assert_eq!(a, o.active_vpus);
+        assert!((u - o.utilization).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_capacity_holds_resnet50() {
+        // 64 VPUs × 8 arrays × 1 MiB = 512 MiB ≥ 25.5 M int8 weights —
+        // the whole model fits in VPU-local DRAM (the paper's §IV point).
+        let p = pool();
+        assert!(p.weight_capacity() >= 512 * 1024 * 1024);
+    }
+
+    #[test]
+    fn property_all_rows_assigned() {
+        use crate::util::proptest::check;
+        check(0xABCD, 40, |g| {
+            let mut p = VpuPool::new(16, MacArray { n_macs: 1024, freq_hz: 1e9, pj_per_mac: 0.2 }, 2);
+            let m = g.usize("m", 1, 200) as u32;
+            let k = g.usize("k", 1, 100) as u32;
+            let n = g.usize("n", 1, 500) as u32;
+            let o = p.run_layer(m, k, n, 1);
+            let expect = m as f64 * k as f64 * n as f64;
+            crate::prop_assert!(
+                (o.total_macs - expect).abs() < 1.0,
+                "macs {} != {expect}",
+                o.total_macs
+            );
+            crate::prop_assert!(o.active_vpus as u32 <= 16, "active {}", o.active_vpus);
+            Ok(())
+        });
+    }
+}

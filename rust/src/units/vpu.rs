@@ -1,0 +1,175 @@
+//! Vector Processing Unit: MAC lanes + a private (bonded) weight DRAM pool.
+//!
+//! Paper §IV–V dataflow: weights are *stationary* in the VPU's local DRAM;
+//! feature vectors are broadcast to every VPU; each VPU computes the
+//! output channels it owns and ships results back. The VPU's compute
+//! organization here is `lanes` MAC lanes, each working one output
+//! position, with the reduction (K) dimension iterated over cycles — the
+//! mapping under which early convolutions (huge spatial extent) achieve
+//! near-perfect lane utilization and late small-spatial layers pay the
+//! paper's utilization tax (hence ~1500 img/s instead of the 3200 img/s a
+//! 100%-utilized 25 TOPS chip would give on ResNet-50).
+
+use crate::memory::dram::Op;
+use crate::memory::unimem::UniMemPool;
+use crate::units::mac::MacArray;
+
+/// One VPU's compute slice of a GEMM-shaped layer: it owns `m_rows` output
+/// channels of a `(M, K) × (K, N)` problem.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceWork {
+    pub m_rows: u32,
+    pub k: u32,
+    pub n: u32,
+    /// Bytes per weight element.
+    pub weight_bytes: u32,
+}
+
+/// Timing/energy outcome of one VPU slice.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceOutcome {
+    pub cycles: u64,
+    pub macs_done: f64,
+    pub lane_utilization: f64,
+    pub compute_energy_j: f64,
+    /// Weight-stream time (ps) from the local DRAM pool.
+    pub weight_stream_ps: u64,
+    pub weight_energy_j: f64,
+}
+
+/// Vector Processing Unit.
+#[derive(Debug)]
+pub struct Vpu {
+    pub id: u32,
+    pub macs: MacArray,
+    /// Lanes = MACs (each MAC lane handles one output position per cycle).
+    pub lanes: u32,
+    pub weight_pool: UniMemPool,
+}
+
+impl Vpu {
+    pub fn new(id: u32, macs: MacArray, n_dram_arrays: usize) -> Vpu {
+        Vpu {
+            id,
+            lanes: macs.n_macs,
+            macs,
+            weight_pool: UniMemPool::new(n_dram_arrays, 1024),
+        }
+    }
+
+    /// Local weight-pool capacity, bytes.
+    pub fn weight_capacity(&self) -> u64 {
+        self.weight_pool.capacity_bytes()
+    }
+
+    /// Execute one slice: `m_rows` sequential output channels, each
+    /// needing `k` reduction cycles across `ceil(n / lanes)` lane batches.
+    pub fn run_slice(&mut self, w: SliceWork) -> SliceOutcome {
+        assert!(w.m_rows > 0 && w.k > 0 && w.n > 0);
+        let lane_batches = (w.n as u64).div_ceil(self.lanes as u64);
+        let cycles = w.m_rows as u64 * w.k as u64 * lane_batches;
+        let macs_done = w.m_rows as f64 * w.k as f64 * w.n as f64;
+        let lane_utilization = macs_done / (cycles as f64 * self.lanes as f64);
+
+        // Weight streaming: each owned row's K weights read once (weight-
+        // stationary: no re-fetch across the N dimension).
+        let weight_bytes = w.m_rows as u64 * w.k as u64 * w.weight_bytes as u64;
+        let t = self.weight_pool.transfer(0, 0, weight_bytes.max(1), Op::Read);
+
+        SliceOutcome {
+            cycles,
+            macs_done,
+            lane_utilization,
+            compute_energy_j: self.macs.energy_j(macs_done),
+            weight_stream_ps: t.done_at,
+            weight_energy_j: t.energy_pj * 1e-12,
+        }
+    }
+
+    /// Pure timing estimate without touching DRAM state (for the fast
+    /// analytic scheduler; the event-driven path uses [`Self::run_slice`]).
+    pub fn estimate_slice(&self, w: SliceWork) -> (u64, f64) {
+        let lane_batches = (w.n as u64).div_ceil(self.lanes as u64);
+        let cycles = w.m_rows as u64 * w.k as u64 * lane_batches;
+        let util = (w.m_rows as f64 * w.k as f64 * w.n as f64) / (cycles as f64 * self.lanes as f64);
+        (cycles, util)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vpu() -> Vpu {
+        // Sunrise: 64 VPUs × 512 lanes.
+        Vpu::new(0, MacArray::sunrise_total().split(64), 8)
+    }
+
+    #[test]
+    fn large_spatial_layer_is_efficient() {
+        // conv1-of-ResNet-like slice: 1 owned channel, K=147, N=12544.
+        let mut v = vpu();
+        let o = v.run_slice(SliceWork { m_rows: 1, k: 147, n: 12544, weight_bytes: 1 });
+        assert!(o.lane_utilization > 0.95, "util {}", o.lane_utilization);
+    }
+
+    #[test]
+    fn small_spatial_layer_wastes_lanes() {
+        // Late ResNet layer: N=49 << 512 lanes.
+        let mut v = vpu();
+        let o = v.run_slice(SliceWork { m_rows: 8, k: 4608, n: 49, weight_bytes: 1 });
+        assert!(o.lane_utilization < 0.15, "util {}", o.lane_utilization);
+    }
+
+    #[test]
+    fn batching_recovers_utilization() {
+        // Same layer, batch 16 → N=784, util ≈ 49*16/512/2... lanes refill.
+        let v = vpu();
+        let single = v.estimate_slice(SliceWork { m_rows: 8, k: 4608, n: 49, weight_bytes: 1 }).1;
+        let batched = v.estimate_slice(SliceWork { m_rows: 8, k: 4608, n: 49 * 16, weight_bytes: 1 }).1;
+        assert!(batched > single * 4.0, "single {single} batched {batched}");
+    }
+
+    #[test]
+    fn cycles_match_formula() {
+        let v = vpu();
+        let (cycles, _) = v.estimate_slice(SliceWork { m_rows: 4, k: 100, n: 1000, weight_bytes: 1 });
+        assert_eq!(cycles, 4 * 100 * 2); // ceil(1000/512) = 2
+    }
+
+    #[test]
+    fn weight_stationarity_streams_weights_once() {
+        let mut v = vpu();
+        let o = v.run_slice(SliceWork { m_rows: 8, k: 1024, n: 10_000, weight_bytes: 1 });
+        // 8 KiB of weights at multi-GB/s: far faster than the compute time.
+        let compute_ps = v.macs.cycles_to_ps(o.cycles);
+        assert!(o.weight_stream_ps < compute_ps / 10, "weights {} compute {compute_ps}", o.weight_stream_ps);
+    }
+
+    #[test]
+    fn estimate_matches_run() {
+        let mut v = vpu();
+        let w = SliceWork { m_rows: 3, k: 500, n: 700, weight_bytes: 1 };
+        let (c_est, u_est) = v.estimate_slice(w);
+        let o = v.run_slice(w);
+        assert_eq!(c_est, o.cycles);
+        assert!((u_est - o.lane_utilization).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_utilization_bounded() {
+        use crate::util::proptest::check;
+        check(0xFACE, 60, |g| {
+            let v = Vpu::new(0, MacArray::sunrise_total().split(64), 4);
+            let w = SliceWork {
+                m_rows: g.usize("m", 1, 64) as u32,
+                k: g.usize("k", 1, 5000) as u32,
+                n: g.usize("n", 1, 20000) as u32,
+                weight_bytes: 1,
+            };
+            let (_, util) = v.estimate_slice(w);
+            crate::prop_assert!(util > 0.0 && util <= 1.0 + 1e-12, "util {util}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Micro-benchmark harness (criterion replacement — the offline vendor set
+//! has no criterion). Used by every target under `rust/benches/`.
+//!
+//! Protocol per benchmark: warm up for `warmup_iters`, then time `samples`
+//! batches of `batch` iterations each and report min / median / p90 per
+//! iteration. Deterministic workloads + median-of-samples keeps noise low
+//! enough for the before/after deltas recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration: (min, median, p90).
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub p90_ns: f64,
+    pub iters: u64,
+}
+
+impl Measurement {
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12}/iter  (min {}, p90 {}, {} iters, {:.0} it/s)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p90_ns),
+            self.iters,
+            self.throughput_per_s(),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Bench runner; collects measurements and prints a summary.
+pub struct Bencher {
+    pub samples: usize,
+    pub warmup_iters: u64,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            samples: 15,
+            warmup_iters: 3,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast configuration for CI-ish runs.
+    pub fn quick() -> Self {
+        Bencher {
+            samples: 7,
+            warmup_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-scaling the batch size so each sample takes ≥ ~2 ms.
+    /// `f` should return a value that depends on the computation (use
+    /// `std::hint::black_box` inside if needed) to defeat DCE.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup + batch-size calibration.
+        let mut batch: u64 = 1;
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        loop {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let elapsed = t.elapsed().as_secs_f64();
+            if elapsed >= 2e-3 || batch >= 1 << 24 {
+                break;
+            }
+            batch = (batch * 4).min(1 << 24);
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            min_ns: per_iter[0],
+            median_ns: per_iter[per_iter.len() / 2],
+            p90_ns: per_iter[(per_iter.len() * 9) / 10],
+            iters: batch * self.samples as u64,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a final summary block (benches call this before exiting).
+    pub fn summary(&self, title: &str) {
+        println!("\n==== {title} — {} benchmarks ====", self.results.len());
+        for m in &self.results {
+            println!("{}", m.report());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_op() {
+        let mut b = Bencher::quick();
+        let m = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert!(m.median_ns < 1e6, "absurd timing {}", m.median_ns);
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn ordering_respects_cost() {
+        let mut b = Bencher::quick();
+        let cheap = b.bench("cheap", || (0..10u64).sum::<u64>()).median_ns;
+        let costly = b
+            .bench("costly", || (0..10_000u64).fold(0u64, |a, x| a ^ x.wrapping_mul(31)))
+            .median_ns;
+        assert!(costly > cheap, "costly {costly} <= cheap {cheap}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 us");
+        assert_eq!(fmt_ns(3.2e6), "3.200 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+    }
+}

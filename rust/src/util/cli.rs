@@ -1,0 +1,297 @@
+//! A minimal declarative CLI argument parser (offline vendor set has no
+//! clap). Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, subcommands, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative command-line parser.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (order of declaration = order on the
+    /// command line).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if !o.is_flag => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {left:<22} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse the given argv tail (without the program name). Returns
+    /// `Err(help_or_error_text)`; callers print it and exit.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(format!(
+                "too many positional arguments ({} given, {} declared)",
+                positionals.len(),
+                self.positionals.len()
+            ));
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                return Err(format!("missing required option --{}", o.name));
+            }
+        }
+        Ok(Args {
+            values,
+            flags,
+            positionals,
+        })
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on
+    /// failure. Convenience for binaries.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(&self.program) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not a number: {}", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not an integer: {}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not an integer: {}", self.get(name)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Cli {
+        Cli::new("demo", "a test CLI")
+            .opt("batch", "8", "batch size")
+            .req("model", "model name")
+            .flag("verbose", "chatty output")
+            .positional("input", "input file")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = demo().parse(&argv(&["--model", "resnet50"])).unwrap();
+        assert_eq!(a.get("batch"), "8");
+        assert_eq!(a.get_usize("batch"), 8);
+        assert_eq!(a.get("model"), "resnet50");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.positional(0), None);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = demo()
+            .parse(&argv(&["--model=mlp", "--batch=32", "--verbose", "file.bin"]))
+            .unwrap();
+        assert_eq!(a.get("batch"), "32");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("file.bin"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(demo().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = demo().parse(&argv(&["--model", "m", "--nope"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let e = demo().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("--batch"));
+        assert!(e.contains("[default: 8]"));
+        assert!(e.contains("[required]"));
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        let e = demo()
+            .parse(&argv(&["--model", "m", "a", "b"]))
+            .unwrap_err();
+        assert!(e.contains("too many positional"));
+    }
+}

@@ -1,0 +1,67 @@
+//! In-tree utility layer: the offline vendor set has no serde/clap/criterion
+//! /proptest, so the pieces this crate needs are implemented here.
+//!
+//! - [`json`] — a small, strict JSON parser + serializer (configs, manifests).
+//! - [`rng`] — deterministic xorshift/splitmix PRNG for workload generation.
+//! - [`proptest`] — a miniature property-testing harness on top of [`rng`].
+//! - [`table`] — plain-text table renderer for the paper's tables.
+//! - [`bench`] — warmup + median-of-N micro-benchmark harness (criterion
+//!   replacement for `cargo bench`).
+//! - [`units`] — unit helpers (bytes, bandwidth, energy, time) and
+//!   formatting.
+//! - [`cli`] — a minimal declarative argument parser for the `sunrise`
+//!   binary and examples.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod units;
+
+/// Relative-tolerance float comparison used across tests and analysis.
+///
+/// Returns `true` when `a` and `b` agree to within `rel` relative tolerance
+/// (falling back to absolute tolerance `rel` near zero).
+pub fn approx_eq(a: f64, b: f64, rel: f64) -> bool {
+    let scale = a.abs().max(b.abs());
+    if scale < 1e-12 {
+        return true;
+    }
+    let tol = if scale < 1.0 { rel } else { rel * scale };
+    (a - b).abs() <= tol
+}
+
+/// Assert two floats agree to within relative tolerance `rel`.
+#[macro_export]
+macro_rules! assert_approx {
+    ($a:expr, $b:expr, $rel:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        assert!(
+            $crate::util::approx_eq(a, b, $rel),
+            "assert_approx failed: {} = {a}, {} = {b} (rel tol {})",
+            stringify!($a),
+            stringify!($b),
+            $rel
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0005, 1e-3));
+        assert!(!approx_eq(1.0, 1.1, 1e-3));
+        assert!(approx_eq(0.0, 0.0, 1e-12));
+        assert!(approx_eq(1e-15, -1e-15, 1e-9));
+    }
+
+    #[test]
+    fn approx_macro() {
+        assert_approx!(100.0, 100.04, 1e-3);
+    }
+}

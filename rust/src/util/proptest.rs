@@ -1,0 +1,139 @@
+//! A miniature property-testing harness (the offline vendor set has no
+//! `proptest`), used across the coordinator, memory, and dataflow modules
+//! for invariant checks.
+//!
+//! Model: a property is a closure over a [`Gen`], which wraps the
+//! deterministic [`Rng`](crate::util::rng::Rng) and records every draw so a
+//! failing case prints its draw trace. `check` runs `n` cases across
+//! distinct sub-seeds; failures are re-run verbatim by seeding with the
+//! printed case seed.
+
+use crate::util::rng::Rng;
+
+/// Draw source handed to properties. Wraps the PRNG and logs draws.
+pub struct Gen {
+    rng: Rng,
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    /// usize in `[lo, hi)`.
+    pub fn usize(&mut self, name: &str, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("{name}={v}"));
+        v
+    }
+
+    /// u64 in `[0, n)`.
+    pub fn u64_below(&mut self, name: &str, n: u64) -> u64 {
+        let v = self.rng.below(n);
+        self.trace.push(format!("{name}={v}"));
+        v
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, name: &str, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.f64_range(lo, hi);
+        self.trace.push(format!("{name}={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self, name: &str) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("{name}={v}"));
+        v
+    }
+
+    /// Vector of length in `[0, max_len)` built by `f`.
+    pub fn vec<T>(&mut self, name: &str, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.rng.range(0, max_len);
+        self.trace.push(format!("{name}.len={len}"));
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given items.
+    pub fn pick<'a, T>(&mut self, name: &str, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range(0, xs.len());
+        self.trace.push(format!("{name}[{i}]"));
+        &xs[i]
+    }
+
+    /// Direct access to the PRNG for bulk data (not traced).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property: `Ok(())` passes, `Err(msg)` fails with a reason.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` cases of `prop` derived from `seed`. Panics on the first
+/// failing case with its seed and draw trace (re-run by calling
+/// `check(<case seed>, 1, prop)`).
+pub fn check(seed: u64, cases: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (case {case}/{cases}, case-seed {case_seed:#x}):\n  {msg}\n  draws: {}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Convenience: fail with a formatted message when `cond` is false.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(1, 50, |g| {
+            count += 1;
+            let x = g.usize("x", 0, 100);
+            prop_assert!(x < 100, "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_trace() {
+        check(2, 100, |g| {
+            let x = g.usize("x", 0, 10);
+            prop_assert!(x != 3, "hit the bad value {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        check(3, 30, |g| {
+            let v = g.vec("v", 17, |g| g.usize("e", 0, 5));
+            prop_assert!(v.len() < 17, "len {}", v.len());
+            prop_assert!(v.iter().all(|&e| e < 5), "element out of range");
+            Ok(())
+        });
+    }
+}

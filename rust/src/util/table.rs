@@ -1,0 +1,175 @@
+//! Plain-text table rendering for the paper's tables.
+//!
+//! Every bench in `rust/benches/` regenerates one of the paper's tables;
+//! this renderer prints them with the same row/column structure so the
+//! output can be diffed against the paper by eye (and by the integration
+//! tests, which parse the cells back).
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a row; must match the header width.
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Add a row from display-able values.
+    pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Cell accessor (row, col) for tests.
+    pub fn cell(&self, r: usize, c: usize) -> &str {
+        &self.rows[r][c]
+    }
+
+    /// Render with column alignment, a title line, and a rule under the
+    /// header.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                if i == 0 {
+                    // left-align first column (row labels)
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                } else {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-friendly precision: 3 significant
+/// figures, no scientific notation for the ranges the paper uses.
+pub fn sig3(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let decimals = (2 - mag).max(0) as usize;
+    let s = format!("{v:.decimals$}");
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+/// Format a float in scientific notation like the paper's "2.2 × 10^6".
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    if (0..=2).contains(&exp) {
+        sig3(v)
+    } else {
+        format!("{mant:.1}e{exp}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["", "ColA", "B"]);
+        t.row_display(&["rowlabel", "1.5", "22"]);
+        t.row_display(&["r2", "100", "3"]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // all body lines equal width
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_display(&["only-one"]);
+    }
+
+    #[test]
+    fn sig3_ranges() {
+        assert_eq!(sig3(0.23), "0.23");
+        assert_eq!(sig3(16.3), "16.3");
+        assert_eq!(sig3(2.08), "2.08");
+        assert_eq!(sig3(1234.0), "1234");
+        assert_eq!(sig3(0.0), "0");
+    }
+
+    #[test]
+    fn sci_large() {
+        assert_eq!(sci(2.2e6), "2.2e6");
+        assert_eq!(sci(86.0), "86");
+        assert_eq!(sci(1e6), "1.0e6");
+    }
+
+    #[test]
+    fn cell_access() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_display(&["r", "7"]);
+        assert_eq!(t.cell(0, 1), "7");
+        assert_eq!(t.num_rows(), 1);
+    }
+}

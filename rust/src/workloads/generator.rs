@@ -1,0 +1,117 @@
+//! Synthetic workload generation: request traces for the serving
+//! coordinator and randomized layer shapes for property benches.
+
+use crate::dataflow::layer::Layer;
+use crate::util::rng::Rng;
+
+/// One inference request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Which model this request targets.
+    pub model: String,
+    /// Samples in the request (client-side batch).
+    pub samples: u32,
+}
+
+/// Poisson arrival trace: `rate_per_s` requests/s for `duration_s`.
+pub fn poisson_trace(
+    rng: &mut Rng,
+    rate_per_s: f64,
+    duration_s: f64,
+    model: &str,
+    max_samples: u32,
+) -> Vec<TraceRequest> {
+    assert!(rate_per_s > 0.0 && duration_s > 0.0);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    loop {
+        t += rng.exponential(rate_per_s);
+        if t >= duration_s {
+            return out;
+        }
+        out.push(TraceRequest {
+            arrival_s: t,
+            model: model.to_string(),
+            samples: 1 + rng.below(max_samples as u64) as u32,
+        });
+    }
+}
+
+/// Bursty trace: alternating high/low-rate phases (stress for the dynamic
+/// batcher's backpressure).
+pub fn bursty_trace(
+    rng: &mut Rng,
+    base_rate: f64,
+    burst_rate: f64,
+    phase_s: f64,
+    duration_s: f64,
+    model: &str,
+) -> Vec<TraceRequest> {
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    loop {
+        let phase = (t / phase_s) as u64;
+        let rate = if phase % 2 == 0 { base_rate } else { burst_rate };
+        t += rng.exponential(rate);
+        if t >= duration_s {
+            return out;
+        }
+        out.push(TraceRequest {
+            arrival_s: t,
+            model: model.to_string(),
+            samples: 1,
+        });
+    }
+}
+
+/// Random GEMM-shaped conv layers (for fuzzing the scheduler).
+pub fn random_conv(rng: &mut Rng, id: usize) -> Layer {
+    let hw = *rng.choose(&[7u32, 14, 28, 56, 112]);
+    let in_c = *rng.choose(&[16u32, 64, 128, 256, 512]);
+    let out_c = *rng.choose(&[16u32, 64, 128, 256, 512]);
+    let k = *rng.choose(&[1u32, 3]);
+    Layer::conv(&format!("rand{id}"), hw, hw, in_c, out_c, k, 1, k / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_holds() {
+        let mut rng = Rng::new(42);
+        let trace = poisson_trace(&mut rng, 1000.0, 2.0, "m", 4);
+        let rate = trace.len() as f64 / 2.0;
+        assert!((rate - 1000.0).abs() < 100.0, "rate {rate}");
+        assert!(trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(trace.iter().all(|r| r.samples >= 1 && r.samples <= 4));
+    }
+
+    #[test]
+    fn bursty_has_two_densities() {
+        let mut rng = Rng::new(7);
+        let trace = bursty_trace(&mut rng, 100.0, 2000.0, 0.5, 2.0, "m");
+        let lo = trace.iter().filter(|r| r.arrival_s < 0.5).count();
+        let hi = trace.iter().filter(|r| (0.5..1.0).contains(&r.arrival_s)).count();
+        assert!(hi > lo * 5, "lo {lo} hi {hi}");
+    }
+
+    #[test]
+    fn random_conv_is_valid() {
+        let mut rng = Rng::new(3);
+        for i in 0..50 {
+            let l = random_conv(&mut rng, i);
+            let g = l.gemm(1).unwrap();
+            assert!(g.m > 0 && g.k > 0 && g.n > 0);
+        }
+    }
+
+    #[test]
+    fn traces_deterministic_per_seed() {
+        let t1 = poisson_trace(&mut Rng::new(9), 500.0, 1.0, "m", 2);
+        let t2 = poisson_trace(&mut Rng::new(9), 500.0, 1.0, "m", 2);
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,52 @@
+//! MLP workloads — the shapes served end-to-end through the PJRT runtime
+//! (they match `python/compile/model.py`'s `mlp_*` artifacts).
+
+use crate::dataflow::layer::Layer;
+use crate::workloads::Network;
+
+/// An MLP from a layer-width list: `[in, h1, ..., out]`.
+pub fn mlp(widths: &[u32]) -> Network {
+    assert!(widths.len() >= 2, "need at least in/out widths");
+    let layers = widths
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::dense(&format!("fc{i}"), w[0], w[1]))
+        .collect();
+    Network {
+        name: format!("mlp{}", widths.len() - 1),
+        channels_in: widths[0],
+        layers,
+    }
+}
+
+/// The quickstart model: matches the `mlp784` AOT artifact
+/// (784 → 512 → 256 → 10, the MNIST-shaped classifier).
+pub fn quickstart() -> Network {
+    mlp(&[784, 512, 256, 10])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_chain() {
+        let n = mlp(&[100, 50, 20]);
+        assert_eq!(n.layers.len(), 2);
+        assert_eq!(n.total_params(), 100 * 50 + 50 * 20);
+        assert_eq!(n.total_macs(), 100 * 50 + 50 * 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn needs_two_widths() {
+        mlp(&[10]);
+    }
+
+    #[test]
+    fn quickstart_is_mnist_shaped() {
+        let n = quickstart();
+        assert_eq!(n.channels_in, 784);
+        assert_eq!(n.layers.last().unwrap().gemm(1).unwrap().m, 10);
+    }
+}

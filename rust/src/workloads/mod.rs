@@ -1,0 +1,65 @@
+//! Workload definitions: the networks the paper evaluates or motivates.
+//!
+//! - [`resnet`] — ResNet-50 (the paper's §VI benchmark: 1500 img/s).
+//! - [`mlp`] — small MLPs (quickstart / serving workloads; matches the
+//!   shapes AOT-compiled in `python/compile/model.py`).
+//! - [`transformer`] — a GPT-style decoder block (the paper's §I/§VII
+//!   NLP-capacity motivation: Megatron/Turing-NLG/GPT-3 scale).
+//! - [`generator`] — synthetic request/trace generation for the serving
+//!   coordinator and benches.
+
+pub mod generator;
+pub mod mlp;
+pub mod resnet;
+pub mod transformer;
+
+use crate::dataflow::layer::Layer;
+
+/// A named workload: an input-channel count plus a layer list.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub channels_in: u32,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total MACs for one sample.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs(1)).sum()
+    }
+
+    /// Total weight parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_macs_and_params_match_published() {
+        let net = resnet::resnet50();
+        let gmacs = net.total_macs() as f64 / 1e9;
+        let mparams = net.total_params() as f64 / 1e6;
+        // Published: ~3.8–4.1 GMACs, ~25.5 M params (conv+fc, BN folded).
+        assert!(gmacs > 3.5 && gmacs < 4.3, "GMACs {gmacs}");
+        assert!(mparams > 23.0 && mparams < 26.5, "Mparams {mparams}");
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let net = mlp::mlp(&[784, 512, 256, 10]);
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.total_params(), 784 * 512 + 512 * 256 + 256 * 10);
+    }
+
+    #[test]
+    fn transformer_block_param_count() {
+        // d=1024, ffn 4×: qkv+proj = 4d² ; ffn = 8d² → 12d² per block.
+        let net = transformer::decoder_block(1024, 128);
+        assert_eq!(net.total_params(), 12 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,159 @@
+//! ResNet-50 layer table (inference, BN folded into conv).
+//!
+//! The paper's §VI headline workload: "It performances inference of 1500
+//! images per second with ResNet50 model." The table below is the standard
+//! v1 architecture: conv1 → 4 stages of bottleneck blocks (3/4/6/3) →
+//! global pool → fc1000.
+
+use crate::dataflow::layer::{Layer, LayerKind};
+use crate::workloads::Network;
+
+/// One bottleneck block: 1×1 reduce, 3×3, 1×1 expand (+ optional
+/// projection shortcut) + residual add.
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    h: u32,
+    w: u32,
+    in_c: u32,
+    mid_c: u32,
+    out_c: u32,
+    stride: u32,
+    project: bool,
+) -> (u32, u32) {
+    // 1x1 reduce (stride applied here, the torchvision v1.5 convention puts
+    // it on the 3x3; MAC totals differ by <2% — we use the 3x3-stride form).
+    layers.push(Layer::conv(&format!("{name}.conv1"), h, w, in_c, mid_c, 1, 1, 0));
+    layers.push(Layer::conv(&format!("{name}.conv2"), h, w, mid_c, mid_c, 3, stride, 1));
+    let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
+    layers.push(Layer::conv(&format!("{name}.conv3"), oh, ow, mid_c, out_c, 1, 1, 0));
+    if project {
+        layers.push(Layer::conv(&format!("{name}.proj"), h, w, in_c, out_c, 1, stride, 0));
+    }
+    layers.push(Layer {
+        name: format!("{name}.add"),
+        kind: LayerKind::EltwiseAdd,
+        in_h: oh,
+        in_w: ow,
+    });
+    (oh, ow)
+}
+
+/// Build the full ResNet-50.
+pub fn resnet50() -> Network {
+    let mut layers = Vec::new();
+    // Stem: 7×7/2 conv + 3×3/2 maxpool.
+    layers.push(Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3));
+    layers.push(Layer {
+        name: "maxpool".into(),
+        kind: LayerKind::Pool { k: 3, stride: 2 },
+        in_h: 112,
+        in_w: 112,
+    });
+
+    let stages: [(u32, u32, u32, u32, usize); 4] = [
+        // (mid, out, stride of first block, spatial in, blocks)
+        (64, 256, 1, 56, 3),
+        (128, 512, 2, 56, 4),
+        (256, 1024, 2, 28, 6),
+        (512, 2048, 2, 14, 3),
+    ];
+    let mut in_c = 64u32;
+    let (mut h, mut w) = (56u32, 56u32);
+    for (si, (mid, out, stride, _sp, blocks)) in stages.into_iter().enumerate() {
+        for b in 0..blocks {
+            let s = if b == 0 { stride } else { 1 };
+            let project = b == 0;
+            let name = format!("layer{}.{b}", si + 1);
+            let (oh, ow) = bottleneck(&mut layers, &name, h, w, in_c, mid, out, s, project);
+            in_c = out;
+            h = oh;
+            w = ow;
+        }
+    }
+
+    layers.push(Layer {
+        name: "avgpool".into(),
+        kind: LayerKind::GlobalPool,
+        in_h: 7,
+        in_w: 7,
+    });
+    layers.push(Layer::dense("fc", 2048, 1000));
+
+    Network {
+        name: "resnet50".to_string(),
+        channels_in: 3,
+        layers,
+    }
+}
+
+/// A reduced ResNet (stem + one stage) for fast tests/examples.
+pub fn resnet_mini() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 64, 64, 3, 32, 7, 2, 3));
+    layers.push(Layer {
+        name: "maxpool".into(),
+        kind: LayerKind::Pool { k: 3, stride: 2 },
+        in_h: 32,
+        in_w: 32,
+    });
+    let mut in_c = 32;
+    let (mut h, mut w) = (16u32, 16u32);
+    for b in 0..2 {
+        let name = format!("block{b}");
+        let (oh, ow) = bottleneck(&mut layers, &name, h, w, in_c, 16, 64, 1, b == 0);
+        in_c = 64;
+        h = oh;
+        w = ow;
+    }
+    layers.push(Layer {
+        name: "avgpool".into(),
+        kind: LayerKind::GlobalPool,
+        in_h: h,
+        in_w: w,
+    });
+    layers.push(Layer::dense("fc", 64, 10));
+    Network {
+        name: "resnet_mini".to_string(),
+        channels_in: 3,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        let net = resnet50();
+        // 16 bottlenecks × (3 conv + add) + 4 projections + stem(2) + gap + fc
+        let convs = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, crate::dataflow::layer::LayerKind::Conv { .. }))
+            .count();
+        assert_eq!(convs, 1 + 16 * 3 + 4); // 53 convolutions
+    }
+
+    #[test]
+    fn spatial_flow_ends_at_7x7() {
+        let net = resnet50();
+        let gap = net.layers.iter().find(|l| l.name == "avgpool").unwrap();
+        assert_eq!((gap.in_h, gap.in_w), (7, 7));
+    }
+
+    #[test]
+    fn first_stage_shapes() {
+        let net = resnet50();
+        let c = &net.layers[2]; // layer1.0.conv1
+        assert_eq!(c.name, "layer1.0.conv1");
+        let g = c.gemm(1).unwrap();
+        assert_eq!((g.m, g.k, g.n), (64, 64, 56 * 56));
+    }
+
+    #[test]
+    fn mini_is_much_smaller() {
+        assert!(resnet_mini().total_macs() < resnet50().total_macs() / 100);
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration: the full serving stack — coordinator over simulated chip
+//! replicas, and over PJRT when artifacts exist — plus the firmware →
+//! UCE → chip control-plane chain.
+
+use std::time::Duration;
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::server::{Server, ServerConfig};
+use sunrise::interconnect::Technology;
+use sunrise::isa::cpu::{Cpu, StepResult};
+use sunrise::isa::program::{build, fw_batch_loop};
+use sunrise::runtime::artifact::Manifest;
+use sunrise::runtime::executor::{Executor, PjrtExecutor, SimExecutor};
+use sunrise::uce::sequencer::Sequencer;
+use sunrise::uce::{csr, Uce};
+use sunrise::workloads::{mlp, resnet};
+
+fn sim_replica() -> Box<dyn Executor> {
+    let mut e = SimExecutor::new(SunriseChip::silicon());
+    e.register("mlp", mlp::quickstart(), 784, 10);
+    e.register("resnet_mini", resnet::resnet_mini(), 3 * 64 * 64, 10);
+    Box::new(e)
+}
+
+#[test]
+fn serving_two_models_on_two_replicas() {
+    let mut cfg = ServerConfig::default();
+    cfg.batcher = BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+    };
+    let server = Server::start(vec![sim_replica(), sim_replica()], cfg);
+    let n_mlp = 24;
+    let n_rn = 12;
+    for i in 0..n_mlp {
+        server.submit("mlp", vec![i as f32 / 100.0; 784]);
+    }
+    for i in 0..n_rn {
+        server.submit("resnet_mini", vec![i as f32 / 50.0; 3 * 64 * 64]);
+    }
+    let resps = server.collect(n_mlp + n_rn, Duration::from_secs(60));
+    assert_eq!(resps.len(), n_mlp + n_rn);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests as usize, n_mlp + n_rn);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch_size >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_end_to_end_when_artifacts_present() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let execs: Vec<Box<dyn Executor>> = vec![
+        Box::new(PjrtExecutor::load(&dir).expect("load artifacts")),
+        Box::new(PjrtExecutor::load(&dir).expect("load artifacts")),
+    ];
+    let mut cfg = ServerConfig::default();
+    cfg.batcher = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    };
+    let server = Server::start(execs, cfg);
+    let n = 64;
+    for i in 0..n {
+        let input: Vec<f32> = (0..784).map(|j| ((i + j) % 255) as f32 / 255.0).collect();
+        server.submit("mlp784_b8", input);
+    }
+    let resps = server.collect(n, Duration::from_secs(60));
+    assert_eq!(resps.len(), n);
+    for r in &resps {
+        assert_eq!(r.output.len(), 10);
+        assert!(r.output.iter().all(|v| v.is_finite()));
+    }
+    // Same input rows must produce identical logits regardless of batch
+    // composition (padding correctness).
+    let a: Vec<f32> = (0..784).map(|j| (j % 255) as f32 / 255.0).collect();
+    let id1 = server.submit("mlp784_b8", a.clone());
+    let r1 = server.collect(1, Duration::from_secs(30)).pop().unwrap();
+    assert_eq!(r1.id, id1);
+    let id2 = server.submit("mlp784_b8", a);
+    let r2 = server.collect(1, Duration::from_secs(30)).pop().unwrap();
+    assert_eq!(r2.id, id2);
+    assert_eq!(r1.output, r2.output, "batch-composition-dependent output");
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_matches_python_goldens() {
+    // Cross-language numerics: execute each artifact via PJRT and compare
+    // against the python-side golden outputs written by aot.py.
+    let dir = Manifest::default_dir();
+    if !dir.join("golden.json").exists() {
+        eprintln!("skipping: goldens missing (run `make artifacts`)");
+        return;
+    }
+    let golden_text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let goldens = sunrise::util::json::Json::parse(&golden_text).unwrap();
+    let rt = sunrise::runtime::client::Runtime::load(&dir).expect("artifacts");
+    for model in &rt.models {
+        let name = &model.artifact.name;
+        let g = goldens.get(name).unwrap_or_else(|| panic!("no golden for {name}"));
+        let input: Vec<f32> = (0..model.artifact.input_elems())
+            .map(|i| (i % 255) as f32 / 255.0)
+            .collect();
+        // Input convention check.
+        let head = g.get("input_head").unwrap().as_arr().unwrap();
+        for (i, h) in head.iter().enumerate() {
+            assert!((input[i] as f64 - h.as_f64().unwrap()).abs() < 1e-7);
+        }
+        let out = model.execute(&input).expect("execute");
+        let want = g.get("output").unwrap().as_arr().unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let w = w.as_f64().unwrap();
+            let got = out[i] as f64;
+            assert!(
+                (got - w).abs() <= 1e-5 * w.abs().max(1.0),
+                "{name} output[{i}]: rust {got} vs python {w}"
+            );
+        }
+        println!("{name}: matches python golden ({} values checked)", want.len());
+    }
+}
+
+#[test]
+fn firmware_batch_loop_drives_uce_sequences() {
+    // Firmware on the 13-bit core arms the UCE 16 times (16 layer batches).
+    let mut uce = Uce::new(Sequencer::fixed(sunrise::memory::ns(5_000)));
+    uce.config.write(csr::F_FUNC, 1);
+    let prog = build(&fw_batch_loop(16, csr::START)).unwrap();
+    let mut cpu = Cpu::new(&prog);
+    assert_eq!(cpu.run(&mut uce, 10_000_000), StepResult::Halted);
+    assert_eq!(uce.sequences_run, 16);
+    assert!(uce.now() >= 16 * sunrise::memory::ns(5_000));
+}
+
+#[test]
+fn ablation_matrix_fabric_x_batch() {
+    // The full ablation grid the paper argues from: fabric tech × batch.
+    let net = resnet::resnet50();
+    let mut last = f64::MAX;
+    for tech in [Technology::Hitoc, Technology::Tsv, Technology::Interposer] {
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = tech;
+        let chip = SunriseChip::new(cfg);
+        let ips = chip.run(&net, 8).images_per_s();
+        assert!(ips < last * 1.001, "{tech:?} should not beat denser fabric");
+        last = ips;
+    }
+}
+
+#[test]
+fn capacity_chain_simulator_matches_artifact_manifest() {
+    // The MLP the artifacts serve must fit (trivially) in the chip's
+    // weight DRAM, and the parameter counts must agree between the rust
+    // workload model and the python-side manifest when present.
+    let net = mlp::quickstart();
+    let params = net.total_params();
+    let chip = SunriseChip::silicon();
+    assert!(params < chip.resources.weight_capacity_per_vpu * 64);
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir).unwrap();
+        let art = m.model("mlp784_b8").unwrap();
+        // Manifest counts weights + biases; rust counts weights.
+        let biases = 512 + 256 + 10;
+        assert_eq!(art.n_params, params + biases);
+    }
+}

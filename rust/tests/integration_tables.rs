@@ -1,0 +1,59 @@
+//! Integration: every paper table regenerates with the right structure and
+//! the paper's qualitative claims hold across modules.
+
+use sunrise::analysis::comparison::{comparison_rows, sunrise_lead_factors};
+use sunrise::analysis::report;
+use sunrise::scaling::cost::{hitoc_stack_cost, single_wafer_cost};
+use sunrise::scaling::process::Node;
+
+#[test]
+fn table1_reproduces_density_regimes() {
+    let t = report::table1();
+    assert_eq!(t.num_rows(), 3);
+    let r = t.render();
+    assert!(r.contains("Interposer") && r.contains("TSV") && r.contains("HITOC"));
+    // HITOC's computed density cell is in the 1e6 regime.
+    assert!(t.cell(2, 2).contains("e5") || t.cell(2, 2).contains("e6"), "HITOC density {}", t.cell(2, 2));
+}
+
+#[test]
+fn table2_and_3_consistent() {
+    let rows = comparison_rows();
+    for row in &rows {
+        // Table III = Table II arithmetic, cross-checked.
+        let m = &row.die;
+        assert!((m.tops_per_mm2 - row.spec.peak_tops / row.spec.die_mm2).abs() < 1e-9);
+        assert!((m.tops_per_w - row.spec.peak_tops / row.spec.power_w).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn table4_ordering_holds() {
+    let sun = hitoc_stack_cost("s", Node::N40, 110.0, 25.0);
+    let c = single_wafer_cost("c", Node::N7, 456.0, 512.0);
+    assert!(sun.die_cost_usd < c.die_cost_usd / 10.0, "two mature wafers beat one 7nm die");
+    assert!(sun.cost_per_tops_usd < c.cost_per_tops_usd);
+}
+
+#[test]
+fn table7_sunrise_sweep() {
+    // The exactly-derivable Table VII cells.
+    let rows = comparison_rows();
+    let s = &rows[0].projected.metrics;
+    assert!((s.bw_gbps_per_mm2.unwrap() - 216.0).abs() < 2.5);
+    assert!((s.mem_mb_per_mm2 - 30.3).abs() < 0.3);
+    // Paper conclusion ordering.
+    let f = sunrise_lead_factors();
+    assert!(f.capacity > 15.0);
+    assert!(f.performance > 4.0 && f.efficiency > 4.0);
+}
+
+#[test]
+fn full_report_renders_every_table() {
+    let r = report::full_report();
+    for t in ["Table I", "Table II", "Table III", "Table IV", "Table VII"] {
+        assert!(r.contains(t), "missing {t}");
+    }
+    // Sanity: report is substantial and well-formed.
+    assert!(r.lines().count() > 30);
+}
