@@ -2,12 +2,18 @@
 //! watch ResNet-50 throughput hit the wall, then show how UniMem pooling
 //! and the cache-hierarchy baseline compare on raw streaming.
 //!
+//! The bandwidth sweep fans out across cores via [`sunrise::sim::sweep`]
+//! (one chip instance per point — each sweep point is an independent chip
+//! configuration); results print in input order, identical to the serial
+//! loop this replaced.
+//!
 //! Run: `cargo run --release --example memory_wall_sweep`
 
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::memory::cache::CacheHierarchy;
 use sunrise::memory::dram::Op;
 use sunrise::memory::unimem::UniMemPool;
+use sunrise::sim::sweep::parallel_map;
 use sunrise::workloads::resnet::resnet50;
 
 fn main() {
@@ -16,7 +22,9 @@ fn main() {
     // ---- 1. Throughput vs DRAM bandwidth (the wall itself) ----
     println!("== ResNet-50 throughput vs bonded-DRAM bandwidth (batch 8) ==");
     println!("{:>12}  {:>10}  {:>8}  {}", "DRAM BW", "img/s", "util %", "bound-by (modal layer)");
-    for bw_tbps in [0.0125, 0.025, 0.05, 0.1, 0.225, 0.45, 0.9, 1.8, 3.6] {
+    let bw_points: Vec<f64> = vec![0.0125, 0.025, 0.05, 0.1, 0.225, 0.45, 0.9, 1.8, 3.6];
+    let t0 = std::time::Instant::now();
+    let rows = parallel_map(&bw_points, |_, &bw_tbps| {
         let mut cfg = SunriseConfig::default();
         cfg.dram_bw = bw_tbps * 1e12;
         let chip = SunriseChip::new(cfg);
@@ -27,14 +35,17 @@ fn main() {
             *counts.entry(l.bound_by).or_insert(0u32) += 1;
         }
         let modal = counts.iter().max_by_key(|(_, c)| **c).map(|(k, _)| *k).unwrap();
-        println!(
-            "{:>9.3} TB/s  {:>10.1}  {:>8.1}  {}",
-            bw_tbps,
-            s.images_per_s(),
-            s.utilization() * 100.0,
-            modal
-        );
+        (s.images_per_s(), s.utilization(), modal)
+    });
+    for (&bw_tbps, &(ips, util, modal)) in bw_points.iter().zip(rows.iter()) {
+        println!("{:>9.3} TB/s  {:>10.1}  {:>8.1}  {}", bw_tbps, ips, util * 100.0, modal);
     }
+    println!(
+        "({} sweep points on {} threads in {:.1} ms)",
+        bw_points.len(),
+        sunrise::sim::sweep::default_threads().min(bw_points.len()),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
 
     // ---- 2. UniMem pooling vs arrays (latency hiding, Fig. 5) ----
     println!("\n== UniMem streaming bandwidth vs pool size (8 MiB stream) ==");

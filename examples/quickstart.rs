@@ -13,10 +13,10 @@ use sunrise::runtime::artifact::Manifest;
 use sunrise::runtime::client::Runtime;
 use sunrise::workloads::{mlp, resnet};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sunrise::util::error::Result<()> {
     // --- 1. Real numerics through PJRT -----------------------------------
     let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
         let rt = Runtime::load(&dir)?;
         let model = rt.model("mlp784_b8").expect("mlp784_b8 artifact");
         let input: Vec<f32> = (0..model.artifact.input_elems())
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         println!("PJRT inference: batch 8 MLP -> {} logits in {dt:?}", out.len());
         println!("  first row: {:?}", &out[..10]);
     } else {
-        println!("(artifacts missing — run `make artifacts` for the PJRT demo)");
+        println!("(PJRT demo skipped — needs `--features pjrt` and `make artifacts`)");
     }
 
     // --- 2. The same model on the simulated chip --------------------------

@@ -14,7 +14,7 @@ use sunrise::util::cli::Cli;
 use sunrise::util::rng::Rng;
 use sunrise::workloads::generator::poisson_trace;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sunrise::util::error::Result<()> {
     let args = Cli::new("serve", "serve the AOT MLP through the coordinator (PJRT replicas)")
         .opt("requests", "2000", "number of requests to replay")
         .opt("rate", "4000", "Poisson arrival rate (req/s)")
@@ -25,10 +25,11 @@ fn main() -> anyhow::Result<()> {
         .parse_or_exit();
 
     let dir = Manifest::default_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
+    if !cfg!(feature = "pjrt") || !dir.join("manifest.json").exists() {
+        return Err(sunrise::util::error::Error::msg(
+            "PJRT serving needs a `--features pjrt` build and `make artifacts`",
+        ));
+    }
 
     let n = args.get_usize("requests");
     let replicas = args.get_usize("replicas");
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     let executors: Vec<Box<dyn Executor>> = (0..replicas)
         .map(|_| Ok(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>))
-        .collect::<anyhow::Result<_>>()?;
+        .collect::<sunrise::util::error::Result<_>>()?;
     let server = Server::start(executors, cfg);
 
     // Poisson open-loop trace.

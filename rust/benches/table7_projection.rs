@@ -7,8 +7,12 @@
 
 use sunrise::analysis::comparison::{comparison_rows, sunrise_lead_factors};
 use sunrise::analysis::report;
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::interconnect::Technology;
 use sunrise::scaling::normalize::PAPER_TABLE_VII;
+use sunrise::sim::sweep::{default_threads, parallel_map_threads};
 use sunrise::util::bench::Bencher;
+use sunrise::workloads::resnet::resnet50;
 
 fn main() {
     println!("{}", report::table7().render());
@@ -56,9 +60,47 @@ fn main() {
     assert!((sun.bw_gbps_per_mm2.unwrap() - 216.0).abs() / 216.0 < 0.01);
     assert!((sun.mem_mb_per_mm2 - 30.3).abs() / 30.3 < 0.01);
 
+    // The §VII what-if grid — every stack technology × batch size on the
+    // simulated chip — fanned out with the sim::sweep harness. Parallel
+    // results must be bit-identical to the serial loop.
+    let grid: Vec<(Technology, u32)> = [Technology::Hitoc, Technology::Tsv, Technology::Interposer]
+        .into_iter()
+        .flat_map(|tech| [1u32, 2, 4, 8, 16].into_iter().map(move |b| (tech, b)))
+        .collect();
+    let net = resnet50();
+    let eval = |_: usize, &(tech, batch): &(Technology, u32)| {
+        let mut cfg = SunriseConfig::default();
+        cfg.stack_tech = tech;
+        SunriseChip::new(cfg).run(&net, batch).images_per_s()
+    };
+    let serial = parallel_map_threads(&grid, 1, eval);
+    let parallel = parallel_map_threads(&grid, default_threads(), eval);
+    assert!(
+        serial.iter().zip(&parallel).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "parallel sweep diverged from serial"
+    );
+    println!(
+        "\nprojection grid ({} points, {} threads): hitoc b8 {:.0} img/s, interposer b8 {:.0} img/s",
+        grid.len(),
+        default_threads().min(grid.len()),
+        serial[3],
+        serial[13]
+    );
+
     let mut b = Bencher::new();
     b.bench("project all chips to 7nm", || {
         comparison_rows().iter().map(|r| r.projected.metrics.tops_per_w).sum::<f64>()
+    });
+    // Fold the computed throughputs into the return value so the grid work
+    // cannot be dead-code-eliminated (the Bencher's DCE contract).
+    b.bench("tech x batch grid (15 pts, serial)", || {
+        parallel_map_threads(&grid, 1, eval).iter().map(|x| x.to_bits()).fold(0u64, |a, b| a ^ b)
+    });
+    b.bench("tech x batch grid (15 pts, parallel)", || {
+        parallel_map_threads(&grid, default_threads(), eval)
+            .iter()
+            .map(|x| x.to_bits())
+            .fold(0u64, |a, b| a ^ b)
     });
     b.summary("table7_projection");
 }

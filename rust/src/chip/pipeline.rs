@@ -7,9 +7,15 @@
 //! latency percentiles under Poisson load, saturation points, and how
 //! many chips a target rate needs. Service times come from the same chip
 //! model, so the two views are consistent by construction.
+//!
+//! The world runs on the typed-event engine: two event kinds (arrival,
+//! batch completion), per-chip in-flight arrival buffers that are drained
+//! and reused across dispatches, and a service-time table that hits the
+//! chip's schedule cache — so a million-request trace allocates nothing
+//! per event.
 
 use crate::chip::sunrise::SunriseChip;
-use crate::sim::engine::{Engine, Scheduler};
+use crate::sim::engine::{Engine, Scheduler, World};
 use crate::sim::stats::Histogram;
 use crate::sim::{from_seconds, to_seconds, Time};
 use crate::workloads::generator::TraceRequest;
@@ -33,11 +39,24 @@ pub struct QueueSimResult {
     pub chip_utilization: f64,
 }
 
-struct World {
+/// Queueing-world events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A request with `samples` samples arrives (time = the event's time).
+    Arrive { samples: u32 },
+    /// The batch running on `chip` completes.
+    Done { chip: u32 },
+}
+
+struct QueueWorld {
     /// FIFO of (arrival time, samples) waiting for a chip.
     queue: std::collections::VecDeque<(Time, u32)>,
     /// Per-chip busy flag.
     busy: Vec<bool>,
+    /// Per-chip in-flight batch: the arrivals it is serving. Buffers are
+    /// drained (not dropped) on completion so dispatch reuses their
+    /// capacity — no per-batch allocation in steady state.
+    in_flight: Vec<Vec<(Time, u32)>>,
     /// Per-batch service time for a given sample count, ps.
     service_ps: Vec<Time>,
     max_batch: u32,
@@ -51,22 +70,40 @@ struct World {
     last_done: Time,
 }
 
-impl World {
-    /// Try to start a batch on a free chip.
-    fn try_dispatch(w: &mut World, sch: &mut Scheduler<World>) {
-        while let Some(chip) = w.busy.iter().position(|b| !b) {
-            if w.queue.is_empty() {
+impl QueueWorld {
+    fn new(n_chips: usize, service_ps: Vec<Time>, max_batch: u32, queue_cap: usize) -> QueueWorld {
+        QueueWorld {
+            queue: std::collections::VecDeque::new(),
+            busy: vec![false; n_chips],
+            in_flight: (0..n_chips).map(|_| Vec::new()).collect(),
+            service_ps,
+            max_batch,
+            queue_cap,
+            latency: Histogram::latency(),
+            served: 0,
+            dropped: 0,
+            max_depth: 0,
+            busy_time: 0,
+            last_done: 0,
+        }
+    }
+
+    /// Start batches on every free chip while work is queued.
+    fn try_dispatch(&mut self, sch: &mut Scheduler<Ev>) {
+        while let Some(chip) = self.busy.iter().position(|b| !b) {
+            if self.queue.is_empty() {
                 return;
             }
-            // Form a batch of up to max_batch queued requests.
+            // Form a batch of up to max_batch queued requests, recorded in
+            // the chip's (reused) in-flight buffer.
             let mut samples = 0u32;
-            let mut arrivals = Vec::new();
-            while samples < w.max_batch {
-                match w.queue.front() {
-                    Some(&(at, s)) if samples + s <= w.max_batch => {
-                        arrivals.push((at, s));
+            debug_assert!(self.in_flight[chip].is_empty());
+            while samples < self.max_batch {
+                match self.queue.front() {
+                    Some(&(at, s)) if samples + s <= self.max_batch => {
+                        self.in_flight[chip].push((at, s));
                         samples += s;
-                        w.queue.pop_front();
+                        self.queue.pop_front();
                     }
                     _ => break,
                 }
@@ -74,22 +111,46 @@ impl World {
             if samples == 0 {
                 return;
             }
-            w.busy[chip] = true;
-            let service = w.service_ps[samples as usize];
-            w.busy_time += service;
-            let done = sch.now() + service;
-            sch.at(done, move |w: &mut World, sch| {
-                for (at, s) in &arrivals {
-                    let lat = to_seconds(done - at);
-                    for _ in 0..*s {
-                        w.latency.record(lat);
-                    }
-                    w.served += *s as u64;
+            self.busy[chip] = true;
+            let service = self.service_ps[samples as usize];
+            self.busy_time += service;
+            sch.after(service, Ev::Done { chip: chip as u32 });
+        }
+    }
+}
+
+impl World for QueueWorld {
+    type Event = Ev;
+
+    fn handle(&mut self, ev: Ev, sch: &mut Scheduler<Ev>) {
+        match ev {
+            Ev::Arrive { samples } => {
+                if self.queue.len() >= self.queue_cap {
+                    self.dropped += samples as u64;
+                    return;
                 }
-                w.busy[chip] = false;
-                w.last_done = w.last_done.max(done);
-                World::try_dispatch(w, sch);
-            });
+                self.queue.push_back((sch.now(), samples));
+                self.max_depth = self.max_depth.max(self.queue.len());
+                self.try_dispatch(sch);
+            }
+            Ev::Done { chip } => {
+                let chip = chip as usize;
+                let done = sch.now();
+                // Drain without dropping the buffer's capacity.
+                let mut batch = std::mem::take(&mut self.in_flight[chip]);
+                for &(at, s) in &batch {
+                    let lat = to_seconds(done - at);
+                    for _ in 0..s {
+                        self.latency.record(lat);
+                    }
+                    self.served += s as u64;
+                }
+                batch.clear();
+                self.in_flight[chip] = batch;
+                self.busy[chip] = false;
+                self.last_done = self.last_done.max(done);
+                self.try_dispatch(sch);
+            }
         }
     }
 }
@@ -107,39 +168,17 @@ pub fn simulate_queue(
     queue_cap: usize,
 ) -> QueueSimResult {
     assert!(n_chips > 0 && max_batch > 0);
-    // Precompute service time per batch size from the chip model.
+    // Precompute service time per batch size from the chip model (hits the
+    // chip's schedule cache on repeated sweeps).
     let mut service_ps: Vec<Time> = vec![0];
     for b in 1..=max_batch {
         service_ps.push(chip.run(net, b).total_ps);
     }
 
-    let mut world = World {
-        queue: std::collections::VecDeque::new(),
-        busy: vec![false; n_chips],
-        service_ps,
-        max_batch,
-        queue_cap,
-        latency: Histogram::latency(),
-        served: 0,
-        dropped: 0,
-        max_depth: 0,
-        busy_time: 0,
-        last_done: 0,
-    };
-
-    let mut engine: Engine<World> = Engine::new();
+    let mut world = QueueWorld::new(n_chips, service_ps, max_batch, queue_cap);
+    let mut engine: Engine<Ev> = Engine::new();
     for req in trace {
-        let at = from_seconds(req.arrival_s);
-        let samples = req.samples;
-        engine.schedule(at, move |w: &mut World, sch| {
-            if w.queue.len() >= w.queue_cap {
-                w.dropped += samples as u64;
-                return;
-            }
-            w.queue.push_back((sch.now(), samples));
-            w.max_depth = w.max_depth.max(w.queue.len());
-            World::try_dispatch(w, sch);
-        });
+        engine.schedule(from_seconds(req.arrival_s), Ev::Arrive { samples: req.samples });
     }
     engine.run(&mut world);
 
@@ -238,5 +277,149 @@ mod tests {
             r.throughput,
             analytic
         );
+    }
+
+    // ---- determinism: typed-event port vs the original closure world ----
+
+    /// The original closure-based queueing world, verbatim on the legacy
+    /// heap engine — the reference implementation for the bit-identical
+    /// determinism check below.
+    fn legacy_simulate_queue(
+        chip: &SunriseChip,
+        net: &Network,
+        trace: &[TraceRequest],
+        n_chips: usize,
+        max_batch: u32,
+        queue_cap: usize,
+    ) -> QueueSimResult {
+        use crate::sim::engine::legacy;
+
+        struct World {
+            queue: std::collections::VecDeque<(Time, u32)>,
+            busy: Vec<bool>,
+            service_ps: Vec<Time>,
+            max_batch: u32,
+            queue_cap: usize,
+            latency: Histogram,
+            served: u64,
+            dropped: u64,
+            max_depth: usize,
+            busy_time: Time,
+            last_done: Time,
+        }
+
+        impl World {
+            fn try_dispatch(w: &mut World, sch: &mut legacy::Scheduler<World>) {
+                while let Some(chip) = w.busy.iter().position(|b| !b) {
+                    if w.queue.is_empty() {
+                        return;
+                    }
+                    let mut samples = 0u32;
+                    let mut arrivals = Vec::new();
+                    while samples < w.max_batch {
+                        match w.queue.front() {
+                            Some(&(at, s)) if samples + s <= w.max_batch => {
+                                arrivals.push((at, s));
+                                samples += s;
+                                w.queue.pop_front();
+                            }
+                            _ => break,
+                        }
+                    }
+                    if samples == 0 {
+                        return;
+                    }
+                    w.busy[chip] = true;
+                    let service = w.service_ps[samples as usize];
+                    w.busy_time += service;
+                    let done = sch.now() + service;
+                    sch.at(done, move |w: &mut World, sch| {
+                        for (at, s) in &arrivals {
+                            let lat = to_seconds(done - at);
+                            for _ in 0..*s {
+                                w.latency.record(lat);
+                            }
+                            w.served += *s as u64;
+                        }
+                        w.busy[chip] = false;
+                        w.last_done = w.last_done.max(done);
+                        World::try_dispatch(w, sch);
+                    });
+                }
+            }
+        }
+
+        let mut service_ps: Vec<Time> = vec![0];
+        for b in 1..=max_batch {
+            service_ps.push(chip.run(net, b).total_ps);
+        }
+        let mut world = World {
+            queue: std::collections::VecDeque::new(),
+            busy: vec![false; n_chips],
+            service_ps,
+            max_batch,
+            queue_cap,
+            latency: Histogram::latency(),
+            served: 0,
+            dropped: 0,
+            max_depth: 0,
+            busy_time: 0,
+            last_done: 0,
+        };
+        let mut engine: legacy::Engine<World> = legacy::Engine::new();
+        for req in trace {
+            let at = from_seconds(req.arrival_s);
+            let samples = req.samples;
+            engine.schedule(at, move |w: &mut World, sch| {
+                if w.queue.len() >= w.queue_cap {
+                    w.dropped += samples as u64;
+                    return;
+                }
+                w.queue.push_back((sch.now(), samples));
+                w.max_depth = w.max_depth.max(w.queue.len());
+                World::try_dispatch(w, sch);
+            });
+        }
+        engine.run(&mut world);
+
+        let duration_s = to_seconds(world.last_done.max(1));
+        QueueSimResult {
+            served: world.served,
+            dropped: world.dropped,
+            mean_latency_s: world.latency.mean(),
+            p50_latency_s: world.latency.quantile(0.5),
+            p99_latency_s: world.latency.quantile(0.99),
+            max_queue_depth: world.max_depth,
+            duration_s,
+            throughput: world.served as f64 / duration_s,
+            chip_utilization: to_seconds(world.busy_time) / (duration_s * n_chips as f64),
+        }
+    }
+
+    #[test]
+    fn queue_sim_bit_identical_to_legacy_closure_world() {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        for (seed, rate, chips, cap) in
+            [(42u64, 2000.0, 1usize, 10_000usize), (7, 5000.0, 3, 32), (99, 800.0, 2, 10_000)]
+        {
+            let mut rng = Rng::new(seed);
+            let trace = poisson_trace(&mut rng, rate, 0.3, "resnet50", 2);
+            let a = simulate_queue(&chip, &net, &trace, chips, 8, cap);
+            let b = legacy_simulate_queue(&chip, &net, &trace, chips, 8, cap);
+            assert_eq!(a.served, b.served, "seed {seed}");
+            assert_eq!(a.dropped, b.dropped, "seed {seed}");
+            assert_eq!(a.max_queue_depth, b.max_queue_depth, "seed {seed}");
+            assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits(), "seed {seed}");
+            assert_eq!(a.mean_latency_s.to_bits(), b.mean_latency_s.to_bits(), "seed {seed}");
+            assert_eq!(a.p50_latency_s.to_bits(), b.p50_latency_s.to_bits(), "seed {seed}");
+            assert_eq!(a.p99_latency_s.to_bits(), b.p99_latency_s.to_bits(), "seed {seed}");
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "seed {seed}");
+            assert_eq!(
+                a.chip_utilization.to_bits(),
+                b.chip_utilization.to_bits(),
+                "seed {seed}"
+            );
+        }
     }
 }

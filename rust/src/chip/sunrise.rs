@@ -7,12 +7,13 @@
 //! layers, SPI command + HSP data interfaces, and DRAM repair at power-up.
 
 use crate::dataflow::mapping::Dataflow;
-use crate::dataflow::schedule::{schedule_network, ChipResources, NetworkSchedule};
+use crate::dataflow::schedule::{schedule_network, ChipResources, NetworkSchedule, ScheduleCache};
 use crate::interconnect::noc::Fabric;
 use crate::interconnect::Technology;
 use crate::memory::{ns, Ps};
 use crate::units::mac::MacArray;
 use crate::workloads::Network;
+use std::sync::Arc;
 
 /// Sunrise configuration (defaults = the fabricated silicon of §VI).
 #[derive(Debug, Clone)]
@@ -66,10 +67,19 @@ impl Default for SunriseConfig {
 }
 
 /// The instantiated chip.
+///
+/// Carries a [`ScheduleCache`] memoizing `run`/`run_with_flow` results:
+/// the cache is keyed by (network fingerprint, resources fingerprint,
+/// batch, dataflow, element size), so neither per-configuration ablation
+/// chips nor post-construction mutation of the public `resources` field
+/// can ever be served a schedule planned for different resources. The
+/// cache is thread-safe; a chip shared across [`crate::sim::sweep`]
+/// workers deduplicates plans.
 pub struct SunriseChip {
     pub config: SunriseConfig,
     pub resources: ChipResources,
     pub fabric: Fabric,
+    schedule_cache: ScheduleCache,
 }
 
 impl SunriseChip {
@@ -116,6 +126,7 @@ impl SunriseChip {
             config,
             resources,
             fabric,
+            schedule_cache: ScheduleCache::new(),
         }
     }
 
@@ -135,13 +146,31 @@ impl SunriseChip {
     }
 
     /// Run a network at `batch` under the paper's weight-stationary flow.
-    pub fn run(&self, net: &Network, batch: u32) -> NetworkSchedule {
+    /// Memoized: repeated runs of the same (network, batch) return the
+    /// cached schedule behind an `Arc` (no recompute, no clone).
+    pub fn run(&self, net: &Network, batch: u32) -> Arc<NetworkSchedule> {
         self.run_with_flow(net, batch, Dataflow::WeightStationary)
     }
 
-    /// Run with an explicit dataflow (ablations).
-    pub fn run_with_flow(&self, net: &Network, batch: u32, flow: Dataflow) -> NetworkSchedule {
+    /// Run with an explicit dataflow (ablations). Memoized like [`run`].
+    ///
+    /// [`run`]: SunriseChip::run
+    pub fn run_with_flow(&self, net: &Network, batch: u32, flow: Dataflow) -> Arc<NetworkSchedule> {
+        let key = ScheduleCache::key(net, &self.resources, batch, flow, 1);
+        self.schedule_cache
+            .get_or_compute(key, || self.run_uncached(net, batch, flow))
+    }
+
+    /// Plan from scratch, bypassing (and not populating) the cache — the
+    /// honest baseline for the scheduler microbenches and the cache-identity
+    /// test.
+    pub fn run_uncached(&self, net: &Network, batch: u32, flow: Dataflow) -> NetworkSchedule {
         schedule_network(&net.layers, net.channels_in, batch, flow, 1, &self.resources)
+    }
+
+    /// Number of distinct schedules memoized so far.
+    pub fn cached_schedules(&self) -> usize {
+        self.schedule_cache.len()
     }
 }
 
@@ -237,5 +266,33 @@ mod tests {
         assert!(
             total <= chip.resources.weight_capacity_per_vpu * chip.config.n_vpus as u64
         );
+    }
+
+    #[test]
+    fn repeated_runs_hit_the_schedule_cache() {
+        let chip = SunriseChip::silicon();
+        let net = resnet50();
+        let a = chip.run(&net, 8);
+        assert_eq!(chip.cached_schedules(), 1);
+        let b = chip.run(&net, 8);
+        assert!(Arc::ptr_eq(&a, &b), "second run must be a cache hit");
+        assert_eq!(chip.cached_schedules(), 1);
+        // Cached result is exactly the uncached plan.
+        let fresh = chip.run_uncached(&net, 8, Dataflow::WeightStationary);
+        assert_eq!(*a, fresh);
+        // Different batch → different entry.
+        let _ = chip.run(&net, 4);
+        assert_eq!(chip.cached_schedules(), 2);
+    }
+
+    #[test]
+    fn mutated_resources_never_serve_stale_schedules() {
+        let mut chip = SunriseChip::silicon();
+        let net = resnet50();
+        let before = chip.run(&net, 8);
+        chip.resources.dsu_pool_bw /= 100.0; // choke the feature pools
+        let after = chip.run(&net, 8);
+        assert!(!Arc::ptr_eq(&before, &after), "stale cache hit after mutation");
+        assert!(after.total_ps > before.total_ps, "slower pools must slow the plan");
     }
 }

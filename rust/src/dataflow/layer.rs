@@ -1,11 +1,18 @@
 //! Layer IR: the network description consumed by the mappers and by the
 //! AOT compile path (the same shapes are exported to `python/compile` so
 //! the PJRT artifacts and the simulator agree on the workload).
+//!
+//! Layer names are interned `Arc<str>`: the scheduler stamps every
+//! [`LayerTiming`](crate::dataflow::schedule::LayerTiming) with its layer's
+//! name, and with `Arc` that stamp is a refcount bump instead of a `String`
+//! clone — one of the §Perf allocation fixes.
+
+use std::sync::Arc;
 
 /// Layer kinds supported by the datapath (paper §V: "implements a wide
 /// range of neural networks through a combination of firmware and
 /// configuration").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// 2-D convolution (im2col-GEMM on the VPU pool).
     Conv {
@@ -30,9 +37,9 @@ pub enum LayerKind {
 }
 
 /// One layer instance with its input spatial extent.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Hash)]
 pub struct Layer {
-    pub name: String,
+    pub name: Arc<str>,
     pub kind: LayerKind,
     /// Input feature-map height/width (1 for dense).
     pub in_h: u32,
@@ -50,7 +57,7 @@ pub struct GemmShape {
 impl Layer {
     pub fn conv(name: &str, in_h: u32, in_w: u32, in_c: u32, out_c: u32, k: u32, stride: u32, pad: u32) -> Layer {
         Layer {
-            name: name.to_string(),
+            name: name.into(),
             kind: LayerKind::Conv { in_c, out_c, kh: k, kw: k, stride, pad },
             in_h,
             in_w,
@@ -59,7 +66,7 @@ impl Layer {
 
     pub fn dense(name: &str, in_f: u32, out_f: u32) -> Layer {
         Layer {
-            name: name.to_string(),
+            name: name.into(),
             kind: LayerKind::Dense { in_f, out_f },
             in_h: 1,
             in_w: 1,

@@ -14,7 +14,7 @@
 use crate::dataflow::layer::GemmShape;
 
 /// Which dataflow a mapping uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     WeightStationary,
     OutputStationary,

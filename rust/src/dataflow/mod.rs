@@ -12,7 +12,8 @@
 //! - [`mapping`] — the two dataflow mappers producing per-layer traffic
 //!   (weight/input/output bytes moved per invocation).
 //! - [`schedule`] — compose layer timings into a network schedule
-//!   (pipelined phases per layer, sequential across layers).
+//!   (pipelined phases per layer, sequential across layers), plus the
+//!   [`schedule::ScheduleCache`] memoizing repeated plans.
 
 pub mod layer;
 pub mod mapping;
@@ -22,4 +23,4 @@ pub mod tiling;
 
 pub use layer::{Layer, LayerKind};
 pub use mapping::{Dataflow, LayerTraffic};
-pub use schedule::{LayerTiming, NetworkSchedule};
+pub use schedule::{LayerTiming, NetworkSchedule, ScheduleCache};

@@ -10,6 +10,7 @@
 
 use crate::dataflow::schedule::NetworkSchedule;
 use crate::workloads::Network;
+use std::sync::Arc;
 
 /// One pipeline stage: a contiguous layer range on one chip.
 #[derive(Debug, Clone, PartialEq)]
@@ -129,9 +130,9 @@ pub fn partition(
 }
 
 impl Partition {
-    /// Steady-state pipeline throughput given per-stage schedules:
-    /// bounded by the slowest stage.
-    pub fn pipeline_throughput(&self, stage_schedules: &[NetworkSchedule]) -> f64 {
+    /// Steady-state pipeline throughput given per-stage schedules (as the
+    /// chip's memoized `run` hands them out): bounded by the slowest stage.
+    pub fn pipeline_throughput(&self, stage_schedules: &[Arc<NetworkSchedule>]) -> f64 {
         assert_eq!(stage_schedules.len(), self.stages.len());
         let slowest = stage_schedules
             .iter()
@@ -141,7 +142,7 @@ impl Partition {
     }
 
     /// Fill latency: sum of stage latencies (first sample through).
-    pub fn fill_latency(&self, stage_schedules: &[NetworkSchedule]) -> f64 {
+    pub fn fill_latency(&self, stage_schedules: &[Arc<NetworkSchedule>]) -> f64 {
         stage_schedules.iter().map(|s| s.latency_s()).sum()
     }
 

@@ -17,6 +17,9 @@ use crate::dataflow::mapping::{map_layer, Dataflow, LayerTraffic};
 use crate::dataflow::tiling::{plan, PoolLimits};
 use crate::memory::Ps;
 use crate::units::mac::MacArray;
+use crate::workloads::Network;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// The chip resources the scheduler works against (built by
 /// `chip::sunrise` from its configuration).
@@ -44,6 +47,45 @@ pub struct ChipResources {
 }
 
 impl ChipResources {
+    /// Structural fingerprint for schedule memoization (f64s hashed by bit
+    /// pattern): part of the [`ScheduleCache`] key, so mutating a chip's
+    /// resources after construction can never serve a stale schedule.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        // Exhaustive destructure (no `..`): adding a field to ChipResources
+        // without hashing it here is a compile error, not a stale-cache bug.
+        let ChipResources {
+            macs: MacArray { n_macs, freq_hz, pj_per_mac },
+            n_vpus,
+            lanes_per_vpu,
+            weight_pool_bw,
+            dsu_pool_bw,
+            broadcast_bw,
+            collect_bw,
+            reconfig,
+            weight_capacity_per_vpu,
+            dram_pj_per_byte,
+            fabric_pj_per_byte,
+            static_w,
+        } = *self;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        n_macs.hash(&mut h);
+        freq_hz.to_bits().hash(&mut h);
+        pj_per_mac.to_bits().hash(&mut h);
+        n_vpus.hash(&mut h);
+        lanes_per_vpu.hash(&mut h);
+        weight_pool_bw.to_bits().hash(&mut h);
+        dsu_pool_bw.to_bits().hash(&mut h);
+        broadcast_bw.to_bits().hash(&mut h);
+        collect_bw.to_bits().hash(&mut h);
+        reconfig.hash(&mut h);
+        weight_capacity_per_vpu.hash(&mut h);
+        dram_pj_per_byte.to_bits().hash(&mut h);
+        fabric_pj_per_byte.to_bits().hash(&mut h);
+        static_w.to_bits().hash(&mut h);
+        h.finish()
+    }
+
     pub fn limits(&self) -> PoolLimits {
         PoolLimits {
             n_vpus: self.n_vpus,
@@ -60,9 +102,13 @@ impl ChipResources {
 }
 
 /// Timing and energy of one layer invocation.
-#[derive(Debug, Clone)]
+///
+/// Clone-cheap: the name is an interned `Arc<str>` shared with the layer
+/// IR, so cloning a timing (or a whole [`NetworkSchedule`]) never copies
+/// string data.
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerTiming {
-    pub name: String,
+    pub name: Arc<str>,
     pub compute_ps: Ps,
     pub weights_ps: Ps,
     pub broadcast_ps: Ps,
@@ -78,7 +124,7 @@ pub struct LayerTiming {
 }
 
 /// Whole-network schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkSchedule {
     pub layers: Vec<LayerTiming>,
     pub batch: u32,
@@ -262,6 +308,80 @@ pub fn schedule_network(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Schedule memoization
+// ---------------------------------------------------------------------------
+
+/// Cache key: `(network fingerprint, resources fingerprint, batch,
+/// dataflow, elem_bytes)`.
+///
+/// The network fingerprint hashes the name, input channels and full layer
+/// list (see [`Network::fingerprint`]), so two structurally different
+/// networks never collide on a shared name. The resources fingerprint
+/// ([`ChipResources::fingerprint`]) guards the one remaining hazard of a
+/// per-chip cache: code that mutates a chip's public `resources` after
+/// construction still gets a fresh plan instead of a stale hit.
+pub type ScheduleKey = (u64, u64, u32, Dataflow, u32);
+
+/// Memoizes [`schedule_network`] results behind `Arc`s.
+///
+/// `simulate_queue` precomputes a schedule per batch size, and the table
+/// benches re-plan the same (network, batch) thousands of times; tiling
+/// search makes each plan expensive. The cache turns every repeat into a
+/// lock + hash + `Arc` bump. Thread-safe so parallel sweeps
+/// ([`crate::sim::sweep`]) can share one chip.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: Mutex<HashMap<ScheduleKey, Arc<NetworkSchedule>>>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// The key for scheduling `net` on `resources` at `batch` under
+    /// `flow`/`elem_bytes`.
+    pub fn key(
+        net: &Network,
+        resources: &ChipResources,
+        batch: u32,
+        flow: Dataflow,
+        elem_bytes: u32,
+    ) -> ScheduleKey {
+        (net.fingerprint(), resources.fingerprint(), batch, flow, elem_bytes)
+    }
+
+    /// Return the cached schedule for `key`, computing (outside the lock —
+    /// concurrent misses may compute twice, identical results) and
+    /// inserting it on first use.
+    pub fn get_or_compute(
+        &self,
+        key: ScheduleKey,
+        compute: impl FnOnce() -> NetworkSchedule,
+    ) -> Arc<NetworkSchedule> {
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            return Arc::clone(hit);
+        }
+        let fresh = Arc::new(compute());
+        Arc::clone(self.map.lock().unwrap().entry(key).or_insert(fresh))
+    }
+
+    /// Number of cached schedules.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached schedules.
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,5 +476,51 @@ mod tests {
         let s = schedule_network(&[l], 256, 4, Dataflow::WeightStationary, 1, &test_resources());
         assert!(s.effective_tops() <= 25.0 + 1e-9);
         assert!(s.utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn schedule_cache_hit_is_identical_to_fresh() {
+        let net = crate::workloads::resnet::resnet_mini();
+        let r = test_resources();
+        let cache = ScheduleCache::new();
+        let key = ScheduleCache::key(&net, &r, 8, Dataflow::WeightStationary, 1);
+        let cached = cache.get_or_compute(key, || {
+            schedule_network(&net.layers, net.channels_in, 8, Dataflow::WeightStationary, 1, &r)
+        });
+        assert_eq!(cache.len(), 1);
+        // Second lookup must not recompute and must return the same Arc.
+        let again = cache.get_or_compute(key, || unreachable!("cache miss on identical key"));
+        assert!(Arc::ptr_eq(&cached, &again));
+        // The cached schedule equals a from-scratch computation, layer by
+        // layer (PartialEq covers timings, traffic, energy, names).
+        let fresh =
+            schedule_network(&net.layers, net.channels_in, 8, Dataflow::WeightStationary, 1, &r);
+        assert_eq!(*cached, fresh);
+    }
+
+    #[test]
+    fn schedule_cache_distinguishes_keys() {
+        let net = crate::workloads::resnet::resnet_mini();
+        let r = test_resources();
+        let cache = ScheduleCache::new();
+        for (batch, flow) in [
+            (1u32, Dataflow::WeightStationary),
+            (8, Dataflow::WeightStationary),
+            (8, Dataflow::OutputStationary),
+        ] {
+            cache.get_or_compute(ScheduleCache::key(&net, &r, batch, flow, 1), || {
+                schedule_network(&net.layers, net.channels_in, batch, flow, 1, &r)
+            });
+        }
+        assert_eq!(cache.len(), 3);
+        // A resources change produces a distinct key even for the same net.
+        let mut r2 = r;
+        r2.dsu_pool_bw *= 2.0;
+        assert_ne!(
+            ScheduleCache::key(&net, &r, 8, Dataflow::WeightStationary, 1),
+            ScheduleCache::key(&net, &r2, 8, Dataflow::WeightStationary, 1)
+        );
+        cache.clear();
+        assert!(cache.is_empty());
     }
 }

@@ -1,94 +1,153 @@
-//! The `xla`-crate wrapper: compile an HLO-text artifact once on the PJRT
-//! CPU client, execute it many times from the hot path.
+//! The PJRT execution client.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`, with outputs lowered as a 1-tuple
-//! (`return_tuple=True` on the python side → `to_tuple1()` here).
+//! Two builds of the same public API, selected by the `pjrt` cargo feature:
+//!
+//! - **`pjrt` enabled** — the real `xla`-crate wrapper: compile an HLO-text
+//!   artifact once on the PJRT CPU client, execute it many times from the
+//!   hot path. Pattern follows /opt/xla-example/load_hlo:
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` → `execute`, with
+//!   outputs lowered as a 1-tuple (`return_tuple=True` on the python side →
+//!   `to_tuple1()` here). Requires the vendored `xla` crate.
+//!
+//! - **`pjrt` disabled** (default) — a stub with the identical surface whose
+//!   [`Runtime::load`] returns an error. This keeps the serving stack,
+//!   benches and examples compiling in environments without the XLA
+//!   toolchain; everything artifact-gated skips cleanly at runtime.
 
-use crate::runtime::artifact::{Manifest, ModelArtifact};
-use anyhow::{Context, Result};
+use crate::runtime::artifact::ModelArtifact;
+use crate::util::error::{Error, Result};
 
-/// A compiled, ready-to-run model.
-pub struct PjrtModel {
-    pub artifact: ModelArtifact,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use crate::util::error::Context;
 
-impl PjrtModel {
-    /// Execute on a full batch (`input.len() == artifact.input_elems()`).
-    /// Returns the flattened f32 output.
-    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            input.len() == self.artifact.input_elems(),
-            "input length {} != expected {} for {}",
-            input.len(),
-            self.artifact.input_elems(),
-            self.artifact.name
-        );
-        let lit = xla::Literal::vec1(input).reshape(&self.artifact.input_shape)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    /// A compiled, ready-to-run model.
+    pub struct PjrtModel {
+        pub artifact: ModelArtifact,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Execute a partially-filled batch: `samples` rows of real data,
-    /// remainder zero-padded (the dynamic batcher's short-batch path).
-    /// Returns only the first `samples` rows of output.
-    pub fn execute_padded(&self, rows: &[f32], samples: usize) -> Result<Vec<f32>> {
-        let per_in = self.artifact.input_elems() / self.artifact.batch as usize;
-        let per_out = self.artifact.output_elems() / self.artifact.batch as usize;
-        anyhow::ensure!(
-            rows.len() == per_in * samples && samples <= self.artifact.batch as usize,
-            "bad padded execute: {} rows of {per_in}, batch {}",
-            samples,
-            self.artifact.batch
-        );
-        let mut full = vec![0.0f32; self.artifact.input_elems()];
-        full[..rows.len()].copy_from_slice(rows);
-        let out = self.execute(&full)?;
-        Ok(out[..per_out * samples].to_vec())
+    impl PjrtModel {
+        /// Execute on a full batch (`input.len() == artifact.input_elems()`).
+        /// Returns the flattened f32 output.
+        pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+            crate::ensure!(
+                input.len() == self.artifact.input_elems(),
+                "input length {} != expected {} for {}",
+                input.len(),
+                self.artifact.input_elems(),
+                self.artifact.name
+            );
+            let lit = xla::Literal::vec1(input)
+                .reshape(&self.artifact.input_shape)
+                .map_err(Error::msg)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(Error::msg)?[0][0]
+                .to_literal_sync()
+                .map_err(Error::msg)?;
+            let out = result.to_tuple1().map_err(Error::msg)?;
+            out.to_vec::<f32>().map_err(Error::msg)
+        }
+
+        /// Execute a partially-filled batch: `samples` rows of real data,
+        /// remainder zero-padded (the dynamic batcher's short-batch path).
+        /// Returns only the first `samples` rows of output.
+        pub fn execute_padded(&self, rows: &[f32], samples: usize) -> Result<Vec<f32>> {
+            let per_in = self.artifact.input_elems() / self.artifact.batch as usize;
+            let per_out = self.artifact.output_elems() / self.artifact.batch as usize;
+            crate::ensure!(
+                rows.len() == per_in * samples && samples <= self.artifact.batch as usize,
+                "bad padded execute: {} rows of {per_in}, batch {}",
+                samples,
+                self.artifact.batch
+            );
+            let mut full = vec![0.0f32; self.artifact.input_elems()];
+            full[..rows.len()].copy_from_slice(rows);
+            let out = self.execute(&full)?;
+            Ok(out[..per_out * samples].to_vec())
+        }
+    }
+
+    /// The runtime: one PJRT client + all compiled models from a manifest.
+    pub struct Runtime {
+        pub client: xla::PjRtClient,
+        pub models: Vec<PjrtModel>,
+    }
+
+    impl Runtime {
+        /// Load every model in the manifest directory.
+        pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(&dir).map_err(Error::msg)?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let mut models = Vec::new();
+            for artifact in &manifest.models {
+                let path = manifest.hlo_path(artifact);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", artifact.name))?;
+                models.push(PjrtModel {
+                    artifact: artifact.clone(),
+                    exe,
+                });
+            }
+            Ok(Runtime { client, models })
+        }
     }
 }
 
-/// The runtime: one PJRT client + all compiled models from a manifest.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub models: Vec<PjrtModel>,
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// Stub model (the `pjrt` feature is off: never constructed).
+    pub struct PjrtModel {
+        pub artifact: ModelArtifact,
+    }
+
+    impl PjrtModel {
+        pub fn execute(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            Err(Error::msg("PJRT disabled: rebuild with `--features pjrt`"))
+        }
+
+        pub fn execute_padded(&self, _rows: &[f32], _samples: usize) -> Result<Vec<f32>> {
+            Err(Error::msg("PJRT disabled: rebuild with `--features pjrt`"))
+        }
+    }
+
+    /// Stub runtime with the real API surface; `load` always errors.
+    pub struct Runtime {
+        pub models: Vec<PjrtModel>,
+    }
+
+    impl Runtime {
+        pub fn load(_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+            Err(Error::msg(
+                "PJRT runtime unavailable: this build has no `pjrt` feature \
+                 (requires the vendored `xla` crate and `make artifacts`)",
+            ))
+        }
+    }
 }
+
+pub use imp::{PjrtModel, Runtime};
 
 impl Runtime {
-    /// Load every model in the manifest directory.
-    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut models = Vec::new();
-        for artifact in &manifest.models {
-            let path = manifest.hlo_path(artifact);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compile {}", artifact.name))?;
-            models.push(PjrtModel {
-                artifact: artifact.clone(),
-                exe,
-            });
-        }
-        Ok(Runtime { client, models })
-    }
-
     pub fn model(&self, name: &str) -> Option<&PjrtModel> {
         self.models.iter().find(|m| m.artifact.name == name)
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use crate::runtime::artifact::Manifest;
 
     /// These tests need `make artifacts` to have run; they skip (pass
     /// trivially with a notice) when artifacts are absent so `cargo test`
@@ -144,5 +203,16 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let m = rt.model("mlp784_b8").unwrap();
         assert!(m.execute(&[1.0, 2.0]).is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let e = Runtime::load("/nonexistent").unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

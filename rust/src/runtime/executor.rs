@@ -10,8 +10,8 @@
 
 use crate::chip::sunrise::SunriseChip;
 use crate::runtime::client::Runtime;
+use crate::util::error::Result;
 use crate::workloads::Network;
-use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// A batch execution backend.
@@ -53,7 +53,7 @@ impl Executor for PjrtExecutor {
         let m = self
             .runtime
             .model(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+            .ok_or_else(|| crate::err!("unknown model `{model}`"))?;
         m.execute_padded(input, samples)
     }
 
@@ -96,8 +96,8 @@ impl Executor for SimExecutor {
         let (net, in_per, out_per) = self
             .networks
             .get(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
-        anyhow::ensure!(input.len() == in_per * samples, "bad input length");
+            .ok_or_else(|| crate::err!("unknown model `{model}`"))?;
+        crate::ensure!(input.len() == in_per * samples, "bad input length");
         let sched = self.chip.run(net, samples as u32);
         self.simulated_busy_s += sched.latency_s();
         // Deterministic pseudo-output: per-sample checksum spread over the

@@ -1,143 +1,298 @@
-//! The event queue: a min-heap of `(time, seq)`-ordered closures over a
-//! user-provided `World`.
+//! The event engine: a hierarchical time wheel over **typed events**,
+//! replacing the original `BinaryHeap<Box<dyn FnOnce>>` queue.
 //!
-//! Determinism contract: two events scheduled for the same time run in the
-//! order they were scheduled (FIFO tie-break via a monotonically increasing
-//! sequence number). Events may schedule further events through the
-//! [`Scheduler`] handle; time never goes backwards.
+//! Determinism contract (unchanged from the heap engine, and checked by a
+//! differential test against [`legacy::Engine`]): two events scheduled for
+//! the same time run in the order they were scheduled (FIFO tie-break via a
+//! monotonically increasing sequence number); events may schedule further
+//! events through the [`Scheduler`] handle; time never goes backwards.
+//!
+//! Why typed events: the old engine boxed one closure per event — a heap
+//! allocation plus an indirect call on the hottest loop in the crate, the
+//! exact data-movement-over-compute mistake the paper is about. Worlds now
+//! declare a plain `enum` event type via the [`World`] trait; events live
+//! inline in the wheel's recycled slot vectors, so the steady state of a
+//! running simulation performs **no allocations at all** (see
+//! `EXPERIMENTS.md` §Perf for the measured ripple-chain delta).
+//!
+//! ```
+//! use sunrise::sim::engine::{Engine, Scheduler, World};
+//!
+//! struct Counter(u64);
+//! enum Ev { Tick }
+//! impl World for Counter {
+//!     type Event = Ev;
+//!     fn handle(&mut self, _ev: Ev, sch: &mut Scheduler<Ev>) {
+//!         self.0 += 1;
+//!         if self.0 < 3 {
+//!             sch.after(10, Ev::Tick);
+//!         }
+//!     }
+//! }
+//! let mut e = Engine::new();
+//! e.schedule(0, Ev::Tick);
+//! let mut w = Counter(0);
+//! e.run(&mut w);
+//! assert_eq!((w.0, e.now()), (3, 20));
+//! ```
 
+use crate::sim::wheel::{Entry, TimeWheel};
 use crate::sim::Time;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
-/// Boxed event body.
-type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Scheduler<W>)>;
+/// A simulation world: owns the state and interprets its own event type.
+pub trait World {
+    /// The world's event vocabulary (a plain enum in practice).
+    type Event;
 
-/// Handle through which running events schedule new ones.
-pub struct Scheduler<W> {
-    now: Time,
-    pending: Vec<(Time, EventFn<W>)>,
+    /// Handle one event at the scheduler's current time.
+    fn handle(&mut self, ev: Self::Event, sch: &mut Scheduler<Self::Event>);
 }
 
-impl<W> Scheduler<W> {
+/// Handle through which running events schedule new ones.
+pub struct Scheduler<E> {
+    now: Time,
+    pending: Vec<(Time, E)>,
+}
+
+impl<E> Scheduler<E> {
     /// Current simulation time.
     pub fn now(&self) -> Time {
         self.now
     }
 
-    /// Schedule `f` to run at absolute time `at` (must be ≥ now).
-    pub fn at(&mut self, at: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
+    /// Schedule `ev` to run at absolute time `at` (must be ≥ now).
+    pub fn at(&mut self, at: Time, ev: E) {
         assert!(at >= self.now, "cannot schedule into the past: {at} < {}", self.now);
-        self.pending.push((at, Box::new(f)));
+        self.pending.push((at, ev));
     }
 
-    /// Schedule `f` to run `delay` after now.
-    pub fn after(&mut self, delay: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
-        let at = self.now + delay;
-        self.pending.push((at, Box::new(f)));
-    }
-}
-
-/// Heap node: closure stored inline; ordering on (time, seq) only.
-/// (§Perf L3: the first implementation kept bodies in a side HashMap keyed
-/// by (time, seq) — one hash insert + one hash remove per event. Inlining
-/// the closure in the heap node cut per-event cost ~2×.)
-struct Node<W> {
-    time: Time,
-    seq: u64,
-    f: EventFn<W>,
-}
-
-impl<W> PartialEq for Node<W> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<W> Eq for Node<W> {}
-impl<W> PartialOrd for Node<W> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<W> Ord for Node<W> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
+    /// Schedule `ev` to run `delay` after now.
+    pub fn after(&mut self, delay: Time, ev: E) {
+        let at = self
+            .now
+            .checked_add(delay)
+            .unwrap_or_else(|| panic!("Time overflow: {} + {delay} exceeds u64 ps", self.now));
+        self.pending.push((at, ev));
     }
 }
 
-/// The simulation engine.
-pub struct Engine<W> {
-    heap: BinaryHeap<Reverse<Node<W>>>,
+/// The simulation engine for worlds with event type `E`.
+pub struct Engine<E> {
+    wheel: TimeWheel<E>,
     seq: u64,
     now: Time,
     pub events_run: u64,
+    /// Reused buffers: one slot's worth of due events, and the scheduler's
+    /// pending list (both allocation-free in steady state).
+    batch: Vec<Entry<E>>,
+    pending: Vec<(Time, E)>,
 }
 
-impl<W> Default for Engine<W> {
+impl<E> Default for Engine<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<W> Engine<W> {
+impl<E> Engine<E> {
     pub fn new() -> Self {
         Engine {
-            heap: BinaryHeap::new(),
+            wheel: TimeWheel::new(),
             seq: 0,
             now: 0,
             events_run: 0,
+            batch: Vec::new(),
+            pending: Vec::new(),
         }
     }
 
-    /// Current simulation time.
+    /// Current simulation time (the time of the last executed event).
     pub fn now(&self) -> Time {
         self.now
     }
 
     /// Schedule an event at absolute time `at`.
-    pub fn schedule(&mut self, at: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
-        assert!(at >= self.now, "cannot schedule into the past");
-        let node = Node { time: at, seq: self.seq, f: Box::new(f) };
+    pub fn schedule(&mut self, at: Time, ev: E) {
+        assert!(at >= self.now, "cannot schedule into the past: {at} < {}", self.now);
+        self.wheel.push(at, self.seq, ev);
         self.seq += 1;
-        self.heap.push(Reverse(node));
     }
 
     /// Run until the queue is empty or `until` (inclusive) is passed.
     /// Returns the number of events executed.
-    pub fn run_until(&mut self, world: &mut W, until: Time) -> u64 {
+    pub fn run_until<W: World<Event = E>>(&mut self, world: &mut W, until: Time) -> u64 {
         let start_count = self.events_run;
-        // Reuse one pending-events buffer across iterations (allocation-free
-        // steady state when events schedule ≤ its capacity).
-        let mut pending: Vec<(Time, EventFn<W>)> = Vec::new();
-        while let Some(Reverse(node)) = self.heap.peek_mut().and_then(|top| {
-            if top.0.time > until {
-                None
-            } else {
-                Some(std::collections::binary_heap::PeekMut::pop(top))
-            }
-        }) {
-            self.now = node.time;
-            let mut sch = Scheduler { now: node.time, pending: std::mem::take(&mut pending) };
-            (node.f)(world, &mut sch);
-            self.events_run += 1;
-            pending = sch.pending;
-            for (at, f) in pending.drain(..) {
-                let n = Node { time: at, seq: self.seq, f };
-                self.seq += 1;
-                self.heap.push(Reverse(n));
+        let mut batch = std::mem::take(&mut self.batch);
+        let mut pending = std::mem::take(&mut self.pending);
+        loop {
+            debug_assert!(batch.is_empty());
+            let Some(t) = self.wheel.pop_batch_until(until, &mut batch) else {
+                break;
+            };
+            self.now = t;
+            for entry in batch.drain(..) {
+                let mut sch = Scheduler { now: t, pending: std::mem::take(&mut pending) };
+                world.handle(entry.item, &mut sch);
+                self.events_run += 1;
+                pending = sch.pending;
+                for (at, ev) in pending.drain(..) {
+                    self.wheel.push(at, self.seq, ev);
+                    self.seq += 1;
+                }
             }
         }
+        self.batch = batch;
+        self.pending = pending;
         self.events_run - start_count
     }
 
     /// Run to completion.
-    pub fn run(&mut self, world: &mut W) -> u64 {
+    pub fn run<W: World<Event = E>>(&mut self, world: &mut W) -> u64 {
         self.run_until(world, Time::MAX)
     }
 
     /// Whether events remain.
     pub fn is_idle(&self) -> bool {
-        self.heap.is_empty()
+        self.wheel.is_empty()
+    }
+}
+
+/// The original closure-over-`BinaryHeap` engine, retained verbatim as the
+/// reference semantics for differential tests (and for one-off simulations
+/// where a typed event enum is not worth defining). Not on any hot path:
+/// it allocates one box per event.
+pub mod legacy {
+    use crate::sim::Time;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Boxed event body.
+    type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Scheduler<W>)>;
+
+    /// Handle through which running events schedule new ones.
+    pub struct Scheduler<W> {
+        now: Time,
+        pending: Vec<(Time, EventFn<W>)>,
+    }
+
+    impl<W> Scheduler<W> {
+        /// Current simulation time.
+        pub fn now(&self) -> Time {
+            self.now
+        }
+
+        /// Schedule `f` to run at absolute time `at` (must be ≥ now).
+        pub fn at(&mut self, at: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
+            assert!(at >= self.now, "cannot schedule into the past: {at} < {}", self.now);
+            self.pending.push((at, Box::new(f)));
+        }
+
+        /// Schedule `f` to run `delay` after now.
+        pub fn after(&mut self, delay: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
+            let at = self
+                .now
+                .checked_add(delay)
+                .unwrap_or_else(|| panic!("Time overflow: {} + {delay} exceeds u64 ps", self.now));
+            self.pending.push((at, Box::new(f)));
+        }
+    }
+
+    /// Heap node: closure stored inline; ordering on (time, seq) only.
+    struct Node<W> {
+        time: Time,
+        seq: u64,
+        f: EventFn<W>,
+    }
+
+    impl<W> PartialEq for Node<W> {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.seq == other.seq
+        }
+    }
+    impl<W> Eq for Node<W> {}
+    impl<W> PartialOrd for Node<W> {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<W> Ord for Node<W> {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            (self.time, self.seq).cmp(&(other.time, other.seq))
+        }
+    }
+
+    /// The reference engine.
+    pub struct Engine<W> {
+        heap: BinaryHeap<Reverse<Node<W>>>,
+        seq: u64,
+        now: Time,
+        pub events_run: u64,
+    }
+
+    impl<W> Default for Engine<W> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl<W> Engine<W> {
+        pub fn new() -> Self {
+            Engine {
+                heap: BinaryHeap::new(),
+                seq: 0,
+                now: 0,
+                events_run: 0,
+            }
+        }
+
+        /// Current simulation time.
+        pub fn now(&self) -> Time {
+            self.now
+        }
+
+        /// Schedule an event at absolute time `at`.
+        pub fn schedule(&mut self, at: Time, f: impl FnOnce(&mut W, &mut Scheduler<W>) + 'static) {
+            assert!(at >= self.now, "cannot schedule into the past");
+            let node = Node { time: at, seq: self.seq, f: Box::new(f) };
+            self.seq += 1;
+            self.heap.push(Reverse(node));
+        }
+
+        /// Run until the queue is empty or `until` (inclusive) is passed.
+        /// Returns the number of events executed.
+        pub fn run_until(&mut self, world: &mut W, until: Time) -> u64 {
+            let start_count = self.events_run;
+            let mut pending: Vec<(Time, EventFn<W>)> = Vec::new();
+            while let Some(Reverse(node)) = self.heap.peek_mut().and_then(|top| {
+                if top.0.time > until {
+                    None
+                } else {
+                    Some(std::collections::binary_heap::PeekMut::pop(top))
+                }
+            }) {
+                self.now = node.time;
+                let mut sch = Scheduler { now: node.time, pending: std::mem::take(&mut pending) };
+                (node.f)(world, &mut sch);
+                self.events_run += 1;
+                pending = sch.pending;
+                for (at, f) in pending.drain(..) {
+                    let n = Node { time: at, seq: self.seq, f };
+                    self.seq += 1;
+                    self.heap.push(Reverse(n));
+                }
+            }
+            self.events_run - start_count
+        }
+
+        /// Run to completion.
+        pub fn run(&mut self, world: &mut W) -> u64 {
+            self.run_until(world, Time::MAX)
+        }
+
+        /// Whether events remain.
+        pub fn is_idle(&self) -> bool {
+            self.heap.is_empty()
+        }
     }
 }
 
@@ -145,86 +300,232 @@ impl<W> Engine<W> {
 mod tests {
     use super::*;
 
+    // A log world: events append their id at the current time.
+    struct Log {
+        out: Vec<(Time, u32)>,
+    }
+
+    enum LogEv {
+        Mark(u32),
+        /// Mark, then schedule two children after the given delays.
+        Spawn(u32, Time, Time),
+    }
+
+    impl World for Log {
+        type Event = LogEv;
+        fn handle(&mut self, ev: LogEv, sch: &mut Scheduler<LogEv>) {
+            match ev {
+                LogEv::Mark(id) => self.out.push((sch.now(), id)),
+                LogEv::Spawn(id, d1, d2) => {
+                    self.out.push((sch.now(), id));
+                    sch.after(d1, LogEv::Mark(id + 1000));
+                    sch.after(d2, LogEv::Mark(id + 2000));
+                }
+            }
+        }
+    }
+
     #[test]
     fn runs_in_time_order() {
-        let mut e: Engine<Vec<u32>> = Engine::new();
-        let mut world = Vec::new();
-        e.schedule(30, |w: &mut Vec<u32>, _| w.push(3));
-        e.schedule(10, |w: &mut Vec<u32>, _| w.push(1));
-        e.schedule(20, |w: &mut Vec<u32>, _| w.push(2));
-        e.run(&mut world);
-        assert_eq!(world, vec![1, 2, 3]);
+        let mut e: Engine<LogEv> = Engine::new();
+        let mut w = Log { out: Vec::new() };
+        e.schedule(30, LogEv::Mark(3));
+        e.schedule(10, LogEv::Mark(1));
+        e.schedule(20, LogEv::Mark(2));
+        e.run(&mut w);
+        assert_eq!(w.out, vec![(10, 1), (20, 2), (30, 3)]);
     }
 
     #[test]
     fn same_time_fifo() {
-        let mut e: Engine<Vec<u32>> = Engine::new();
-        let mut world = Vec::new();
+        let mut e: Engine<LogEv> = Engine::new();
+        let mut w = Log { out: Vec::new() };
         for i in 0..10 {
-            e.schedule(5, move |w: &mut Vec<u32>, _| w.push(i));
+            e.schedule(5, LogEv::Mark(i));
         }
-        e.run(&mut world);
-        assert_eq!(world, (0..10).collect::<Vec<_>>());
+        e.run(&mut w);
+        let ids: Vec<u32> = w.out.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert!(w.out.iter().all(|&(t, _)| t == 5));
     }
 
     #[test]
     fn events_schedule_events() {
-        let mut e: Engine<Vec<(u64, u32)>> = Engine::new();
-        let mut world = Vec::new();
-        e.schedule(0, |w: &mut Vec<(u64, u32)>, sch| {
-            w.push((sch.now(), 0));
-            sch.after(100, |w, sch| {
-                w.push((sch.now(), 1));
-                sch.after(50, |w, sch| w.push((sch.now(), 2)));
-            });
-        });
-        e.run(&mut world);
-        assert_eq!(world, vec![(0, 0), (100, 1), (150, 2)]);
+        let mut e: Engine<LogEv> = Engine::new();
+        let mut w = Log { out: Vec::new() };
+        e.schedule(0, LogEv::Spawn(0, 100, 150));
+        e.run(&mut w);
+        assert_eq!(w.out, vec![(0, 0), (100, 1000), (150, 2000)]);
     }
 
     #[test]
     fn run_until_stops() {
-        let mut e: Engine<Vec<u64>> = Engine::new();
-        let mut world = Vec::new();
+        let mut e: Engine<LogEv> = Engine::new();
+        let mut w = Log { out: Vec::new() };
         for t in [10u64, 20, 30, 40] {
-            e.schedule(t, move |w: &mut Vec<u64>, _| w.push(t));
+            e.schedule(t, LogEv::Mark(t as u32));
         }
-        let n = e.run_until(&mut world, 25);
+        let n = e.run_until(&mut w, 25);
         assert_eq!(n, 2);
-        assert_eq!(world, vec![10, 20]);
+        assert_eq!(w.out, vec![(10, 10), (20, 20)]);
         assert!(!e.is_idle());
-        e.run(&mut world);
-        assert_eq!(world, vec![10, 20, 30, 40]);
+        assert_eq!(e.now(), 20);
+        e.run(&mut w);
+        assert_eq!(w.out.len(), 4);
+        assert_eq!(e.now(), 40);
+    }
+
+    #[test]
+    fn run_until_boundary_is_inclusive_and_resumable() {
+        let mut e: Engine<LogEv> = Engine::new();
+        let mut w = Log { out: Vec::new() };
+        e.schedule(10, LogEv::Mark(1));
+        e.schedule(1 << 33, LogEv::Mark(2)); // far future: exercises cascades
+        assert_eq!(e.run_until(&mut w, 10), 1);
+        // Scheduling between now (10) and the far pending event must work
+        // even though the wheel has pending far-future state.
+        e.schedule(11, LogEv::Mark(3));
+        e.run(&mut w);
+        assert_eq!(w.out, vec![(10, 1), (11, 3), (1 << 33, 2)]);
     }
 
     #[test]
     #[should_panic(expected = "past")]
     fn rejects_past_scheduling() {
+        struct Unit;
+        impl World for Unit {
+            type Event = ();
+            fn handle(&mut self, _: (), _: &mut Scheduler<()>) {}
+        }
         let mut e: Engine<()> = Engine::new();
-        e.schedule(100, |_, _| {});
-        e.run(&mut ());
-        e.schedule(50, |_, _| {});
+        e.schedule(100, ());
+        e.run(&mut Unit);
+        e.schedule(50, ());
     }
 
     #[test]
-    fn ripple_chain_of_million_events_is_fast_enough() {
+    #[should_panic(expected = "overflow")]
+    fn after_overflow_panics_not_wraps() {
+        struct Tail;
+        impl World for Tail {
+            type Event = ();
+            fn handle(&mut self, _: (), sch: &mut Scheduler<()>) {
+                sch.after(Time::MAX, ());
+            }
+        }
+        let mut e: Engine<()> = Engine::new();
+        e.schedule(1, ());
+        e.run(&mut Tail);
+    }
+
+    #[test]
+    fn ripple_chain_of_200k_events_is_fast_enough() {
         // Perf smoke: the engine must sustain ≥ 1e6 events/s easily.
         struct W {
             count: u64,
         }
-        fn tick(w: &mut W, sch: &mut Scheduler<W>) {
-            w.count += 1;
-            if w.count < 200_000 {
-                sch.after(1, tick);
+        impl World for W {
+            type Event = ();
+            fn handle(&mut self, _: (), sch: &mut Scheduler<()>) {
+                self.count += 1;
+                if self.count < 200_000 {
+                    sch.after(1, ());
+                }
             }
         }
-        let mut e: Engine<W> = Engine::new();
+        let mut e: Engine<()> = Engine::new();
         let mut w = W { count: 0 };
-        e.schedule(0, tick);
+        e.schedule(0, ());
         let t = std::time::Instant::now();
         e.run(&mut w);
         let dt = t.elapsed().as_secs_f64();
         assert_eq!(w.count, 200_000);
         assert!(dt < 2.0, "200k events took {dt}s");
+    }
+
+    // ---- differential: time-wheel engine vs the legacy heap engine ------
+
+    /// Replay a pseudo-random event storm on both engines and require the
+    /// exact same (time, id) execution order — covering same-time FIFO,
+    /// events-scheduling-events, multi-level times, and the `run_until`
+    /// boundary.
+    #[test]
+    fn differential_matches_legacy_heap_order() {
+        use crate::util::rng::Rng;
+
+        // Deterministic child rule: event `id` at time `t` spawns children
+        // while `id < limit`, with delays derived from (t, id).
+        fn child_delays(t: Time, id: u32) -> [Time; 2] {
+            [1 + (t.wrapping_mul(31).wrapping_add(id as u64)) % 97, (id as u64 % 5) * 1_000_003]
+        }
+
+        struct DiffWorld {
+            out: Vec<(Time, u32)>,
+            limit: u32,
+            next_id: u32,
+        }
+        enum Ev {
+            Hit(u32),
+        }
+        impl World for DiffWorld {
+            type Event = Ev;
+            fn handle(&mut self, ev: Ev, sch: &mut Scheduler<Ev>) {
+                let Ev::Hit(id) = ev;
+                self.out.push((sch.now(), id));
+                if id < self.limit {
+                    for d in child_delays(sch.now(), id) {
+                        let c = self.next_id;
+                        self.next_id += 1;
+                        sch.after(d, Ev::Hit(c));
+                    }
+                }
+            }
+        }
+
+        struct LegacyWorld {
+            out: Vec<(Time, u32)>,
+            limit: u32,
+            next_id: u32,
+        }
+        fn legacy_hit(w: &mut LegacyWorld, sch: &mut legacy::Scheduler<LegacyWorld>, id: u32) {
+            w.out.push((sch.now(), id));
+            if id < w.limit {
+                for d in child_delays(sch.now(), id) {
+                    let c = w.next_id;
+                    w.next_id += 1;
+                    sch.after(d, move |w: &mut LegacyWorld, sch| legacy_hit(w, sch, c));
+                }
+            }
+        }
+
+        let mut rng = Rng::new(0xD1FF);
+        for round in 0..5 {
+            // Identical seed roots for both engines, spanning wheel levels.
+            let roots: Vec<(Time, u32)> = (0..40)
+                .map(|i| (rng.below(1u64 << (8 + 6 * (i % 6))), 1000 + i as u32))
+                .collect();
+            let limit = 1040;
+            let until = 1u64 << 30;
+
+            let mut e = Engine::new();
+            let mut w = DiffWorld { out: Vec::new(), limit, next_id: 2000 };
+            for &(t, id) in &roots {
+                e.schedule(t, Ev::Hit(id));
+            }
+            // Split the run at an arbitrary boundary, then finish.
+            e.run_until(&mut w, until);
+            e.run(&mut w);
+
+            let mut le: legacy::Engine<LegacyWorld> = legacy::Engine::new();
+            let mut lw = LegacyWorld { out: Vec::new(), limit, next_id: 2000 };
+            for &(t, id) in &roots {
+                le.schedule(t, move |w: &mut LegacyWorld, sch| legacy_hit(w, sch, id));
+            }
+            le.run_until(&mut lw, until);
+            le.run(&mut lw);
+
+            assert_eq!(w.out, lw.out, "round {round}: engines diverged");
+            assert_eq!(e.events_run, le.events_run);
+        }
     }
 }

@@ -1,16 +1,24 @@
 //! Discrete-event simulation engine.
 //!
 //! The chip model (pools, fabric, UCE sequencing) runs on this engine:
-//! events are closures over a user `World`, ordered by (time, insertion
-//! sequence) so same-time events run deterministically in schedule order.
+//! worlds declare a typed event enum (the [`engine::World`] trait) and the
+//! engine replays events ordered by (time, insertion sequence), so
+//! same-time events run deterministically in schedule order.
 //!
-//! - [`engine`] — the event queue and run loop.
+//! - [`engine`] — the typed-event engine and run loop (plus the legacy
+//!   closure engine kept as the differential-test reference).
+//! - [`wheel`] — the hierarchical time wheel backing the engine
+//!   (allocation-free steady state).
+//! - [`sweep`] — scoped-thread parallel map for fanning simulation sweeps
+//!   (batch size × chip count × process node) across cores.
 //! - [`stats`] — counters, gauges, and streaming histograms.
 //! - [`trace`] — bounded execution trace for debugging/inspection.
 
 pub mod engine;
 pub mod stats;
+pub mod sweep;
 pub mod trace;
+pub mod wheel;
 
 /// Simulation time in picoseconds (matches [`crate::memory::Ps`]).
 pub type Time = u64;

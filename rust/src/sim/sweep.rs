@@ -1,0 +1,111 @@
+//! Parallel sweep harness: fan a list of independent simulation configs
+//! across OS threads and collect results in input order.
+//!
+//! The table benches and the memory-wall example sweep dozens of chip
+//! configurations (DRAM bandwidth × batch × stack technology × process
+//! node); each point is an independent `SunriseChip::run` or
+//! `simulate_queue`, so the sweep is embarrassingly parallel. This module
+//! is the one place that spawns threads for it (std scoped threads — the
+//! offline vendor set has no rayon).
+//!
+//! Determinism: results come back in input order regardless of thread
+//! interleaving, and each point computes exactly what the serial loop
+//! would, so sweep output is bit-identical to a serial run.
+
+use std::thread;
+
+/// Number of worker threads to use by default (the machine's available
+/// parallelism, or 1 when that cannot be determined).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to [`default_threads`] threads, preserving
+/// input order. `f` receives `(index, &item)`.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    parallel_map_threads(items, default_threads(), f)
+}
+
+/// [`parallel_map`] with an explicit thread count (1 = serial, useful for
+/// benchmarking the parallel speedup itself).
+pub fn parallel_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk_len = items.len().div_ceil(threads);
+    let f = &f;
+    let per_chunk: Vec<Vec<R>> = thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk_len)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                scope.spawn(move || {
+                    chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(j, t)| f(ci * chunk_len + j, t))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    per_chunk.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map_threads(&items, 7, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_exactly() {
+        let items: Vec<f64> = (0..37).map(|i| i as f64 * 0.37).collect();
+        let serial = parallel_map_threads(&items, 1, |_, &x| (x.sin() * 1e9) as i64);
+        let parallel = parallel_map_threads(&items, 8, |_, &x| (x.sin() * 1e9) as i64);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn visits_every_item_once() {
+        let n = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..55).collect();
+        let out = parallel_map(&items, |_, &x| {
+            n.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 55);
+        assert_eq!(n.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn handles_small_and_empty_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map_threads(&[9u32], 16, |_, &x| x + 1), vec![10]);
+    }
+}

@@ -80,6 +80,16 @@ impl Bencher {
         }
     }
 
+    /// [`new`](Bencher::new), unless `SUNRISE_BENCH_QUICK` is set in the
+    /// environment, then [`quick`](Bencher::quick) — the CI smoke-run knob.
+    pub fn from_env() -> Self {
+        if std::env::var_os("SUNRISE_BENCH_QUICK").is_some() {
+            Self::quick()
+        } else {
+            Self::new()
+        }
+    }
+
     /// Time `f`, auto-scaling the batch size so each sample takes ≥ ~2 ms.
     /// `f` should return a value that depends on the computation (use
     /// `std::hint::black_box` inside if needed) to defeat DCE.
@@ -122,12 +132,45 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Print a final summary block (benches call this before exiting).
+    /// Print a final summary block (benches call this before exiting) and
+    /// write the machine-readable companion `BENCH_<title>.json` at the
+    /// repo root, so the perf trajectory is tracked across PRs (see
+    /// EXPERIMENTS.md §Perf).
     pub fn summary(&self, title: &str) {
         println!("\n==== {title} — {} benchmarks ====", self.results.len());
         for m in &self.results {
             println!("{}", m.report());
         }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("BENCH_{title}.json"));
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("(wrote {})", path.display()),
+            Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+        }
+    }
+
+    /// The summary as a JSON document: one record per benchmark with name,
+    /// iteration count, and ns/op (median plus min/p90 spread).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::str(&m.name)),
+                    ("iters", Json::num(m.iters as f64)),
+                    ("ns_per_op", Json::num(m.median_ns)),
+                    ("min_ns", Json::num(m.min_ns)),
+                    ("p90_ns", Json::num(m.p90_ns)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("samples", Json::num(self.samples as f64)),
+            ("results", Json::Arr(results)),
+        ])
+        .to_pretty()
     }
 }
 
@@ -159,5 +202,19 @@ mod tests {
         assert_eq!(fmt_ns(2500.0), "2.50 us");
         assert_eq!(fmt_ns(3.2e6), "3.200 ms");
         assert_eq!(fmt_ns(1.5e9), "1.500 s");
+    }
+
+    #[test]
+    fn json_roundtrips_measurements() {
+        use crate::util::json::Json;
+        let mut b = Bencher::quick();
+        b.bench("alpha", || 1u64 + 1);
+        b.bench("beta", || 2u64 * 3);
+        let doc = Json::parse(&b.to_json()).expect("valid json");
+        let results = doc.req_arr("results").unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].req_str("name").unwrap(), "alpha");
+        assert!(results[0].req_f64("ns_per_op").unwrap() > 0.0);
+        assert!(results[1].req_f64("iters").unwrap() >= 1.0);
     }
 }

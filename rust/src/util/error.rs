@@ -1,0 +1,123 @@
+//! Minimal error type for the runtime/serving layer (anyhow replacement —
+//! the offline vendor set has no `anyhow`).
+//!
+//! The shape mirrors the subset of `anyhow` this crate used: a string-ish
+//! error, a `Result` alias, `err!`/`ensure!` macros, and a [`Context`]
+//! extension trait for `.context(..)` / `.with_context(..)` on results and
+//! options.
+
+use std::fmt;
+
+/// A boxed-string error with optional context chain (flattened into the
+/// message at construction time — good enough for CLI/test surfaces).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (the `anyhow::Result` stand-in).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Attach context to errors, anyhow-style.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error) unless `cond`
+/// holds (the `anyhow::ensure!` stand-in).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context_chain() {
+        let base: std::result::Result<(), Error> = Err(Error::msg("root cause"));
+        let wrapped = base.context("loading manifest");
+        assert_eq!(wrapped.unwrap_err().to_string(), "loading manifest: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(ok: bool) -> crate::util::error::Result<u32> {
+            crate::ensure!(ok, "wanted ok, got {ok}");
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "wanted ok, got false");
+        assert_eq!(crate::err!("x = {}", 3).to_string(), "x = 3");
+    }
+}

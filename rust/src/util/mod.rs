@@ -11,9 +11,12 @@
 //!   formatting.
 //! - [`cli`] — a minimal declarative argument parser for the `sunrise`
 //!   binary and examples.
+//! - [`error`] — string-context error type + `Result` alias (anyhow
+//!   replacement) for the runtime/serving layer.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -33,6 +33,22 @@ impl Network {
     pub fn total_params(&self) -> u64 {
         self.layers.iter().map(|l| l.weight_params()).sum()
     }
+
+    /// Structural fingerprint for schedule memoization
+    /// ([`crate::dataflow::schedule::ScheduleCache`]): hashes the name,
+    /// input channels and every layer, so editing any layer changes the
+    /// cache key. O(layers) — negligible next to one tiling plan.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        // Exhaustive destructure: a new Network field must be hashed (or
+        // consciously skipped) here, on pain of a compile error.
+        let Network { name, channels_in, layers } = self;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        name.hash(&mut h);
+        channels_in.hash(&mut h);
+        layers.hash(&mut h);
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -61,5 +77,17 @@ mod tests {
         // d=1024, ffn 4×: qkv+proj = 4d² ; ffn = 8d² → 12d² per block.
         let net = transformer::decoder_block(1024, 128);
         assert_eq!(net.total_params(), 12 * 1024 * 1024);
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure() {
+        let a = resnet::resnet50();
+        let b = resnet::resnet50();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Same name, different structure → different fingerprint.
+        let mut c = resnet::resnet50();
+        c.layers.pop();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), resnet::resnet_mini().fingerprint());
     }
 }

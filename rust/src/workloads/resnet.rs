@@ -31,7 +31,7 @@ fn bottleneck(
         layers.push(Layer::conv(&format!("{name}.proj"), h, w, in_c, out_c, 1, stride, 0));
     }
     layers.push(Layer {
-        name: format!("{name}.add"),
+        name: format!("{name}.add").into(),
         kind: LayerKind::EltwiseAdd,
         in_h: oh,
         in_w: ow,
@@ -139,7 +139,7 @@ mod tests {
     #[test]
     fn spatial_flow_ends_at_7x7() {
         let net = resnet50();
-        let gap = net.layers.iter().find(|l| l.name == "avgpool").unwrap();
+        let gap = net.layers.iter().find(|l| &*l.name == "avgpool").unwrap();
         assert_eq!((gap.in_h, gap.in_w), (7, 7));
     }
 
@@ -147,7 +147,7 @@ mod tests {
     fn first_stage_shapes() {
         let net = resnet50();
         let c = &net.layers[2]; // layer1.0.conv1
-        assert_eq!(c.name, "layer1.0.conv1");
+        assert_eq!(&*c.name, "layer1.0.conv1");
         let g = c.gemm(1).unwrap();
         assert_eq!((g.m, g.k, g.n), (64, 64, 56 * 56));
     }
