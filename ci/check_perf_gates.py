@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Check the EXPERIMENTS.md §Perf acceptance gates on a measured
+BENCH_hotpath.json: the time-wheel engine must beat the in-tree legacy
+heap engine by >=5x on the 10k-event ripple chain, and the cached
+schedule must beat the uncached plan by >=10x.
+
+Exit 0 when both gates pass, 1 otherwise (CI retries the bench once on
+failure to rule out shared-runner noise before going red).
+"""
+
+import json
+import sys
+
+GATES = [
+    # (numerator row, denominator row, minimum ratio, label)
+    (
+        "sim engine: 10k ripple (legacy boxed heap)",
+        "sim engine: 10k-event ripple chain",
+        5.0,
+        "ripple chain (wheel vs legacy heap)",
+    ),
+    (
+        "scheduler: resnet50 full net (b=8, uncached)",
+        "scheduler: resnet50 full net (b=8)",
+        10.0,
+        "schedule cache (cached vs uncached)",
+    ),
+]
+
+
+def main() -> int:
+    with open("BENCH_hotpath.json") as f:
+        doc = json.load(f)
+    ns = {r["name"]: r["ns_per_op"] for r in doc["results"]}
+    missing = [row for gate in GATES for row in gate[:2] if row not in ns]
+    if missing:
+        print("FAIL: BENCH_hotpath.json has no measured row(s):")
+        for row in missing:
+            print(f"  - {row}")
+        print("(stale/projection JSON? run `cargo bench --bench hotpath_microbench` first)")
+        return 1
+    ok = True
+    for slow, fast, min_ratio, label in GATES:
+        ratio = ns[slow] / ns[fast]
+        status = "PASS" if ratio >= min_ratio else "FAIL"
+        print(
+            f"{status}: {label}: {ns[slow]:.0f} ns vs {ns[fast]:.0f} ns "
+            f"-> {ratio:.1f}x (gate >= {min_ratio:.0f}x)"
+        )
+        ok = ok and ratio >= min_ratio
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+//! Capacity planning on the virtual-time serving stack: sweep a
+//! rate×replicas grid of deterministic Poisson traces through the
+//! batcher→router→chip pipeline in simulated time, print the p99-vs-load
+//! table, and locate each curve's saturation knee.
+//!
+//! The run also asserts the acceptance property pinned by the capacity
+//! tests: at fixed replicas, p99 latency is monotonically non-decreasing
+//! in arrival rate.
+//!
+//! Run: `cargo run --release --example capacity_sweep`
+
+use sunrise::chip::sunrise::SunriseConfig;
+use sunrise::coordinator::capacity::{
+    curve, render_grid, saturation_knee, sweep_capacity, GridConfig,
+};
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let net = resnet50();
+    let grid = GridConfig {
+        rates: vec![200.0, 500.0, 1000.0, 1500.0, 2500.0, 4000.0],
+        replicas: vec![1, 2, 4],
+        max_batches: vec![8],
+        duration_s: 0.5,
+        ..GridConfig::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!("{}", render_grid(&points));
+
+    for &replicas in &grid.replicas {
+        let c = curve(&points, replicas, 8);
+
+        // Acceptance property: p99 non-decreasing in rate at fixed replicas.
+        for pair in c.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            assert!(
+                hi.report.snapshot.p99_latency_s >= lo.report.snapshot.p99_latency_s,
+                "p99 decreased with load at {replicas} replicas: \
+                 {:.0} req/s -> {:.3} ms but {:.0} req/s -> {:.3} ms",
+                lo.rate,
+                lo.report.snapshot.p99_latency_s * 1e3,
+                hi.rate,
+                hi.report.snapshot.p99_latency_s * 1e3,
+            );
+        }
+
+        match saturation_knee(&c, 0.9) {
+            Some(k) => println!("replicas={replicas}: saturation knee ≈ {k:.0} req/s"),
+            None => println!("replicas={replicas}: kept up at every swept rate"),
+        }
+    }
+    println!("p99 monotone in rate at fixed replicas: OK");
+    println!(
+        "({} deterministic grid points, {:.1} virtual s each, {wall_ms:.0} ms wall on {} threads)",
+        points.len(),
+        grid.duration_s,
+        sunrise::sim::sweep::default_threads().min(points.len()),
+    );
+}

@@ -35,10 +35,12 @@ fn main() -> sunrise::util::error::Result<()> {
     let replicas = args.get_usize("replicas");
     let model = "mlp784_b8";
 
-    let mut cfg = ServerConfig::default();
-    cfg.batcher = BatcherConfig {
-        max_batch: args.get_usize("max-batch") as u32,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms")),
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: args.get_usize("max-batch") as u32,
+            max_wait: sunrise::coordinator::clock::millis(args.get_u64("max-wait-ms")),
+        },
+        ..ServerConfig::default()
     };
 
     let executors: Vec<Box<dyn Executor>> = (0..replicas)
@@ -68,6 +70,11 @@ fn main() -> sunrise::util::error::Result<()> {
     let snap = server.metrics.snapshot();
     println!("== end-to-end serving (PJRT numerics, {replicas} replicas) ==");
     println!("requests: {submitted} in {wall:.2}s wall -> {:.1} req/s", submitted as f64 / wall);
+    println!(
+        "collected {}/{submitted} responses ({} timed out)",
+        resps.len(),
+        submitted - resps.len()
+    );
     println!("{}", snap.report());
     let finite = resps
         .iter()

@@ -8,7 +8,6 @@
 //! Run: `cargo bench --bench hotpath_microbench`
 //! (set `SUNRISE_BENCH_QUICK=1` for the CI smoke configuration)
 
-use std::time::{Duration, Instant};
 use sunrise::chip::sunrise::SunriseChip;
 use sunrise::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use sunrise::coordinator::request::InferRequest;
@@ -18,6 +17,7 @@ use sunrise::memory::dram::Op;
 use sunrise::memory::unimem::UniMemPool;
 use sunrise::runtime::artifact::Manifest;
 use sunrise::sim::engine::{legacy, Engine, Scheduler, World};
+use sunrise::sim::millis;
 use sunrise::sim::sweep::parallel_map_threads;
 use sunrise::util::bench::Bencher;
 use sunrise::workloads::resnet::resnet50;
@@ -113,17 +113,16 @@ fn main() {
         p.transfer(0, 0, 1 << 20, Op::Read).done_at
     });
 
-    // --- dynamic batcher ---
+    // --- dynamic batcher (virtual time: timestamps are plain u64 ps) ---
     b.bench("batcher: push 64 requests -> 8 batches", || {
         let mut batcher = DynamicBatcher::new(BatcherConfig {
             max_batch: 8,
-            max_wait: Duration::from_secs(1),
+            max_wait: millis(1000),
         });
-        let now = Instant::now();
         let mut dispatched = 0;
         for i in 0..64u64 {
-            let req = InferRequest::new(i, "m", vec![0.0; 4]);
-            if batcher.push(req, now).is_some() {
+            let req = InferRequest::new(i, "m", vec![0.0; 4], i);
+            if batcher.push(req, i).is_some() {
                 dispatched += 1;
             }
         }

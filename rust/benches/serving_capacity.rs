@@ -1,0 +1,65 @@
+//! Bench: the virtual-time serving stack — single-trace replay throughput
+//! (events/s through batcher→router→replica models) and the capacity-grid
+//! sweep, serial vs parallel. Companion JSON lands in
+//! `BENCH_serving.json` at the repo root.
+//!
+//! Run: `cargo bench --bench serving_capacity`
+//! (set `SUNRISE_BENCH_QUICK=1` for the CI smoke configuration)
+
+use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
+use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::capacity::{sweep_capacity_threads, GridConfig};
+use sunrise::coordinator::clock::millis;
+use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
+use sunrise::sim::sweep::default_threads;
+use sunrise::util::bench::Bencher;
+use sunrise::util::rng::Rng;
+use sunrise::workloads::generator::poisson_trace;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let net = resnet50();
+
+    // --- single replay: the event-loop hot path ---
+    // Service tables precomputed once (register hits the schedule cache);
+    // the timed region is pure event processing in virtual time.
+    let config = SimServeConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+        ..SimServeConfig::default()
+    };
+    let mut server = SimServer::new(SunriseChip::silicon(), config);
+    server.register("resnet50", &net);
+    let trace_10k = poisson_trace(&mut Rng::new(42), 20_000.0, 0.5, "resnet50", 1);
+    b.bench("simserve: ~10k-request trace, 4 replicas", || {
+        server.replay(&trace_10k, 4).served
+    });
+    let trace_1k = poisson_trace(&mut Rng::new(7), 2_000.0, 0.5, "resnet50", 1);
+    b.bench("simserve: ~1k-request trace, 1 replica", || {
+        server.replay(&trace_1k, 1).served
+    });
+
+    // --- capacity grid: serial vs parallel sweep ---
+    let grid = GridConfig {
+        rates: vec![400.0, 1200.0, 2400.0, 4800.0],
+        replicas: vec![1, 2],
+        max_batches: vec![8],
+        duration_s: 0.2,
+        ..GridConfig::default()
+    };
+    let chip = SunriseConfig::default();
+    b.bench("capacity grid: 8-pt rate×replicas, serial", || {
+        sweep_capacity_threads(&net, "resnet50", &chip, &grid, 1)
+            .iter()
+            .map(|p| p.report.served)
+            .sum::<u64>()
+    });
+    b.bench("capacity grid: 8-pt rate×replicas, parallel", || {
+        sweep_capacity_threads(&net, "resnet50", &chip, &grid, default_threads())
+            .iter()
+            .map(|p| p.report.served)
+            .sum::<u64>()
+    });
+
+    b.summary("serving");
+}

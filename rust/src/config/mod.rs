@@ -10,8 +10,8 @@ use crate::coordinator::router::Policy;
 use crate::coordinator::server::ServerConfig;
 use crate::interconnect::Technology;
 use crate::memory::ns;
+use crate::sim::from_seconds;
 use crate::util::json::Json;
-use std::time::Duration;
 
 /// Parse a chip config JSON (all fields optional; defaults = silicon).
 ///
@@ -76,7 +76,10 @@ pub fn server_config(j: &Json) -> Result<ServerConfig, String> {
         b.max_batch = v as u32;
     }
     if let Some(v) = j.get("max_wait_ms").and_then(Json::as_f64) {
-        b.max_wait = Duration::from_secs_f64(v / 1e3);
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("max_wait_ms must be a finite number >= 0, got {v}"));
+        }
+        b.max_wait = from_seconds(v / 1e3);
     }
     if let Some(v) = j.get("queue_capacity").and_then(Json::as_u64) {
         c.queue_capacity = v as usize;
@@ -147,13 +150,19 @@ mod tests {
         .unwrap();
         let c = server_config(&j).unwrap();
         assert_eq!(c.batcher.max_batch, 16);
-        assert_eq!(c.batcher.max_wait, Duration::from_millis(5));
+        assert_eq!(c.batcher.max_wait, crate::sim::millis(5));
         assert_eq!(c.routing, Policy::RoundRobin);
     }
 
     #[test]
     fn server_rejects_zero_batch() {
         let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(server_config(&j).is_err());
+    }
+
+    #[test]
+    fn server_rejects_negative_max_wait() {
+        let j = Json::parse(r#"{"max_wait_ms": -5.0}"#).unwrap();
         assert!(server_config(&j).is_err());
     }
 }

@@ -1,12 +1,17 @@
 //! Dynamic batching policy: accumulate requests per model, dispatch when
 //! the batch is full or the oldest request's deadline expires.
 //!
-//! Pure logic (no threads, no clocks of its own) so the policy is
-//! property-testable; the server drives it with real time.
+//! Pure logic over [`Time`] timestamps (no threads, no clock of its own)
+//! so the policy is property-testable and the *same* code serves both the
+//! wall-clock threaded server and the deterministic virtual-time server;
+//! each backend drives it with `now` from its own
+//! [`Clock`](crate::coordinator::clock::Clock).
 
+use crate::coordinator::clock::millis;
 use crate::coordinator::request::InferRequest;
+use crate::sim::Time;
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -14,25 +19,22 @@ pub struct BatcherConfig {
     /// Dispatch as soon as this many requests are waiting.
     pub max_batch: u32,
     /// Dispatch a partial batch once the oldest request has waited this
-    /// long.
-    pub max_wait: Duration,
+    /// long (picoseconds).
+    pub max_wait: Time,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-        }
+        BatcherConfig { max_batch: 8, max_wait: millis(2) }
     }
 }
 
 /// A dispatched batch for one model.
 #[derive(Debug)]
 pub struct Batch {
-    pub model: String,
+    pub model: Arc<str>,
     pub requests: Vec<InferRequest>,
-    pub formed_at: Instant,
+    pub formed_at: Time,
 }
 
 impl Batch {
@@ -59,7 +61,7 @@ impl Batch {
 #[derive(Debug)]
 pub struct DynamicBatcher {
     pub config: BatcherConfig,
-    pending: BTreeMap<String, Vec<InferRequest>>,
+    pending: BTreeMap<Arc<str>, Vec<InferRequest>>,
     /// Dispatch counters for metrics: (full, timeout) batches.
     pub full_batches: u64,
     pub timeout_batches: u64,
@@ -86,60 +88,57 @@ impl DynamicBatcher {
         self.pending.values().map(|v| v.len()).sum()
     }
 
+    /// Earliest `enqueued_at` among all pending requests (queues are FIFO,
+    /// so this is the minimum over queue heads). `None` when empty.
+    pub fn oldest_enqueued(&self) -> Option<Time> {
+        self.pending
+            .values()
+            .filter_map(|q| q.first().map(|r| r.enqueued_at))
+            .min()
+    }
+
     /// Add a request; returns a full batch if one formed.
-    pub fn push(&mut self, req: InferRequest, now: Instant) -> Option<Batch> {
-        let q = self.pending.entry(req.model.clone()).or_default();
+    pub fn push(&mut self, req: InferRequest, now: Time) -> Option<Batch> {
+        let q = self.pending.entry(Arc::clone(&req.model)).or_default();
         q.push(req);
         if q.len() >= self.config.max_batch as usize {
-            let model = q[0].model.clone();
+            let model = Arc::clone(&q[0].model);
             let requests = std::mem::take(q);
             self.full_batches += 1;
-            return Some(Batch {
-                model,
-                requests,
-                formed_at: now,
-            });
+            return Some(Batch { model, requests, formed_at: now });
         }
         None
     }
 
     /// Dispatch any queues whose oldest request exceeded `max_wait`.
-    pub fn poll_timeouts(&mut self, now: Instant) -> Vec<Batch> {
+    pub fn poll_timeouts(&mut self, now: Time) -> Vec<Batch> {
         let mut out = Vec::new();
-        let expired: Vec<String> = self
+        let expired: Vec<Arc<str>> = self
             .pending
             .iter()
             .filter(|(_, q)| {
                 q.first()
-                    .map(|r| now.duration_since(r.enqueued_at) >= self.config.max_wait)
+                    .map(|r| now.saturating_sub(r.enqueued_at) >= self.config.max_wait)
                     .unwrap_or(false)
             })
-            .map(|(m, _)| m.clone())
+            .map(|(m, _)| Arc::clone(m))
             .collect();
         for model in expired {
             let requests = std::mem::take(self.pending.get_mut(&model).unwrap());
             if !requests.is_empty() {
                 self.timeout_batches += 1;
-                out.push(Batch {
-                    model,
-                    requests,
-                    formed_at: now,
-                });
+                out.push(Batch { model, requests, formed_at: now });
             }
         }
         out
     }
 
     /// Drain everything (shutdown path).
-    pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
+    pub fn drain(&mut self, now: Time) -> Vec<Batch> {
         let mut out = Vec::new();
         for (model, q) in std::mem::take(&mut self.pending) {
             if !q.is_empty() {
-                out.push(Batch {
-                    model,
-                    requests: q,
-                    formed_at: now,
-                });
+                out.push(Batch { model, requests: q, formed_at: now });
             }
         }
         out
@@ -150,20 +149,17 @@ impl DynamicBatcher {
 mod tests {
     use super::*;
 
-    fn req(id: u64, model: &str) -> InferRequest {
-        InferRequest::new(id, model, vec![id as f32])
+    fn req(id: u64, model: &str, now: Time) -> InferRequest {
+        InferRequest::new(id, model, vec![id as f32], now)
     }
 
     #[test]
     fn full_batch_dispatches_immediately() {
-        let mut b = DynamicBatcher::new(BatcherConfig {
-            max_batch: 3,
-            max_wait: Duration::from_secs(10),
-        });
-        let now = Instant::now();
-        assert!(b.push(req(1, "m"), now).is_none());
-        assert!(b.push(req(2, "m"), now).is_none());
-        let batch = b.push(req(3, "m"), now).unwrap();
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: millis(10_000) });
+        let now = 0;
+        assert!(b.push(req(1, "m", now), now).is_none());
+        assert!(b.push(req(2, "m", now), now).is_none());
+        let batch = b.push(req(3, "m", now), now).unwrap();
         assert_eq!(batch.len(), 3);
         assert_eq!(b.depth("m"), 0);
         assert_eq!(b.full_batches, 1);
@@ -171,31 +167,23 @@ mod tests {
 
     #[test]
     fn models_batch_independently() {
-        let mut b = DynamicBatcher::new(BatcherConfig {
-            max_batch: 2,
-            max_wait: Duration::from_secs(10),
-        });
-        let now = Instant::now();
-        assert!(b.push(req(1, "a"), now).is_none());
-        assert!(b.push(req(2, "b"), now).is_none());
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: millis(10_000) });
+        let now = 0;
+        assert!(b.push(req(1, "a", now), now).is_none());
+        assert!(b.push(req(2, "b", now), now).is_none());
         assert_eq!(b.depth("a"), 1);
         assert_eq!(b.depth("b"), 1);
-        let batch = b.push(req(3, "a"), now).unwrap();
-        assert_eq!(batch.model, "a");
+        let batch = b.push(req(3, "a", now), now).unwrap();
+        assert_eq!(&*batch.model, "a");
         assert_eq!(b.depth("b"), 1);
     }
 
     #[test]
     fn timeout_flushes_partial_batch() {
-        let mut b = DynamicBatcher::new(BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(1),
-        });
-        let now = Instant::now();
-        b.push(req(1, "m"), now);
-        assert!(b.poll_timeouts(now).is_empty());
-        let later = now + Duration::from_millis(5);
-        let batches = b.poll_timeouts(later);
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: millis(1) });
+        b.push(req(1, "m", 0), 0);
+        assert!(b.poll_timeouts(0).is_empty());
+        let batches = b.poll_timeouts(millis(5));
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].len(), 1);
         assert_eq!(b.timeout_batches, 1);
@@ -203,26 +191,37 @@ mod tests {
 
     #[test]
     fn concat_preserves_order() {
-        let mut b = DynamicBatcher::new(BatcherConfig {
-            max_batch: 3,
-            max_wait: Duration::from_secs(1),
-        });
-        let now = Instant::now();
-        b.push(req(10, "m"), now);
-        b.push(req(20, "m"), now);
-        let batch = b.push(req(30, "m"), now).unwrap();
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: millis(1000) });
+        let now = 0;
+        b.push(req(10, "m", now), now);
+        b.push(req(20, "m", now), now);
+        let batch = b.push(req(30, "m", now), now).unwrap();
         assert_eq!(batch.concat_inputs(), vec![10.0, 20.0, 30.0]);
     }
 
     #[test]
     fn drain_empties_everything() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
-        let now = Instant::now();
-        b.push(req(1, "a"), now);
-        b.push(req(2, "b"), now);
+        let now = 0;
+        b.push(req(1, "a", now), now);
+        b.push(req(2, "b", now), now);
         let drained = b.drain(now);
         assert_eq!(drained.len(), 2);
         assert_eq!(b.total_depth(), 0);
+    }
+
+    #[test]
+    fn oldest_enqueued_tracks_queue_heads() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: millis(100) });
+        assert_eq!(b.oldest_enqueued(), None);
+        b.push(req(1, "b", 50), 50);
+        b.push(req(2, "a", 30), 30);
+        assert_eq!(b.oldest_enqueued(), Some(30));
+        // Flushing the older queue leaves the younger head.
+        for batch in b.poll_timeouts(30 + millis(100)) {
+            assert_eq!(&*batch.model, "a");
+        }
+        assert_eq!(b.oldest_enqueued(), Some(50));
     }
 
     #[test]
@@ -232,15 +231,12 @@ mod tests {
             let max_batch = g.usize("max_batch", 1, 9) as u32;
             let n = g.usize("n", 1, 120);
             let models = ["a", "b", "c"];
-            let mut b = DynamicBatcher::new(BatcherConfig {
-                max_batch,
-                max_wait: Duration::from_secs(100),
-            });
-            let now = Instant::now();
+            let mut b = DynamicBatcher::new(BatcherConfig { max_batch, max_wait: millis(100_000) });
+            let now = 0;
             let mut seen = Vec::new();
             for id in 0..n as u64 {
                 let m = g.pick("model", &models);
-                if let Some(batch) = b.push(req(id, m), now) {
+                if let Some(batch) = b.push(req(id, m, now), now) {
                     seen.extend(batch.requests.iter().map(|r| r.id));
                 }
             }
@@ -250,6 +246,62 @@ mod tests {
             seen.sort_unstable();
             let expect: Vec<u64> = (0..n as u64).collect();
             crate::prop_assert!(seen == expect, "lost/dup requests: {} vs {}", seen.len(), n);
+            Ok(())
+        });
+    }
+
+    /// Policy invariants under virtual time: no batch ever exceeds
+    /// `max_batch`, dispatched requests never waited longer than
+    /// `max_wait` past a poll, and after any `poll_timeouts(now)` no
+    /// queued request is older than `max_wait`.
+    #[test]
+    fn property_respects_max_batch_and_deadline() {
+        use crate::util::proptest::check;
+        check(0xDEAD1, 50, |g| {
+            let max_batch = g.usize("max_batch", 1, 10) as u32;
+            let max_wait = g.u64_below("max_wait", millis(5)) + 1;
+            let mut b = DynamicBatcher::new(BatcherConfig { max_batch, max_wait });
+            let models = ["a", "b"];
+            let mut now: Time = 0;
+            let mut id = 0u64;
+            let check_batch = |batch: &Batch| -> Result<(), String> {
+                crate::prop_assert!(
+                    batch.len() <= max_batch as usize,
+                    "batch of {} exceeds max_batch {max_batch}",
+                    batch.len()
+                );
+                for r in &batch.requests {
+                    crate::prop_assert!(
+                        batch.formed_at >= r.enqueued_at,
+                        "batch formed before a member was enqueued"
+                    );
+                }
+                Ok(())
+            };
+            for _ in 0..g.usize("steps", 1, 150) {
+                now += g.u64_below("dt", max_wait.max(2));
+                if g.bool("arrive") {
+                    let m = g.pick("model", &models);
+                    let r = InferRequest::new(id, *m, Vec::new(), now);
+                    id += 1;
+                    if let Some(batch) = b.push(r, now) {
+                        check_batch(&batch)?;
+                    }
+                } else {
+                    for batch in b.poll_timeouts(now) {
+                        check_batch(&batch)?;
+                    }
+                    // Deadline invariant: nothing still queued has waited
+                    // max_wait or longer.
+                    if let Some(oldest) = b.oldest_enqueued() {
+                        crate::prop_assert!(
+                            now.saturating_sub(oldest) < max_wait,
+                            "request held past max_wait after poll: waited {} >= {max_wait}",
+                            now - oldest
+                        );
+                    }
+                }
+            }
             Ok(())
         });
     }

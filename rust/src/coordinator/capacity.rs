@@ -1,0 +1,319 @@
+//! Capacity-planning grids: rate × replicas × batch-policy sweeps of the
+//! virtual-time server, fanned across cores.
+//!
+//! Each grid point is an independent [`SimServer::replay`] of a
+//! deterministic Poisson trace (fixed seed, so traces vary only with the
+//! arrival rate), which makes the whole grid embarrassingly parallel via
+//! [`sweep::parallel_map`](crate::sim::sweep::parallel_map) — and
+//! bit-identical between serial and parallel runs. The output answers the
+//! deployment questions the paper's single 1500 img/s number hides: where
+//! is the saturation knee for N replicas, and what does p99 look like on
+//! the way there.
+//!
+//! Points are ordered (replicas, max_batch) group by group with rates
+//! ascending inside each group, so p99-vs-load curves read straight down
+//! the table.
+
+use crate::chip::sunrise::{SunriseChip, SunriseConfig};
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::clock::millis;
+use crate::coordinator::router::Policy;
+use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
+use crate::sim::sweep::{default_threads, parallel_map_threads};
+use crate::sim::Time;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workloads::generator::{poisson_trace, TraceRequest};
+use crate::workloads::Network;
+
+/// The sweep grid and shared serving knobs.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Poisson arrival rates, req/s (swept ascending within each group).
+    pub rates: Vec<f64>,
+    /// Replica counts.
+    pub replicas: Vec<usize>,
+    /// Dynamic-batcher `max_batch` values.
+    pub max_batches: Vec<u32>,
+    /// Trace duration per point, seconds.
+    pub duration_s: f64,
+    /// Trace seed (fixed across points: traces differ only by rate).
+    pub seed: u64,
+    /// Batcher deadline, ps.
+    pub max_wait: Time,
+    /// Admission bound on queued requests.
+    pub queue_capacity: usize,
+    pub routing: Policy,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            rates: vec![250.0, 500.0, 1000.0, 2000.0, 4000.0],
+            replicas: vec![1, 2, 4],
+            max_batches: vec![8],
+            duration_s: 1.0,
+            seed: 42,
+            max_wait: millis(2),
+            queue_capacity: 10_000,
+            routing: Policy::LeastLoaded,
+        }
+    }
+}
+
+/// One grid point: its coordinates plus the full virtual-time report.
+#[derive(Debug, Clone)]
+pub struct CapacityPoint {
+    pub rate: f64,
+    pub replicas: usize,
+    pub max_batch: u32,
+    /// Requests offered by the trace.
+    pub offered: u64,
+    /// Nominal trace duration, seconds (the grid's `duration_s`).
+    pub duration_s: f64,
+    pub report: SimServeReport,
+}
+
+impl CapacityPoint {
+    /// The realized offered rate: actual trace arrivals over the nominal
+    /// duration. The knee test compares delivered throughput against
+    /// *this* rather than the nominal `rate`: both then scale with the
+    /// same realized arrival count, so Poisson count fluctuation cancels
+    /// out of the ratio instead of tripping the threshold at light load.
+    pub fn offered_rate(&self) -> f64 {
+        self.offered as f64 / self.duration_s
+    }
+}
+
+/// Sweep the grid in parallel (one virtual server per point) on the
+/// default thread count. Results come back in grid order regardless of
+/// thread interleaving, bit-identical to a serial run.
+pub fn sweep_capacity(
+    net: &Network,
+    model: &str,
+    chip: &SunriseConfig,
+    grid: &GridConfig,
+) -> Vec<CapacityPoint> {
+    sweep_capacity_threads(net, model, chip, grid, default_threads())
+}
+
+/// [`sweep_capacity`] with an explicit thread count (1 = serial; used by
+/// the serving bench to measure the parallel speedup itself).
+pub fn sweep_capacity_threads(
+    net: &Network,
+    model: &str,
+    chip: &SunriseConfig,
+    grid: &GridConfig,
+    threads: usize,
+) -> Vec<CapacityPoint> {
+    assert!(!grid.rates.is_empty() && !grid.replicas.is_empty() && !grid.max_batches.is_empty());
+    assert!(grid.duration_s > 0.0);
+    // One virtual server per max_batch (its service tables are planned
+    // once, then shared read-only by every grid point — `replay` takes
+    // `&self` and the chip's schedule cache is thread-safe) and one trace
+    // per rate (traces depend only on seed × rate × duration).
+    let servers: Vec<SimServer> = grid
+        .max_batches
+        .iter()
+        .map(|&max_batch| {
+            let config = SimServeConfig {
+                batcher: BatcherConfig { max_batch, max_wait: grid.max_wait },
+                routing: grid.routing,
+                queue_capacity: grid.queue_capacity,
+            };
+            let mut server = SimServer::new(SunriseChip::new(chip.clone()), config);
+            server.register(model, net);
+            server
+        })
+        .collect();
+    let mut rates = grid.rates.clone();
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let traces: Vec<(f64, Vec<TraceRequest>, u64)> = rates
+        .iter()
+        .map(|&rate| {
+            let trace = poisson_trace(&mut Rng::new(grid.seed), rate, grid.duration_s, model, 1);
+            let offered = trace.iter().map(|t| t.samples as u64).sum::<u64>();
+            (rate, trace, offered)
+        })
+        .collect();
+    let mut points: Vec<(usize, usize, usize)> = Vec::new(); // (replicas, server idx, trace idx)
+    for &replicas in &grid.replicas {
+        for mb_idx in 0..servers.len() {
+            for rate_idx in 0..traces.len() {
+                points.push((replicas, mb_idx, rate_idx));
+            }
+        }
+    }
+    parallel_map_threads(&points, threads, |_, &(replicas, mb_idx, rate_idx)| {
+        let server = &servers[mb_idx];
+        let (rate, trace, offered) = &traces[rate_idx];
+        let report = server.replay(trace, replicas);
+        CapacityPoint {
+            rate: *rate,
+            replicas,
+            max_batch: server.config.batcher.max_batch,
+            offered: *offered,
+            duration_s: grid.duration_s,
+            report,
+        }
+    })
+}
+
+/// The saturation knee of one ascending-rate curve: the first rate whose
+/// delivered throughput falls below `frac` of the *realized* offered rate
+/// (drops or queue growth stretching the makespan). `None` when every
+/// point keeps up.
+pub fn saturation_knee(curve: &[&CapacityPoint], frac: f64) -> Option<f64> {
+    curve
+        .iter()
+        .find(|p| p.report.snapshot.throughput_rps < frac * p.offered_rate())
+        .map(|p| p.rate)
+}
+
+/// Group accessor: the points of one (replicas, max_batch) curve, in
+/// ascending-rate order (the order [`sweep_capacity`] returns them).
+pub fn curve<'a>(
+    points: &'a [CapacityPoint],
+    replicas: usize,
+    max_batch: u32,
+) -> Vec<&'a CapacityPoint> {
+    points
+        .iter()
+        .filter(|p| p.replicas == replicas && p.max_batch == max_batch)
+        .collect()
+}
+
+/// Render the grid as an aligned text table.
+pub fn render_grid(points: &[CapacityPoint]) -> String {
+    let mut t = Table::new(
+        "capacity grid (virtual-time serving)",
+        &[
+            "rate req/s",
+            "replicas",
+            "max_batch",
+            "served",
+            "dropped",
+            "thru req/s",
+            "p50 ms",
+            "p99 ms",
+            "batch",
+            "util %",
+            "max depth",
+        ],
+    );
+    for p in points {
+        let s = &p.report.snapshot;
+        t.row(&[
+            format!("{:.0}", p.rate),
+            p.replicas.to_string(),
+            p.max_batch.to_string(),
+            p.report.served.to_string(),
+            p.report.dropped.to_string(),
+            format!("{:.1}", s.throughput_rps),
+            format!("{:.3}", s.p50_latency_s * 1e3),
+            format!("{:.3}", s.p99_latency_s * 1e3),
+            format!("{:.2}", s.mean_batch_size),
+            format!("{:.1}", p.report.replica_utilization * 100.0),
+            p.report.max_queue_depth.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet::resnet50;
+
+    fn small_grid() -> GridConfig {
+        GridConfig {
+            rates: vec![200.0, 800.0, 2000.0, 4000.0],
+            replicas: vec![1, 2],
+            max_batches: vec![8],
+            duration_s: 0.4,
+            seed: 42,
+            ..GridConfig::default()
+        }
+    }
+
+    #[test]
+    fn p99_monotone_nondecreasing_in_rate_at_fixed_replicas() {
+        let net = resnet50();
+        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid());
+        for &replicas in &[1usize, 2] {
+            let curve = curve(&points, replicas, 8);
+            assert_eq!(curve.len(), 4);
+            for pair in curve.windows(2) {
+                let (lo, hi) = (pair[0], pair[1]);
+                assert!(lo.rate < hi.rate, "curve not rate-ascending");
+                assert!(
+                    hi.report.snapshot.p99_latency_s >= lo.report.snapshot.p99_latency_s,
+                    "p99 decreased with load at {replicas} replicas: \
+                     {} req/s -> {} s, {} req/s -> {} s",
+                    lo.rate,
+                    lo.report.snapshot.p99_latency_s,
+                    hi.rate,
+                    hi.report.snapshot.p99_latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn knee_moves_out_with_replicas() {
+        let net = resnet50();
+        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid());
+        // One ~1578 img/s chip saturates inside the grid; the knee for two
+        // replicas is at a strictly higher rate (or beyond the grid).
+        let k1 = saturation_knee(&curve(&points, 1, 8), 0.9);
+        let k2 = saturation_knee(&curve(&points, 2, 8), 0.9);
+        let k1 = k1.expect("single replica never saturated in a 4000 req/s grid");
+        assert!(k1 <= 2000.0, "knee {k1} later than expected");
+        // `None` (two replicas kept up everywhere) also counts as moved out.
+        if let Some(k2) = k2 {
+            assert!(k2 > k1, "knee did not move out: {k1} vs {k2}");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_bit_identical_to_serial() {
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![400.0, 2500.0],
+            replicas: vec![1, 2],
+            max_batches: vec![4],
+            duration_s: 0.2,
+            ..GridConfig::default()
+        };
+        let cfg = SunriseConfig::default();
+        let serial = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 1);
+        let parallel = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+            assert_eq!(a.replicas, b.replicas);
+            assert_eq!(a.offered, b.offered);
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "point diverged");
+        }
+    }
+
+    #[test]
+    fn grid_is_ordered_and_renders() {
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![900.0, 300.0], // deliberately unsorted
+            replicas: vec![1],
+            max_batches: vec![2, 8],
+            duration_s: 0.15,
+            ..GridConfig::default()
+        };
+        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid);
+        assert_eq!(points.len(), 4);
+        assert_eq!((points[0].max_batch, points[0].rate), (2, 300.0));
+        assert_eq!((points[1].max_batch, points[1].rate), (2, 900.0));
+        assert_eq!((points[2].max_batch, points[2].rate), (8, 300.0));
+        let rendered = render_grid(&points);
+        assert!(rendered.contains("p99 ms"));
+        assert!(rendered.lines().count() >= 6, "table too short:\n{rendered}");
+    }
+}

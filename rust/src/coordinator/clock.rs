@@ -1,0 +1,125 @@
+//! Time sources for the serving stack.
+//!
+//! The coordinator's policy code (batcher deadlines, metrics windows,
+//! latency accounting) is written against plain [`Time`] picosecond
+//! timestamps; *where those timestamps come from* is this module's
+//! [`Clock`] trait. The threaded [`Server`](crate::coordinator::server)
+//! reads a [`WallClock`]; the deterministic
+//! [`SimServer`](crate::coordinator::simserve) drives a [`VirtualClock`]
+//! from the discrete-event engine. The same `DynamicBatcher` / `Router` /
+//! `Metrics` code runs unchanged on both — which is what makes serving
+//! experiments replayable in simulated time.
+
+use crate::sim::Time;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// The ps-unit vocabulary lives beside `Time` in `sim`; re-exported here
+// because serving code reads them as clock concepts.
+pub use crate::sim::{duration_to_time, micros, millis, PS_PER_MS, PS_PER_US};
+
+/// A monotonic time source, in picoseconds from an arbitrary origin.
+pub trait Clock: Send + Sync {
+    /// The current timestamp.
+    fn now(&self) -> Time;
+}
+
+/// Real time: picoseconds elapsed since construction.
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        duration_to_time(self.origin.elapsed())
+    }
+}
+
+/// Simulated time: an atomic timestamp advanced by the event-engine
+/// driver. Monotonic by construction ([`advance_to`] is a `fetch_max`),
+/// so readers on any thread observe a non-decreasing clock.
+///
+/// [`advance_to`]: VirtualClock::advance_to
+pub struct VirtualClock {
+    now_ps: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now_ps: AtomicU64::new(0) }
+    }
+
+    /// Advance to `t` (no-op when `t` is in the past — monotonic).
+    pub fn advance_to(&self, t: Time) {
+        self.now_ps.fetch_max(t, Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Time {
+        self.now_ps.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn wall_clock_is_monotonic_and_moves() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = c.now();
+        assert!(b > a, "wall clock did not advance: {a} -> {b}");
+        assert!(b - a >= millis(1), "advanced less than the sleep: {}", b - a);
+    }
+
+    #[test]
+    fn virtual_clock_advances_only_forward() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(500);
+        assert_eq!(c.now(), 500);
+        c.advance_to(200); // into the past: ignored
+        assert_eq!(c.now(), 500);
+        c.advance_to(10_000);
+        assert_eq!(c.now(), 10_000);
+    }
+
+    #[test]
+    fn unit_helpers_convert() {
+        assert_eq!(millis(2), 2_000_000_000);
+        assert_eq!(micros(7), 7_000_000);
+        assert_eq!(duration_to_time(Duration::from_millis(3)), millis(3));
+        assert_eq!(duration_to_time(Duration::from_nanos(1)), 1000);
+    }
+
+    #[test]
+    fn clock_trait_objects_are_shareable() {
+        use std::sync::Arc;
+        let v = Arc::new(VirtualClock::new());
+        let dyn_clock: Arc<dyn Clock> = Arc::clone(&v) as Arc<dyn Clock>;
+        v.advance_to(42);
+        assert_eq!(dyn_clock.now(), 42);
+    }
+}

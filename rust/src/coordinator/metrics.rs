@@ -1,10 +1,17 @@
-//! Wall-clock serving metrics: latency percentiles, throughput,
-//! batch-size distribution. Thread-safe via interior locking (updates are
-//! off the execute path's critical section).
+//! Serving metrics: latency percentiles, throughput, batch-size
+//! distribution. Thread-safe via interior locking (updates are off the
+//! execute path's critical section).
+//!
+//! Time-source-agnostic: the collector reads a
+//! [`Clock`](crate::coordinator::clock::Clock), so the threaded server
+//! reports wall time while the virtual-time server reports simulated
+//! time — and two replays of the same trace produce bit-identical
+//! snapshots (see [`MetricsSnapshot::bitwise_eq`]).
 
+use crate::coordinator::clock::{Clock, WallClock};
 use crate::sim::stats::Histogram;
-use std::sync::Mutex;
-use std::time::Instant;
+use crate::sim::{to_seconds, Time};
+use std::sync::{Arc, Mutex};
 
 /// Snapshot of serving metrics.
 #[derive(Debug, Clone)]
@@ -27,11 +34,12 @@ struct Inner {
     batches: u64,
     requests: u64,
     errors: u64,
-    started: Instant,
+    started: Time,
 }
 
 /// Serving metrics collector.
 pub struct Metrics {
+    clock: Arc<dyn Clock>,
     inner: Mutex<Inner>,
 }
 
@@ -42,8 +50,16 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Wall-clock metrics (the threaded server's default).
     pub fn new() -> Metrics {
+        Metrics::with_clock(Arc::new(WallClock::new()))
+    }
+
+    /// Metrics on an explicit time source (virtual time for simulations).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Metrics {
+        let started = clock.now();
         Metrics {
+            clock,
             inner: Mutex::new(Inner {
                 latency: Histogram::latency(),
                 queue: Histogram::latency(),
@@ -51,7 +67,7 @@ impl Metrics {
                 batches: 0,
                 requests: 0,
                 errors: 0,
-                started: Instant::now(),
+                started,
             }),
         }
     }
@@ -75,8 +91,9 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let now = self.clock.now();
         let g = self.inner.lock().unwrap();
-        let elapsed = g.started.elapsed().as_secs_f64().max(1e-9);
+        let elapsed = to_seconds(now.saturating_sub(g.started)).max(1e-9);
         MetricsSnapshot {
             requests: g.requests,
             batches: g.batches,
@@ -96,6 +113,22 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
+    /// Exact bitwise equality across all fields (`f64`s compared via
+    /// `to_bits`, so the check is NaN-safe). This is the determinism
+    /// contract for virtual-time replays: same trace + same config ⇒
+    /// `bitwise_eq` snapshots.
+    pub fn bitwise_eq(&self, other: &MetricsSnapshot) -> bool {
+        self.requests == other.requests
+            && self.batches == other.batches
+            && self.errors == other.errors
+            && self.throughput_rps.to_bits() == other.throughput_rps.to_bits()
+            && self.mean_latency_s.to_bits() == other.mean_latency_s.to_bits()
+            && self.p50_latency_s.to_bits() == other.p50_latency_s.to_bits()
+            && self.p99_latency_s.to_bits() == other.p99_latency_s.to_bits()
+            && self.mean_batch_size.to_bits() == other.mean_batch_size.to_bits()
+            && self.mean_queue_s.to_bits() == other.mean_queue_s.to_bits()
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} errors={} throughput={:.1} req/s \
@@ -116,6 +149,7 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::clock::VirtualClock;
 
     #[test]
     fn records_and_snapshots() {
@@ -144,5 +178,32 @@ mod tests {
         m.record_batch(1, &[1e-5], &[1e-4]);
         let r = m.snapshot().report();
         assert!(r.contains("requests=1"));
+    }
+
+    #[test]
+    fn virtual_clock_gives_exact_throughput() {
+        let clock = Arc::new(VirtualClock::new());
+        let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        m.record_batch(10, &[0.0; 10], &[1e-3; 10]);
+        clock.advance_to(crate::sim::from_seconds(2.0));
+        let s = m.snapshot();
+        assert_eq!(s.throughput_rps, 5.0, "10 requests over exactly 2 virtual seconds");
+    }
+
+    #[test]
+    fn bitwise_eq_detects_identity_and_difference() {
+        let run = || {
+            let clock = Arc::new(VirtualClock::new());
+            let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+            m.record_batch(3, &[1e-4, 2e-4, 3e-4], &[1e-3, 2e-3, 3e-3]);
+            clock.advance_to(1_000_000_000);
+            m.snapshot()
+        };
+        let a = run();
+        let b = run();
+        assert!(a.bitwise_eq(&b), "identical virtual runs must snapshot identically");
+        let mut c = b.clone();
+        c.requests += 1;
+        assert!(!a.bitwise_eq(&c));
     }
 }

@@ -4,21 +4,36 @@
 //! host-side serving stack a deployment would actually run: a request
 //! queue, a dynamic batcher (the chip's utilization lives or dies on
 //! batch size — see the batch sweep in EXPERIMENTS.md), a router across
-//! chip replicas, worker threads driving [`crate::runtime::Executor`]s,
-//! and latency/throughput metrics. Pure std: threads + channels.
+//! chip replicas, and latency/throughput metrics. Pure std.
+//!
+//! The policy layers are **time-source-agnostic**: they operate on plain
+//! [`Time`](crate::sim::Time) timestamps supplied through a [`clock`]
+//! and so run on two interchangeable backends —
+//!
+//! - [`server`] — the threaded wall-clock loop (worker threads driving
+//!   [`crate::runtime::Executor`]s; real latencies, nondeterministic).
+//! - [`simserve`] — the same loop replayed deterministically in virtual
+//!   time on the discrete-event engine (bit-reproducible, sweepable).
 //!
 //! - [`request`] — request/response types.
 //! - [`batcher`] — dynamic batching policy (size + deadline), pure logic.
 //! - [`router`] — replica selection (round-robin / least-loaded).
-//! - [`metrics`] — wall-clock serving metrics.
-//! - [`server`] — the threaded serving loop tying it together.
+//! - [`clock`] — the `Clock` trait: wall and virtual time sources.
+//! - [`metrics`] — serving metrics on either time source.
+//! - [`capacity`] — rate×replicas×batch capacity-planning grid sweeps.
 
 pub mod batcher;
+pub mod capacity;
+pub mod clock;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod simserve;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use capacity::{sweep_capacity, CapacityPoint, GridConfig};
+pub use clock::{Clock, VirtualClock, WallClock};
 pub use request::{InferRequest, InferResponse, RequestId};
 pub use server::{Server, ServerConfig};
+pub use simserve::{SimServeConfig, SimServeReport, SimServer};

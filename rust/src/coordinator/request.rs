@@ -1,6 +1,16 @@
 //! Request/response types for the serving path.
+//!
+//! Timestamps are [`Time`] picoseconds on the owning backend's
+//! [`Clock`](crate::coordinator::clock::Clock) — wall time in the threaded
+//! server, simulated time in the virtual one — so the policy layers above
+//! never touch `Instant` directly. Model names are `Arc<str>` (cheap to
+//! clone along the batcher→router→worker path, and matching the
+//! layer-name interning in the dataflow IR); trace replay interns one
+//! `Arc` per distinct model, while the threaded `submit(&str)` boundary
+//! still allocates one `Arc<str>` per call.
 
-use std::time::Instant;
+use crate::sim::Time;
+use std::sync::Arc;
 
 /// Monotonically-assigned request identifier.
 pub type RequestId = u64;
@@ -10,19 +20,20 @@ pub type RequestId = u64;
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub id: RequestId,
-    pub model: String,
+    pub model: Arc<str>,
     pub input: Vec<f32>,
-    pub enqueued_at: Instant,
+    /// Enqueue timestamp on the owning backend's clock.
+    pub enqueued_at: Time,
 }
 
 impl InferRequest {
-    pub fn new(id: RequestId, model: &str, input: Vec<f32>) -> InferRequest {
-        InferRequest {
-            id,
-            model: model.to_string(),
-            input,
-            enqueued_at: Instant::now(),
-        }
+    pub fn new(
+        id: RequestId,
+        model: impl Into<Arc<str>>,
+        input: Vec<f32>,
+        enqueued_at: Time,
+    ) -> InferRequest {
+        InferRequest { id, model: model.into(), input, enqueued_at }
     }
 }
 
@@ -49,9 +60,18 @@ mod tests {
 
     #[test]
     fn request_carries_payload() {
-        let r = InferRequest::new(7, "mlp", vec![1.0, 2.0]);
+        let r = InferRequest::new(7, "mlp", vec![1.0, 2.0], 123);
         assert_eq!(r.id, 7);
-        assert_eq!(r.model, "mlp");
+        assert_eq!(&*r.model, "mlp");
         assert_eq!(r.input.len(), 2);
+        assert_eq!(r.enqueued_at, 123);
+    }
+
+    #[test]
+    fn interned_model_is_shared_not_copied() {
+        let name: Arc<str> = Arc::from("resnet50");
+        let a = InferRequest::new(0, Arc::clone(&name), vec![], 0);
+        let b = InferRequest::new(1, Arc::clone(&name), vec![], 0);
+        assert!(Arc::ptr_eq(&a.model, &b.model), "model name re-allocated");
     }
 }

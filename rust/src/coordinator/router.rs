@@ -146,6 +146,39 @@ mod tests {
         assert!(ll < 1.05, "least-loaded imbalance {ll}");
     }
 
+    /// The least-loaded invariant itself: the chosen replica never has
+    /// strictly more in-flight work than any other replica at the moment
+    /// of routing.
+    #[test]
+    fn property_least_loaded_picks_minimum() {
+        use crate::util::proptest::check;
+        check(0x11AD, 60, |g| {
+            let n = g.usize("replicas", 1, 8);
+            let mut r = Router::new(Policy::LeastLoaded, n);
+            let mut ledger = vec![0u64; n];
+            for _ in 0..g.usize("ops", 1, 120) {
+                if g.bool("issue") || ledger.iter().all(|&w| w == 0) {
+                    let min = *ledger.iter().min().unwrap();
+                    let w = g.u64_below("w", 32) + 1;
+                    let idx = r.route(w);
+                    crate::prop_assert!(
+                        ledger[idx] == min,
+                        "least-loaded picked replica {idx} at load {} while min was {min}",
+                        ledger[idx]
+                    );
+                    ledger[idx] += w;
+                } else {
+                    let busy: Vec<usize> = (0..n).filter(|&i| ledger[i] > 0).collect();
+                    let &i = g.pick("replica", &busy);
+                    let w = g.u64_below("cw", ledger[i]) + 1;
+                    r.complete(i, w);
+                    ledger[i] -= w;
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn property_inflight_conserved() {
         use crate::util::proptest::check;

@@ -4,12 +4,19 @@
 //! Backpressure: the submit channel is bounded; when all replicas are
 //! saturated, `submit` blocks the client (the paper's HSP port is the
 //! analogous physical throttle).
+//!
+//! All timestamps come from one shared [`WallClock`], so the policy layers
+//! (batcher, router, metrics) see plain [`Time`] picoseconds — the same
+//! types the deterministic [`simserve`](crate::coordinator::simserve)
+//! backend drives with virtual time.
 
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use crate::coordinator::clock::{Clock, WallClock};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferRequest, InferResponse, RequestId};
 use crate::coordinator::router::{Policy, Router};
 use crate::runtime::executor::Executor;
+use crate::sim::to_seconds;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -48,6 +55,7 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
+    clock: Arc<WallClock>,
     pub metrics: Arc<Metrics>,
     pub router: Arc<Mutex<Router>>,
 }
@@ -60,7 +68,8 @@ impl Server {
         let n = executors.len();
         let (submit_tx, submit_rx) = sync_channel::<InferRequest>(config.queue_capacity);
         let (resp_tx, resp_rx) = std::sync::mpsc::channel::<InferResponse>();
-        let metrics = Arc::new(Metrics::new());
+        let clock = Arc::new(WallClock::new());
+        let metrics = Arc::new(Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>));
         let router = Arc::new(Mutex::new(Router::new(config.routing, n)));
         let stop = Arc::new(AtomicBool::new(false));
 
@@ -73,23 +82,24 @@ impl Server {
             let resp_tx = resp_tx.clone();
             let metrics = Arc::clone(&metrics);
             let router = Arc::clone(&router);
+            let clock = Arc::clone(&clock);
             worker_handles.push(std::thread::spawn(move || {
                 while let Ok(WorkerMsg::Run(batch)) = rx.recv() {
                     let samples = batch.len();
                     let input = batch.concat_inputs();
-                    let t0 = Instant::now();
+                    let t0 = clock.now();
                     match exec.execute(&batch.model, &input, samples) {
                         Ok(output) => {
-                            let exec_s = t0.elapsed().as_secs_f64();
+                            let done = clock.now();
+                            let exec_s = to_seconds(done.saturating_sub(t0));
                             let per_out = output.len() / samples;
-                            let done = Instant::now();
                             let mut queue_ls = Vec::with_capacity(samples);
                             let mut total_ls = Vec::with_capacity(samples);
                             for req in &batch.requests {
-                                queue_ls.push(
-                                    batch.formed_at.duration_since(req.enqueued_at).as_secs_f64(),
-                                );
-                                total_ls.push(done.duration_since(req.enqueued_at).as_secs_f64());
+                                queue_ls.push(to_seconds(
+                                    batch.formed_at.saturating_sub(req.enqueued_at),
+                                ));
+                                total_ls.push(to_seconds(done.saturating_sub(req.enqueued_at)));
                             }
                             // Record metrics BEFORE sending responses so a
                             // client that has collected all responses sees
@@ -121,6 +131,7 @@ impl Server {
         // Batcher thread.
         let stop_b = Arc::clone(&stop);
         let router_b = Arc::clone(&router);
+        let clock_b = Arc::clone(&clock);
         let batcher_cfg = config.batcher;
         let batcher_handle = std::thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(batcher_cfg);
@@ -131,14 +142,14 @@ impl Server {
             loop {
                 match submit_rx.recv_timeout(Duration::from_micros(200)) {
                     Ok(req) => {
-                        if let Some(batch) = batcher.push(req, Instant::now()) {
+                        if let Some(batch) = batcher.push(req, clock_b.now()) {
                             dispatch(batch, &router_b, &worker_txs);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
-                for batch in batcher.poll_timeouts(Instant::now()) {
+                for batch in batcher.poll_timeouts(clock_b.now()) {
                     dispatch(batch, &router_b, &worker_txs);
                 }
                 if stop_b.load(Ordering::Relaxed) {
@@ -146,7 +157,7 @@ impl Server {
                 }
             }
             // Drain remaining requests, then stop workers.
-            for batch in batcher.drain(Instant::now()) {
+            for batch in batcher.drain(clock_b.now()) {
                 dispatch(batch, &router_b, &worker_txs);
             }
             for tx in &worker_txs {
@@ -161,6 +172,7 @@ impl Server {
             stop,
             batcher_handle: Some(batcher_handle),
             worker_handles,
+            clock,
             metrics,
             router,
         }
@@ -170,7 +182,7 @@ impl Server {
     pub fn submit(&self, model: &str, input: Vec<f32>) -> RequestId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.submit_tx
-            .send(InferRequest::new(id, model, input))
+            .send(InferRequest::new(id, model, input, self.clock.now()))
             .expect("server stopped");
         id
     }
@@ -180,16 +192,19 @@ impl Server {
         self.resp_rx.recv_timeout(timeout).ok()
     }
 
-    /// Collect exactly `n` responses (panics on timeout).
+    /// Collect up to `n` responses, waiting at most `timeout` overall.
+    /// Returns whatever arrived in time — callers compare `len()` against
+    /// `n` to detect (and report) timed-out requests.
     pub fn collect(&self, n: usize, timeout: Duration) -> Vec<InferResponse> {
         let deadline = Instant::now() + timeout;
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
-            let remain = deadline
-                .checked_duration_since(Instant::now())
-                .unwrap_or_else(|| panic!("timed out with {}/{n} responses", out.len()));
-            if let Some(r) = self.recv_timeout(remain) {
-                out.push(r);
+            let Some(remain) = deadline.checked_duration_since(Instant::now()) else {
+                break;
+            };
+            match self.recv_timeout(remain) {
+                Some(r) => out.push(r),
+                None => break,
             }
         }
         out
@@ -211,6 +226,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::chip::sunrise::SunriseChip;
+    use crate::coordinator::clock::millis;
     use crate::runtime::executor::SimExecutor;
     use crate::workloads::mlp;
 
@@ -222,6 +238,13 @@ mod tests {
 
     fn input(v: f32) -> Vec<f32> {
         vec![v; 784]
+    }
+
+    fn config(max_batch: u32, max_wait_ms: u64) -> ServerConfig {
+        ServerConfig {
+            batcher: BatcherConfig { max_batch, max_wait: millis(max_wait_ms) },
+            ..ServerConfig::default()
+        }
     }
 
     #[test]
@@ -245,14 +268,12 @@ mod tests {
 
     #[test]
     fn batches_form_under_load() {
-        let mut cfg = ServerConfig::default();
-        cfg.batcher.max_batch = 8;
-        cfg.batcher.max_wait = Duration::from_millis(50);
-        let server = Server::start(vec![sim_exec()], cfg);
+        let server = Server::start(vec![sim_exec()], config(8, 50));
         for i in 0..32 {
             server.submit("mlp", input(i as f32));
         }
         let resps = server.collect(32, Duration::from_secs(20));
+        assert_eq!(resps.len(), 32);
         let snap = server.metrics.snapshot();
         assert!(snap.mean_batch_size > 2.0, "mean batch {}", snap.mean_batch_size);
         assert!(resps.iter().any(|r| r.batch_size >= 4));
@@ -261,10 +282,7 @@ mod tests {
 
     #[test]
     fn partial_batch_flushes_on_timeout() {
-        let mut cfg = ServerConfig::default();
-        cfg.batcher.max_batch = 64; // will never fill
-        cfg.batcher.max_wait = Duration::from_millis(2);
-        let server = Server::start(vec![sim_exec()], cfg);
+        let server = Server::start(vec![sim_exec()], config(64, 2)); // will never fill
         server.submit("mlp", input(0.5));
         let r = server
             .recv_timeout(Duration::from_secs(10))
@@ -283,6 +301,7 @@ mod tests {
             server.submit("mlp", input(i as f32 / 60.0));
         }
         let resps = server.collect(60, Duration::from_secs(30));
+        assert_eq!(resps.len(), 60);
         let replicas: std::collections::BTreeSet<u32> =
             resps.iter().map(|r| r.replica).collect();
         assert!(replicas.len() >= 2, "only replicas {replicas:?} served");
@@ -299,6 +318,17 @@ mod tests {
             assert!(t0.elapsed() < Duration::from_secs(10), "error never recorded");
             std::thread::sleep(Duration::from_millis(5));
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn collect_returns_short_on_timeout_instead_of_panicking() {
+        let server = Server::start(vec![sim_exec()], ServerConfig::default());
+        server.submit("mlp", input(0.1));
+        // Ask for more responses than were submitted: the extra one times
+        // out and collect reports a short vector.
+        let resps = server.collect(3, Duration::from_millis(500));
+        assert_eq!(resps.len(), 1, "expected exactly the one served response");
         server.shutdown();
     }
 }

@@ -1,0 +1,426 @@
+//! Deterministic virtual-time serving: the coordinator's policy stack
+//! (dynamic batcher → router → per-replica chip latency model → metrics)
+//! replayed as typed events on the discrete-event engine.
+//!
+//! The threaded [`Server`](crate::coordinator::server::Server) measures
+//! wall time across OS threads, so every number it produces depends on
+//! host speed and scheduler jitter. This module runs the *same policy
+//! code* — the identical [`DynamicBatcher`], [`Router`] and [`Metrics`]
+//! types — against a [`VirtualClock`] driven by
+//! [`sim::engine`](crate::sim::engine), with per-batch service times taken
+//! from the chip model's schedule cache. Two replays of one trace are
+//! bit-identical (pinned by test), which is what makes rate×replicas
+//! capacity grids ([`capacity`](crate::coordinator::capacity)) sweepable
+//! and reproducible.
+//!
+//! Event vocabulary: one `Arrive` per trace request (scheduled up front,
+//! so same-timestamp arrivals keep trace order by sequence number), one
+//! `FlushCheck` per new queue head at its `max_wait` deadline (queues only
+//! empty wholesale, so the current head always owns a check and no request
+//! outlives its deadline), and one `Done` per batch completion. Replicas model the worker channel with a
+//! FIFO of dispatched batches; the router sees dispatch/complete exactly
+//! when the threaded server's would.
+
+use crate::chip::sunrise::SunriseChip;
+use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use crate::coordinator::clock::{Clock, VirtualClock};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::InferRequest;
+use crate::coordinator::router::{Policy, Router};
+use crate::sim::engine::{Engine, Scheduler, World};
+use crate::sim::{from_seconds, to_seconds, Time};
+use crate::workloads::generator::TraceRequest;
+use crate::workloads::Network;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// Virtual-time server configuration (mirrors
+/// [`ServerConfig`](crate::coordinator::server::ServerConfig); the
+/// bounded submit channel becomes an admission bound, since an open-loop
+/// trace cannot be blocked the way a live client can).
+#[derive(Debug, Clone)]
+pub struct SimServeConfig {
+    pub batcher: BatcherConfig,
+    pub routing: Policy,
+    /// Admission bound on queued (not yet dispatched) requests; arrivals
+    /// beyond it are dropped and counted.
+    pub queue_capacity: usize,
+}
+
+impl Default for SimServeConfig {
+    fn default() -> Self {
+        SimServeConfig {
+            batcher: BatcherConfig::default(),
+            routing: Policy::LeastLoaded,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// Result of one virtual-time replay.
+#[derive(Debug, Clone)]
+pub struct SimServeReport {
+    /// The standard serving metrics, on simulated time. Requests for
+    /// unregistered models are counted in `snapshot.errors` (mirroring
+    /// the threaded server), so the conservation identity is
+    /// `served + dropped + snapshot.errors == offered`.
+    pub snapshot: MetricsSnapshot,
+    pub served: u64,
+    pub dropped: u64,
+    /// Batches dispatched because they filled / because the deadline hit.
+    pub full_batches: u64,
+    pub timeout_batches: u64,
+    pub max_queue_depth: usize,
+    /// Largest enqueue→dispatch wait observed, seconds (bounded by the
+    /// batcher's `max_wait` — pinned by test).
+    pub max_queue_wait_s: f64,
+    pub per_replica_served: Vec<u64>,
+    /// Simulated makespan (last completion), seconds.
+    pub sim_duration_s: f64,
+    /// Fraction of replica-seconds spent executing batches.
+    pub replica_utilization: f64,
+}
+
+/// The virtual-time server: a chip model plus per-model service tables.
+pub struct SimServer {
+    pub config: SimServeConfig,
+    chip: SunriseChip,
+    /// Per-model service time (ps) indexed by batch size, `[0] = 0`.
+    service: BTreeMap<Arc<str>, Vec<Time>>,
+}
+
+impl SimServer {
+    pub fn new(chip: SunriseChip, config: SimServeConfig) -> SimServer {
+        assert!(config.batcher.max_batch >= 1);
+        SimServer { config, chip, service: BTreeMap::new() }
+    }
+
+    /// Register a network under a model name, precomputing its service
+    /// table for batch sizes `1..=max_batch` from the chip model (hits
+    /// the chip's schedule cache on repeats).
+    pub fn register(&mut self, name: &str, net: &Network) {
+        let mut table: Vec<Time> = vec![0];
+        for b in 1..=self.config.batcher.max_batch {
+            table.push(self.chip.run(net, b).total_ps);
+        }
+        self.service.insert(Arc::from(name), table);
+    }
+
+    /// Replay `trace` against `replicas` identical replicas in simulated
+    /// time. Deterministic: same trace + same config ⇒ bit-identical
+    /// report (see `MetricsSnapshot::bitwise_eq`).
+    pub fn replay(&self, trace: &[TraceRequest], replicas: usize) -> SimServeReport {
+        assert!(replicas > 0);
+        let clock = Arc::new(VirtualClock::new());
+        let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let mut world = ServeWorld {
+            config: &self.config,
+            trace,
+            service: &self.service,
+            metrics,
+            batcher: DynamicBatcher::new(self.config.batcher),
+            router: Router::new(self.config.routing, replicas),
+            busy: vec![false; replicas],
+            waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
+            running: (0..replicas).map(|_| None).collect(),
+            next_id: 0,
+            served: 0,
+            dropped: 0,
+            max_depth: 0,
+            max_queue_wait: 0,
+            per_replica: vec![0; replicas],
+            busy_ps: 0,
+            last_done: 0,
+            queue_ls: Vec::new(),
+            total_ls: Vec::new(),
+        };
+        let mut engine: Engine<Ev> = Engine::new();
+        for (i, req) in trace.iter().enumerate() {
+            engine.schedule(from_seconds(req.arrival_s), Ev::Arrive { idx: i as u32 });
+        }
+        engine.run(&mut world);
+        debug_assert!(engine.is_idle(), "virtual server left events pending");
+
+        // Makespan = last *completion*, not the engine's final event: a
+        // stale FlushCheck can fire after all work is done, and letting
+        // it stretch the metrics window would deflate throughput and
+        // utilization by up to max_wait. The clock is only advanced here
+        // (nothing reads it mid-run), so the snapshot sees exactly this.
+        let end = world.last_done.max(1);
+        clock.advance_to(end);
+        let sim_duration_s = to_seconds(end);
+        SimServeReport {
+            snapshot: world.metrics.snapshot(),
+            served: world.served,
+            dropped: world.dropped,
+            full_batches: world.batcher.full_batches,
+            timeout_batches: world.batcher.timeout_batches,
+            max_queue_depth: world.max_depth,
+            max_queue_wait_s: to_seconds(world.max_queue_wait),
+            per_replica_served: world.per_replica,
+            sim_duration_s,
+            replica_utilization: to_seconds(world.busy_ps) / (sim_duration_s * replicas as f64),
+        }
+    }
+}
+
+/// Virtual-serving events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Trace request `idx` arrives.
+    Arrive { idx: u32 },
+    /// Batcher deadline poll (scheduled per queued request).
+    FlushCheck,
+    /// The batch running on `replica` completes.
+    Done { replica: u32 },
+}
+
+struct ServeWorld<'a> {
+    config: &'a SimServeConfig,
+    trace: &'a [TraceRequest],
+    service: &'a BTreeMap<Arc<str>, Vec<Time>>,
+    metrics: Metrics,
+    batcher: DynamicBatcher,
+    router: Router,
+    busy: Vec<bool>,
+    /// Dispatched batches waiting per replica (the worker channel).
+    waiting: Vec<VecDeque<Batch>>,
+    /// The batch each replica is currently executing, with its service
+    /// time (the response's `exec_s`).
+    running: Vec<Option<(Batch, Time)>>,
+    next_id: u64,
+    served: u64,
+    dropped: u64,
+    max_depth: usize,
+    max_queue_wait: Time,
+    per_replica: Vec<u64>,
+    busy_ps: Time,
+    last_done: Time,
+    /// Reused per-batch latency buffers (no steady-state allocation).
+    queue_ls: Vec<f64>,
+    total_ls: Vec<f64>,
+}
+
+impl ServeWorld<'_> {
+    fn service_time(&self, model: &str, samples: usize) -> Time {
+        let table = &self.service[model];
+        table[samples.min(table.len() - 1)]
+    }
+
+    fn dispatch(&mut self, batch: Batch, sch: &mut Scheduler<Ev>) {
+        if !self.service.contains_key(&*batch.model) {
+            // Mirror the threaded server: unknown models count errors.
+            for _ in 0..batch.len() {
+                self.metrics.record_error();
+            }
+            return;
+        }
+        for r in &batch.requests {
+            self.max_queue_wait = self
+                .max_queue_wait
+                .max(batch.formed_at.saturating_sub(r.enqueued_at));
+        }
+        let replica = self.router.route(batch.len() as u64);
+        if self.busy[replica] {
+            self.waiting[replica].push_back(batch);
+        } else {
+            self.start(replica, batch, sch);
+        }
+    }
+
+    fn start(&mut self, replica: usize, batch: Batch, sch: &mut Scheduler<Ev>) {
+        let service = self.service_time(&batch.model, batch.len());
+        self.busy[replica] = true;
+        self.busy_ps += service;
+        self.running[replica] = Some((batch, service));
+        sch.after(service, Ev::Done { replica: replica as u32 });
+    }
+}
+
+impl World for ServeWorld<'_> {
+    type Event = Ev;
+
+    fn handle(&mut self, ev: Ev, sch: &mut Scheduler<Ev>) {
+        let now = sch.now();
+        match ev {
+            Ev::Arrive { idx } => {
+                let samples = self.trace[idx as usize].samples;
+                for _ in 0..samples {
+                    if self.batcher.total_depth() >= self.config.queue_capacity {
+                        self.dropped += 1;
+                        continue;
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let model = Arc::clone(&self.trace[idx as usize].model);
+                    let was_empty = self.batcher.depth(&model) == 0;
+                    match self.batcher.push(InferRequest::new(id, model, Vec::new(), now), now) {
+                        Some(batch) => self.dispatch(batch, sch),
+                        // Queued into a previously-empty queue: this
+                        // request is the new head — arm its deadline.
+                        // Queues only empty wholesale (full batch or
+                        // whole-queue flush), so every head was once a
+                        // first-into-empty push and owns a check; later
+                        // members need none.
+                        None if was_empty => {
+                            sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
+                        }
+                        None => {}
+                    }
+                }
+                self.max_depth = self.max_depth.max(self.batcher.total_depth());
+            }
+            Ev::FlushCheck => {
+                for batch in self.batcher.poll_timeouts(now) {
+                    self.dispatch(batch, sch);
+                }
+            }
+            Ev::Done { replica } => {
+                let rep = replica as usize;
+                let (batch, _service) =
+                    self.running[rep].take().expect("completion on an idle replica");
+                self.queue_ls.clear();
+                self.total_ls.clear();
+                for r in &batch.requests {
+                    self.queue_ls
+                        .push(to_seconds(batch.formed_at.saturating_sub(r.enqueued_at)));
+                    self.total_ls.push(to_seconds(now.saturating_sub(r.enqueued_at)));
+                }
+                self.metrics
+                    .record_batch(batch.len() as u32, &self.queue_ls, &self.total_ls);
+                self.served += batch.len() as u64;
+                self.per_replica[rep] += batch.len() as u64;
+                self.router.complete(rep, batch.len() as u64);
+                self.busy[rep] = false;
+                self.last_done = self.last_done.max(now);
+                if let Some(next) = self.waiting[rep].pop_front() {
+                    self.start(rep, next, sch);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::clock::millis;
+    use crate::util::rng::Rng;
+    use crate::workloads::generator::poisson_trace;
+    use crate::workloads::resnet::resnet50;
+
+    fn server(max_batch: u32, max_wait: Time, queue_capacity: usize) -> SimServer {
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch, max_wait },
+            routing: Policy::LeastLoaded,
+            queue_capacity,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        s.register("resnet50", &resnet50());
+        s
+    }
+
+    fn trace(seed: u64, rate: f64, duration_s: f64) -> Vec<TraceRequest> {
+        poisson_trace(&mut Rng::new(seed), rate, duration_s, "resnet50", 1)
+    }
+
+    #[test]
+    fn replay_is_bit_identical_across_runs_and_instances() {
+        let t = trace(42, 1200.0, 0.3);
+        let s1 = server(8, millis(2), 10_000);
+        let a = s1.replay(&t, 2);
+        let b = s1.replay(&t, 2); // same instance
+        let c = server(8, millis(2), 10_000).replay(&t, 2); // fresh chip + tables
+        assert!(a.snapshot.bitwise_eq(&b.snapshot), "same-instance replay diverged");
+        assert!(a.snapshot.bitwise_eq(&c.snapshot), "fresh-instance replay diverged");
+        for r in [&b, &c] {
+            assert_eq!(a.served, r.served);
+            assert_eq!(a.dropped, r.dropped);
+            assert_eq!(a.max_queue_depth, r.max_queue_depth);
+            assert_eq!(a.per_replica_served, r.per_replica_served);
+            assert_eq!(a.sim_duration_s.to_bits(), r.sim_duration_s.to_bits());
+            assert_eq!(a.replica_utilization.to_bits(), r.replica_utilization.to_bits());
+            assert_eq!(a.max_queue_wait_s.to_bits(), r.max_queue_wait_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn conservation_and_no_deadline_violation() {
+        let t = trace(7, 2000.0, 0.25);
+        let offered: u64 = t.iter().map(|r| r.samples as u64).sum();
+        let max_wait = millis(2);
+        let r = server(8, max_wait, 64).replay(&t, 1);
+        assert_eq!(r.served + r.dropped, offered, "requests lost or invented");
+        assert!(r.dropped > 0, "expected admission drops at this overload");
+        // No dispatched request ever waited past the batcher deadline.
+        assert!(
+            r.max_queue_wait_s <= to_seconds(max_wait),
+            "queue wait {} exceeded max_wait {}",
+            r.max_queue_wait_s,
+            to_seconds(max_wait)
+        );
+        assert_eq!(r.full_batches + r.timeout_batches, r.snapshot.batches);
+    }
+
+    #[test]
+    fn light_load_latency_is_service_plus_deadline() {
+        // 100 req/s on a ~1578 img/s chip: batches of ~1 flushed by the
+        // 2 ms deadline, so total latency ≈ 2 ms wait + ~3 ms service.
+        let r = server(8, millis(2), 10_000).replay(&trace(3, 100.0, 0.4), 1);
+        assert_eq!(r.dropped, 0);
+        assert!(r.snapshot.p50_latency_s < 0.012, "p50 {}", r.snapshot.p50_latency_s);
+        assert!(r.replica_utilization < 0.5, "util {}", r.replica_utilization);
+        assert!(r.timeout_batches > r.full_batches);
+    }
+
+    #[test]
+    fn saturation_grows_latency_and_batches_fill() {
+        let light = server(8, millis(2), 100_000).replay(&trace(11, 300.0, 0.4), 1);
+        let heavy = server(8, millis(2), 100_000).replay(&trace(11, 4000.0, 0.4), 1);
+        assert!(
+            heavy.snapshot.p99_latency_s > light.snapshot.p99_latency_s * 3.0,
+            "p99 light {} vs heavy {}",
+            light.snapshot.p99_latency_s,
+            heavy.snapshot.p99_latency_s
+        );
+        assert!(heavy.replica_utilization > 0.9, "util {}", heavy.replica_utilization);
+        assert!(heavy.snapshot.mean_batch_size > light.snapshot.mean_batch_size);
+        assert!(heavy.full_batches > heavy.timeout_batches);
+    }
+
+    #[test]
+    fn replicas_share_load_and_relieve_saturation() {
+        let t = trace(13, 2500.0, 0.4);
+        let one = server(8, millis(2), 100_000).replay(&t, 1);
+        let two = server(8, millis(2), 100_000).replay(&t, 2);
+        assert!(two.snapshot.throughput_rps >= one.snapshot.throughput_rps * 0.95);
+        assert!(two.snapshot.p99_latency_s < one.snapshot.p99_latency_s);
+        assert!(two.replica_utilization < one.replica_utilization);
+        assert!(two.per_replica_served.iter().all(|&n| n > 0), "an idle replica under overload");
+    }
+
+    #[test]
+    fn unknown_model_counts_errors() {
+        let s = server(8, millis(2), 10_000);
+        let t = poisson_trace(&mut Rng::new(5), 500.0, 0.1, "nope", 1);
+        let r = s.replay(&t, 1);
+        assert_eq!(r.served, 0);
+        assert!(r.snapshot.errors > 0);
+    }
+
+    #[test]
+    fn throughput_matches_analytic_at_saturation() {
+        // Sustained overload with full batches: virtual-server throughput
+        // approaches the chip model's analytic batch-8 rate, tying the
+        // serving layer to the schedule numbers by construction.
+        let chip = SunriseChip::silicon();
+        let analytic = chip.run(&resnet50(), 8).images_per_s();
+        let r = server(8, millis(2), 1_000_000).replay(&trace(17, 4000.0, 0.5), 1);
+        assert!(
+            (r.snapshot.throughput_rps - analytic).abs() / analytic < 0.15,
+            "virtual server {} vs analytic {}",
+            r.snapshot.throughput_rps,
+            analytic
+        );
+    }
+}

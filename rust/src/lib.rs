@@ -26,7 +26,9 @@
 //! - [`scaling`] — process normalization (Tables V–VII) and cost (Table IV).
 //! - [`analysis`] — die-normalized benchmark computation and report tables.
 //! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
-//! - [`coordinator`] — the inference-serving loop (batcher, router, metrics).
+//! - [`coordinator`] — the inference-serving loop (batcher, router,
+//!   metrics) on two backends: threaded wall-clock and deterministic
+//!   virtual time, plus capacity-grid sweeps.
 //! - [`config`] — typed configuration on top of the in-tree JSON parser.
 //! - [`util`] — JSON, PRNG, property testing, table rendering, bench harness.
 //!

@@ -4,21 +4,35 @@
 //!   report                  render all paper tables (I–IV, VII)
 //!   simulate                run a workload on the simulated chip
 //!   serve                   run the serving demo (SimExecutor replicas)
+//!   queue-sim               event-driven queueing sim of raw chips
+//!   sweep                   rate×replicas capacity grid (virtual time)
 //!   roofline                print ridge points + memory-wall summary
 //!   capacity                parameter-capacity projections (§VII)
 //!
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
-//!           `sunrise simulate --model resnet50 --tech interposer`
+//!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
 
 use sunrise::analysis::{report, roofline};
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::config;
+use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::capacity::{
+    curve, render_grid, saturation_knee, sweep_capacity, GridConfig,
+};
 use sunrise::coordinator::server::{Server, ServerConfig};
 use sunrise::interconnect::Technology;
 use sunrise::runtime::executor::{Executor, SimExecutor};
 use sunrise::scaling::dram::{project_capacity, DramNode};
+use sunrise::sim::from_seconds;
 use sunrise::util::cli::Cli;
 use sunrise::workloads::{mlp, resnet, transformer, Network};
+
+/// Print a CLI usage error and exit 2 (matching `Cli::parse_slice_or_exit`
+/// semantics for errors found after parsing).
+fn usage_error(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
 
 fn net_by_name(name: &str) -> Option<Network> {
     Some(match name {
@@ -41,13 +55,7 @@ fn cmd_simulate(args: &[String]) {
         .opt("tech", "hitoc", "stack technology: hitoc|tsv|interposer")
         .opt("config", "", "chip config JSON path (overrides --tech)")
         .flag("layers", "print per-layer breakdown");
-    let a = match cli.parse(args) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
+    let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
         eprintln!("unknown model {}", a.get("model"));
         std::process::exit(2);
@@ -99,17 +107,16 @@ fn cmd_serve(args: &[String]) {
         .opt("replicas", "2", "number of chip replicas")
         .opt("requests", "200", "requests to serve")
         .opt("max-batch", "8", "dynamic batcher max batch");
-    let a = match cli.parse(args) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
+    let a = cli.parse_slice_or_exit(args);
     let replicas = a.get_usize("replicas");
     let n = a.get_usize("requests");
-    let mut cfg = ServerConfig::default();
-    cfg.batcher.max_batch = a.get_usize("max-batch") as u32;
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: a.get_usize("max-batch") as u32,
+            ..BatcherConfig::default()
+        },
+        ..ServerConfig::default()
+    };
     let execs: Vec<Box<dyn Executor>> = (0..replicas)
         .map(|_| {
             let mut e = SimExecutor::new(SunriseChip::silicon());
@@ -121,9 +128,116 @@ fn cmd_serve(args: &[String]) {
     for i in 0..n {
         server.submit("mlp", vec![(i % 100) as f32 / 100.0; 784]);
     }
-    let _ = server.collect(n, std::time::Duration::from_secs(60));
+    let resps = server.collect(n, std::time::Duration::from_secs(60));
+    let timed_out = n - resps.len();
+    println!(
+        "collected {}/{} responses ({} timed out)",
+        resps.len(),
+        n,
+        timed_out
+    );
     println!("{}", server.metrics.snapshot().report());
     server.shutdown();
+    if timed_out > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn parse_f64_list(name: &str, s: &str) -> Vec<f64> {
+    let mut out = Vec::new();
+    for x in s.split(',').filter(|x| !x.trim().is_empty()) {
+        match x.trim().parse::<f64>() {
+            Ok(v) => out.push(v),
+            Err(_) => usage_error(&format!("option --{name}: `{x}` is not a number")),
+        }
+    }
+    if out.is_empty() {
+        usage_error(&format!("option --{name}: empty list"));
+    }
+    out
+}
+
+fn parse_usize_list(name: &str, s: &str) -> Vec<usize> {
+    parse_f64_list(name, s)
+        .into_iter()
+        .map(|v| {
+            if v < 1.0 || v.fract() != 0.0 {
+                usage_error(&format!("option --{name}: `{v}` is not a positive integer"));
+            }
+            v as usize
+        })
+        .collect()
+}
+
+fn cmd_sweep(args: &[String]) {
+    let cli = Cli::new(
+        "sunrise sweep",
+        "rate×replicas×batch capacity-planning grid on the virtual-time server",
+    )
+    .opt("model", "resnet50", "workload: resnet50|resnet_mini|mlp|decoder")
+    .opt("rates", "250,500,1000,2000,4000", "comma-separated Poisson rates, req/s")
+    .opt("replicas", "1,2,4", "comma-separated replica counts")
+    .opt("max-batch", "8", "comma-separated dynamic-batcher limits")
+    .opt("duration", "1.0", "trace duration per point, s")
+    .opt("max-wait-ms", "2.0", "batcher deadline, ms")
+    .opt("queue-cap", "10000", "admission-control queue bound")
+    .opt("seed", "42", "trace seed")
+    .opt("knee-frac", "0.9", "knee threshold: throughput < frac × offered rate");
+    let a = cli.parse_slice_or_exit(args);
+    let net = net_by_name(a.get("model")).unwrap_or_else(|| {
+        eprintln!("unknown model {}", a.get("model"));
+        std::process::exit(2);
+    });
+    let grid = GridConfig {
+        rates: parse_f64_list("rates", a.get("rates")),
+        replicas: parse_usize_list("replicas", a.get("replicas")),
+        max_batches: {
+            let mbs = parse_usize_list("max-batch", a.get("max-batch"));
+            if mbs.iter().any(|&b| b > 1024) {
+                usage_error("option --max-batch: values above 1024 are not supported");
+            }
+            mbs.into_iter().map(|b| b as u32).collect()
+        },
+        duration_s: a.get_f64("duration"),
+        seed: a.get_u64("seed"),
+        max_wait: from_seconds(a.get_f64("max-wait-ms") / 1e3),
+        queue_capacity: a.get_usize("queue-cap"),
+        ..GridConfig::default()
+    };
+    // `is_finite` rejects NaN and ±inf (an infinite rate or duration
+    // would make trace generation loop forever).
+    if !grid.duration_s.is_finite() || grid.duration_s <= 0.0 {
+        usage_error("option --duration must be a finite number > 0");
+    }
+    if grid.rates.iter().any(|&r| !r.is_finite() || r <= 0.0) {
+        usage_error("option --rates: every rate must be a finite number > 0");
+    }
+    let max_wait_ms = a.get_f64("max-wait-ms");
+    if !max_wait_ms.is_finite() || max_wait_ms < 0.0 || max_wait_ms > 60_000.0 {
+        usage_error("option --max-wait-ms must be between 0 and 60000 (one minute)");
+    }
+    let t0 = std::time::Instant::now();
+    let points = sweep_capacity(&net, a.get("model"), &SunriseConfig::default(), &grid);
+    println!("{}", render_grid(&points));
+    let frac = a.get_f64("knee-frac");
+    for &replicas in &grid.replicas {
+        for &max_batch in &grid.max_batches {
+            match saturation_knee(&curve(&points, replicas, max_batch), frac) {
+                Some(k) => println!(
+                    "replicas={replicas} max_batch={max_batch}: saturation knee ≈ {k:.0} req/s"
+                ),
+                None => println!(
+                    "replicas={replicas} max_batch={max_batch}: kept up at every swept rate"
+                ),
+            }
+        }
+    }
+    println!(
+        "({} grid points, {:.1} virtual s each, swept in {:.0} ms wall)",
+        points.len(),
+        grid.duration_s,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
 }
 
 fn cmd_queue_sim(args: &[String]) {
@@ -135,13 +249,7 @@ fn cmd_queue_sim(args: &[String]) {
         .opt("max-batch", "8", "batch cap")
         .opt("queue-cap", "10000", "admission-control queue bound")
         .opt("seed", "42", "trace seed");
-    let a = match cli.parse(args) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
+    let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
         eprintln!("unknown model {}", a.get("model"));
         std::process::exit(2);
@@ -214,13 +322,14 @@ fn main() {
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("queue-sim") => cmd_queue_sim(&argv[1..]),
+        Some("sweep") => cmd_sweep(&argv[1..]),
         Some("roofline") => cmd_roofline(),
         Some("capacity") => cmd_capacity(),
         _ => {
             eprintln!(
                 "sunrise — 3D near-memory AI chip framework\n\n\
-                 USAGE: sunrise <report|simulate|serve|queue-sim|roofline|capacity> [options]\n\
-                 Try `sunrise simulate --help`."
+                 USAGE: sunrise <report|simulate|serve|queue-sim|sweep|roofline|capacity> [options]\n\
+                 Try `sunrise simulate --help` or `sunrise sweep --help`."
             );
             std::process::exit(2);
         }

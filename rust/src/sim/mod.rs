@@ -10,7 +10,8 @@
 //! - [`wheel`] — the hierarchical time wheel backing the engine
 //!   (allocation-free steady state).
 //! - [`sweep`] — scoped-thread parallel map for fanning simulation sweeps
-//!   (batch size × chip count × process node) across cores.
+//!   (batch size × chip count × process node, and the coordinator's
+//!   rate×replicas capacity grids) across cores.
 //! - [`stats`] — counters, gauges, and streaming histograms.
 //! - [`trace`] — bounded execution trace for debugging/inspection.
 
@@ -26,6 +27,12 @@ pub type Time = u64;
 /// Picoseconds per second.
 pub const PS_PER_S: f64 = 1e12;
 
+/// Picoseconds per millisecond.
+pub const PS_PER_MS: Time = 1_000_000_000;
+
+/// Picoseconds per microsecond.
+pub const PS_PER_US: Time = 1_000_000;
+
 /// Convert simulation time to seconds.
 pub fn to_seconds(t: Time) -> f64 {
     t as f64 / PS_PER_S
@@ -34,4 +41,24 @@ pub fn to_seconds(t: Time) -> f64 {
 /// Convert seconds to simulation time.
 pub fn from_seconds(s: f64) -> Time {
     (s * PS_PER_S) as Time
+}
+
+/// `ms` milliseconds as a [`Time`] span.
+pub const fn millis(ms: u64) -> Time {
+    ms * PS_PER_MS
+}
+
+/// `us` microseconds as a [`Time`] span.
+pub const fn micros(us: u64) -> Time {
+    us * PS_PER_US
+}
+
+/// A `Duration` as a [`Time`] span (saturating at `u64::MAX` ps).
+pub fn duration_to_time(d: std::time::Duration) -> Time {
+    let ps = d.as_nanos().saturating_mul(1000);
+    if ps > Time::MAX as u128 {
+        Time::MAX
+    } else {
+        ps as Time
+    }
 }

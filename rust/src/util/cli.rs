@@ -181,17 +181,24 @@ impl Cli {
         })
     }
 
-    /// Parse `std::env::args()`, printing help/errors and exiting on
-    /// failure. Convenience for binaries.
-    pub fn parse_or_exit(&self) -> Args {
-        let argv: Vec<String> = std::env::args().skip(1).collect();
-        match self.parse(&argv) {
+    /// Parse the given argv tail, printing help/errors and exiting on
+    /// failure (status 0 when the message is the help text, 2 for real
+    /// parse errors). Convenience for subcommands that own their slice.
+    pub fn parse_slice_or_exit(&self, argv: &[String]) -> Args {
+        match self.parse(argv) {
             Ok(a) => a,
             Err(msg) => {
                 eprintln!("{msg}");
                 std::process::exit(if msg.starts_with(&self.program) { 0 } else { 2 });
             }
         }
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on
+    /// failure. Convenience for binaries.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_slice_or_exit(&argv)
     }
 }
 

@@ -3,14 +3,20 @@
 
 use crate::dataflow::layer::Layer;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// One inference request in a trace.
+///
+/// The model name is interned: every request in a trace shares one
+/// `Arc<str>` (consistent with the layer-name interning in the dataflow
+/// IR), so generating — and replaying — a million-request trace performs
+/// no per-request string allocation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceRequest {
     /// Arrival time, seconds from trace start.
     pub arrival_s: f64,
-    /// Which model this request targets.
-    pub model: String,
+    /// Which model this request targets (interned).
+    pub model: Arc<str>,
     /// Samples in the request (client-side batch).
     pub samples: u32,
 }
@@ -24,6 +30,7 @@ pub fn poisson_trace(
     max_samples: u32,
 ) -> Vec<TraceRequest> {
     assert!(rate_per_s > 0.0 && duration_s > 0.0);
+    let model: Arc<str> = Arc::from(model);
     let mut t = 0.0;
     let mut out = Vec::new();
     loop {
@@ -33,7 +40,7 @@ pub fn poisson_trace(
         }
         out.push(TraceRequest {
             arrival_s: t,
-            model: model.to_string(),
+            model: Arc::clone(&model),
             samples: 1 + rng.below(max_samples as u64) as u32,
         });
     }
@@ -49,6 +56,7 @@ pub fn bursty_trace(
     duration_s: f64,
     model: &str,
 ) -> Vec<TraceRequest> {
+    let model: Arc<str> = Arc::from(model);
     let mut t = 0.0;
     let mut out = Vec::new();
     loop {
@@ -60,7 +68,7 @@ pub fn bursty_trace(
         }
         out.push(TraceRequest {
             arrival_s: t,
-            model: model.to_string(),
+            model: Arc::clone(&model),
             samples: 1,
         });
     }
@@ -113,5 +121,17 @@ mod tests {
         let t1 = poisson_trace(&mut Rng::new(9), 500.0, 1.0, "m", 2);
         let t2 = poisson_trace(&mut Rng::new(9), 500.0, 1.0, "m", 2);
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn model_name_interned_once_per_trace() {
+        let mut rng = Rng::new(21);
+        let trace = poisson_trace(&mut rng, 2000.0, 0.5, "resnet50", 1);
+        assert!(trace.len() > 2);
+        let first = &trace[0].model;
+        assert!(
+            trace.iter().all(|r| Arc::ptr_eq(&r.model, first)),
+            "per-request model allocation crept back in"
+        );
     }
 }

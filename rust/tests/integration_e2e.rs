@@ -5,7 +5,9 @@
 use std::time::Duration;
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::clock::millis;
 use sunrise::coordinator::server::{Server, ServerConfig};
+use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
 use sunrise::interconnect::Technology;
 use sunrise::isa::cpu::{Cpu, StepResult};
 use sunrise::isa::program::{build, fw_batch_loop};
@@ -24,10 +26,9 @@ fn sim_replica() -> Box<dyn Executor> {
 
 #[test]
 fn serving_two_models_on_two_replicas() {
-    let mut cfg = ServerConfig::default();
-    cfg.batcher = BatcherConfig {
-        max_batch: 4,
-        max_wait: Duration::from_millis(2),
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: millis(2) },
+        ..ServerConfig::default()
     };
     let server = Server::start(vec![sim_replica(), sim_replica()], cfg);
     let n_mlp = 24;
@@ -58,10 +59,9 @@ fn pjrt_end_to_end_when_artifacts_present() {
         Box::new(PjrtExecutor::load(&dir).expect("load artifacts")),
         Box::new(PjrtExecutor::load(&dir).expect("load artifacts")),
     ];
-    let mut cfg = ServerConfig::default();
-    cfg.batcher = BatcherConfig {
-        max_batch: 8,
-        max_wait: Duration::from_millis(1),
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(1) },
+        ..ServerConfig::default()
     };
     let server = Server::start(execs, cfg);
     let n = 64;
@@ -123,6 +123,49 @@ fn pjrt_matches_python_goldens() {
         }
         println!("{name}: matches python golden ({} values checked)", want.len());
     }
+}
+
+#[test]
+fn virtual_and_threaded_stacks_share_policy_code() {
+    // The same batcher/router/metrics types serve both backends: the
+    // threaded server answers every request, and the virtual-time server
+    // replays an equivalent workload deterministically.
+    let n = 48;
+
+    // Threaded, wall-clock.
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(vec![sim_replica(), sim_replica()], cfg);
+    for i in 0..n {
+        server.submit("mlp", vec![i as f32 / 100.0; 784]);
+    }
+    let resps = server.collect(n, Duration::from_secs(60));
+    assert_eq!(resps.len(), n);
+    let threaded = server.metrics.snapshot();
+    server.shutdown();
+
+    // Virtual, simulated time: same policy config, bit-reproducible.
+    let sim_cfg = SimServeConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+        ..SimServeConfig::default()
+    };
+    let mut sim = SimServer::new(SunriseChip::silicon(), sim_cfg);
+    sim.register("mlp", &mlp::quickstart());
+    let trace = sunrise::workloads::generator::poisson_trace(
+        &mut sunrise::util::rng::Rng::new(42),
+        2000.0,
+        (n as f64) / 2000.0,
+        "mlp",
+        1,
+    );
+    let virt_a = sim.replay(&trace, 2);
+    let virt_b = sim.replay(&trace, 2);
+    assert!(virt_a.snapshot.bitwise_eq(&virt_b.snapshot), "virtual replay nondeterministic");
+    assert_eq!(virt_a.served + virt_a.dropped, trace.len() as u64);
+    assert_eq!(threaded.errors, 0);
+    assert_eq!(virt_a.snapshot.errors, 0);
 }
 
 #[test]
