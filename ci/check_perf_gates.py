@@ -1,46 +1,67 @@
 #!/usr/bin/env python3
-"""Check the EXPERIMENTS.md §Perf acceptance gates on a measured
-BENCH_hotpath.json: the time-wheel engine must beat the in-tree legacy
-heap engine by >=5x on the 10k-event ripple chain, and the cached
-schedule must beat the uncached plan by >=10x.
+"""Check the EXPERIMENTS.md §Perf acceptance gates on measured bench JSON.
 
-Exit 0 when both gates pass, 1 otherwise (CI retries the bench once on
-failure to rule out shared-runner noise before going red).
+BENCH_hotpath.json:
+  - the time-wheel engine must beat the in-tree legacy heap engine by
+    >=5x on the 10k-event ripple chain;
+  - the cached schedule must beat the uncached plan by >=10x.
+
+BENCH_serving.json:
+  - the streaming serving replay must beat the frozen PR-2 materialized
+    baseline by >=3x in replayed req/s (both rows replay the same trace
+    parameters, so the ns/op ratio is the req/s ratio).
+
+Exit 0 when every gate passes, 1 otherwise (CI retries the benches once
+on failure to rule out shared-runner noise before going red).
 """
 
 import json
 import sys
 
-GATES = [
-    # (numerator row, denominator row, minimum ratio, label)
-    (
-        "sim engine: 10k ripple (legacy boxed heap)",
-        "sim engine: 10k-event ripple chain",
-        5.0,
-        "ripple chain (wheel vs legacy heap)",
-    ),
-    (
-        "scheduler: resnet50 full net (b=8, uncached)",
-        "scheduler: resnet50 full net (b=8)",
-        10.0,
-        "schedule cache (cached vs uncached)",
-    ),
-]
+# file -> [(numerator row, denominator row, minimum ratio, label), ...]
+GATES = {
+    "BENCH_hotpath.json": [
+        (
+            "sim engine: 10k ripple (legacy boxed heap)",
+            "sim engine: 10k-event ripple chain",
+            5.0,
+            "ripple chain (wheel vs legacy heap)",
+        ),
+        (
+            "scheduler: resnet50 full net (b=8, uncached)",
+            "scheduler: resnet50 full net (b=8)",
+            10.0,
+            "schedule cache (cached vs uncached)",
+        ),
+    ],
+    "BENCH_serving.json": [
+        (
+            "serving_replay: 0.5s x 20k req/s, materialized baseline",
+            "serving_replay: 0.5s x 20k req/s, streaming",
+            3.0,
+            "serving replay (streaming vs materialized baseline)",
+        ),
+    ],
+}
 
 
-def main() -> int:
-    with open("BENCH_hotpath.json") as f:
-        doc = json.load(f)
+def check_file(path: str, gates) -> bool:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {path} missing (run the corresponding `cargo bench` first)")
+        return False
     ns = {r["name"]: r["ns_per_op"] for r in doc["results"]}
-    missing = [row for gate in GATES for row in gate[:2] if row not in ns]
+    missing = [row for gate in gates for row in gate[:2] if row not in ns]
     if missing:
-        print("FAIL: BENCH_hotpath.json has no measured row(s):")
+        print(f"FAIL: {path} has no measured row(s):")
         for row in missing:
             print(f"  - {row}")
-        print("(stale/projection JSON? run `cargo bench --bench hotpath_microbench` first)")
-        return 1
+        print("(stale/projection JSON? re-run the bench that writes it)")
+        return False
     ok = True
-    for slow, fast, min_ratio, label in GATES:
+    for slow, fast, min_ratio, label in gates:
         ratio = ns[slow] / ns[fast]
         status = "PASS" if ratio >= min_ratio else "FAIL"
         print(
@@ -48,6 +69,13 @@ def main() -> int:
             f"-> {ratio:.1f}x (gate >= {min_ratio:.0f}x)"
         )
         ok = ok and ratio >= min_ratio
+    return ok
+
+
+def main() -> int:
+    ok = True
+    for path, gates in GATES.items():
+        ok = check_file(path, gates) and ok
     return 0 if ok else 1
 
 

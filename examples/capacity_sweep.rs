@@ -26,7 +26,8 @@ fn main() {
     };
 
     let t0 = std::time::Instant::now();
-    let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid);
+    let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid)
+        .expect("grid rates/duration are finite and positive");
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     println!("{}", render_grid(&points));

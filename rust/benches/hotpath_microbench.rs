@@ -10,7 +10,7 @@
 
 use sunrise::chip::sunrise::SunriseChip;
 use sunrise::coordinator::batcher::{BatcherConfig, DynamicBatcher};
-use sunrise::coordinator::request::InferRequest;
+use sunrise::coordinator::request::{InferRequest, ModelId};
 use sunrise::coordinator::router::{Policy, Router};
 use sunrise::dataflow::mapping::Dataflow;
 use sunrise::memory::dram::Op;
@@ -114,6 +114,7 @@ fn main() {
     });
 
     // --- dynamic batcher (virtual time: timestamps are plain u64 ps) ---
+    let model = ModelId::from_index(0);
     b.bench("batcher: push 64 requests -> 8 batches", || {
         let mut batcher = DynamicBatcher::new(BatcherConfig {
             max_batch: 8,
@@ -121,9 +122,23 @@ fn main() {
         });
         let mut dispatched = 0;
         for i in 0..64u64 {
-            let req = InferRequest::new(i, "m", vec![0.0; 4], i);
-            if batcher.push(req, i).is_some() {
+            let req = InferRequest::new(i, model, vec![0.0; 4], i);
+            if batcher.push(model, req, i).is_some() {
                 dispatched += 1;
+            }
+        }
+        dispatched
+    });
+    b.bench("batcher: push 64 flyweight stamps -> 8 batches (sim path)", || {
+        let mut batcher: DynamicBatcher<u64> = DynamicBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: millis(1000),
+        });
+        let mut dispatched = 0;
+        for i in 0..64u64 {
+            if let Some(batch) = batcher.push(model, i, i) {
+                dispatched += 1;
+                batcher.recycle(batch.requests);
             }
         }
         dispatched

@@ -1,0 +1,404 @@
+//! The PR-2 materialized replay, frozen as a same-binary baseline.
+//!
+//! This module preserves the serving replay exactly as it worked before
+//! the streaming rewrite, so the `serving_replay` bench (and its CI gate)
+//! measures streaming-vs-materialized in one `cargo bench` invocation —
+//! the same pattern as `sim::engine::legacy` for the event engine. Per
+//! request, this path pays everything the streaming replay deleted:
+//!
+//! - the whole trace materialized as `Vec<TraceRequest>` and one `Arrive`
+//!   event pre-scheduled per request (O(N) memory, far-future wheel
+//!   cascades);
+//! - an `Arc<str>` clone plus an `Arc<str>`-keyed `BTreeMap` probe per
+//!   push, and two more probes per dispatch;
+//! - a 40-byte request record (id + interned name + empty input vec +
+//!   stamp) per queued sample, with batch `Vec`s allocated per batch;
+//! - two f64-seconds conversions and two log-spaced-histogram binary
+//!   searches per recorded request.
+//!
+//! Not on any hot path. Differential tests pin its counts against the
+//! streaming replay; metric *values* differ only by histogram bucketing
+//! (log-spaced f64 here, log2 integer there).
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::request::RequestId;
+use crate::coordinator::router::Router;
+use crate::coordinator::simserve::{SimServeReport, SimServer};
+use crate::sim::engine::{Engine, Scheduler, World};
+use crate::sim::stats::Histogram;
+use crate::sim::{from_seconds, to_seconds, Time};
+use crate::workloads::generator::TraceRequest;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// The pre-streaming request record: everything the PR-2 sim path carried
+/// per queued sample.
+#[derive(Debug, Clone)]
+struct Req {
+    #[allow(dead_code)]
+    id: RequestId,
+    model: Arc<str>,
+    #[allow(dead_code)]
+    input: Vec<f32>,
+    enqueued_at: Time,
+}
+
+/// The pre-streaming dynamic batcher: per-model pending queues keyed by
+/// `Arc<str>` in a `BTreeMap`, fresh `Vec` per batch.
+struct MapBatcher {
+    config: BatcherConfig,
+    pending: BTreeMap<Arc<str>, Vec<Req>>,
+    full_batches: u64,
+    timeout_batches: u64,
+}
+
+struct MapBatch {
+    model: Arc<str>,
+    requests: Vec<Req>,
+    formed_at: Time,
+}
+
+impl MapBatcher {
+    fn new(config: BatcherConfig) -> MapBatcher {
+        MapBatcher { config, pending: BTreeMap::new(), full_batches: 0, timeout_batches: 0 }
+    }
+
+    fn depth(&self, model: &str) -> usize {
+        self.pending.get(model).map(Vec::len).unwrap_or(0)
+    }
+
+    fn total_depth(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    fn push(&mut self, req: Req, now: Time) -> Option<MapBatch> {
+        let q = self.pending.entry(Arc::clone(&req.model)).or_default();
+        q.push(req);
+        if q.len() >= self.config.max_batch as usize {
+            let model = Arc::clone(&q[0].model);
+            let requests = std::mem::take(q);
+            self.full_batches += 1;
+            return Some(MapBatch { model, requests, formed_at: now });
+        }
+        None
+    }
+
+    fn poll_timeouts(&mut self, now: Time) -> Vec<MapBatch> {
+        let mut out = Vec::new();
+        let expired: Vec<Arc<str>> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|r| now.saturating_sub(r.enqueued_at) >= self.config.max_wait)
+                    .unwrap_or(false)
+            })
+            .map(|(m, _)| Arc::clone(m))
+            .collect();
+        for model in expired {
+            let requests = std::mem::take(self.pending.get_mut(&model).unwrap());
+            if !requests.is_empty() {
+                self.timeout_batches += 1;
+                out.push(MapBatch { model, requests, formed_at: now });
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Trace request `idx` arrives (one pre-scheduled per request).
+    Arrive { idx: u32 },
+    FlushCheck,
+    Done { replica: u32 },
+}
+
+struct BaselineWorld<'a> {
+    queue_capacity: usize,
+    trace: &'a [TraceRequest],
+    service: &'a BTreeMap<Arc<str>, Vec<Time>>,
+    latency: Histogram,
+    queue: Histogram,
+    requests: u64,
+    batch_sizes: u64,
+    batches: u64,
+    errors: u64,
+    batcher: MapBatcher,
+    router: Router,
+    busy: Vec<bool>,
+    waiting: Vec<VecDeque<MapBatch>>,
+    running: Vec<Option<(MapBatch, Time)>>,
+    next_id: u64,
+    served: u64,
+    dropped: u64,
+    max_depth: usize,
+    max_queue_wait: Time,
+    per_replica: Vec<u64>,
+    busy_ps: Time,
+    last_done: Time,
+    queue_ls: Vec<f64>,
+    total_ls: Vec<f64>,
+}
+
+impl BaselineWorld<'_> {
+    fn service_time(&self, model: &str, samples: usize) -> Time {
+        // The PR-2 shape: a `contains_key` in dispatch, then this second
+        // probe + panic-capable index.
+        let table = &self.service[model];
+        table[samples.min(table.len() - 1)]
+    }
+
+    fn dispatch(&mut self, batch: MapBatch, sch: &mut Scheduler<Ev>) {
+        if !self.service.contains_key(&*batch.model) {
+            for _ in 0..batch.requests.len() {
+                self.errors += 1;
+            }
+            return;
+        }
+        for r in &batch.requests {
+            self.max_queue_wait = self
+                .max_queue_wait
+                .max(batch.formed_at.saturating_sub(r.enqueued_at));
+        }
+        let replica = self.router.route(batch.requests.len() as u64);
+        if self.busy[replica] {
+            self.waiting[replica].push_back(batch);
+        } else {
+            self.start(replica, batch, sch);
+        }
+    }
+
+    fn start(&mut self, replica: usize, batch: MapBatch, sch: &mut Scheduler<Ev>) {
+        let service = self.service_time(&batch.model, batch.requests.len());
+        self.busy[replica] = true;
+        self.busy_ps += service;
+        self.running[replica] = Some((batch, service));
+        sch.after(service, Ev::Done { replica: replica as u32 });
+    }
+}
+
+impl World for BaselineWorld<'_> {
+    type Event = Ev;
+
+    fn handle(&mut self, ev: Ev, sch: &mut Scheduler<Ev>) {
+        let now = sch.now();
+        match ev {
+            Ev::Arrive { idx } => {
+                let samples = self.trace[idx as usize].samples;
+                for _ in 0..samples {
+                    if self.batcher.total_depth() >= self.queue_capacity {
+                        self.dropped += 1;
+                        continue;
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let model = Arc::clone(&self.trace[idx as usize].model);
+                    let was_empty = self.batcher.depth(&model) == 0;
+                    let req = Req { id, model, input: Vec::new(), enqueued_at: now };
+                    match self.batcher.push(req, now) {
+                        Some(batch) => self.dispatch(batch, sch),
+                        None if was_empty => {
+                            sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
+                        }
+                        None => {}
+                    }
+                }
+                self.max_depth = self.max_depth.max(self.batcher.total_depth());
+            }
+            Ev::FlushCheck => {
+                for batch in self.batcher.poll_timeouts(now) {
+                    self.dispatch(batch, sch);
+                }
+            }
+            Ev::Done { replica } => {
+                let rep = replica as usize;
+                let (batch, _service) =
+                    self.running[rep].take().expect("completion on an idle replica");
+                self.queue_ls.clear();
+                self.total_ls.clear();
+                for r in &batch.requests {
+                    self.queue_ls
+                        .push(to_seconds(batch.formed_at.saturating_sub(r.enqueued_at)));
+                    self.total_ls.push(to_seconds(now.saturating_sub(r.enqueued_at)));
+                }
+                let n = batch.requests.len();
+                self.batches += 1;
+                self.batch_sizes += n as u64;
+                self.requests += n as u64;
+                for &q in &self.queue_ls {
+                    self.queue.record(q);
+                }
+                for &t in &self.total_ls {
+                    self.latency.record(t);
+                }
+                self.served += n as u64;
+                self.per_replica[rep] += n as u64;
+                self.router.complete(rep, n as u64);
+                self.busy[rep] = false;
+                self.last_done = self.last_done.max(now);
+                if let Some(next) = self.waiting[rep].pop_front() {
+                    self.start(rep, next, sch);
+                }
+            }
+        }
+    }
+}
+
+impl SimServer {
+    /// Replay `trace` through the frozen PR-2 path: the whole trace
+    /// pre-scheduled as one `Arrive` event per request, `Arc<str>`-keyed
+    /// map batching, f64 histogram metrics. The comparison row for the
+    /// `serving_replay` bench gate — not for production sweeps.
+    pub fn replay_materialized_baseline(
+        &self,
+        trace: &[TraceRequest],
+        replicas: usize,
+    ) -> SimServeReport {
+        assert!(replicas > 0);
+        // Rebuild the PR-2 name-keyed service map from the registry (setup
+        // cost only; the per-request costs in the loop are the point).
+        let service: BTreeMap<Arc<str>, Vec<Time>> = self
+            .registry()
+            .iter()
+            .filter_map(|(id, name)| {
+                self.service_table(id).map(|t| (Arc::clone(name), t.to_vec()))
+            })
+            .collect();
+        let mut world = BaselineWorld {
+            queue_capacity: self.config.queue_capacity,
+            trace,
+            service: &service,
+            latency: Histogram::latency(),
+            queue: Histogram::latency(),
+            requests: 0,
+            batch_sizes: 0,
+            batches: 0,
+            errors: 0,
+            batcher: MapBatcher::new(self.config.batcher),
+            router: Router::new(self.config.routing, replicas),
+            busy: vec![false; replicas],
+            waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
+            running: (0..replicas).map(|_| None).collect(),
+            next_id: 0,
+            served: 0,
+            dropped: 0,
+            max_depth: 0,
+            max_queue_wait: 0,
+            per_replica: vec![0; replicas],
+            busy_ps: 0,
+            last_done: 0,
+            queue_ls: Vec::new(),
+            total_ls: Vec::new(),
+        };
+        let mut engine: Engine<Ev> = Engine::new();
+        for (i, req) in trace.iter().enumerate() {
+            engine.schedule(from_seconds(req.arrival_s), Ev::Arrive { idx: i as u32 });
+        }
+        engine.run(&mut world);
+        let end = world.last_done.max(1);
+        let elapsed = to_seconds(end).max(1e-9);
+        let offered: u64 = trace.iter().map(|r| r.samples as u64).sum();
+        SimServeReport {
+            snapshot: MetricsSnapshot {
+                requests: world.requests,
+                batches: world.batches,
+                errors: world.errors,
+                throughput_rps: world.requests as f64 / elapsed,
+                mean_latency_s: world.latency.mean(),
+                p50_latency_s: world.latency.quantile(0.5),
+                p99_latency_s: world.latency.quantile(0.99),
+                mean_batch_size: if world.batches == 0 {
+                    0.0
+                } else {
+                    world.batch_sizes as f64 / world.batches as f64
+                },
+                mean_queue_s: world.queue.mean(),
+            },
+            offered,
+            served: world.served,
+            dropped: world.dropped,
+            full_batches: world.batcher.full_batches,
+            timeout_batches: world.batcher.timeout_batches,
+            max_queue_depth: world.max_depth,
+            max_queue_wait_s: to_seconds(world.max_queue_wait),
+            per_replica_served: world.per_replica,
+            sim_duration_s: to_seconds(end),
+            replica_utilization: to_seconds(world.busy_ps) / (to_seconds(end) * replicas as f64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::chip::sunrise::SunriseChip;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::clock::millis;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::simserve::{SimServeConfig, SimServer};
+    use crate::util::rng::Rng;
+    use crate::workloads::generator::poisson_trace;
+    use crate::workloads::resnet::resnet50;
+
+    fn server(max_batch: u32) -> SimServer {
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch, max_wait: millis(2) },
+            routing: Policy::LeastLoaded,
+            queue_capacity: 10_000,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        s.register("resnet50", &resnet50());
+        s
+    }
+
+    /// The baseline and the streaming replay simulate the same system:
+    /// every count agrees exactly; metric values agree up to histogram
+    /// bucketing (log2 integer vs log-spaced f64) and summation order.
+    #[test]
+    fn baseline_counts_match_streaming_replay() {
+        for (seed, rate, replicas) in [(42u64, 1500.0, 1usize), (7, 3500.0, 2)] {
+            let t = poisson_trace(&mut Rng::new(seed), rate, 0.3, "resnet50", 1);
+            let s = server(8);
+            let new = s.replay(&t, replicas);
+            let old = s.replay_materialized_baseline(&t, replicas);
+            assert_eq!(new.offered, old.offered);
+            assert_eq!(new.served, old.served);
+            assert_eq!(new.dropped, old.dropped);
+            assert_eq!(new.full_batches, old.full_batches);
+            assert_eq!(new.timeout_batches, old.timeout_batches);
+            assert_eq!(new.max_queue_depth, old.max_queue_depth);
+            assert_eq!(new.per_replica_served, old.per_replica_served);
+            assert_eq!(new.snapshot.batches, old.snapshot.batches);
+            assert_eq!(new.snapshot.requests, old.snapshot.requests);
+            assert_eq!(new.sim_duration_s.to_bits(), old.sim_duration_s.to_bits());
+            assert_eq!(new.max_queue_wait_s.to_bits(), old.max_queue_wait_s.to_bits());
+            // Means are true sums on both sides; only float summation
+            // order differs.
+            let rel = (new.snapshot.mean_latency_s - old.snapshot.mean_latency_s).abs()
+                / old.snapshot.mean_latency_s.max(1e-300);
+            assert!(rel < 1e-6, "mean latency diverged: rel {rel}");
+            // Quantiles agree within combined bucket widths.
+            for (a, b) in [
+                (new.snapshot.p50_latency_s, old.snapshot.p50_latency_s),
+                (new.snapshot.p99_latency_s, old.snapshot.p99_latency_s),
+            ] {
+                let ratio = a / b;
+                assert!(
+                    (0.4..=2.5).contains(&ratio),
+                    "quantile diverged beyond bucketing: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_is_deterministic() {
+        let t = poisson_trace(&mut Rng::new(3), 2000.0, 0.2, "resnet50", 1);
+        let s = server(8);
+        let a = s.replay_materialized_baseline(&t, 2);
+        let b = s.replay_materialized_baseline(&t, 2);
+        assert!(a.snapshot.bitwise_eq(&b.snapshot));
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+    }
+}

@@ -6,12 +6,19 @@
 //! wall-clock threaded server and the deterministic virtual-time server;
 //! each backend drives it with `now` from its own
 //! [`Clock`](crate::coordinator::clock::Clock).
+//!
+//! Queues are keyed by interned [`ModelId`] — a `Vec` index, not a string
+//! map probe — and the batcher is generic over the queued record type
+//! ([`Queued`]): the threaded server queues full [`InferRequest`]s, while
+//! the virtual-time replay queues bare `Time` enqueue stamps (the only
+//! field its metrics ever read — an 8-byte flyweight). Dispatched batch
+//! buffers can be handed back via [`DynamicBatcher::recycle`], so a replay
+//! loop reuses a small free list of `Vec`s instead of allocating one per
+//! batch.
 
 use crate::coordinator::clock::millis;
-use crate::coordinator::request::InferRequest;
+use crate::coordinator::request::{InferRequest, ModelId};
 use crate::sim::Time;
-use std::collections::BTreeMap;
-use std::sync::Arc;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -29,15 +36,36 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Anything the batcher can queue: it only ever needs the enqueue stamp
+/// (for the `max_wait` deadline).
+pub trait Queued {
+    fn enqueued_at(&self) -> Time;
+}
+
+impl Queued for InferRequest {
+    #[inline]
+    fn enqueued_at(&self) -> Time {
+        self.enqueued_at
+    }
+}
+
+/// The virtual-time replay's flyweight: the enqueue stamp *is* the record.
+impl Queued for Time {
+    #[inline]
+    fn enqueued_at(&self) -> Time {
+        *self
+    }
+}
+
 /// A dispatched batch for one model.
 #[derive(Debug)]
-pub struct Batch {
-    pub model: Arc<str>,
-    pub requests: Vec<InferRequest>,
+pub struct Batch<R = InferRequest> {
+    pub model: ModelId,
+    pub requests: Vec<R>,
     pub formed_at: Time,
 }
 
-impl Batch {
+impl<R> Batch<R> {
     pub fn len(&self) -> usize {
         self.requests.len()
     }
@@ -45,7 +73,9 @@ impl Batch {
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
+}
 
+impl Batch<InferRequest> {
     /// Concatenated input rows in request order.
     pub fn concat_inputs(&self) -> Vec<f32> {
         let total: usize = self.requests.iter().map(|r| r.input.len()).sum();
@@ -57,89 +87,123 @@ impl Batch {
     }
 }
 
-/// The dynamic batcher: per-model pending queues.
+/// Free-list cap: enough to cover every queue mid-flight plus dispatched
+/// batches in the worker pipeline; beyond that, buffers are just dropped.
+const MAX_POOLED_BUFFERS: usize = 64;
+
+/// The dynamic batcher: per-model pending queues, id-indexed.
 #[derive(Debug)]
-pub struct DynamicBatcher {
+pub struct DynamicBatcher<R = InferRequest> {
     pub config: BatcherConfig,
-    pending: BTreeMap<Arc<str>, Vec<InferRequest>>,
+    /// Pending queue per model, indexed by [`ModelId::index`] (grown on
+    /// first push for a model).
+    pending: Vec<Vec<R>>,
+    /// Total queued requests (maintained incrementally — `total_depth` is
+    /// O(1), it sits on the admission-control path of every arrival).
+    queued: usize,
+    /// Recycled batch buffers (see [`recycle`](DynamicBatcher::recycle)).
+    free: Vec<Vec<R>>,
     /// Dispatch counters for metrics: (full, timeout) batches.
     pub full_batches: u64,
     pub timeout_batches: u64,
 }
 
-impl DynamicBatcher {
-    pub fn new(config: BatcherConfig) -> DynamicBatcher {
+impl<R: Queued> DynamicBatcher<R> {
+    pub fn new(config: BatcherConfig) -> DynamicBatcher<R> {
         assert!(config.max_batch >= 1);
         DynamicBatcher {
             config,
-            pending: BTreeMap::new(),
+            pending: Vec::new(),
+            queued: 0,
+            free: Vec::new(),
             full_batches: 0,
             timeout_batches: 0,
         }
     }
 
     /// Queue depth for a model.
-    pub fn depth(&self, model: &str) -> usize {
-        self.pending.get(model).map(|v| v.len()).unwrap_or(0)
+    pub fn depth(&self, model: ModelId) -> usize {
+        self.pending.get(model.index()).map(Vec::len).unwrap_or(0)
     }
 
-    /// Total queued requests.
+    /// Total queued requests (O(1)).
     pub fn total_depth(&self) -> usize {
-        self.pending.values().map(|v| v.len()).sum()
+        self.queued
     }
 
     /// Earliest `enqueued_at` among all pending requests (queues are FIFO,
     /// so this is the minimum over queue heads). `None` when empty.
     pub fn oldest_enqueued(&self) -> Option<Time> {
         self.pending
-            .values()
-            .filter_map(|q| q.first().map(|r| r.enqueued_at))
+            .iter()
+            .filter_map(|q| q.first().map(Queued::enqueued_at))
             .min()
     }
 
-    /// Add a request; returns a full batch if one formed.
-    pub fn push(&mut self, req: InferRequest, now: Time) -> Option<Batch> {
-        let q = self.pending.entry(Arc::clone(&req.model)).or_default();
+    /// Hand a consumed batch buffer back for reuse. The replay loop calls
+    /// this once per completed batch, making steady-state batch formation
+    /// allocation-free; callers that drop batches instead (the threaded
+    /// workers, which consume them on other threads) simply don't.
+    pub fn recycle(&mut self, mut buf: Vec<R>) {
+        if self.free.len() < MAX_POOLED_BUFFERS {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Add a request for `model`; returns a full batch if one formed.
+    pub fn push(&mut self, model: ModelId, req: R, now: Time) -> Option<Batch<R>> {
+        let idx = model.index();
+        if idx >= self.pending.len() {
+            self.pending.resize_with(idx + 1, Vec::new);
+        }
+        let q = &mut self.pending[idx];
         q.push(req);
+        self.queued += 1;
         if q.len() >= self.config.max_batch as usize {
-            let model = Arc::clone(&q[0].model);
-            let requests = std::mem::take(q);
+            let requests = std::mem::replace(q, self.free.pop().unwrap_or_default());
+            self.queued -= requests.len();
             self.full_batches += 1;
             return Some(Batch { model, requests, formed_at: now });
         }
         None
     }
 
-    /// Dispatch any queues whose oldest request exceeded `max_wait`.
-    pub fn poll_timeouts(&mut self, now: Time) -> Vec<Batch> {
-        let mut out = Vec::new();
-        let expired: Vec<Arc<str>> = self
-            .pending
-            .iter()
-            .filter(|(_, q)| {
-                q.first()
-                    .map(|r| now.saturating_sub(r.enqueued_at) >= self.config.max_wait)
-                    .unwrap_or(false)
-            })
-            .map(|(m, _)| Arc::clone(m))
-            .collect();
-        for model in expired {
-            let requests = std::mem::take(self.pending.get_mut(&model).unwrap());
-            if !requests.is_empty() {
-                self.timeout_batches += 1;
-                out.push(Batch { model, requests, formed_at: now });
+    /// Dispatch any queues whose oldest request exceeded `max_wait` into
+    /// `out` (appended; allocation-free when `out` and the free list have
+    /// capacity).
+    pub fn poll_timeouts_into(&mut self, now: Time, out: &mut Vec<Batch<R>>) {
+        for (idx, q) in self.pending.iter_mut().enumerate() {
+            let expired = q
+                .first()
+                .is_some_and(|r| now.saturating_sub(r.enqueued_at()) >= self.config.max_wait);
+            if !expired {
+                continue;
             }
+            let requests = std::mem::replace(q, self.free.pop().unwrap_or_default());
+            self.queued -= requests.len();
+            self.timeout_batches += 1;
+            out.push(Batch { model: ModelId::from_index(idx), requests, formed_at: now });
         }
+    }
+
+    /// Dispatch any queues whose oldest request exceeded `max_wait`.
+    pub fn poll_timeouts(&mut self, now: Time) -> Vec<Batch<R>> {
+        let mut out = Vec::new();
+        self.poll_timeouts_into(now, &mut out);
         out
     }
 
     /// Drain everything (shutdown path).
-    pub fn drain(&mut self, now: Time) -> Vec<Batch> {
+    pub fn drain(&mut self, now: Time) -> Vec<Batch<R>> {
         let mut out = Vec::new();
-        for (model, q) in std::mem::take(&mut self.pending) {
-            if !q.is_empty() {
-                out.push(Batch { model, requests: q, formed_at: now });
+        for (idx, q) in self.pending.iter_mut().enumerate() {
+            if q.is_empty() {
+                continue;
             }
+            let requests = std::mem::take(q);
+            self.queued -= requests.len();
+            out.push(Batch { model: ModelId::from_index(idx), requests, formed_at: now });
         }
         out
     }
@@ -149,19 +213,25 @@ impl DynamicBatcher {
 mod tests {
     use super::*;
 
-    fn req(id: u64, model: &str, now: Time) -> InferRequest {
-        InferRequest::new(id, model, vec![id as f32], now)
+    // Fixed ids standing in for three registered models.
+    const A: ModelId = ModelId::from_index(0);
+    const B: ModelId = ModelId::from_index(1);
+    const C: ModelId = ModelId::from_index(2);
+
+    fn req(id: u64, now: Time) -> InferRequest {
+        InferRequest::new(id, A, vec![id as f32], now)
     }
 
     #[test]
     fn full_batch_dispatches_immediately() {
         let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: millis(10_000) });
         let now = 0;
-        assert!(b.push(req(1, "m", now), now).is_none());
-        assert!(b.push(req(2, "m", now), now).is_none());
-        let batch = b.push(req(3, "m", now), now).unwrap();
+        assert!(b.push(A, req(1, now), now).is_none());
+        assert!(b.push(A, req(2, now), now).is_none());
+        let batch = b.push(A, req(3, now), now).unwrap();
         assert_eq!(batch.len(), 3);
-        assert_eq!(b.depth("m"), 0);
+        assert_eq!(batch.model, A);
+        assert_eq!(b.depth(A), 0);
         assert_eq!(b.full_batches, 1);
     }
 
@@ -169,19 +239,19 @@ mod tests {
     fn models_batch_independently() {
         let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: millis(10_000) });
         let now = 0;
-        assert!(b.push(req(1, "a", now), now).is_none());
-        assert!(b.push(req(2, "b", now), now).is_none());
-        assert_eq!(b.depth("a"), 1);
-        assert_eq!(b.depth("b"), 1);
-        let batch = b.push(req(3, "a", now), now).unwrap();
-        assert_eq!(&*batch.model, "a");
-        assert_eq!(b.depth("b"), 1);
+        assert!(b.push(A, req(1, now), now).is_none());
+        assert!(b.push(B, req(2, now), now).is_none());
+        assert_eq!(b.depth(A), 1);
+        assert_eq!(b.depth(B), 1);
+        let batch = b.push(A, req(3, now), now).unwrap();
+        assert_eq!(batch.model, A);
+        assert_eq!(b.depth(B), 1);
     }
 
     #[test]
     fn timeout_flushes_partial_batch() {
         let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: millis(1) });
-        b.push(req(1, "m", 0), 0);
+        b.push(A, req(1, 0), 0);
         assert!(b.poll_timeouts(0).is_empty());
         let batches = b.poll_timeouts(millis(5));
         assert_eq!(batches.len(), 1);
@@ -193,9 +263,9 @@ mod tests {
     fn concat_preserves_order() {
         let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: millis(1000) });
         let now = 0;
-        b.push(req(10, "m", now), now);
-        b.push(req(20, "m", now), now);
-        let batch = b.push(req(30, "m", now), now).unwrap();
+        b.push(A, req(10, now), now);
+        b.push(A, req(20, now), now);
+        let batch = b.push(A, req(30, now), now).unwrap();
         assert_eq!(batch.concat_inputs(), vec![10.0, 20.0, 30.0]);
     }
 
@@ -203,8 +273,8 @@ mod tests {
     fn drain_empties_everything() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = 0;
-        b.push(req(1, "a", now), now);
-        b.push(req(2, "b", now), now);
+        b.push(A, req(1, now), now);
+        b.push(B, req(2, now), now);
         let drained = b.drain(now);
         assert_eq!(drained.len(), 2);
         assert_eq!(b.total_depth(), 0);
@@ -214,14 +284,50 @@ mod tests {
     fn oldest_enqueued_tracks_queue_heads() {
         let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: millis(100) });
         assert_eq!(b.oldest_enqueued(), None);
-        b.push(req(1, "b", 50), 50);
-        b.push(req(2, "a", 30), 30);
+        b.push(B, req(1, 50), 50);
+        b.push(A, req(2, 30), 30);
         assert_eq!(b.oldest_enqueued(), Some(30));
         // Flushing the older queue leaves the younger head.
         for batch in b.poll_timeouts(30 + millis(100)) {
-            assert_eq!(&*batch.model, "a");
+            assert_eq!(batch.model, A);
         }
         assert_eq!(b.oldest_enqueued(), Some(50));
+    }
+
+    #[test]
+    fn flyweight_time_records_batch_like_full_requests() {
+        // The sim path queues bare enqueue stamps; deadlines and batch
+        // formation behave identically to full requests.
+        let mut b: DynamicBatcher<Time> =
+            DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: millis(1) });
+        assert!(b.push(A, 100, 100).is_none());
+        let batch = b.push(A, 200, 200).unwrap();
+        assert_eq!(batch.requests, vec![100, 200]);
+        b.push(B, 300, 300);
+        assert_eq!(b.oldest_enqueued(), Some(300));
+        let flushed = b.poll_timeouts(300 + millis(1));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].model, B);
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_not_leaked() {
+        let mut b: DynamicBatcher<Time> =
+            DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: millis(1000) });
+        b.push(A, 0, 0);
+        let b1 = b.push(A, 1, 1).unwrap();
+        let ptr = b1.requests.as_ptr();
+        b.recycle(b1.requests); // free list: [b1's buffer]
+        // The recycled buffer replaces the queue when the *next* batch
+        // forms, so it carries the batch after that one.
+        b.push(A, 2, 2);
+        let b2 = b.push(A, 3, 3).unwrap();
+        assert_ne!(b2.requests.as_ptr(), ptr, "b2 predates the swap-in");
+        b.recycle(b2.requests);
+        b.push(A, 4, 4);
+        let b3 = b.push(A, 5, 5).unwrap();
+        assert_eq!(b3.requests.as_ptr(), ptr, "recycled buffer not reused");
+        assert_eq!(b3.requests, vec![4, 5]);
     }
 
     #[test]
@@ -230,13 +336,13 @@ mod tests {
         check(0xBA7C, 40, |g| {
             let max_batch = g.usize("max_batch", 1, 9) as u32;
             let n = g.usize("n", 1, 120);
-            let models = ["a", "b", "c"];
+            let models = [A, B, C];
             let mut b = DynamicBatcher::new(BatcherConfig { max_batch, max_wait: millis(100_000) });
             let now = 0;
             let mut seen = Vec::new();
             for id in 0..n as u64 {
-                let m = g.pick("model", &models);
-                if let Some(batch) = b.push(req(id, m, now), now) {
+                let m = *g.pick("model", &models);
+                if let Some(batch) = b.push(m, req(id, now), now) {
                     seen.extend(batch.requests.iter().map(|r| r.id));
                 }
             }
@@ -253,7 +359,8 @@ mod tests {
     /// Policy invariants under virtual time: no batch ever exceeds
     /// `max_batch`, dispatched requests never waited longer than
     /// `max_wait` past a poll, and after any `poll_timeouts(now)` no
-    /// queued request is older than `max_wait`.
+    /// queued request is older than `max_wait`. Also pins the incremental
+    /// `total_depth` counter against a recount.
     #[test]
     fn property_respects_max_batch_and_deadline() {
         use crate::util::proptest::check;
@@ -261,9 +368,10 @@ mod tests {
             let max_batch = g.usize("max_batch", 1, 10) as u32;
             let max_wait = g.u64_below("max_wait", millis(5)) + 1;
             let mut b = DynamicBatcher::new(BatcherConfig { max_batch, max_wait });
-            let models = ["a", "b"];
+            let models = [A, B];
             let mut now: Time = 0;
             let mut id = 0u64;
+            let mut queued = 0usize;
             let check_batch = |batch: &Batch| -> Result<(), String> {
                 crate::prop_assert!(
                     batch.len() <= max_batch as usize,
@@ -281,14 +389,17 @@ mod tests {
             for _ in 0..g.usize("steps", 1, 150) {
                 now += g.u64_below("dt", max_wait.max(2));
                 if g.bool("arrive") {
-                    let m = g.pick("model", &models);
-                    let r = InferRequest::new(id, *m, Vec::new(), now);
+                    let m = *g.pick("model", &models);
+                    let r = InferRequest::new(id, m, Vec::new(), now);
                     id += 1;
-                    if let Some(batch) = b.push(r, now) {
+                    queued += 1;
+                    if let Some(batch) = b.push(m, r, now) {
+                        queued -= batch.len();
                         check_batch(&batch)?;
                     }
                 } else {
                     for batch in b.poll_timeouts(now) {
+                        queued -= batch.len();
                         check_batch(&batch)?;
                     }
                     // Deadline invariant: nothing still queued has waited
@@ -301,6 +412,11 @@ mod tests {
                         );
                     }
                 }
+                crate::prop_assert!(
+                    b.total_depth() == queued,
+                    "incremental depth {} drifted from recount {queued}",
+                    b.total_depth()
+                );
             }
             Ok(())
         });

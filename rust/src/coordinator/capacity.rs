@@ -1,9 +1,13 @@
 //! Capacity-planning grids: rate × replicas × batch-policy sweeps of the
 //! virtual-time server, fanned across cores.
 //!
-//! Each grid point is an independent [`SimServer::replay`] of a
+//! Each grid point is an independent [`SimServer::replay_stream`] of a
 //! deterministic Poisson trace (fixed seed, so traces vary only with the
-//! arrival rate), which makes the whole grid embarrassingly parallel via
+//! arrival rate). Traces are *streamed*, never materialized: every point
+//! regenerates its arrival stream from the seed in O(1) memory, so grid
+//! durations are bounded by simulation time, not by holding
+//! `rate × duration` requests per rate in RAM — minute-long traces at
+//! 100k+ req/s are sweepable. Points stay embarrassingly parallel via
 //! [`sweep::parallel_map`](crate::sim::sweep::parallel_map) — and
 //! bit-identical between serial and parallel runs. The output answers the
 //! deployment questions the paper's single 1500 img/s number hides: where
@@ -21,9 +25,10 @@ use crate::coordinator::router::Policy;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
 use crate::sim::sweep::{default_threads, parallel_map_threads};
 use crate::sim::Time;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workloads::generator::{poisson_trace, TraceRequest};
+use crate::workloads::generator::PoissonTraceIter;
 use crate::workloads::Network;
 
 /// The sweep grid and shared serving knobs.
@@ -67,7 +72,8 @@ pub struct CapacityPoint {
     pub rate: f64,
     pub replicas: usize,
     pub max_batch: u32,
-    /// Requests offered by the trace.
+    /// Requests offered by the trace (counted during the streamed replay —
+    /// the trace itself is never materialized).
     pub offered: u64,
     /// Nominal trace duration, seconds (the grid's `duration_s`).
     pub duration_s: f64,
@@ -87,13 +93,14 @@ impl CapacityPoint {
 
 /// Sweep the grid in parallel (one virtual server per point) on the
 /// default thread count. Results come back in grid order regardless of
-/// thread interleaving, bit-identical to a serial run.
+/// thread interleaving, bit-identical to a serial run. Fails (rather than
+/// panicking mid-sweep) on non-finite or non-positive rates/duration.
 pub fn sweep_capacity(
     net: &Network,
     model: &str,
     chip: &SunriseConfig,
     grid: &GridConfig,
-) -> Vec<CapacityPoint> {
+) -> Result<Vec<CapacityPoint>> {
     sweep_capacity_threads(net, model, chip, grid, default_threads())
 }
 
@@ -105,13 +112,37 @@ pub fn sweep_capacity_threads(
     chip: &SunriseConfig,
     grid: &GridConfig,
     threads: usize,
-) -> Vec<CapacityPoint> {
-    assert!(!grid.rates.is_empty() && !grid.replicas.is_empty() && !grid.max_batches.is_empty());
-    assert!(grid.duration_s > 0.0);
+) -> Result<Vec<CapacityPoint>> {
+    crate::ensure!(
+        !grid.rates.is_empty() && !grid.replicas.is_empty() && !grid.max_batches.is_empty(),
+        "capacity grid needs at least one rate, replica count, and max_batch"
+    );
+    // Validated before the sort below (`partial_cmp().unwrap()` on a NaN
+    // would otherwise panic with an opaque message) and before trace
+    // generation (an infinite rate or duration would loop forever).
+    for &rate in &grid.rates {
+        crate::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "capacity grid rate {rate} is not a finite positive req/s value"
+        );
+    }
+    crate::ensure!(
+        grid.duration_s.is_finite() && grid.duration_s > 0.0,
+        "capacity grid duration {} is not a finite positive number of seconds",
+        grid.duration_s
+    );
+    crate::ensure!(
+        grid.replicas.iter().all(|&r| r > 0),
+        "capacity grid replica counts must all be > 0"
+    );
+    crate::ensure!(
+        grid.max_batches.iter().all(|&b| b >= 1),
+        "capacity grid max_batch values must all be >= 1"
+    );
     // One virtual server per max_batch (its service tables are planned
-    // once, then shared read-only by every grid point — `replay` takes
-    // `&self` and the chip's schedule cache is thread-safe) and one trace
-    // per rate (traces depend only on seed × rate × duration).
+    // once, then shared read-only by every grid point — replays take
+    // `&self` and the chip's schedule cache is thread-safe); each grid
+    // point streams its own trace from (seed, rate, duration).
     let servers: Vec<SimServer> = grid
         .max_batches
         .iter()
@@ -127,36 +158,28 @@ pub fn sweep_capacity_threads(
         })
         .collect();
     let mut rates = grid.rates.clone();
-    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let traces: Vec<(f64, Vec<TraceRequest>, u64)> = rates
-        .iter()
-        .map(|&rate| {
-            let trace = poisson_trace(&mut Rng::new(grid.seed), rate, grid.duration_s, model, 1);
-            let offered = trace.iter().map(|t| t.samples as u64).sum::<u64>();
-            (rate, trace, offered)
-        })
-        .collect();
-    let mut points: Vec<(usize, usize, usize)> = Vec::new(); // (replicas, server idx, trace idx)
+    rates.sort_by(|a, b| a.partial_cmp(b).expect("rates validated finite above"));
+    let mut points: Vec<(usize, usize, f64)> = Vec::new(); // (replicas, server idx, rate)
     for &replicas in &grid.replicas {
         for mb_idx in 0..servers.len() {
-            for rate_idx in 0..traces.len() {
-                points.push((replicas, mb_idx, rate_idx));
+            for &rate in &rates {
+                points.push((replicas, mb_idx, rate));
             }
         }
     }
-    parallel_map_threads(&points, threads, |_, &(replicas, mb_idx, rate_idx)| {
+    Ok(parallel_map_threads(&points, threads, |_, &(replicas, mb_idx, rate)| {
         let server = &servers[mb_idx];
-        let (rate, trace, offered) = &traces[rate_idx];
-        let report = server.replay(trace, replicas);
+        let trace = PoissonTraceIter::new(Rng::new(grid.seed), rate, grid.duration_s, model, 1);
+        let report = server.replay_stream(trace, replicas);
         CapacityPoint {
-            rate: *rate,
+            rate,
             replicas,
             max_batch: server.config.batcher.max_batch,
-            offered: *offered,
+            offered: report.offered,
             duration_s: grid.duration_s,
             report,
         }
-    })
+    }))
 }
 
 /// The saturation knee of one ascending-rate curve: the first rate whose
@@ -223,6 +246,7 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::generator::poisson_trace;
     use crate::workloads::resnet::resnet50;
 
     fn small_grid() -> GridConfig {
@@ -239,7 +263,8 @@ mod tests {
     #[test]
     fn p99_monotone_nondecreasing_in_rate_at_fixed_replicas() {
         let net = resnet50();
-        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid());
+        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid())
+            .expect("valid grid");
         for &replicas in &[1usize, 2] {
             let curve = curve(&points, replicas, 8);
             assert_eq!(curve.len(), 4);
@@ -262,7 +287,8 @@ mod tests {
     #[test]
     fn knee_moves_out_with_replicas() {
         let net = resnet50();
-        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid());
+        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &small_grid())
+            .expect("valid grid");
         // One ~1578 img/s chip saturates inside the grid; the knee for two
         // replicas is at a strictly higher rate (or beyond the grid).
         let k1 = saturation_knee(&curve(&points, 1, 8), 0.9);
@@ -286,8 +312,8 @@ mod tests {
             ..GridConfig::default()
         };
         let cfg = SunriseConfig::default();
-        let serial = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 1);
-        let parallel = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 8);
+        let serial = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 1).expect("grid");
+        let parallel = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 8).expect("grid");
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.rate.to_bits(), b.rate.to_bits());
@@ -295,6 +321,68 @@ mod tests {
             assert_eq!(a.offered, b.offered);
             assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "point diverged");
         }
+    }
+
+    #[test]
+    fn streamed_points_match_materialized_traces() {
+        // The grid's per-point streamed trace is the same trace the old
+        // materialize-then-share sweep replayed: offered counts and
+        // snapshots agree with an explicit materialized replay.
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![600.0, 1800.0],
+            replicas: vec![2],
+            max_batches: vec![8],
+            duration_s: 0.25,
+            ..GridConfig::default()
+        };
+        let points =
+            sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).expect("grid");
+        for p in &points {
+            let trace =
+                poisson_trace(&mut Rng::new(grid.seed), p.rate, grid.duration_s, "resnet50", 1);
+            assert_eq!(p.offered, trace.iter().map(|r| r.samples as u64).sum::<u64>());
+            let config = SimServeConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: grid.max_wait },
+                routing: grid.routing,
+                queue_capacity: grid.queue_capacity,
+            };
+            let mut server = SimServer::new(SunriseChip::silicon(), config);
+            server.register("resnet50", &net);
+            let report = server.replay(&trace, p.replicas);
+            assert!(
+                report.snapshot.bitwise_eq(&p.report.snapshot),
+                "streamed grid point diverged from materialized replay at rate {}",
+                p.rate
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_rates_are_usable_errors_not_panics() {
+        let net = resnet50();
+        let cfg = SunriseConfig::default();
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -250.0] {
+            let grid = GridConfig { rates: vec![500.0, bad], ..GridConfig::default() };
+            let err = sweep_capacity(&net, "resnet50", &cfg, &grid)
+                .expect_err("bad rate accepted")
+                .to_string();
+            assert!(err.contains("rate"), "error does not name the rate: {err}");
+        }
+        let grid = GridConfig { rates: Vec::new(), ..GridConfig::default() };
+        assert!(sweep_capacity(&net, "resnet50", &cfg, &grid).is_err());
+        let grid = GridConfig { duration_s: f64::NAN, ..GridConfig::default() };
+        let err =
+            sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("bad duration").to_string();
+        assert!(err.contains("duration"), "error does not name the duration: {err}");
+        let grid = GridConfig { replicas: vec![1, 0], ..GridConfig::default() };
+        let err =
+            sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("zero replicas").to_string();
+        assert!(err.contains("replica"), "error does not name replicas: {err}");
+        let grid = GridConfig { max_batches: vec![0], ..GridConfig::default() };
+        let err =
+            sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("zero max_batch").to_string();
+        assert!(err.contains("max_batch"), "error does not name max_batch: {err}");
     }
 
     #[test]
@@ -307,7 +395,8 @@ mod tests {
             duration_s: 0.15,
             ..GridConfig::default()
         };
-        let points = sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid);
+        let points =
+            sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).expect("grid");
         assert_eq!(points.len(), 4);
         assert_eq!((points[0].max_batch, points[0].rate), (2, 300.0));
         assert_eq!((points[1].max_batch, points[1].rate), (2, 900.0));

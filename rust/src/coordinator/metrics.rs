@@ -7,10 +7,15 @@
 //! reports wall time while the virtual-time server reports simulated
 //! time — and two replays of the same trace produce bit-identical
 //! snapshots (see [`MetricsSnapshot::bitwise_eq`]).
+//!
+//! The record path is integer-only: latencies arrive as [`Time`]
+//! picoseconds and land in log2-bucketed [`PsHistogram`]s (one
+//! `leading_zeros` per record — no float conversion, no binary search).
+//! Seconds appear exactly once, at [`snapshot`](Metrics::snapshot) time.
 
 use crate::coordinator::clock::{Clock, WallClock};
-use crate::sim::stats::Histogram;
-use crate::sim::{to_seconds, Time};
+use crate::sim::stats::PsHistogram;
+use crate::sim::{to_seconds, Time, PS_PER_S};
 use std::sync::{Arc, Mutex};
 
 /// Snapshot of serving metrics.
@@ -20,16 +25,22 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub errors: u64,
     pub throughput_rps: f64,
+    /// Exact (true integer sum over all requests, divided once).
     pub mean_latency_s: f64,
+    /// Lower edge of the log2 latency bucket holding the quantile rank:
+    /// within 2× of the true quantile (the bucket width), in exchange for
+    /// an O(1) integer record path. Means are exact; quantiles are
+    /// order-of-magnitude instruments here.
     pub p50_latency_s: f64,
+    /// See [`p50_latency_s`](MetricsSnapshot::p50_latency_s): within 2×.
     pub p99_latency_s: f64,
     pub mean_batch_size: f64,
     pub mean_queue_s: f64,
 }
 
 struct Inner {
-    latency: Histogram,
-    queue: Histogram,
+    latency: PsHistogram,
+    queue: PsHistogram,
     batch_sizes: u64,
     batches: u64,
     requests: u64,
@@ -61,8 +72,8 @@ impl Metrics {
         Metrics {
             clock,
             inner: Mutex::new(Inner {
-                latency: Histogram::latency(),
-                queue: Histogram::latency(),
+                latency: PsHistogram::new(),
+                queue: PsHistogram::new(),
                 batch_sizes: 0,
                 batches: 0,
                 requests: 0,
@@ -72,16 +83,17 @@ impl Metrics {
         }
     }
 
-    /// Record a completed batch of `size` with per-request latencies.
-    pub fn record_batch(&self, size: u32, queue_s: &[f64], total_s: &[f64]) {
+    /// Record a completed batch of `size` with per-request queue-wait and
+    /// total latencies in picoseconds.
+    pub fn record_batch(&self, size: u32, queue_ps: &[Time], total_ps: &[Time]) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batch_sizes += size as u64;
-        g.requests += total_s.len() as u64;
-        for &q in queue_s {
+        g.requests += total_ps.len() as u64;
+        for &q in queue_ps {
             g.queue.record(q);
         }
-        for &t in total_s {
+        for &t in total_ps {
             g.latency.record(t);
         }
     }
@@ -99,15 +111,15 @@ impl Metrics {
             batches: g.batches,
             errors: g.errors,
             throughput_rps: g.requests as f64 / elapsed,
-            mean_latency_s: g.latency.mean(),
-            p50_latency_s: g.latency.quantile(0.5),
-            p99_latency_s: g.latency.quantile(0.99),
+            mean_latency_s: g.latency.mean_ps() / PS_PER_S,
+            p50_latency_s: to_seconds(g.latency.quantile(0.5)),
+            p99_latency_s: to_seconds(g.latency.quantile(0.99)),
             mean_batch_size: if g.batches == 0 {
                 0.0
             } else {
                 g.batch_sizes as f64 / g.batches as f64
             },
-            mean_queue_s: g.queue.mean(),
+            mean_queue_s: g.queue.mean_ps() / PS_PER_S,
         }
     }
 }
@@ -150,12 +162,17 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
     use crate::coordinator::clock::VirtualClock;
+    use crate::sim::{micros, millis};
 
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(4, &[1e-4, 2e-4, 1e-4, 2e-4], &[1e-3, 2e-3, 1e-3, 2e-3]);
-        m.record_batch(2, &[1e-4, 1e-4], &[3e-3, 3e-3]);
+        m.record_batch(
+            4,
+            &[micros(100), micros(200), micros(100), micros(200)],
+            &[millis(1), millis(2), millis(1), millis(2)],
+        );
+        m.record_batch(2, &[micros(100), micros(100)], &[millis(3), millis(3)]);
         let s = m.snapshot();
         assert_eq!(s.requests, 6);
         assert_eq!(s.batches, 2);
@@ -175,7 +192,7 @@ mod tests {
     #[test]
     fn report_is_renderable() {
         let m = Metrics::new();
-        m.record_batch(1, &[1e-5], &[1e-4]);
+        m.record_batch(1, &[micros(10)], &[micros(100)]);
         let r = m.snapshot().report();
         assert!(r.contains("requests=1"));
     }
@@ -184,10 +201,21 @@ mod tests {
     fn virtual_clock_gives_exact_throughput() {
         let clock = Arc::new(VirtualClock::new());
         let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
-        m.record_batch(10, &[0.0; 10], &[1e-3; 10]);
+        m.record_batch(10, &[0; 10], &[millis(1); 10]);
         clock.advance_to(crate::sim::from_seconds(2.0));
         let s = m.snapshot();
         assert_eq!(s.throughput_rps, 5.0, "10 requests over exactly 2 virtual seconds");
+    }
+
+    #[test]
+    fn means_are_exact_integer_sums() {
+        let clock = Arc::new(VirtualClock::new());
+        let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        m.record_batch(2, &[micros(1), micros(3)], &[millis(1), millis(3)]);
+        clock.advance_to(millis(10));
+        let s = m.snapshot();
+        assert_eq!(s.mean_queue_s, 2e-6, "mean of 1 us and 3 us");
+        assert_eq!(s.mean_latency_s, 2e-3, "mean of 1 ms and 3 ms");
     }
 
     #[test]
@@ -195,7 +223,11 @@ mod tests {
         let run = || {
             let clock = Arc::new(VirtualClock::new());
             let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
-            m.record_batch(3, &[1e-4, 2e-4, 3e-4], &[1e-3, 2e-3, 3e-3]);
+            m.record_batch(
+                3,
+                &[micros(100), micros(200), micros(300)],
+                &[millis(1), millis(2), millis(3)],
+            );
             clock.advance_to(1_000_000_000);
             m.snapshot()
         };

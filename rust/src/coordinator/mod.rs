@@ -15,13 +15,20 @@
 //! - [`simserve`] — the same loop replayed deterministically in virtual
 //!   time on the discrete-event engine (bit-reproducible, sweepable).
 //!
-//! - [`request`] — request/response types.
-//! - [`batcher`] — dynamic batching policy (size + deadline), pure logic.
+//! - [`request`] — request/response types and the `ModelId` registry
+//!   (names resolve to dense ids once, at the submit/trace boundary).
+//! - [`batcher`] — dynamic batching policy (size + deadline), pure logic,
+//!   id-indexed queues with pooled batch buffers.
 //! - [`router`] — replica selection (round-robin / least-loaded).
 //! - [`clock`] — the `Clock` trait: wall and virtual time sources.
-//! - [`metrics`] — serving metrics on either time source.
-//! - [`capacity`] — rate×replicas×batch capacity-planning grid sweeps.
+//! - [`metrics`] — serving metrics on either time source
+//!   (integer-picosecond record path).
+//! - [`capacity`] — rate×replicas×batch capacity-planning grid sweeps
+//!   over streamed traces (O(1) arrival memory per point).
+//! - [`baseline`] — the PR-2 materialized replay, frozen as the
+//!   `serving_replay` bench's comparison row.
 
+pub mod baseline;
 pub mod batcher;
 pub mod capacity;
 pub mod clock;
@@ -31,9 +38,9 @@ pub mod router;
 pub mod server;
 pub mod simserve;
 
-pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued};
 pub use capacity::{sweep_capacity, CapacityPoint, GridConfig};
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use request::{InferRequest, InferResponse, RequestId};
+pub use request::{InferRequest, InferResponse, ModelId, ModelRegistry, RequestId};
 pub use server::{Server, ServerConfig};
 pub use simserve::{SimServeConfig, SimServeReport, SimServer};

@@ -1,39 +1,110 @@
-//! Request/response types for the serving path.
+//! Request/response types for the serving path, plus the model-ID
+//! registry both backends resolve names through.
 //!
 //! Timestamps are [`Time`] picoseconds on the owning backend's
 //! [`Clock`](crate::coordinator::clock::Clock) — wall time in the threaded
 //! server, simulated time in the virtual one — so the policy layers above
-//! never touch `Instant` directly. Model names are `Arc<str>` (cheap to
-//! clone along the batcher→router→worker path, and matching the
-//! layer-name interning in the dataflow IR); trace replay interns one
-//! `Arc` per distinct model, while the threaded `submit(&str)` boundary
-//! still allocates one `Arc<str>` per call.
+//! never touch `Instant` directly. Model names are resolved to a dense
+//! [`ModelId`] exactly once at the boundary (`Server::submit(&str)`, trace
+//! resolution in `SimServer::replay*`): everything past the boundary — the
+//! batcher's per-model queues, the router path, the per-dispatch service
+//! lookup — is plain `Vec` indexing, with no string hashing, comparison,
+//! or `Arc` traffic per request.
 
 use crate::sim::Time;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Monotonically-assigned request identifier.
 pub type RequestId = u64;
+
+/// Dense interned model identifier: index into a [`ModelRegistry`] (and
+/// into every id-indexed table past the name-resolution boundary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(u32);
+
+impl ModelId {
+    /// The id as a dense index (for id-indexed tables).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Rebuild an id from a dense index (the inverse of [`index`];
+    /// for containers iterating their own id-indexed storage).
+    ///
+    /// [`index`]: ModelId::index
+    pub const fn from_index(i: usize) -> ModelId {
+        assert!(i <= u32::MAX as usize, "model index exceeds u32");
+        ModelId(i as u32)
+    }
+}
+
+/// Name ⇄ id interning table. Ids are dense (`0..len`), assigned in
+/// interning order, and never reused — so `Vec`s indexed by
+/// [`ModelId::index`] stay aligned with the registry forever.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    names: Vec<Arc<str>>,
+    index: BTreeMap<Arc<str>, ModelId>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// The id for `name`, interning it if new.
+    pub fn intern(&mut self, name: &str) -> ModelId {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = ModelId(self.names.len() as u32);
+        let name: Arc<str> = Arc::from(name);
+        self.names.push(Arc::clone(&name));
+        self.index.insert(name, id);
+        id
+    }
+
+    /// The id for `name`, or `None` when it was never interned.
+    pub fn resolve(&self, name: &str) -> Option<ModelId> {
+        self.index.get(name).copied()
+    }
+
+    /// The interned name for an id issued by this registry.
+    pub fn name(&self, id: ModelId) -> &Arc<str> {
+        &self.names[id.index()]
+    }
+
+    /// All `(id, name)` pairs in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (ModelId, &Arc<str>)> {
+        self.names.iter().enumerate().map(|(i, n)| (ModelId(i as u32), n))
+    }
+}
 
 /// One inference request (one sample per request; client-side batches are
 /// split upstream so the dynamic batcher owns all batching decisions).
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub id: RequestId,
-    pub model: Arc<str>,
+    /// Interned model id (resolved from the name at the submit boundary).
+    pub model: ModelId,
     pub input: Vec<f32>,
     /// Enqueue timestamp on the owning backend's clock.
     pub enqueued_at: Time,
 }
 
 impl InferRequest {
-    pub fn new(
-        id: RequestId,
-        model: impl Into<Arc<str>>,
-        input: Vec<f32>,
-        enqueued_at: Time,
-    ) -> InferRequest {
-        InferRequest { id, model: model.into(), input, enqueued_at }
+    pub fn new(id: RequestId, model: ModelId, input: Vec<f32>, enqueued_at: Time) -> InferRequest {
+        InferRequest { id, model, input, enqueued_at }
     }
 }
 
@@ -60,18 +131,44 @@ mod tests {
 
     #[test]
     fn request_carries_payload() {
-        let r = InferRequest::new(7, "mlp", vec![1.0, 2.0], 123);
+        let mut reg = ModelRegistry::new();
+        let mlp = reg.intern("mlp");
+        let r = InferRequest::new(7, mlp, vec![1.0, 2.0], 123);
         assert_eq!(r.id, 7);
-        assert_eq!(&*r.model, "mlp");
+        assert_eq!(r.model, mlp);
+        assert_eq!(&**reg.name(r.model), "mlp");
         assert_eq!(r.input.len(), 2);
         assert_eq!(r.enqueued_at, 123);
     }
 
     #[test]
-    fn interned_model_is_shared_not_copied() {
-        let name: Arc<str> = Arc::from("resnet50");
-        let a = InferRequest::new(0, Arc::clone(&name), vec![], 0);
-        let b = InferRequest::new(1, Arc::clone(&name), vec![], 0);
-        assert!(Arc::ptr_eq(&a.model, &b.model), "model name re-allocated");
+    fn registry_interns_once_and_round_trips() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.intern("resnet50");
+        let b = reg.intern("mlp");
+        assert_ne!(a, b);
+        assert_eq!(reg.intern("resnet50"), a, "re-interning must return the same id");
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.resolve("resnet50"), Some(a));
+        assert_eq!(reg.resolve("mlp"), Some(b));
+        assert_eq!(reg.resolve("nope"), None);
+        assert_eq!(&**reg.name(a), "resnet50");
+        assert_eq!(&**reg.name(b), "mlp");
+    }
+
+    #[test]
+    fn ids_are_dense_indices() {
+        let mut reg = ModelRegistry::new();
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            let id = reg.intern(name);
+            assert_eq!(id.index(), i);
+            assert_eq!(ModelId::from_index(i), id);
+        }
+        let collected: Vec<(usize, String)> =
+            reg.iter().map(|(id, n)| (id.index(), n.to_string())).collect();
+        assert_eq!(
+            collected,
+            vec![(0, "a".to_string()), (1, "b".to_string()), (2, "c".to_string())]
+        );
     }
 }

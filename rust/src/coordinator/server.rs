@@ -9,14 +9,25 @@
 //! (batcher, router, metrics) see plain [`Time`] picoseconds — the same
 //! types the deterministic [`simserve`](crate::coordinator::simserve)
 //! backend drives with virtual time.
+//!
+//! Model names are resolved to interned [`ModelId`]s exactly once, in
+//! [`submit`](Server::submit). The registry is pre-built in
+//! [`start`](Server::start) from [`Executor::models`] and frozen, so it is
+//! read without a lock and client-supplied names can never grow it —
+//! unknown names are failed at the boundary with a recorded error (the
+//! same observable outcome the executor error path produced). Past that
+//! boundary the batcher and router never touch a string; workers resolve
+//! the id back to a name once per *batch* for the executor call.
+//!
+//! [`ModelId`]: crate::coordinator::request::ModelId
 
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use crate::coordinator::clock::{Clock, WallClock};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferRequest, InferResponse, RequestId};
+use crate::coordinator::request::{InferRequest, InferResponse, ModelRegistry, RequestId};
 use crate::coordinator::router::{Policy, Router};
 use crate::runtime::executor::Executor;
-use crate::sim::to_seconds;
+use crate::sim::{to_seconds, Time};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -56,6 +67,9 @@ pub struct Server {
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
     clock: Arc<WallClock>,
+    /// Immutable after `start` (pre-interned from the executors), so it
+    /// is shared without a lock.
+    registry: Arc<ModelRegistry>,
     pub metrics: Arc<Metrics>,
     pub router: Arc<Mutex<Router>>,
 }
@@ -71,6 +85,18 @@ impl Server {
         let clock = Arc::new(WallClock::new());
         let metrics = Arc::new(Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>));
         let router = Arc::new(Mutex::new(Router::new(config.routing, n)));
+        // Pre-intern exactly the models the executors can run: the
+        // registry (and the batcher's id-indexed queues behind it) never
+        // grows from client-supplied names — see `submit`.
+        let registry = {
+            let mut reg = ModelRegistry::new();
+            for exec in &executors {
+                for model in exec.models() {
+                    reg.intern(&model);
+                }
+            }
+            Arc::new(reg)
+        };
         let stop = Arc::new(AtomicBool::new(false));
 
         // Workers.
@@ -83,35 +109,38 @@ impl Server {
             let metrics = Arc::clone(&metrics);
             let router = Arc::clone(&router);
             let clock = Arc::clone(&clock);
+            let registry = Arc::clone(&registry);
             worker_handles.push(std::thread::spawn(move || {
                 while let Ok(WorkerMsg::Run(batch)) = rx.recv() {
                     let samples = batch.len();
                     let input = batch.concat_inputs();
+                    // One lock-free id→name resolution per batch.
+                    let model = Arc::clone(registry.name(batch.model));
                     let t0 = clock.now();
-                    match exec.execute(&batch.model, &input, samples) {
+                    match exec.execute(&model, &input, samples) {
                         Ok(output) => {
                             let done = clock.now();
                             let exec_s = to_seconds(done.saturating_sub(t0));
                             let per_out = output.len() / samples;
-                            let mut queue_ls = Vec::with_capacity(samples);
-                            let mut total_ls = Vec::with_capacity(samples);
+                            // Latencies stay integer ps through the record
+                            // path; seconds appear only in the responses.
+                            let mut queue_ps: Vec<Time> = Vec::with_capacity(samples);
+                            let mut total_ps: Vec<Time> = Vec::with_capacity(samples);
                             for req in &batch.requests {
-                                queue_ls.push(to_seconds(
-                                    batch.formed_at.saturating_sub(req.enqueued_at),
-                                ));
-                                total_ls.push(to_seconds(done.saturating_sub(req.enqueued_at)));
+                                queue_ps.push(batch.formed_at.saturating_sub(req.enqueued_at));
+                                total_ps.push(done.saturating_sub(req.enqueued_at));
                             }
                             // Record metrics BEFORE sending responses so a
                             // client that has collected all responses sees
                             // complete metrics (no snapshot race).
-                            metrics.record_batch(samples as u32, &queue_ls, &total_ls);
+                            metrics.record_batch(samples as u32, &queue_ps, &total_ps);
                             for (i, req) in batch.requests.iter().enumerate() {
                                 let _ = resp_tx.send(InferResponse {
                                     id: req.id,
                                     output: output[i * per_out..(i + 1) * per_out].to_vec(),
-                                    queue_s: queue_ls[i],
+                                    queue_s: to_seconds(queue_ps[i]),
                                     exec_s,
-                                    total_s: total_ls[i],
+                                    total_s: to_seconds(total_ps[i]),
                                     batch_size: samples as u32,
                                     replica: idx as u32,
                                 });
@@ -142,7 +171,7 @@ impl Server {
             loop {
                 match submit_rx.recv_timeout(Duration::from_micros(200)) {
                     Ok(req) => {
-                        if let Some(batch) = batcher.push(req, clock_b.now()) {
+                        if let Some(batch) = batcher.push(req.model, req, clock_b.now()) {
                             dispatch(batch, &router_b, &worker_txs);
                         }
                     }
@@ -173,14 +202,26 @@ impl Server {
             batcher_handle: Some(batcher_handle),
             worker_handles,
             clock,
+            registry,
             metrics,
             router,
         }
     }
 
     /// Submit one request; blocks when the queue is full (backpressure).
+    /// The name→id resolution happens here, once per request at the
+    /// boundary; everything downstream indexes by [`ModelId`]. Names no
+    /// executor registered are failed here — an error is recorded and no
+    /// response will arrive (exactly the observable outcome the executor
+    /// error path produced), without interning untrusted input.
+    ///
+    /// [`ModelId`]: crate::coordinator::request::ModelId
     pub fn submit(&self, model: &str, input: Vec<f32>) -> RequestId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let Some(model) = self.registry.resolve(model) else {
+            self.metrics.record_error();
+            return id;
+        };
         self.submit_tx
             .send(InferRequest::new(id, model, input, self.clock.now()))
             .expect("server stopped");

@@ -13,25 +13,37 @@
 //! capacity grids ([`capacity`](crate::coordinator::capacity)) sweepable
 //! and reproducible.
 //!
-//! Event vocabulary: one `Arrive` per trace request (scheduled up front,
-//! so same-timestamp arrivals keep trace order by sequence number), one
-//! `FlushCheck` per new queue head at its `max_wait` deadline (queues only
-//! empty wholesale, so the current head always owns a check and no request
-//! outlives its deadline), and one `Done` per batch completion. Replicas model the worker channel with a
-//! FIFO of dispatched batches; the router sees dispatch/complete exactly
-//! when the threaded server's would.
+//! The replay is **streaming and allocation-free in steady state**:
+//! arrivals are pulled one at a time from a trace iterator by a
+//! self-rescheduling `NextArrival` event (one outstanding wake-up, not one
+//! pre-scheduled event per request), model names are resolved to interned
+//! [`ModelId`]s once at the boundary (queues and service tables are `Vec`
+//! indexing after that), queued requests are bare `Time` enqueue stamps,
+//! batch buffers recycle through the batcher's free list, and latencies
+//! land in integer-picosecond histograms. A 60 s × 100k req/s trace (~6M
+//! requests) replays in O(1) arrival memory.
+//!
+//! Event-order equivalence with the old pre-scheduled form: every event
+//! handler first ingests all arrivals due at the current timestamp, so
+//! same-time (arrival, flush/done) collisions still process the arrival
+//! first — exactly the order pre-scheduled arrivals (which carried the
+//! lowest sequence numbers) would replay in. Each queue head owns a
+//! `FlushCheck` at its `max_wait` deadline (queues only empty wholesale,
+//! so no request outlives its deadline), and one `Done` fires per batch
+//! completion; replicas model the worker channel with a FIFO of dispatched
+//! batches.
 
 use crate::chip::sunrise::SunriseChip;
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use crate::coordinator::clock::{Clock, VirtualClock};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::InferRequest;
+use crate::coordinator::request::{ModelId, ModelRegistry};
 use crate::coordinator::router::{Policy, Router};
 use crate::sim::engine::{Engine, Scheduler, World};
 use crate::sim::{from_seconds, to_seconds, Time};
 use crate::workloads::generator::TraceRequest;
 use crate::workloads::Network;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Virtual-time server configuration (mirrors
@@ -65,6 +77,9 @@ pub struct SimServeReport {
     /// the threaded server), so the conservation identity is
     /// `served + dropped + snapshot.errors == offered`.
     pub snapshot: MetricsSnapshot,
+    /// Samples the trace offered (streamed traces are not materialized,
+    /// so the replay itself is the count's source of truth).
+    pub offered: u64,
     pub served: u64,
     pub dropped: u64,
     /// Batches dispatched because they filled / because the deadline hit.
@@ -81,49 +96,147 @@ pub struct SimServeReport {
     pub replica_utilization: f64,
 }
 
+/// One resolved arrival pulled from a trace source.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StreamedArrival {
+    /// Arrival timestamp, ps.
+    pub at: Time,
+    /// Interned model, `None` when the name is not registered (counted as
+    /// errors on arrival, mirroring the threaded executor's error path).
+    pub model: Option<ModelId>,
+    pub samples: u32,
+}
+
 /// The virtual-time server: a chip model plus per-model service tables.
 pub struct SimServer {
     pub config: SimServeConfig,
     chip: SunriseChip,
-    /// Per-model service time (ps) indexed by batch size, `[0] = 0`.
-    service: BTreeMap<Arc<str>, Vec<Time>>,
+    registry: ModelRegistry,
+    /// Per-model service time (ps) indexed by [`ModelId::index`] then
+    /// batch size, `[0] = 0`; an empty table means "id never registered".
+    service: Vec<Vec<Time>>,
 }
 
 impl SimServer {
     pub fn new(chip: SunriseChip, config: SimServeConfig) -> SimServer {
         assert!(config.batcher.max_batch >= 1);
-        SimServer { config, chip, service: BTreeMap::new() }
+        SimServer { config, chip, registry: ModelRegistry::new(), service: Vec::new() }
     }
 
     /// Register a network under a model name, precomputing its service
     /// table for batch sizes `1..=max_batch` from the chip model (hits
-    /// the chip's schedule cache on repeats).
+    /// the chip's schedule cache on repeats). The name is interned once
+    /// here; replay never compares strings again.
     pub fn register(&mut self, name: &str, net: &Network) {
         let mut table: Vec<Time> = vec![0];
         for b in 1..=self.config.batcher.max_batch {
             table.push(self.chip.run(net, b).total_ps);
         }
-        self.service.insert(Arc::from(name), table);
+        let id = self.registry.intern(name);
+        if id.index() >= self.service.len() {
+            self.service.resize_with(id.index() + 1, Vec::new);
+        }
+        self.service[id.index()] = table;
     }
 
-    /// Replay `trace` against `replicas` identical replicas in simulated
-    /// time. Deterministic: same trace + same config ⇒ bit-identical
-    /// report (see `MetricsSnapshot::bitwise_eq`).
+    /// The name⇄id table (shared with the materialized baseline replay).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Service table for `model`, if registered (shared with the
+    /// materialized baseline replay).
+    pub(crate) fn service_table(&self, model: ModelId) -> Option<&[Time]> {
+        self.service
+            .get(model.index())
+            .filter(|t| !t.is_empty())
+            .map(Vec::as_slice)
+    }
+
+    /// Replay a materialized `trace` against `replicas` identical replicas
+    /// in simulated time — a thin wrapper resolving each request through
+    /// the registry and feeding the same streaming core as
+    /// [`replay_stream`](SimServer::replay_stream). Deterministic: same
+    /// trace + same config ⇒ bit-identical report (see
+    /// `MetricsSnapshot::bitwise_eq`). Arrival times must be
+    /// non-decreasing (every in-tree generator's are).
     pub fn replay(&self, trace: &[TraceRequest], replicas: usize) -> SimServeReport {
+        let mut resolve = self.resolver();
+        self.replay_core(
+            trace.iter().map(move |r| StreamedArrival {
+                at: from_seconds(r.arrival_s),
+                model: resolve(&r.model),
+                samples: r.samples,
+            }),
+            replicas,
+        )
+    }
+
+    /// Replay a streamed trace (e.g. a
+    /// [`PoissonTraceIter`](crate::workloads::generator::PoissonTraceIter))
+    /// without ever materializing it: O(1) arrival memory regardless of
+    /// trace length. Bit-identical to [`replay`](SimServer::replay) of the
+    /// materialized equivalent (pinned by test).
+    ///
+    /// # Panics
+    ///
+    /// Arrival times must be non-decreasing (streaming pulls the trace in
+    /// order; every in-tree generator satisfies this). An out-of-order
+    /// arrival panics with an explicit message rather than silently
+    /// replaying it at the wrong time.
+    pub fn replay_stream<I>(&self, trace: I, replicas: usize) -> SimServeReport
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        let mut resolve = self.resolver();
+        self.replay_core(
+            trace.into_iter().map(move |r| StreamedArrival {
+                at: from_seconds(r.arrival_s),
+                model: resolve(&r.model),
+                samples: r.samples,
+            }),
+            replicas,
+        )
+    }
+
+    /// A name→id resolver that caches the last interned `Arc` by pointer:
+    /// traces intern one `Arc<str>` per distinct model, so resolution is
+    /// one registry probe per model, not per request.
+    fn resolver(&self) -> impl FnMut(&Arc<str>) -> Option<ModelId> + '_ {
+        let mut cache: Option<(Arc<str>, Option<ModelId>)> = None;
+        move |name: &Arc<str>| {
+            if let Some((cached, id)) = &cache {
+                if Arc::ptr_eq(cached, name) {
+                    return *id;
+                }
+            }
+            let id = self.registry.resolve(name);
+            cache = Some((Arc::clone(name), id));
+            id
+        }
+    }
+
+    fn replay_core<I>(&self, mut arrivals: I, replicas: usize) -> SimServeReport
+    where
+        I: Iterator<Item = StreamedArrival>,
+    {
         assert!(replicas > 0);
         let clock = Arc::new(VirtualClock::new());
         let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let pending = arrivals.next();
         let mut world = ServeWorld {
             config: &self.config,
-            trace,
             service: &self.service,
+            source: arrivals,
+            pending,
+            armed_at: None,
             metrics,
             batcher: DynamicBatcher::new(self.config.batcher),
             router: Router::new(self.config.routing, replicas),
             busy: vec![false; replicas],
             waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
             running: (0..replicas).map(|_| None).collect(),
-            next_id: 0,
+            offered: 0,
             served: 0,
             dropped: 0,
             max_depth: 0,
@@ -131,15 +244,18 @@ impl SimServer {
             per_replica: vec![0; replicas],
             busy_ps: 0,
             last_done: 0,
-            queue_ls: Vec::new(),
-            total_ls: Vec::new(),
+            queue_ps: Vec::new(),
+            total_ps: Vec::new(),
+            timeouts: Vec::new(),
         };
         let mut engine: Engine<Ev> = Engine::new();
-        for (i, req) in trace.iter().enumerate() {
-            engine.schedule(from_seconds(req.arrival_s), Ev::Arrive { idx: i as u32 });
+        if let Some(first) = &world.pending {
+            engine.schedule(first.at, Ev::NextArrival);
+            world.armed_at = Some(first.at);
         }
         engine.run(&mut world);
         debug_assert!(engine.is_idle(), "virtual server left events pending");
+        debug_assert!(world.pending.is_none(), "trace not fully consumed");
 
         // Makespan = last *completion*, not the engine's final event: a
         // stale FlushCheck can fire after all work is done, and letting
@@ -151,6 +267,7 @@ impl SimServer {
         let sim_duration_s = to_seconds(end);
         SimServeReport {
             snapshot: world.metrics.snapshot(),
+            offered: world.offered,
             served: world.served,
             dropped: world.dropped,
             full_batches: world.batcher.full_batches,
@@ -167,28 +284,40 @@ impl SimServer {
 /// Virtual-serving events.
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// Trace request `idx` arrives.
-    Arrive { idx: u32 },
-    /// Batcher deadline poll (scheduled per queued request).
+    /// Wake-up at the next pending arrival's timestamp (self-rescheduling:
+    /// at most one is armed for the stream head at any moment).
+    NextArrival,
+    /// Batcher deadline poll (scheduled per new queue head).
     FlushCheck,
     /// The batch running on `replica` completes.
     Done { replica: u32 },
 }
 
-struct ServeWorld<'a> {
+/// The sim path queues bare enqueue stamps (the only per-request field the
+/// replay metrics read) — see [`Queued`](crate::coordinator::batcher::Queued).
+type SimBatch = Batch<Time>;
+
+struct ServeWorld<'a, I> {
     config: &'a SimServeConfig,
-    trace: &'a [TraceRequest],
-    service: &'a BTreeMap<Arc<str>, Vec<Time>>,
+    service: &'a [Vec<Time>],
+    /// The trace source; `pending` is its unconsumed head.
+    source: I,
+    pending: Option<StreamedArrival>,
+    /// Timestamp of the currently armed `NextArrival`, so stale wake-ups
+    /// (whose arrival was already ingested by an earlier same-time event)
+    /// don't arm duplicates.
+    armed_at: Option<Time>,
     metrics: Metrics,
-    batcher: DynamicBatcher,
+    batcher: DynamicBatcher<Time>,
     router: Router,
     busy: Vec<bool>,
-    /// Dispatched batches waiting per replica (the worker channel).
-    waiting: Vec<VecDeque<Batch>>,
+    /// Dispatched batches waiting per replica (the worker channel), each
+    /// with its service time resolved once at dispatch.
+    waiting: Vec<VecDeque<(SimBatch, Time)>>,
     /// The batch each replica is currently executing, with its service
-    /// time (the response's `exec_s`).
-    running: Vec<Option<(Batch, Time)>>,
-    next_id: u64,
+    /// time.
+    running: Vec<Option<(SimBatch, Time)>>,
+    offered: u64,
     served: u64,
     dropped: u64,
     max_depth: usize,
@@ -197,39 +326,92 @@ struct ServeWorld<'a> {
     busy_ps: Time,
     last_done: Time,
     /// Reused per-batch latency buffers (no steady-state allocation).
-    queue_ls: Vec<f64>,
-    total_ls: Vec<f64>,
+    queue_ps: Vec<Time>,
+    total_ps: Vec<Time>,
+    /// Reused timeout-flush buffer.
+    timeouts: Vec<SimBatch>,
 }
 
-impl ServeWorld<'_> {
-    fn service_time(&self, model: &str, samples: usize) -> Time {
-        let table = &self.service[model];
-        table[samples.min(table.len() - 1)]
+impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
+    /// Ingest every arrival due at `now`, then arm one `NextArrival` for
+    /// the stream head. Called at the top of *every* event handler, so an
+    /// arrival sharing a timestamp with a `FlushCheck`/`Done` is processed
+    /// first — the order pre-scheduled arrival events replayed in.
+    fn ingest(&mut self, now: Time, sch: &mut Scheduler<Ev>) {
+        while let Some(a) = self.pending {
+            if a.at > now {
+                break;
+            }
+            assert!(a.at == now, "trace arrival times must be non-decreasing");
+            self.pending = self.source.next();
+            self.arrive(a, now, sch);
+        }
+        if let Some(next) = &self.pending {
+            if self.armed_at != Some(next.at) {
+                sch.at(next.at, Ev::NextArrival);
+                self.armed_at = Some(next.at);
+            }
+        }
     }
 
-    fn dispatch(&mut self, batch: Batch, sch: &mut Scheduler<Ev>) {
-        if !self.service.contains_key(&*batch.model) {
-            // Mirror the threaded server: unknown models count errors.
-            for _ in 0..batch.len() {
+    fn arrive(&mut self, a: StreamedArrival, now: Time, sch: &mut Scheduler<Ev>) {
+        self.offered += a.samples as u64;
+        let Some(model) = a.model else {
+            // Unregistered model: mirror the threaded server, where the
+            // executor fails the whole request — counted per sample,
+            // never queued.
+            for _ in 0..a.samples {
                 self.metrics.record_error();
             }
             return;
+        };
+        for _ in 0..a.samples {
+            if self.batcher.total_depth() >= self.config.queue_capacity {
+                self.dropped += 1;
+                continue;
+            }
+            let was_empty = self.batcher.depth(model) == 0;
+            match self.batcher.push(model, now, now) {
+                Some(batch) => self.dispatch(batch, sch),
+                // Queued into a previously-empty queue: this request is
+                // the new head — arm its deadline. Queues only empty
+                // wholesale (full batch or whole-queue flush), so every
+                // head was once a first-into-empty push and owns a check;
+                // later members need none.
+                None if was_empty => {
+                    sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
+                }
+                None => {}
+            }
         }
-        for r in &batch.requests {
-            self.max_queue_wait = self
-                .max_queue_wait
-                .max(batch.formed_at.saturating_sub(r.enqueued_at));
+        self.max_depth = self.max_depth.max(self.batcher.total_depth());
+    }
+
+    fn dispatch(&mut self, batch: SimBatch, sch: &mut Scheduler<Ev>) {
+        // Single service-table probe per batch; unknown models are the
+        // `None` arm (unreachable via arrive(), which resolves at the
+        // boundary, but kept as the safe path rather than a panicking
+        // index).
+        let Some(table) = self.service.get(batch.model.index()).filter(|t| !t.is_empty()) else {
+            for _ in 0..batch.len() {
+                self.metrics.record_error();
+            }
+            self.batcher.recycle(batch.requests);
+            return;
+        };
+        let service = table[batch.len().min(table.len() - 1)];
+        for &enq in &batch.requests {
+            self.max_queue_wait = self.max_queue_wait.max(batch.formed_at.saturating_sub(enq));
         }
         let replica = self.router.route(batch.len() as u64);
         if self.busy[replica] {
-            self.waiting[replica].push_back(batch);
+            self.waiting[replica].push_back((batch, service));
         } else {
-            self.start(replica, batch, sch);
+            self.start(replica, batch, service, sch);
         }
     }
 
-    fn start(&mut self, replica: usize, batch: Batch, sch: &mut Scheduler<Ev>) {
-        let service = self.service_time(&batch.model, batch.len());
+    fn start(&mut self, replica: usize, batch: SimBatch, service: Time, sch: &mut Scheduler<Ev>) {
         self.busy[replica] = true;
         self.busy_ps += service;
         self.running[replica] = Some((batch, service));
@@ -237,64 +419,44 @@ impl ServeWorld<'_> {
     }
 }
 
-impl World for ServeWorld<'_> {
+impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
     type Event = Ev;
 
     fn handle(&mut self, ev: Ev, sch: &mut Scheduler<Ev>) {
         let now = sch.now();
+        self.ingest(now, sch);
         match ev {
-            Ev::Arrive { idx } => {
-                let samples = self.trace[idx as usize].samples;
-                for _ in 0..samples {
-                    if self.batcher.total_depth() >= self.config.queue_capacity {
-                        self.dropped += 1;
-                        continue;
-                    }
-                    let id = self.next_id;
-                    self.next_id += 1;
-                    let model = Arc::clone(&self.trace[idx as usize].model);
-                    let was_empty = self.batcher.depth(&model) == 0;
-                    match self.batcher.push(InferRequest::new(id, model, Vec::new(), now), now) {
-                        Some(batch) => self.dispatch(batch, sch),
-                        // Queued into a previously-empty queue: this
-                        // request is the new head — arm its deadline.
-                        // Queues only empty wholesale (full batch or
-                        // whole-queue flush), so every head was once a
-                        // first-into-empty push and owns a check; later
-                        // members need none.
-                        None if was_empty => {
-                            sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
-                        }
-                        None => {}
-                    }
-                }
-                self.max_depth = self.max_depth.max(self.batcher.total_depth());
-            }
+            // Ingestion above did the work (or a same-time event already
+            // had, making this wake-up a no-op).
+            Ev::NextArrival => {}
             Ev::FlushCheck => {
-                for batch in self.batcher.poll_timeouts(now) {
+                let mut timeouts = std::mem::take(&mut self.timeouts);
+                self.batcher.poll_timeouts_into(now, &mut timeouts);
+                for batch in timeouts.drain(..) {
                     self.dispatch(batch, sch);
                 }
+                self.timeouts = timeouts;
             }
             Ev::Done { replica } => {
                 let rep = replica as usize;
                 let (batch, _service) =
                     self.running[rep].take().expect("completion on an idle replica");
-                self.queue_ls.clear();
-                self.total_ls.clear();
-                for r in &batch.requests {
-                    self.queue_ls
-                        .push(to_seconds(batch.formed_at.saturating_sub(r.enqueued_at)));
-                    self.total_ls.push(to_seconds(now.saturating_sub(r.enqueued_at)));
+                self.queue_ps.clear();
+                self.total_ps.clear();
+                for &enq in &batch.requests {
+                    self.queue_ps.push(batch.formed_at.saturating_sub(enq));
+                    self.total_ps.push(now.saturating_sub(enq));
                 }
                 self.metrics
-                    .record_batch(batch.len() as u32, &self.queue_ls, &self.total_ls);
+                    .record_batch(batch.len() as u32, &self.queue_ps, &self.total_ps);
                 self.served += batch.len() as u64;
                 self.per_replica[rep] += batch.len() as u64;
                 self.router.complete(rep, batch.len() as u64);
                 self.busy[rep] = false;
                 self.last_done = self.last_done.max(now);
-                if let Some(next) = self.waiting[rep].pop_front() {
-                    self.start(rep, next, sch);
+                self.batcher.recycle(batch.requests);
+                if let Some((next, service)) = self.waiting[rep].pop_front() {
+                    self.start(rep, next, service, sch);
                 }
             }
         }
@@ -306,7 +468,7 @@ mod tests {
     use super::*;
     use crate::coordinator::clock::millis;
     use crate::util::rng::Rng;
-    use crate::workloads::generator::poisson_trace;
+    use crate::workloads::generator::{poisson_trace, PoissonTraceIter};
     use crate::workloads::resnet::resnet50;
 
     fn server(max_batch: u32, max_wait: Time, queue_capacity: usize) -> SimServer {
@@ -345,11 +507,44 @@ mod tests {
     }
 
     #[test]
+    fn streaming_replay_bit_identical_to_materialized() {
+        // The acceptance pin: pulling arrivals from the generator one at a
+        // time (never materializing the trace) replays bit-identically to
+        // the slice path, for the same seed/rate/duration.
+        let (seed, rate, duration) = (42, 2500.0, 0.4);
+        let s = server(8, millis(2), 10_000);
+        let materialized = s.replay(&trace(seed, rate, duration), 2);
+        let streamed = s.replay_stream(
+            PoissonTraceIter::new(Rng::new(seed), rate, duration, "resnet50", 1),
+            2,
+        );
+        assert!(
+            materialized.snapshot.bitwise_eq(&streamed.snapshot),
+            "streaming replay diverged from materialized:\n  mat: {}\n  str: {}",
+            materialized.snapshot.report(),
+            streamed.snapshot.report()
+        );
+        assert_eq!(materialized.offered, streamed.offered);
+        assert_eq!(materialized.served, streamed.served);
+        assert_eq!(materialized.dropped, streamed.dropped);
+        assert_eq!(materialized.full_batches, streamed.full_batches);
+        assert_eq!(materialized.timeout_batches, streamed.timeout_batches);
+        assert_eq!(materialized.max_queue_depth, streamed.max_queue_depth);
+        assert_eq!(materialized.per_replica_served, streamed.per_replica_served);
+        assert_eq!(
+            materialized.max_queue_wait_s.to_bits(),
+            streamed.max_queue_wait_s.to_bits()
+        );
+        assert_eq!(materialized.sim_duration_s.to_bits(), streamed.sim_duration_s.to_bits());
+    }
+
+    #[test]
     fn conservation_and_no_deadline_violation() {
         let t = trace(7, 2000.0, 0.25);
         let offered: u64 = t.iter().map(|r| r.samples as u64).sum();
         let max_wait = millis(2);
         let r = server(8, max_wait, 64).replay(&t, 1);
+        assert_eq!(r.offered, offered, "world undercounted the trace");
         assert_eq!(r.served + r.dropped, offered, "requests lost or invented");
         assert!(r.dropped > 0, "expected admission drops at this overload");
         // No dispatched request ever waited past the batcher deadline.
@@ -406,6 +601,11 @@ mod tests {
         let r = s.replay(&t, 1);
         assert_eq!(r.served, 0);
         assert!(r.snapshot.errors > 0);
+        assert_eq!(
+            r.served + r.dropped + r.snapshot.errors,
+            r.offered,
+            "conservation identity broken for unregistered models"
+        );
     }
 
     #[test]

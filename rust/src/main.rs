@@ -178,7 +178,7 @@ fn cmd_sweep(args: &[String]) {
     .opt("rates", "250,500,1000,2000,4000", "comma-separated Poisson rates, req/s")
     .opt("replicas", "1,2,4", "comma-separated replica counts")
     .opt("max-batch", "8", "comma-separated dynamic-batcher limits")
-    .opt("duration", "1.0", "trace duration per point, s")
+    .opt("duration", "1.0", "trace duration per point, s (traces stream in O(1) memory)")
     .opt("max-wait-ms", "2.0", "batcher deadline, ms")
     .opt("queue-cap", "10000", "admission-control queue bound")
     .opt("seed", "42", "trace seed")
@@ -217,7 +217,8 @@ fn cmd_sweep(args: &[String]) {
         usage_error("option --max-wait-ms must be between 0 and 60000 (one minute)");
     }
     let t0 = std::time::Instant::now();
-    let points = sweep_capacity(&net, a.get("model"), &SunriseConfig::default(), &grid);
+    let points = sweep_capacity(&net, a.get("model"), &SunriseConfig::default(), &grid)
+        .unwrap_or_else(|e| usage_error(&format!("sunrise sweep: {e}")));
     println!("{}", render_grid(&points));
     let frac = a.get_f64("knee-frac");
     for &replicas in &grid.replicas {

@@ -23,6 +23,13 @@ pub trait Executor: Send {
     /// Max batch the backend supports for `model`.
     fn max_batch(&self, model: &str) -> Option<u32>;
 
+    /// Every model this backend can execute. The serving boundary
+    /// pre-interns these (and only these) into its
+    /// [`ModelRegistry`](crate::coordinator::request::ModelRegistry), so
+    /// unknown client-supplied names are rejected without growing any
+    /// name-indexed state.
+    fn models(&self) -> Vec<String>;
+
     /// Backend label for metrics.
     fn name(&self) -> &'static str;
 }
@@ -59,6 +66,10 @@ impl Executor for PjrtExecutor {
 
     fn max_batch(&self, model: &str) -> Option<u32> {
         self.runtime.model(model).map(|m| m.artifact.batch)
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.runtime.models.iter().map(|m| m.artifact.name.clone()).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -115,6 +126,10 @@ impl Executor for SimExecutor {
 
     fn max_batch(&self, _model: &str) -> Option<u32> {
         Some(32)
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.networks.keys().cloned().collect()
     }
 
     fn name(&self) -> &'static str {

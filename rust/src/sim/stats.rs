@@ -3,6 +3,14 @@
 //! Used by the chip model and coordinator for throughput/latency/energy
 //! reporting; kept allocation-light because stats updates sit on the sim
 //! hot path (see EXPERIMENTS.md §Perf).
+//!
+//! Two histogram flavours:
+//! - [`Histogram`] — log-spaced `f64` buckets located by binary search;
+//!   general-purpose (named [`Stats`] observations, the chip queueing sim).
+//! - [`PsHistogram`] — log2-spaced integer-[`Time`](crate::sim::Time)
+//!   buckets located by a single `leading_zeros`; the serving metrics
+//!   record path, where per-request float conversion + binary search was
+//!   measurable (EXPERIMENTS.md §Serving-replay).
 
 use std::collections::BTreeMap;
 
@@ -79,6 +87,91 @@ impl Histogram {
                     self.max
                 } else {
                     self.bounds[i - 1]
+                };
+            }
+        }
+        self.max
+    }
+}
+
+/// A streaming histogram over integer picosecond values with log2-spaced
+/// buckets: bucket `k` holds `[2^(k-1), 2^k)` (bucket 0 holds exactly 0),
+/// so locating a bucket is one `leading_zeros` — no float conversion, no
+/// binary search. O(1) record, fixed 65-slot storage, exact integer sum.
+///
+/// Quantiles mirror [`Histogram`]'s convention: the returned value is the
+/// lower edge of the bucket containing the target rank (`min` for the
+/// zero bucket, `max` for the top bucket), which makes
+/// `quantile(q1) <= quantile(q2)` for `0 < q1 <= q2`.
+#[derive(Debug, Clone)]
+pub struct PsHistogram {
+    counts: [u64; 65],
+    pub n: u64,
+    /// Exact sum (u128: 6M requests × minutes-long ps latencies cannot
+    /// overflow it).
+    sum: u128,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for PsHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PsHistogram {
+    pub fn new() -> PsHistogram {
+        PsHistogram { counts: [0; 65], n: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `1 + floor(log2(v))`.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.n += 1;
+        self.sum += v as u128;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Mean value in picoseconds (exact integer sum, divided once here).
+    pub fn mean_ps(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Approximate quantile (picoseconds) from bucket lower edges.
+    pub fn quantile(&self, q: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.n == 0 {
+            return 0;
+        }
+        // `max(1)`: q = 0 behaves as the smallest rank, keeping quantiles
+        // monotone on all of [0, 1].
+        let target = ((q * self.n as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if k == 0 {
+                    self.min // the zero bucket: min is exactly 0
+                } else if k == 64 {
+                    self.max // top bucket (v >= 2^63): clamp to observed
+                } else {
+                    1u64 << (k - 1)
                 };
             }
         }
@@ -206,6 +299,116 @@ mod tests {
         assert_eq!(s.gauge("power_w"), 12.0);
         assert_eq!(s.gauge("energy_j"), 2.0);
         assert_eq!(s.counter("missing"), 0);
+    }
+
+    #[test]
+    fn ps_histogram_mean_min_max_exact() {
+        let mut h = PsHistogram::new();
+        for v in [1_000_000u64, 2_000_000, 3_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.n, 3);
+        assert_eq!(h.mean_ps(), 2_000_000.0);
+        assert_eq!(h.min, 1_000_000);
+        assert_eq!(h.max, 3_000_000);
+    }
+
+    #[test]
+    fn ps_histogram_bucket_edges() {
+        let mut h = PsHistogram::new();
+        h.record(0);
+        assert_eq!(h.quantile(0.5), 0, "zero bucket reports min (= 0)");
+        let mut h = PsHistogram::new();
+        h.record(1); // bucket 1: [1, 2)
+        assert_eq!(h.quantile(0.5), 1);
+        let mut h = PsHistogram::new();
+        h.record(1024); // exactly 2^10: bucket 11, lower edge 2^10
+        h.record(2047); // same bucket
+        assert_eq!(h.quantile(0.5), 1024);
+        assert_eq!(h.quantile(1.0), 1024);
+        let mut h = PsHistogram::new();
+        h.record(u64::MAX); // top bucket clamps to the observed max
+        assert_eq!(h.quantile(0.99), u64::MAX);
+    }
+
+    #[test]
+    fn ps_histogram_empty_is_zero() {
+        let h = PsHistogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean_ps(), 0.0);
+    }
+
+    /// Satellite property: the integer-ps histogram agrees with the f64
+    /// reference within one bucket on random samples — the mean is exact
+    /// (both are true sums), and p50/p99 differ by at most the combined
+    /// bucket widths (×2 for log2 buckets, ×~1.47 for the 60-bucket
+    /// log-spaced reference).
+    #[test]
+    fn property_ps_histogram_matches_f64_reference() {
+        use crate::sim::to_seconds;
+        use crate::util::proptest::check;
+        check(0x9157, 40, |g| {
+            let n = g.usize("n", 2, 400);
+            let mut ps = PsHistogram::new();
+            let mut f = Histogram::latency();
+            for _ in 0..n {
+                // Log-uniform ps values in [2^10, 2^41): 1 ns .. ~2.2 ms.
+                let base = 1u64 << g.usize("lg", 10, 41);
+                let v = base + g.u64_below("off", base);
+                ps.record(v);
+                f.record(to_seconds(v));
+            }
+            let mean_rel =
+                (ps.mean_ps() / 1e12 - f.mean()).abs() / f.mean().max(1e-300);
+            crate::prop_assert!(mean_rel < 1e-9, "means diverged: rel {mean_rel}");
+            for q in [0.5, 0.99] {
+                let a = to_seconds(ps.quantile(q));
+                let b = f.quantile(q);
+                let ratio = a / b;
+                crate::prop_assert!(
+                    (0.4..=2.5).contains(&ratio),
+                    "q{q}: ps {a} vs f64 {b} (ratio {ratio}) beyond one-bucket tolerance"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property: quantiles are monotone in q for both histogram
+    /// implementations.
+    #[test]
+    fn property_quantiles_monotone_both_impls() {
+        use crate::sim::to_seconds;
+        use crate::util::proptest::check;
+        check(0x901707, 40, |g| {
+            let n = g.usize("n", 1, 300);
+            let mut ps = PsHistogram::new();
+            let mut f = Histogram::latency();
+            for _ in 0..n {
+                let base = 1u64 << g.usize("lg", 0, 45);
+                let v = base + g.u64_below("off", base.max(1));
+                ps.record(v);
+                f.record(to_seconds(v));
+            }
+            let mut q1 = g.f64("q1", 1e-6, 1.0);
+            let mut q2 = g.f64("q2", 1e-6, 1.0);
+            if q1 > q2 {
+                std::mem::swap(&mut q1, &mut q2);
+            }
+            crate::prop_assert!(
+                ps.quantile(q1) <= ps.quantile(q2),
+                "ps quantiles not monotone: q({q1}) = {} > q({q2}) = {}",
+                ps.quantile(q1),
+                ps.quantile(q2)
+            );
+            crate::prop_assert!(
+                f.quantile(q1) <= f.quantile(q2),
+                "f64 quantiles not monotone: q({q1}) = {} > q({q2}) = {}",
+                f.quantile(q1),
+                f.quantile(q2)
+            );
+            Ok(())
+        });
     }
 
     #[test]
