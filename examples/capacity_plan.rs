@@ -1,0 +1,79 @@
+//! Heterogeneous capacity planning: the cheapest chip fleet meeting a
+//! `(rate, p99)` service-level target, over a catalog of mixed Sunrise
+//! configurations (half / silicon / 2×) priced by the Table-IV
+//! wafer-economics model.
+//!
+//! The run also asserts the acceptance properties pinned by the plan
+//! tests: planning is deterministic (two runs return bit-identical
+//! fleets), the winning fleet's replay actually meets the target, and a
+//! tighter p99 never costs less.
+//!
+//! Run: `cargo run --release --example capacity_plan`
+
+use sunrise::coordinator::capacity::TraceShape;
+use sunrise::coordinator::plan::{
+    default_catalog, describe_fleet, plan, render_plan, PlanConfig, PlanTarget,
+};
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let net = resnet50();
+    let catalog = default_catalog();
+    let config = PlanConfig::default();
+
+    println!("chip catalog (die costs from the Murphy-yield wafer model):");
+    for c in &catalog {
+        println!("  {:14} ${:>6.2}/die  {:>5.1} W", c.name, c.unit_cost_usd, c.unit_power_w);
+    }
+    println!();
+
+    let t0 = std::time::Instant::now();
+    let mut last_cost = 0.0f64;
+    for (rate, p99_ms) in [(1000.0, 50.0), (4000.0, 40.0), (12_000.0, 30.0)] {
+        let target = PlanTarget {
+            rate,
+            p99_s: p99_ms / 1e3,
+            duration_s: 0.4,
+            ..PlanTarget::default()
+        };
+        let p = plan(&net, "resnet50", &catalog, &target, &config)
+            .expect("targets chosen to be meetable");
+        let again = plan(&net, "resnet50", &catalog, &target, &config).expect("meetable");
+        assert_eq!(p.best.counts, again.best.counts, "plan not deterministic");
+        assert!(p.best.report.snapshot.p99_latency_s <= target.p99_s);
+        assert!(
+            p.best.cost_usd >= last_cost,
+            "a harder target got cheaper: ${} after ${last_cost}",
+            p.best.cost_usd
+        );
+        last_cost = p.best.cost_usd;
+        println!("== target: {rate} req/s @ p99 <= {p99_ms} ms ==");
+        println!("{}", render_plan(&catalog, &p));
+        println!(
+            "-> {} (${:.0}, {:.0} W)\n",
+            describe_fleet(&catalog, &p.best.counts),
+            p.best.cost_usd,
+            p.best.power_w
+        );
+    }
+
+    // The same rate with 6x bursts: the fleet (and bill) grows.
+    let stationary =
+        PlanTarget { rate: 3000.0, p99_s: 0.030, duration_s: 0.4, ..PlanTarget::default() };
+    let bursty = PlanTarget {
+        shape: TraceShape::Bursty { burst_mult: 6.0, phase_s: 0.05 },
+        ..stationary
+    };
+    let a = plan(&net, "resnet50", &catalog, &stationary, &config).expect("meetable");
+    let b = plan(&net, "resnet50", &catalog, &bursty, &config).expect("meetable");
+    assert!(b.best.cost_usd >= a.best.cost_usd, "bursts should never make the fleet cheaper");
+    println!(
+        "burst sensitivity at 3000 req/s @ p99 <= 30 ms: stationary {} (${:.0}) vs 6x bursts {} (${:.0})",
+        describe_fleet(&catalog, &a.best.counts),
+        a.best.cost_usd,
+        describe_fleet(&catalog, &b.best.counts),
+        b.best.cost_usd
+    );
+    println!("plans deterministic + targets met: OK");
+    println!("({:.0} ms wall)", t0.elapsed().as_secs_f64() * 1e3);
+}

@@ -1,10 +1,11 @@
 //! Bench: the virtual-time serving stack — the `serving_replay` rows
 //! (streaming vs the frozen PR-2 materialized baseline, same trace
 //! parameters, so the ns/op ratio *is* the replayed-req/s ratio), a
-//! million-request streaming demonstration, and the capacity-grid sweep,
-//! serial vs parallel. Companion JSON lands in `BENCH_serving.json` at
-//! the repo root; `ci/check_perf_gates.py` enforces the streaming row
-//! ≥3× the baseline row.
+//! million-request streaming demonstration, the capacity-grid sweep,
+//! serial vs parallel, and one end-to-end `plan` query (informational).
+//! Companion JSON lands in `BENCH_serving.json` at the repo root;
+//! `ci/check_perf_gates.py` enforces the streaming row ≥3× the baseline
+//! row. EXPERIMENTS.md's bench-row glossary maps every row to its gate.
 //!
 //! Run: `cargo bench --bench serving_capacity`
 //! (set `SUNRISE_BENCH_QUICK=1` for the CI smoke configuration — it keeps
@@ -21,6 +22,7 @@ use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{sweep_capacity_threads, GridConfig};
 use sunrise::coordinator::clock::millis;
+use sunrise::coordinator::plan::{default_catalog, plan, PlanConfig, PlanTarget};
 use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
 use sunrise::sim::sweep::default_threads;
 use sunrise::util::bench::Bencher;
@@ -100,6 +102,21 @@ fn main() {
             .iter()
             .map(|p| p.report.served)
             .sum::<u64>()
+    });
+
+    // --- plan: the whole heterogeneous planner, end to end (informational) ---
+    // One `sunrise plan` query: 3-class catalog (half/silicon/2x), four mix
+    // templates, binary search over fleet scale, every probe a streamed
+    // deterministic replay. No gate — the row tracks how expensive a
+    // planner query is as the serving stack evolves.
+    let catalog = default_catalog();
+    let target =
+        PlanTarget { rate: 2500.0, p99_s: 0.040, duration_s: 0.2, ..PlanTarget::default() };
+    let plan_config = PlanConfig::default();
+    b.bench("plan: cheapest fleet, 2.5k req/s @ p99<=40ms, 3-class catalog", || {
+        let p = plan(&net, "resnet50", &catalog, &target, &plan_config).expect("meetable target");
+        assert!(p.best.meets_target);
+        p.best.replicas
     });
 
     b.summary("serving");

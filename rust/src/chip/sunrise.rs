@@ -41,6 +41,31 @@ pub struct SunriseConfig {
     pub dram_pj_per_byte: f64,
 }
 
+impl SunriseConfig {
+    /// The default silicon scaled by `factor`: VPUs, peak TOPS, DRAM and
+    /// fabric bandwidth, and bonded capacity all scale together (so
+    /// per-VPU weight capacity is preserved); per-layer overheads, static
+    /// power and energy constants are unchanged. The planner's default
+    /// catalog and the heterogeneous-fleet tests both build their
+    /// half-/double-size variants from this one constructor.
+    pub fn scaled(factor: f64) -> SunriseConfig {
+        assert!(factor.is_finite() && factor > 0.0, "scale factor must be finite and > 0");
+        let base = SunriseConfig::default();
+        let n_vpus = ((base.n_vpus as f64) * factor) as u32;
+        // A zero-VPU chip would divide by zero in freq_for_tops and
+        // "run" at infinite frequency — reject instead of mis-modeling.
+        assert!(n_vpus >= 1, "scale factor {factor} leaves no VPUs (need >= 1/{})", base.n_vpus);
+        SunriseConfig {
+            n_vpus,
+            peak_tops: base.peak_tops * factor,
+            dram_bw: base.dram_bw * factor,
+            fabric_bw: base.fabric_bw * factor,
+            dram_bits: base.dram_bits * factor,
+            ..base
+        }
+    }
+}
+
 impl Default for SunriseConfig {
     fn default() -> Self {
         SunriseConfig {
@@ -283,6 +308,28 @@ mod tests {
         // Different batch → different entry.
         let _ = chip.run(&net, 4);
         assert_eq!(chip.cached_schedules(), 2);
+    }
+
+    #[test]
+    fn scaled_config_scales_resources_together() {
+        let half = SunriseConfig::scaled(0.5);
+        assert_eq!(half.n_vpus, 32);
+        assert!((half.peak_tops - 12.5).abs() < 1e-9);
+        assert!((half.dram_bw - 0.9e12).abs() < 1.0);
+        // Per-VPU weight capacity is preserved by co-scaling capacity
+        // with VPU count.
+        let base = SunriseChip::silicon();
+        let chip = SunriseChip::new(half);
+        assert_eq!(
+            chip.resources.weight_capacity_per_vpu,
+            base.resources.weight_capacity_per_vpu
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "no VPUs")]
+    fn scaled_below_one_vpu_panics() {
+        let _ = SunriseConfig::scaled(0.001);
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! virtual-time server, fanned across cores.
 //!
 //! Each grid point is an independent [`SimServer::replay_stream`] of a
-//! deterministic Poisson trace (fixed seed, so traces vary only with the
-//! arrival rate). Traces are *streamed*, never materialized: every point
+//! deterministic trace (fixed seed, so traces vary only with the arrival
+//! rate). Traces are *streamed*, never materialized: every point
 //! regenerates its arrival stream from the seed in O(1) memory, so grid
 //! durations are bounded by simulation time, not by holding
 //! `rate × duration` requests per rate in RAM — minute-long traces at
@@ -13,6 +13,15 @@
 //! deployment questions the paper's single 1500 img/s number hides: where
 //! is the saturation knee for N replicas, and what does p99 look like on
 //! the way there.
+//!
+//! Two axes beyond the PR-2 grid:
+//! - **Trace shape** ([`TraceShape`]): Poisson or bursty
+//!   (alternating base/burst phases via
+//!   [`BurstyTraceIter`](crate::workloads::generator::BurstyTraceIter)),
+//!   streamed per point with the same O(1)-memory discipline.
+//! - **Replica mixes** ([`sweep_capacity_mix`]): heterogeneous fleets
+//!   (chip class per replica) instead of homogeneous counts, on the
+//!   [`SimServer::replay_stream_mix`] substrate.
 //!
 //! Points are ordered (replicas, max_batch) group by group with rates
 //! ascending inside each group, so p99-vs-load curves read straight down
@@ -28,13 +37,73 @@ use crate::sim::Time;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workloads::generator::PoissonTraceIter;
+use crate::workloads::generator::{BurstyTraceIter, PoissonTraceIter, TraceRequest};
 use crate::workloads::Network;
+
+/// Arrival-process shape for grid points (and planner targets). Both
+/// stream in O(1) memory; the `rate` axis is the Poisson rate or the
+/// bursty *base* rate respectively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceShape {
+    /// Stationary Poisson arrivals at the grid rate.
+    Poisson,
+    /// Alternating phases of `rate` and `burst_mult × rate` arrivals,
+    /// switching every `phase_s` seconds (stress for batcher backpressure
+    /// and tail latency).
+    Bursty {
+        /// Burst-phase rate multiplier (≥ 1 for an actual burst).
+        burst_mult: f64,
+        /// Phase length, seconds.
+        phase_s: f64,
+    },
+}
+
+impl TraceShape {
+    /// The streamed trace for one grid point: boxed because the two
+    /// generators are distinct types; the allocation is one per point,
+    /// not per request.
+    pub fn stream(
+        &self,
+        seed: u64,
+        rate: f64,
+        duration_s: f64,
+        model: &str,
+    ) -> Box<dyn Iterator<Item = TraceRequest> + Send> {
+        match *self {
+            TraceShape::Poisson => {
+                Box::new(PoissonTraceIter::new(Rng::new(seed), rate, duration_s, model, 1))
+            }
+            TraceShape::Bursty { burst_mult, phase_s } => Box::new(BurstyTraceIter::new(
+                Rng::new(seed),
+                rate,
+                rate * burst_mult,
+                phase_s,
+                duration_s,
+                model,
+            )),
+        }
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        if let TraceShape::Bursty { burst_mult, phase_s } = *self {
+            crate::ensure!(
+                burst_mult.is_finite() && burst_mult > 0.0,
+                "bursty burst_mult {burst_mult} is not a finite positive multiplier"
+            );
+            crate::ensure!(
+                phase_s.is_finite() && phase_s > 0.0,
+                "bursty phase_s {phase_s} is not a finite positive number of seconds"
+            );
+        }
+        Ok(())
+    }
+}
 
 /// The sweep grid and shared serving knobs.
 #[derive(Debug, Clone)]
 pub struct GridConfig {
-    /// Poisson arrival rates, req/s (swept ascending within each group).
+    /// Arrival rates, req/s (swept ascending within each group). For
+    /// bursty shapes this is the base rate.
     pub rates: Vec<f64>,
     /// Replica counts.
     pub replicas: Vec<usize>,
@@ -49,6 +118,8 @@ pub struct GridConfig {
     /// Admission bound on queued requests.
     pub queue_capacity: usize,
     pub routing: Policy,
+    /// Arrival-process shape (Poisson by default).
+    pub shape: TraceShape,
 }
 
 impl Default for GridConfig {
@@ -62,6 +133,7 @@ impl Default for GridConfig {
             max_wait: millis(2),
             queue_capacity: 10_000,
             routing: Policy::LeastLoaded,
+            shape: TraceShape::Poisson,
         }
     }
 }
@@ -71,6 +143,9 @@ impl Default for GridConfig {
 pub struct CapacityPoint {
     pub rate: f64,
     pub replicas: usize,
+    /// Chip class per replica (all zeros for homogeneous sweeps;
+    /// `replicas == mix.len()`).
+    pub mix: Vec<u32>,
     pub max_batch: u32,
     /// Requests offered by the trace (counted during the streamed replay —
     /// the trace itself is never materialized).
@@ -114,9 +189,47 @@ pub fn sweep_capacity_threads(
     threads: usize,
 ) -> Result<Vec<CapacityPoint>> {
     crate::ensure!(
-        !grid.rates.is_empty() && !grid.replicas.is_empty() && !grid.max_batches.is_empty(),
-        "capacity grid needs at least one rate, replica count, and max_batch"
+        !grid.replicas.is_empty(),
+        "capacity grid needs at least one replica count"
     );
+    crate::ensure!(
+        grid.replicas.iter().all(|&r| r > 0),
+        "capacity grid replica counts must all be > 0"
+    );
+    let mixes: Vec<Vec<u32>> = grid.replicas.iter().map(|&r| vec![0; r]).collect();
+    sweep_capacity_mix_threads(net, model, std::slice::from_ref(chip), &mixes, grid, threads)
+}
+
+/// Sweep heterogeneous replica mixes: `chips` lists the chip classes and
+/// each mix names the class of every replica (`mix[r] < chips.len()`).
+/// Rates, max_batch values, shape and all serving knobs come from `grid`
+/// (its `replicas` axis is ignored — the mixes *are* the replica axis).
+/// Points are ordered (mix, max_batch) group by group with rates
+/// ascending, like [`sweep_capacity`].
+pub fn sweep_capacity_mix(
+    net: &Network,
+    model: &str,
+    chips: &[SunriseConfig],
+    mixes: &[Vec<u32>],
+    grid: &GridConfig,
+) -> Result<Vec<CapacityPoint>> {
+    sweep_capacity_mix_threads(net, model, chips, mixes, grid, default_threads())
+}
+
+/// [`sweep_capacity_mix`] with an explicit thread count.
+pub fn sweep_capacity_mix_threads(
+    net: &Network,
+    model: &str,
+    chips: &[SunriseConfig],
+    mixes: &[Vec<u32>],
+    grid: &GridConfig,
+    threads: usize,
+) -> Result<Vec<CapacityPoint>> {
+    crate::ensure!(
+        !grid.rates.is_empty() && !mixes.is_empty() && !grid.max_batches.is_empty(),
+        "capacity grid needs at least one rate, replica mix, and max_batch"
+    );
+    crate::ensure!(!chips.is_empty(), "capacity mix sweep needs at least one chip class");
     // Validated before the sort below (`partial_cmp().unwrap()` on a NaN
     // would otherwise panic with an opaque message) and before trace
     // generation (an infinite rate or duration would loop forever).
@@ -131,18 +244,25 @@ pub fn sweep_capacity_threads(
         "capacity grid duration {} is not a finite positive number of seconds",
         grid.duration_s
     );
-    crate::ensure!(
-        grid.replicas.iter().all(|&r| r > 0),
-        "capacity grid replica counts must all be > 0"
-    );
+    grid.shape.validate()?;
+    for mix in mixes {
+        crate::ensure!(!mix.is_empty(), "capacity grid replica mixes must be non-empty");
+        for &class in mix {
+            crate::ensure!(
+                (class as usize) < chips.len(),
+                "replica mix names chip class {class}, but only {} chip classes were given",
+                chips.len()
+            );
+        }
+    }
     crate::ensure!(
         grid.max_batches.iter().all(|&b| b >= 1),
         "capacity grid max_batch values must all be >= 1"
     );
     // One virtual server per max_batch (its service tables are planned
-    // once, then shared read-only by every grid point — replays take
-    // `&self` and the chip's schedule cache is thread-safe); each grid
-    // point streams its own trace from (seed, rate, duration).
+    // once per chip class, then shared read-only by every grid point —
+    // replays take `&self` and the chip's schedule cache is thread-safe);
+    // each grid point streams its own trace from (seed, rate, duration).
     let servers: Vec<SimServer> = grid
         .max_batches
         .iter()
@@ -152,28 +272,33 @@ pub fn sweep_capacity_threads(
                 routing: grid.routing,
                 queue_capacity: grid.queue_capacity,
             };
-            let mut server = SimServer::new(SunriseChip::new(chip.clone()), config);
+            let mut server = SimServer::new(SunriseChip::new(chips[0].clone()), config);
+            for extra in &chips[1..] {
+                server.add_chip_class(SunriseChip::new(extra.clone()));
+            }
             server.register(model, net);
             server
         })
         .collect();
     let mut rates = grid.rates.clone();
     rates.sort_by(|a, b| a.partial_cmp(b).expect("rates validated finite above"));
-    let mut points: Vec<(usize, usize, f64)> = Vec::new(); // (replicas, server idx, rate)
-    for &replicas in &grid.replicas {
+    let mut points: Vec<(usize, usize, f64)> = Vec::new(); // (mix idx, server idx, rate)
+    for mix_idx in 0..mixes.len() {
         for mb_idx in 0..servers.len() {
             for &rate in &rates {
-                points.push((replicas, mb_idx, rate));
+                points.push((mix_idx, mb_idx, rate));
             }
         }
     }
-    Ok(parallel_map_threads(&points, threads, |_, &(replicas, mb_idx, rate)| {
+    Ok(parallel_map_threads(&points, threads, |_, &(mix_idx, mb_idx, rate)| {
         let server = &servers[mb_idx];
-        let trace = PoissonTraceIter::new(Rng::new(grid.seed), rate, grid.duration_s, model, 1);
-        let report = server.replay_stream(trace, replicas);
+        let mix = &mixes[mix_idx];
+        let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
+        let report = server.replay_stream_mix(trace, mix);
         CapacityPoint {
             rate,
-            replicas,
+            replicas: mix.len(),
+            mix: mix.clone(),
             max_batch: server.config.batcher.max_batch,
             offered: report.offered,
             duration_s: grid.duration_s,
@@ -246,7 +371,7 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::generator::poisson_trace;
+    use crate::workloads::generator::{bursty_trace, poisson_trace};
     use crate::workloads::resnet::resnet50;
 
     fn small_grid() -> GridConfig {
@@ -359,6 +484,136 @@ mod tests {
     }
 
     #[test]
+    fn bursty_grid_streams_the_bursty_generator_exactly() {
+        // A bursty grid point replays the same arrivals bursty_trace()
+        // materializes for (seed, base, burst, phase, duration): offered
+        // counts match, and the replay is deterministic.
+        let net = resnet50();
+        let shape = TraceShape::Bursty { burst_mult: 5.0, phase_s: 0.05 };
+        let grid = GridConfig {
+            rates: vec![400.0, 1200.0],
+            replicas: vec![1],
+            max_batches: vec![8],
+            duration_s: 0.3,
+            shape,
+            ..GridConfig::default()
+        };
+        let points =
+            sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).expect("grid");
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            let mat = bursty_trace(
+                &mut Rng::new(grid.seed),
+                p.rate,
+                p.rate * 5.0,
+                0.05,
+                grid.duration_s,
+                "resnet50",
+            );
+            assert_eq!(p.offered, mat.iter().map(|r| r.samples as u64).sum::<u64>());
+            assert!(p.report.served > 0);
+        }
+        let again =
+            sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).expect("grid");
+        for (a, b) in points.iter().zip(&again) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "bursty replay diverged");
+        }
+    }
+
+    #[test]
+    fn bursty_tail_is_worse_than_poisson_at_same_base_rate() {
+        // Bursts at 6x the base rate push p99 above the stationary
+        // Poisson tail for the same base rate and fleet.
+        let net = resnet50();
+        let base = GridConfig {
+            rates: vec![800.0],
+            replicas: vec![1],
+            max_batches: vec![8],
+            duration_s: 0.4,
+            ..GridConfig::default()
+        };
+        let bursty = GridConfig {
+            shape: TraceShape::Bursty { burst_mult: 6.0, phase_s: 0.05 },
+            ..base.clone()
+        };
+        let cfg = SunriseConfig::default();
+        let p = &sweep_capacity(&net, "resnet50", &cfg, &base).expect("grid")[0];
+        let b = &sweep_capacity(&net, "resnet50", &cfg, &bursty).expect("grid")[0];
+        assert!(
+            b.report.snapshot.p99_latency_s >= p.report.snapshot.p99_latency_s,
+            "bursty p99 {} not above poisson p99 {}",
+            b.report.snapshot.p99_latency_s,
+            p.report.snapshot.p99_latency_s
+        );
+        assert!(b.offered > p.offered, "bursts should add arrivals");
+    }
+
+    #[test]
+    fn mix_sweep_homogeneous_mixes_match_plain_sweep() {
+        // A mix sweep over all-class-0 mixes is bit-identical to the
+        // homogeneous sweep with the same replica counts — the mix axis
+        // is strictly additive.
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![500.0, 2000.0],
+            replicas: vec![1, 2],
+            max_batches: vec![8],
+            duration_s: 0.2,
+            ..GridConfig::default()
+        };
+        let cfg = SunriseConfig::default();
+        let plain = sweep_capacity(&net, "resnet50", &cfg, &grid).expect("grid");
+        let mixes: Vec<Vec<u32>> = vec![vec![0], vec![0, 0]];
+        let mixed =
+            sweep_capacity_mix(&net, "resnet50", std::slice::from_ref(&cfg), &mixes, &grid)
+                .expect("grid");
+        assert_eq!(plain.len(), mixed.len());
+        for (a, b) in plain.iter().zip(&mixed) {
+            assert_eq!(a.replicas, b.replicas);
+            assert_eq!(a.mix, b.mix);
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "mix point diverged");
+        }
+    }
+
+    #[test]
+    fn mix_sweep_heterogeneous_fleet_outserves_its_slow_half() {
+        // A [small, big] fleet beats 2x the small chip on delivered
+        // throughput under overload — the mix axis actually models the
+        // bigger chip.
+        let net = resnet50();
+        let small = SunriseConfig::default();
+        let big = SunriseConfig::scaled(2.0);
+        let grid = GridConfig {
+            rates: vec![6000.0],
+            replicas: vec![2],
+            max_batches: vec![8],
+            duration_s: 0.3,
+            queue_capacity: 100_000,
+            ..GridConfig::default()
+        };
+        let chips = [small.clone(), big];
+        let hetero = sweep_capacity_mix(&net, "resnet50", &chips, &[vec![0, 1]], &grid)
+            .expect("grid");
+        let homo = sweep_capacity(&net, "resnet50", &small, &grid).expect("grid");
+        // Everything offered is eventually served (queue capacity exceeds
+        // the trace), so capacity shows up as a shorter makespan / higher
+        // delivered rate, not a larger served count.
+        assert_eq!(hetero[0].report.served, homo[0].report.served);
+        assert!(
+            hetero[0].report.sim_duration_s < homo[0].report.sim_duration_s,
+            "hetero fleet took {} s vs homogeneous {} s",
+            hetero[0].report.sim_duration_s,
+            homo[0].report.sim_duration_s
+        );
+        assert!(
+            hetero[0].report.snapshot.throughput_rps > homo[0].report.snapshot.throughput_rps,
+            "hetero fleet slower: {} vs {} req/s",
+            hetero[0].report.snapshot.throughput_rps,
+            homo[0].report.snapshot.throughput_rps
+        );
+    }
+
+    #[test]
     fn invalid_rates_are_usable_errors_not_panics() {
         let net = resnet50();
         let cfg = SunriseConfig::default();
@@ -383,6 +638,22 @@ mod tests {
         let err =
             sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("zero max_batch").to_string();
         assert!(err.contains("max_batch"), "error does not name max_batch: {err}");
+        let grid = GridConfig {
+            shape: TraceShape::Bursty { burst_mult: f64::NAN, phase_s: 0.1 },
+            ..GridConfig::default()
+        };
+        let err =
+            sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("NaN burst").to_string();
+        assert!(err.contains("burst_mult"), "error does not name burst_mult: {err}");
+        let bad_mix = sweep_capacity_mix(
+            &net,
+            "resnet50",
+            std::slice::from_ref(&cfg),
+            &[vec![0, 3]],
+            &GridConfig::default(),
+        );
+        let err = bad_mix.expect_err("out-of-range class accepted").to_string();
+        assert!(err.contains("chip class"), "error does not name the class: {err}");
     }
 
     #[test]

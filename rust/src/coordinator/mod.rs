@@ -24,7 +24,11 @@
 //! - [`metrics`] — serving metrics on either time source
 //!   (integer-picosecond record path).
 //! - [`capacity`] — rate×replicas×batch capacity-planning grid sweeps
-//!   over streamed traces (O(1) arrival memory per point).
+//!   over streamed traces (O(1) arrival memory per point), Poisson or
+//!   bursty, homogeneous pools or heterogeneous replica mixes.
+//! - [`plan`][mod@plan] — the heterogeneous capacity planner: cheapest
+//!   chip fleet (mixed configurations, wafer-economics costs) meeting a
+//!   `(rate, p99)` target, by binary search over deterministic replays.
 //! - [`baseline`] — the PR-2 materialized replay, frozen as the
 //!   `serving_replay` bench's comparison row.
 
@@ -33,14 +37,16 @@ pub mod batcher;
 pub mod capacity;
 pub mod clock;
 pub mod metrics;
+pub mod plan;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod simserve;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued};
-pub use capacity::{sweep_capacity, CapacityPoint, GridConfig};
+pub use capacity::{sweep_capacity, CapacityPoint, GridConfig, TraceShape};
 pub use clock::{Clock, VirtualClock, WallClock};
+pub use plan::{default_catalog, plan, ChipClass, Plan, PlanConfig, PlanTarget};
 pub use request::{InferRequest, InferResponse, ModelId, ModelRegistry, RequestId};
 pub use server::{Server, ServerConfig};
 pub use simserve::{SimServeConfig, SimServeReport, SimServer};

@@ -3,6 +3,32 @@
 //! Policies: round-robin (stateless fairness) and least-loaded (queue-
 //! depth aware, the default — the serving benches show it wins under
 //! skewed batch costs).
+//!
+//! **Heterogeneous fleets.** Replicas may differ in speed (mixed chip
+//! configurations — see [`SimServer::replay_mix`]), so "least loaded" is
+//! **depth-normalized**: the router carries a relative speed weight per
+//! replica and picks the replica minimizing `inflight / speed`, compared
+//! exactly via u128 cross-multiplication (no floats, no rounding — the
+//! replay determinism contract extends through routing). A replica twice
+//! as fast absorbs ~twice the traffic; a slower replica is still chosen
+//! whenever its normalized depth is lowest, so it is never starved
+//! (property-tested below). With uniform speeds the comparison reduces to
+//! plain `inflight` minimization with first-index tie-breaking — exactly
+//! the pre-heterogeneous behavior, pinned bit-identical by
+//! `property_uniform_speeds_match_unweighted`.
+//!
+//! ```
+//! use sunrise::coordinator::router::{Policy, Router};
+//!
+//! // Replica 0 is twice as fast as replica 1.
+//! let mut r = Router::with_speeds(Policy::LeastLoaded, vec![2, 1]);
+//! assert_eq!(r.route(1), 0); // both idle: ties go to the lowest index
+//! assert_eq!(r.route(1), 1); // replica 1 is empty, 0 has work: 0/1 wins
+//! assert_eq!(r.route(1), 0); // normalized 1/2 on replica 0 < 1/1 on 1
+//! assert_eq!(r.load(0) + r.load(1), 3);
+//! ```
+//!
+//! [`SimServer::replay_mix`]: crate::coordinator::simserve::SimServer::replay_mix
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,16 +42,30 @@ pub enum Policy {
 pub struct Router {
     pub policy: Policy,
     inflight: Vec<u64>,
+    /// Relative replica speeds (arbitrary positive units — only ratios
+    /// matter). Uniform for homogeneous pools.
+    speed: Vec<u64>,
     next_rr: usize,
     pub routed: u64,
 }
 
 impl Router {
+    /// A homogeneous router: every replica at speed 1.
     pub fn new(policy: Policy, n_replicas: usize) -> Router {
-        assert!(n_replicas > 0);
+        Router::with_speeds(policy, vec![1; n_replicas])
+    }
+
+    /// A router over replicas of the given relative speeds (one entry per
+    /// replica, all > 0). [`Policy::LeastLoaded`] becomes depth-normalized:
+    /// it minimizes `inflight / speed` (exact integer cross-multiplication,
+    /// ties to the lowest index).
+    pub fn with_speeds(policy: Policy, speeds: Vec<u64>) -> Router {
+        assert!(!speeds.is_empty());
+        assert!(speeds.iter().all(|&s| s > 0), "replica speeds must be > 0");
         Router {
             policy,
-            inflight: vec![0; n_replicas],
+            inflight: vec![0; speeds.len()],
+            speed: speeds,
             next_rr: 0,
             routed: 0,
         }
@@ -44,13 +84,21 @@ impl Router {
                 self.next_rr = (self.next_rr + 1) % self.inflight.len();
                 i
             }
-            Policy::LeastLoaded => self
-                .inflight
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &w)| w)
-                .map(|(i, _)| i)
-                .unwrap(),
+            Policy::LeastLoaded => {
+                // argmin of inflight[i]/speed[i]: a/b < c/d iff a*d < c*b
+                // (all non-negative, speeds > 0). Strict `<` keeps the
+                // first minimum, matching `Iterator::min_by_key` on plain
+                // depths when speeds are uniform.
+                let mut best = 0usize;
+                for i in 1..self.inflight.len() {
+                    let lhs = self.inflight[i] as u128 * self.speed[best] as u128;
+                    let rhs = self.inflight[best] as u128 * self.speed[i] as u128;
+                    if lhs < rhs {
+                        best = i;
+                    }
+                }
+                best
+            }
         };
         self.inflight[idx] += weight;
         self.routed += 1;
@@ -68,6 +116,11 @@ impl Router {
 
     pub fn load(&self, replica: usize) -> u64 {
         self.inflight[replica]
+    }
+
+    /// The relative speed weight of a replica.
+    pub fn speed(&self, replica: usize) -> u64 {
+        self.speed[replica]
     }
 
     /// Max/min in-flight ratio (balance quality; 1.0 = perfect).
@@ -146,6 +199,19 @@ mod tests {
         assert!(ll < 1.05, "least-loaded imbalance {ll}");
     }
 
+    #[test]
+    fn weighted_routing_tracks_speed_ratio() {
+        // Speeds 2:1, unit batches, no completions: assigned load settles
+        // at the speed ratio (the fast replica absorbs ~2x the traffic).
+        let mut r = Router::with_speeds(Policy::LeastLoaded, vec![2, 1]);
+        for _ in 0..300 {
+            r.route(1);
+        }
+        assert_eq!(r.load(0) + r.load(1), 300);
+        assert_eq!(r.load(0), 200, "fast replica should carry 2/3");
+        assert_eq!(r.load(1), 100, "slow replica should carry 1/3");
+    }
+
     /// The least-loaded invariant itself: the chosen replica never has
     /// strictly more in-flight work than any other replica at the moment
     /// of routing.
@@ -202,6 +268,74 @@ mod tests {
             }
             for i in 0..n {
                 crate::prop_assert!(r.load(i) == ledger[i], "replica {i} drifted");
+            }
+            Ok(())
+        });
+    }
+
+    /// Depth-normalized routing with **uniform** speeds makes exactly the
+    /// same choices as the unweighted router, for arbitrary route/complete
+    /// interleavings — the homogeneous-pool bit-identity contract that
+    /// keeps PR-3 replays unchanged.
+    #[test]
+    fn property_uniform_speeds_match_unweighted() {
+        use crate::util::proptest::check;
+        check(0x5EED5, 50, |g| {
+            let n = g.usize("replicas", 1, 8);
+            let s = g.u64_below("speed", 7) + 1; // any uniform speed, not just 1
+            let mut plain = Router::new(Policy::LeastLoaded, n);
+            let mut weighted = Router::with_speeds(Policy::LeastLoaded, vec![s; n]);
+            let mut ledger = vec![0u64; n];
+            for _ in 0..g.usize("ops", 1, 120) {
+                if g.bool("issue") || ledger.iter().all(|&w| w == 0) {
+                    let w = g.u64_below("w", 16) + 1;
+                    let a = plain.route(w);
+                    let b = weighted.route(w);
+                    crate::prop_assert!(
+                        a == b,
+                        "uniform-speed router diverged: plain {a} vs weighted {b}"
+                    );
+                    ledger[a] += w;
+                } else {
+                    let busy: Vec<usize> = (0..n).filter(|&i| ledger[i] > 0).collect();
+                    let &i = g.pick("replica", &busy);
+                    let w = g.u64_below("cw", ledger[i]) + 1;
+                    plain.complete(i, w);
+                    weighted.complete(i, w);
+                    ledger[i] -= w;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Depth-normalized routing never starves a slow replica: with unit
+    /// batches the normalized loads stay within one unit of each other, so
+    /// every replica's share converges to speed_i / total_speed. Checked
+    /// for random speed vectors.
+    #[test]
+    fn property_normalized_routing_never_starves_slow_replica() {
+        use crate::util::proptest::check;
+        check(0x51015, 40, |g| {
+            let n = g.usize("replicas", 2, 6);
+            let speeds: Vec<u64> = (0..n).map(|_| g.u64_below("s", 8) + 1).collect();
+            let total: u64 = speeds.iter().sum();
+            let mut r = Router::with_speeds(Policy::LeastLoaded, speeds.clone());
+            let k = g.usize("k", 50, 400) as u64;
+            for _ in 0..k {
+                r.route(1);
+            }
+            for i in 0..n {
+                // Normalized spread bound: load_i/speed_i differs from
+                // k/total by at most 1, so load_i >= speed_i*(k/total - 1).
+                let floor = (speeds[i] as f64) * (k as f64 / total as f64 - 1.0);
+                crate::prop_assert!(
+                    r.load(i) as f64 >= floor,
+                    "replica {i} (speed {}) starved: {} routed of {k}, floor {floor}",
+                    speeds[i],
+                    r.load(i)
+                );
+                crate::prop_assert!(r.load(i) > 0, "replica {i} got no traffic at all");
             }
             Ok(())
         });

@@ -13,6 +13,19 @@
 //! capacity grids ([`capacity`](crate::coordinator::capacity)) sweepable
 //! and reproducible.
 //!
+//! **Heterogeneous fleets.** A server owns one or more **chip classes**
+//! (distinct [`SunriseChip`] configurations added via
+//! [`SimServer::add_chip_class`]); every registered model gets a service
+//! table per class. [`replay_mix`](SimServer::replay_mix) /
+//! [`replay_stream_mix`](SimServer::replay_stream_mix) take a *mix* — one
+//! class index per replica — and route with depth-normalized least-loaded
+//! selection (replica speeds derived from the class service tables), so a
+//! 2× faster replica absorbs ~2× the traffic and a slow replica is never
+//! starved. A uniform mix replays **bit-identically** to the homogeneous
+//! [`replay`](SimServer::replay) path (pinned by test): heterogeneity is
+//! strictly additive. This is the substrate the capacity planner
+//! ([`plan`][mod@crate::coordinator::plan]) binary-searches over.
+//!
 //! The replay is **streaming and allocation-free in steady state**:
 //! arrivals are pulled one at a time from a trace iterator by a
 //! self-rescheduling `NextArrival` event (one outstanding wake-up, not one
@@ -32,6 +45,25 @@
 //! so no request outlives its deadline), and one `Done` fires per batch
 //! completion; replicas model the worker channel with a FIFO of dispatched
 //! batches.
+//!
+//! ```
+//! use sunrise::chip::sunrise::SunriseChip;
+//! use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
+//! use sunrise::util::rng::Rng;
+//! use sunrise::workloads::generator::PoissonTraceIter;
+//! use sunrise::workloads::mlp;
+//!
+//! let mut server = SimServer::new(SunriseChip::silicon(), SimServeConfig::default());
+//! server.register("mlp", &mlp::quickstart());
+//! // Stream a 50 ms Poisson trace through 2 replicas in virtual time.
+//! let report = server.replay_stream(
+//!     PoissonTraceIter::new(Rng::new(1), 500.0, 0.05, "mlp", 1), 2);
+//! assert_eq!(report.served + report.dropped, report.offered);
+//! // Replays are deterministic: same trace + config => bit-identical.
+//! let again = server.replay_stream(
+//!     PoissonTraceIter::new(Rng::new(1), 500.0, 0.05, "mlp", 1), 2);
+//! assert!(report.snapshot.bitwise_eq(&again.snapshot));
+//! ```
 
 use crate::chip::sunrise::SunriseChip;
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
@@ -107,36 +139,84 @@ pub(crate) struct StreamedArrival {
     pub samples: u32,
 }
 
-/// The virtual-time server: a chip model plus per-model service tables.
+/// The virtual-time server: one or more chip classes plus per-class,
+/// per-model service tables.
 pub struct SimServer {
     pub config: SimServeConfig,
-    chip: SunriseChip,
+    /// Chip classes; class 0 is the constructor's chip. Replica mixes
+    /// index into this.
+    chips: Vec<SunriseChip>,
     registry: ModelRegistry,
-    /// Per-model service time (ps) indexed by [`ModelId::index`] then
-    /// batch size, `[0] = 0`; an empty table means "id never registered".
-    service: Vec<Vec<Time>>,
+    /// Registered networks, indexed by [`ModelId::index`] (kept so chip
+    /// classes added after `register` get tables for every model).
+    nets: Vec<Network>,
+    /// Per-class, per-model service time (ps): `service[class][model]` is
+    /// indexed by batch size with `[0] = 0`; an empty table means "id
+    /// never registered". Classes are always aligned: a model registered
+    /// in class 0 has a table in every class.
+    service: Vec<Vec<Vec<Time>>>,
 }
 
 impl SimServer {
     pub fn new(chip: SunriseChip, config: SimServeConfig) -> SimServer {
         assert!(config.batcher.max_batch >= 1);
-        SimServer { config, chip, registry: ModelRegistry::new(), service: Vec::new() }
+        SimServer {
+            config,
+            chips: vec![chip],
+            registry: ModelRegistry::new(),
+            nets: Vec::new(),
+            service: vec![Vec::new()],
+        }
+    }
+
+    /// Add a chip class (a distinct hardware configuration replicas can
+    /// be instantiated from) and return its class index for use in
+    /// [`replay_mix`](SimServer::replay_mix) mixes. Service tables for
+    /// every already-registered model are computed immediately, so
+    /// `register`/`add_chip_class` can come in either order.
+    pub fn add_chip_class(&mut self, chip: SunriseChip) -> u32 {
+        let tables = self
+            .nets
+            .iter()
+            .map(|net| Self::service_table_for(&chip, net, self.config.batcher.max_batch))
+            .collect();
+        self.chips.push(chip);
+        self.service.push(tables);
+        (self.chips.len() - 1) as u32
+    }
+
+    /// Number of chip classes (≥ 1; class 0 is the constructor's chip).
+    pub fn n_chip_classes(&self) -> usize {
+        self.chips.len()
     }
 
     /// Register a network under a model name, precomputing its service
-    /// table for batch sizes `1..=max_batch` from the chip model (hits
-    /// the chip's schedule cache on repeats). The name is interned once
-    /// here; replay never compares strings again.
+    /// table for batch sizes `1..=max_batch` on **every** chip class
+    /// (hits each chip's schedule cache on repeats). The name is interned
+    /// once here; replay never compares strings again.
     pub fn register(&mut self, name: &str, net: &Network) {
-        let mut table: Vec<Time> = vec![0];
-        for b in 1..=self.config.batcher.max_batch {
-            table.push(self.chip.run(net, b).total_ps);
-        }
         let id = self.registry.intern(name);
-        if id.index() >= self.service.len() {
-            self.service.resize_with(id.index() + 1, Vec::new);
+        if id.index() == self.nets.len() {
+            self.nets.push(net.clone());
+        } else {
+            self.nets[id.index()] = net.clone();
         }
-        self.service[id.index()] = table;
+        let max_batch = self.config.batcher.max_batch;
+        for (chip, tables) in self.chips.iter().zip(self.service.iter_mut()) {
+            let table = Self::service_table_for(chip, net, max_batch);
+            if id.index() >= tables.len() {
+                tables.resize_with(id.index() + 1, Vec::new);
+            }
+            tables[id.index()] = table;
+        }
+    }
+
+    fn service_table_for(chip: &SunriseChip, net: &Network, max_batch: u32) -> Vec<Time> {
+        let mut table: Vec<Time> = vec![0];
+        for b in 1..=max_batch {
+            table.push(chip.run(net, b).total_ps);
+        }
+        table
     }
 
     /// The name⇄id table (shared with the materialized baseline replay).
@@ -144,23 +224,49 @@ impl SimServer {
         &self.registry
     }
 
-    /// Service table for `model`, if registered (shared with the
+    /// Class-0 service table for `model`, if registered (shared with the
     /// materialized baseline replay).
     pub(crate) fn service_table(&self, model: ModelId) -> Option<&[Time]> {
-        self.service
+        self.service[0]
             .get(model.index())
             .filter(|t| !t.is_empty())
             .map(Vec::as_slice)
     }
 
-    /// Replay a materialized `trace` against `replicas` identical replicas
-    /// in simulated time — a thin wrapper resolving each request through
-    /// the registry and feeding the same streaming core as
-    /// [`replay_stream`](SimServer::replay_stream). Deterministic: same
-    /// trace + same config ⇒ bit-identical report (see
-    /// `MetricsSnapshot::bitwise_eq`). Arrival times must be
+    /// Relative speed of a chip class: summed full-batch throughput
+    /// (requests/s, integer arithmetic) across registered models. Used as
+    /// the router's depth-normalization weight; only ratios matter, and
+    /// uniform mixes produce uniform speeds, preserving the homogeneous
+    /// routing choices exactly.
+    fn class_speed(&self, class: usize) -> u64 {
+        let max_batch = self.config.batcher.max_batch as u128;
+        let mut speed: u128 = 0;
+        for table in &self.service[class] {
+            if table.len() > 1 {
+                let full_batch_ps = table[table.len() - 1].max(1);
+                speed += max_batch * 1_000_000_000_000u128 / full_batch_ps as u128;
+            }
+        }
+        (speed as u64).max(1)
+    }
+
+    /// Replay a materialized `trace` against `replicas` identical
+    /// class-0 replicas in simulated time — a thin wrapper over
+    /// [`replay_mix`](SimServer::replay_mix) with a uniform mix.
+    /// Deterministic: same trace + same config ⇒ bit-identical report
+    /// (see `MetricsSnapshot::bitwise_eq`). Arrival times must be
     /// non-decreasing (every in-tree generator's are).
     pub fn replay(&self, trace: &[TraceRequest], replicas: usize) -> SimServeReport {
+        self.replay_mix(trace, &vec![0; replicas])
+    }
+
+    /// Replay a materialized `trace` against a heterogeneous fleet:
+    /// `mix[r]` is the chip class of replica `r` (an index returned by
+    /// [`add_chip_class`](SimServer::add_chip_class); class 0 is the
+    /// constructor's chip). Routing is depth-normalized least-loaded, so
+    /// faster classes absorb proportionally more traffic. A uniform mix
+    /// is bit-identical to [`replay`](SimServer::replay) (pinned by test).
+    pub fn replay_mix(&self, trace: &[TraceRequest], mix: &[u32]) -> SimServeReport {
         let mut resolve = self.resolver();
         self.replay_core(
             trace.iter().map(move |r| StreamedArrival {
@@ -168,7 +274,7 @@ impl SimServer {
                 model: resolve(&r.model),
                 samples: r.samples,
             }),
-            replicas,
+            mix,
         )
     }
 
@@ -188,6 +294,17 @@ impl SimServer {
     where
         I: IntoIterator<Item = TraceRequest>,
     {
+        self.replay_stream_mix(trace, &vec![0; replicas])
+    }
+
+    /// Streaming form of [`replay_mix`](SimServer::replay_mix): a
+    /// heterogeneous fleet fed from a trace iterator in O(1) arrival
+    /// memory. See [`replay_stream`](SimServer::replay_stream) for the
+    /// ordering contract.
+    pub fn replay_stream_mix<I>(&self, trace: I, mix: &[u32]) -> SimServeReport
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
         let mut resolve = self.resolver();
         self.replay_core(
             trace.into_iter().map(move |r| StreamedArrival {
@@ -195,7 +312,7 @@ impl SimServer {
                 model: resolve(&r.model),
                 samples: r.samples,
             }),
-            replicas,
+            mix,
         )
     }
 
@@ -216,23 +333,33 @@ impl SimServer {
         }
     }
 
-    fn replay_core<I>(&self, mut arrivals: I, replicas: usize) -> SimServeReport
+    fn replay_core<I>(&self, mut arrivals: I, mix: &[u32]) -> SimServeReport
     where
         I: Iterator<Item = StreamedArrival>,
     {
-        assert!(replicas > 0);
+        let replicas = mix.len();
+        assert!(replicas > 0, "replica mix must name at least one replica");
+        for &class in mix {
+            assert!(
+                (class as usize) < self.chips.len(),
+                "mix names chip class {class}, but only {} exist",
+                self.chips.len()
+            );
+        }
+        let speeds: Vec<u64> = mix.iter().map(|&c| self.class_speed(c as usize)).collect();
         let clock = Arc::new(VirtualClock::new());
         let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
         let pending = arrivals.next();
         let mut world = ServeWorld {
             config: &self.config,
             service: &self.service,
+            mix,
             source: arrivals,
             pending,
             armed_at: None,
             metrics,
             batcher: DynamicBatcher::new(self.config.batcher),
-            router: Router::new(self.config.routing, replicas),
+            router: Router::with_speeds(self.config.routing, speeds),
             busy: vec![false; replicas],
             waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
             running: (0..replicas).map(|_| None).collect(),
@@ -299,7 +426,10 @@ type SimBatch = Batch<Time>;
 
 struct ServeWorld<'a, I> {
     config: &'a SimServeConfig,
-    service: &'a [Vec<Time>],
+    /// Per-class, per-model service tables (`service[class][model]`).
+    service: &'a [Vec<Vec<Time>>],
+    /// Chip class per replica.
+    mix: &'a [u32],
     /// The trace source; `pending` is its unconsumed head.
     source: I,
     pending: Option<StreamedArrival>,
@@ -388,22 +518,28 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
     }
 
     fn dispatch(&mut self, batch: SimBatch, sch: &mut Scheduler<Ev>) {
-        // Single service-table probe per batch; unknown models are the
-        // `None` arm (unreachable via arrive(), which resolves at the
-        // boundary, but kept as the safe path rather than a panicking
-        // index).
-        let Some(table) = self.service.get(batch.model.index()).filter(|t| !t.is_empty()) else {
+        // Registration probe against class 0 — register/add_chip_class
+        // keep every class aligned, so one probe covers the fleet.
+        // (Unreachable via arrive(), which resolves at the boundary, but
+        // kept as the safe path rather than a panicking index.)
+        let registered =
+            self.service[0].get(batch.model.index()).is_some_and(|t| !t.is_empty());
+        if !registered {
             for _ in 0..batch.len() {
                 self.metrics.record_error();
             }
             self.batcher.recycle(batch.requests);
             return;
-        };
-        let service = table[batch.len().min(table.len() - 1)];
+        }
         for &enq in &batch.requests {
             self.max_queue_wait = self.max_queue_wait.max(batch.formed_at.saturating_sub(enq));
         }
+        // Route first, then resolve the service time from the routed
+        // replica's class: on a mixed fleet the batch's cost depends on
+        // which replica runs it.
         let replica = self.router.route(batch.len() as u64);
+        let table = &self.service[self.mix[replica] as usize][batch.model.index()];
+        let service = table[batch.len().min(table.len() - 1)];
         if self.busy[replica] {
             self.waiting[replica].push_back((batch, service));
         } else {
@@ -466,6 +602,7 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chip::sunrise::SunriseConfig;
     use crate::coordinator::clock::millis;
     use crate::util::rng::Rng;
     use crate::workloads::generator::{poisson_trace, PoissonTraceIter};
@@ -484,6 +621,13 @@ mod tests {
 
     fn trace(seed: u64, rate: f64, duration_s: f64) -> Vec<TraceRequest> {
         poisson_trace(&mut Rng::new(seed), rate, duration_s, "resnet50", 1)
+    }
+
+    /// A ~2× Sunrise: double the VPUs, bandwidth and bonded capacity.
+    fn doubled_config() -> SunriseConfig {
+        let mut cfg = SunriseConfig::scaled(2.0);
+        cfg.static_w = 14.0;
+        cfg
     }
 
     #[test]
@@ -536,6 +680,91 @@ mod tests {
             streamed.max_queue_wait_s.to_bits()
         );
         assert_eq!(materialized.sim_duration_s.to_bits(), streamed.sim_duration_s.to_bits());
+    }
+
+    /// The heterogeneity acceptance pin: a uniform (all-class-0) mix is
+    /// bit-identical to the plain homogeneous replay — adding the mixed-
+    /// fleet machinery changed nothing about existing replays.
+    #[test]
+    fn uniform_mix_bit_identical_to_homogeneous_replay() {
+        let t = trace(42, 2000.0, 0.3);
+        let s = server(8, millis(2), 10_000);
+        let plain = s.replay(&t, 3);
+        let mixed = s.replay_mix(&t, &[0, 0, 0]);
+        assert!(
+            plain.snapshot.bitwise_eq(&mixed.snapshot),
+            "uniform mix diverged from homogeneous replay"
+        );
+        assert_eq!(plain.per_replica_served, mixed.per_replica_served);
+        assert_eq!(plain.max_queue_wait_s.to_bits(), mixed.max_queue_wait_s.to_bits());
+        // And even with extra classes *registered*, an all-0 mix must not
+        // change anything (class speeds are uniform across the mix).
+        let mut s2 = server(8, millis(2), 10_000);
+        s2.add_chip_class(SunriseChip::new(doubled_config()));
+        let mixed2 = s2.replay_mix(&t, &[0, 0, 0]);
+        assert!(
+            plain.snapshot.bitwise_eq(&mixed2.snapshot),
+            "registering an unused chip class changed the replay"
+        );
+    }
+
+    #[test]
+    fn mixed_fleet_shares_load_by_speed_and_never_starves() {
+        let mut s = server(8, millis(2), 100_000);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        assert_eq!(s.n_chip_classes(), 2);
+        let t = trace(19, 4000.0, 0.4);
+        let r = s.replay_mix(&t, &[0, big]);
+        let (slow, fast) = (r.per_replica_served[0], r.per_replica_served[1]);
+        assert!(slow > 0, "slow replica starved by normalized routing");
+        assert!(fast > slow, "faster replica should absorb more traffic");
+        let ratio = fast as f64 / slow as f64;
+        assert!(
+            (1.3..=3.0).contains(&ratio),
+            "expected ~2x share on the 2x chip, got {ratio} ({fast} vs {slow})"
+        );
+    }
+
+    #[test]
+    fn mixed_fleet_replay_is_deterministic() {
+        let mut s = server(8, millis(2), 10_000);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        let t = trace(23, 3000.0, 0.3);
+        let a = s.replay_mix(&t, &[0, big, big]);
+        let b = s.replay_mix(&t, &[0, big, big]);
+        assert!(a.snapshot.bitwise_eq(&b.snapshot), "mixed replay nondeterministic");
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+        // Streaming and materialized mixed replays agree bit-for-bit too.
+        let streamed = s.replay_stream_mix(
+            PoissonTraceIter::new(Rng::new(23), 3000.0, 0.3, "resnet50", 1),
+            &[0, big, big],
+        );
+        assert!(a.snapshot.bitwise_eq(&streamed.snapshot), "streamed mix diverged");
+    }
+
+    #[test]
+    fn chip_classes_added_before_register_get_tables_too() {
+        // add_chip_class before register: tables must still align.
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+            routing: Policy::LeastLoaded,
+            queue_capacity: 10_000,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        s.register("resnet50", &resnet50());
+        let t = trace(5, 2000.0, 0.2);
+        let r = s.replay_mix(&t, &[0, big]);
+        assert_eq!(r.served + r.dropped, r.offered);
+        assert!(r.served > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "chip class")]
+    fn out_of_range_mix_class_panics() {
+        let s = server(8, millis(2), 1_000);
+        let t = trace(1, 200.0, 0.05);
+        let _ = s.replay_mix(&t, &[0, 7]);
     }
 
     #[test]

@@ -28,7 +28,9 @@
 //! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
 //! - [`coordinator`] — the inference-serving loop (batcher, router,
 //!   metrics) on two backends: threaded wall-clock and deterministic
-//!   virtual time, plus capacity-grid sweeps.
+//!   virtual time, plus capacity-grid sweeps over homogeneous or mixed
+//!   chip fleets and the heterogeneous capacity planner
+//!   (`coordinator::plan`: cheapest fleet meeting a rate/p99 target).
 //! - [`config`] — typed configuration on top of the in-tree JSON parser.
 //! - [`util`] — JSON, PRNG, property testing, table rendering, bench harness.
 //!

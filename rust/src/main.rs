@@ -1,4 +1,5 @@
-//! `sunrise` — the leader binary: reports, simulations, and serving.
+//! `sunrise` — the leader binary: reports, simulations, serving, and
+//! capacity planning.
 //!
 //! Subcommands:
 //!   report                  render all paper tables (I–IV, VII)
@@ -6,25 +7,28 @@
 //!   serve                   run the serving demo (SimExecutor replicas)
 //!   queue-sim               event-driven queueing sim of raw chips
 //!   sweep                   rate×replicas capacity grid (virtual time)
+//!   plan                    cheapest chip fleet for a (rate, p99) target
 //!   roofline                print ridge points + memory-wall summary
 //!   capacity                parameter-capacity projections (§VII)
 //!
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
+//!           `sunrise plan --rate 3000 --p99 30`
 
 use sunrise::analysis::{report, roofline};
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::config;
 use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{
-    curve, render_grid, saturation_knee, sweep_capacity, GridConfig,
+    curve, render_grid, saturation_knee, sweep_capacity, GridConfig, TraceShape,
 };
+use sunrise::coordinator::plan::{default_catalog, plan, render_plan, PlanConfig, PlanTarget};
 use sunrise::coordinator::server::{Server, ServerConfig};
 use sunrise::interconnect::Technology;
 use sunrise::runtime::executor::{Executor, SimExecutor};
 use sunrise::scaling::dram::{project_capacity, DramNode};
 use sunrise::sim::from_seconds;
-use sunrise::util::cli::Cli;
+use sunrise::util::cli::{Args, Cli};
 use sunrise::workloads::{mlp, resnet, transformer, Network};
 
 /// Print a CLI usage error and exit 2 (matching `Cli::parse_slice_or_exit`
@@ -169,19 +173,42 @@ fn parse_usize_list(name: &str, s: &str) -> Vec<usize> {
         .collect()
 }
 
+/// Parse the shared `--trace`/`--burst-mult`/`--phase` arrival-shape
+/// options (used by `sweep` and `plan`).
+fn parse_shape(a: &Args) -> TraceShape {
+    match a.get("trace") {
+        "poisson" => TraceShape::Poisson,
+        "bursty" => {
+            let burst_mult = a.get_f64("burst-mult");
+            let phase_s = a.get_f64("phase");
+            if !burst_mult.is_finite() || burst_mult <= 0.0 {
+                usage_error("option --burst-mult must be a finite number > 0");
+            }
+            if !phase_s.is_finite() || phase_s <= 0.0 {
+                usage_error("option --phase must be a finite number of seconds > 0");
+            }
+            TraceShape::Bursty { burst_mult, phase_s }
+        }
+        other => usage_error(&format!("option --trace: unknown shape `{other}` (poisson|bursty)")),
+    }
+}
+
 fn cmd_sweep(args: &[String]) {
     let cli = Cli::new(
         "sunrise sweep",
         "rate×replicas×batch capacity-planning grid on the virtual-time server",
     )
     .opt("model", "resnet50", "workload: resnet50|resnet_mini|mlp|decoder")
-    .opt("rates", "250,500,1000,2000,4000", "comma-separated Poisson rates, req/s")
+    .opt("rates", "250,500,1000,2000,4000", "comma-separated arrival rates, req/s")
     .opt("replicas", "1,2,4", "comma-separated replica counts")
     .opt("max-batch", "8", "comma-separated dynamic-batcher limits")
     .opt("duration", "1.0", "trace duration per point, s (traces stream in O(1) memory)")
     .opt("max-wait-ms", "2.0", "batcher deadline, ms")
     .opt("queue-cap", "10000", "admission-control queue bound")
     .opt("seed", "42", "trace seed")
+    .opt("trace", "poisson", "arrival shape: poisson|bursty (bursts stream in O(1) memory too)")
+    .opt("burst-mult", "4.0", "bursty only: burst-phase rate = mult × base rate")
+    .opt("phase", "0.05", "bursty only: phase length, s")
     .opt("knee-frac", "0.9", "knee threshold: throughput < frac × offered rate");
     let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
@@ -202,6 +229,7 @@ fn cmd_sweep(args: &[String]) {
         seed: a.get_u64("seed"),
         max_wait: from_seconds(a.get_f64("max-wait-ms") / 1e3),
         queue_capacity: a.get_usize("queue-cap"),
+        shape: parse_shape(&a),
         ..GridConfig::default()
     };
     // `is_finite` rejects NaN and ±inf (an infinite rate or duration
@@ -239,6 +267,74 @@ fn cmd_sweep(args: &[String]) {
         grid.duration_s,
         t0.elapsed().as_secs_f64() * 1e3
     );
+}
+
+fn cmd_plan(args: &[String]) {
+    let cli = Cli::new(
+        "sunrise plan",
+        "cheapest chip fleet (mixed configurations) meeting a (rate, p99) target",
+    )
+    .opt("model", "resnet50", "workload: resnet50|resnet_mini|mlp|decoder")
+    .opt("rate", "2000", "target arrival rate, req/s")
+    .opt("p99", "50", "p99 latency target, ms")
+    .opt("duration", "0.5", "trace duration per feasibility probe, s")
+    .opt("seed", "42", "trace seed (plans are deterministic per seed)")
+    .opt("max-batch", "8", "dynamic-batcher limit")
+    .opt("max-wait-ms", "2.0", "batcher deadline, ms")
+    .opt("queue-cap", "10000", "admission-control queue bound")
+    .opt("max-replicas", "64", "largest fleet considered per replica mix")
+    .opt("trace", "poisson", "arrival shape: poisson|bursty")
+    .opt("burst-mult", "4.0", "bursty only: burst-phase rate = mult × base rate")
+    .opt("phase", "0.05", "bursty only: phase length, s");
+    let a = cli.parse_slice_or_exit(args);
+    let net = net_by_name(a.get("model")).unwrap_or_else(|| {
+        eprintln!("unknown model {}", a.get("model"));
+        std::process::exit(2);
+    });
+    let target = PlanTarget {
+        rate: a.get_f64("rate"),
+        p99_s: a.get_f64("p99") / 1e3,
+        duration_s: a.get_f64("duration"),
+        seed: a.get_u64("seed"),
+        shape: parse_shape(&a),
+    };
+    // Same bounds as cmd_sweep: an absurd max_batch would plan
+    // 1..=max_batch service tables per chip class before anything runs.
+    let max_batch = a.get_usize("max-batch");
+    if max_batch == 0 || max_batch > 1024 {
+        usage_error("option --max-batch must be between 1 and 1024");
+    }
+    let max_wait_ms = a.get_f64("max-wait-ms");
+    if !max_wait_ms.is_finite() || max_wait_ms < 0.0 || max_wait_ms > 60_000.0 {
+        usage_error("option --max-wait-ms must be between 0 and 60000 (one minute)");
+    }
+    let config = PlanConfig {
+        batcher: BatcherConfig {
+            max_batch: max_batch as u32,
+            max_wait: from_seconds(max_wait_ms / 1e3),
+        },
+        queue_capacity: a.get_usize("queue-cap"),
+        max_replicas: a.get_usize("max-replicas"),
+        ..PlanConfig::default()
+    };
+    let catalog = default_catalog();
+    let t0 = std::time::Instant::now();
+    // An unmeetable target (or invalid knob) is a usage-level failure:
+    // report it and exit 2, like every other subcommand's parse errors.
+    let p = plan(&net, a.get("model"), &catalog, &target, &config)
+        .unwrap_or_else(|e| usage_error(&format!("sunrise plan: {e}")));
+    println!("{}", render_plan(&catalog, &p));
+    println!(
+        "cheapest fleet for {} req/s @ p99 <= {:.1} ms: {} — ${:.0}, {:.0} W \
+         (measured p99 {:.3} ms)",
+        target.rate,
+        target.p99_s * 1e3,
+        sunrise::coordinator::plan::describe_fleet(&catalog, &p.best.counts),
+        p.best.cost_usd,
+        p.best.power_w,
+        p.best.report.snapshot.p99_latency_s * 1e3,
+    );
+    println!("(planned in {:.0} ms wall)", t0.elapsed().as_secs_f64() * 1e3);
 }
 
 fn cmd_queue_sim(args: &[String]) {
@@ -324,13 +420,23 @@ fn main() {
         Some("serve") => cmd_serve(&argv[1..]),
         Some("queue-sim") => cmd_queue_sim(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
+        Some("plan") => cmd_plan(&argv[1..]),
         Some("roofline") => cmd_roofline(),
         Some("capacity") => cmd_capacity(),
         _ => {
             eprintln!(
                 "sunrise — 3D near-memory AI chip framework\n\n\
-                 USAGE: sunrise <report|simulate|serve|queue-sim|sweep|roofline|capacity> [options]\n\
-                 Try `sunrise simulate --help` or `sunrise sweep --help`."
+                 USAGE: sunrise <subcommand> [options]\n\n\
+                 SUBCOMMANDS:\n\
+                 \x20 report     render the paper's tables (I-IV, VII)\n\
+                 \x20 simulate   run a workload on the simulated Sunrise chip\n\
+                 \x20 serve      threaded serving demo over simulated chip replicas (wall clock)\n\
+                 \x20 queue-sim  event-driven queueing simulation of raw chips under load\n\
+                 \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server\n\
+                 \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target\n\
+                 \x20 roofline   ridge points + memory-wall summary (Sunrise vs HBM baseline)\n\
+                 \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\n\
+                 Every subcommand takes --help."
             );
             std::process::exit(2);
         }

@@ -102,7 +102,21 @@ impl Histogram {
 /// Quantiles mirror [`Histogram`]'s convention: the returned value is the
 /// lower edge of the bucket containing the target rank (`min` for the
 /// zero bucket, `max` for the top bucket), which makes
-/// `quantile(q1) <= quantile(q2)` for `0 < q1 <= q2`.
+/// `quantile(q1) <= quantile(q2)` for `0 < q1 <= q2`. The lower edge is
+/// within 2× of the true quantile (the bucket width) — the documented
+/// accuracy contract of every serving p50/p99 this crate reports:
+///
+/// ```
+/// use sunrise::sim::stats::PsHistogram;
+///
+/// let mut h = PsHistogram::new();
+/// for ps in [1_000u64, 2_000, 4_000, 1_000_000] {
+///     h.record(ps);
+/// }
+/// assert_eq!(h.n, 4);
+/// let p50 = h.quantile(0.5); // true p50 rank holds 2_000 ps
+/// assert!(p50 <= 2_000 && 2_000 <= p50 * 2, "within one log2 bucket");
+/// ```
 #[derive(Debug, Clone)]
 pub struct PsHistogram {
     counts: [u64; 65],

@@ -10,6 +10,20 @@
 //!   same iterator into a `Vec` (bit-identical requests, identical RNG
 //!   consumption: the caller's generator advances exactly as if it had
 //!   drawn every sample itself).
+//!
+//! Invariants: arrival times are non-decreasing (the replay engines rely
+//! on it), every request in a trace shares one interned `Arc<str>` model
+//! name, and the streaming/materialized pair is one RNG stream:
+//!
+//! ```
+//! use sunrise::util::rng::Rng;
+//! use sunrise::workloads::generator::{poisson_trace, PoissonTraceIter};
+//!
+//! let streamed: Vec<_> = PoissonTraceIter::new(Rng::new(7), 800.0, 0.1, "m", 1).collect();
+//! let materialized = poisson_trace(&mut Rng::new(7), 800.0, 0.1, "m", 1);
+//! assert_eq!(streamed, materialized); // bit-identical requests
+//! assert!(streamed.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+//! ```
 
 use crate::dataflow::layer::Layer;
 use crate::util::rng::Rng;

@@ -169,6 +169,71 @@ fn virtual_and_threaded_stacks_share_policy_code() {
 }
 
 #[test]
+fn plan_subcommand_exits_2_on_unmeetable_p99() {
+    // `sunrise plan` must fail *cleanly* — usage-style exit code 2 and a
+    // message naming the p99 target — when no fleet can meet it (1 us is
+    // below any chip's batch-1 service time).
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_sunrise"))
+        .args([
+            "plan",
+            "--model",
+            "resnet50",
+            "--rate",
+            "500",
+            "--p99",
+            "0.001",
+            "--duration",
+            "0.1",
+            "--max-replicas",
+            "8",
+        ])
+        .output()
+        .expect("spawn the sunrise binary");
+    assert_eq!(out.status.code(), Some(2), "expected exit 2, got {:?}", out.status);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("p99"), "stderr does not name the p99 target: {stderr}");
+}
+
+#[test]
+fn plan_subcommand_is_deterministic_end_to_end() {
+    let run = || {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_sunrise"))
+            .args([
+                "plan",
+                "--model",
+                "mlp",
+                "--rate",
+                "500",
+                "--p99",
+                "20",
+                "--duration",
+                "0.1",
+                "--max-replicas",
+                "8",
+            ])
+            .output()
+            .expect("spawn the sunrise binary");
+        assert!(
+            out.status.success(),
+            "plan failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+        // Drop the one wall-clock timing line; everything else (fleet,
+        // costs, p99s) is a pure function of the seeded virtual replay.
+        stdout
+            .lines()
+            .filter(|l| !l.contains("ms wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let a = run();
+    let b = run();
+    assert!(a.contains("cheapest"), "no plan table in output:\n{a}");
+    assert_eq!(a, b, "plan output not deterministic across runs");
+}
+
+#[test]
 fn firmware_batch_loop_drives_uce_sequences() {
     // Firmware on the 13-bit core arms the UCE 16 times (16 layer batches).
     let mut uce = Uce::new(Sequencer::fixed(sunrise::memory::ns(5_000)));
