@@ -1,19 +1,24 @@
 //! Heterogeneous capacity planning: the cheapest chip fleet meeting a
 //! `(rate, p99)` service-level target, over a catalog of mixed Sunrise
 //! configurations (half / silicon / 2×) priced by the Table-IV
-//! wafer-economics model.
+//! wafer-economics model — by capex alone, and by capex + measured
+//! energy opex over a serving horizon (with the non-uniform frontier
+//! search and a multi-model traffic mix).
 //!
 //! The run also asserts the acceptance properties pinned by the plan
 //! tests: planning is deterministic (two runs return bit-identical
-//! fleets), the winning fleet's replay actually meets the target, and a
-//! tighter p99 never costs less.
+//! fleets), the winning fleet's replay actually meets the target, a
+//! tighter p99 never costs less, and the energy objective's total is
+//! capex + opex.
 //!
 //! Run: `cargo run --release --example capacity_plan`
 
 use sunrise::coordinator::capacity::TraceShape;
 use sunrise::coordinator::plan::{
-    default_catalog, describe_fleet, plan, render_plan, PlanConfig, PlanTarget,
+    default_catalog, describe_fleet, plan, plan_models, render_plan, ModelShare, Objective,
+    PlanConfig, PlanTarget, PowerModel, SearchStrategy,
 };
+use sunrise::workloads::mlp;
 use sunrise::workloads::resnet::resnet50;
 
 fn main() {
@@ -62,7 +67,7 @@ fn main() {
         PlanTarget { rate: 3000.0, p99_s: 0.030, duration_s: 0.4, ..PlanTarget::default() };
     let bursty = PlanTarget {
         shape: TraceShape::Bursty { burst_mult: 6.0, phase_s: 0.05 },
-        ..stationary
+        ..stationary.clone()
     };
     let a = plan(&net, "resnet50", &catalog, &stationary, &config).expect("meetable");
     let b = plan(&net, "resnet50", &catalog, &bursty, &config).expect("meetable");
@@ -73,6 +78,69 @@ fn main() {
         a.best.cost_usd,
         describe_fleet(&catalog, &b.best.counts),
         b.best.cost_usd
+    );
+
+    // Energy-aware objective: the same 4000 req/s target billed as
+    // capex + measured-power electricity over 3 years, searched over
+    // non-uniform fleet shapes.
+    let energy_cfg = PlanConfig {
+        objective: Objective::CapexPlusEnergy {
+            horizon_years: 3.0,
+            usd_per_kwh: 0.12,
+            power: PowerModel::Measured,
+        },
+        search: SearchStrategy::NonUniform { max_probes: 256 },
+        ..PlanConfig::default()
+    };
+    let target =
+        PlanTarget { rate: 4000.0, p99_s: 0.040, duration_s: 0.4, ..PlanTarget::default() };
+    let e = plan(&net, "resnet50", &catalog, &target, &energy_cfg)
+        .expect("4000 req/s @ 40 ms is meetable");
+    assert!(e.best.meets_target);
+    assert!(
+        (e.best.total_cost_usd - (e.best.cost_usd + e.best.energy_opex_usd)).abs() < 1e-9,
+        "total must be capex + opex"
+    );
+    println!("\n== energy objective: 4000 req/s @ p99 <= 40 ms, 3 y horizon, measured power ==");
+    println!("{}", render_plan(&catalog, &e));
+    println!(
+        "-> {}: capex ${:.0} + opex ${:.0} = ${:.0} ({:.1} W measured vs {:.0} W rated)\n",
+        describe_fleet(&catalog, &e.best.counts),
+        e.best.cost_usd,
+        e.best.energy_opex_usd,
+        e.best.total_cost_usd,
+        e.best.measured_power_w,
+        e.best.power_w
+    );
+
+    // Multi-model traffic: 70% resnet50 + 30% mlp at the same aggregate
+    // rate plans a no-dearer fleet (the mlp share is far lighter).
+    let tiny = mlp::quickstart();
+    let mixed_target = PlanTarget {
+        rate: 4000.0,
+        p99_s: 0.040,
+        duration_s: 0.4,
+        mix: vec![
+            ModelShare { name: "resnet50".to_string(), weight: 0.7 },
+            ModelShare { name: "mlp".to_string(), weight: 0.3 },
+        ],
+        ..PlanTarget::default()
+    };
+    let m = plan_models(
+        &[("resnet50", &net), ("mlp", &tiny)],
+        &catalog,
+        &mixed_target,
+        &config,
+    )
+    .expect("the mixed target is lighter than pure resnet50");
+    let pure = plan(&net, "resnet50", &catalog, &target, &config).expect("meetable");
+    assert!(m.best.cost_usd <= pure.best.cost_usd, "lighter mix must not cost more");
+    println!(
+        "model mix (70% resnet50 / 30% mlp) at 4000 req/s: {} (${:.0}) vs pure resnet50 {} (${:.0})",
+        describe_fleet(&catalog, &m.best.counts),
+        m.best.cost_usd,
+        describe_fleet(&catalog, &pure.best.counts),
+        pure.best.cost_usd
     );
     println!("plans deterministic + targets met: OK");
     println!("({:.0} ms wall)", t0.elapsed().as_secs_f64() * 1e3);

@@ -22,7 +22,9 @@ use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{sweep_capacity_threads, GridConfig};
 use sunrise::coordinator::clock::millis;
-use sunrise::coordinator::plan::{default_catalog, plan, PlanConfig, PlanTarget};
+use sunrise::coordinator::plan::{
+    default_catalog, plan, Objective, PlanConfig, PlanTarget, PowerModel, SearchStrategy,
+};
 use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
 use sunrise::sim::sweep::default_threads;
 use sunrise::util::bench::Bencher;
@@ -116,6 +118,27 @@ fn main() {
     b.bench("plan: cheapest fleet, 2.5k req/s @ p99<=40ms, 3-class catalog", || {
         let p = plan(&net, "resnet50", &catalog, &target, &plan_config).expect("meetable target");
         assert!(p.best.meets_target);
+        p.best.replicas
+    });
+
+    // --- plan: energy objective + non-uniform frontier (informational) ---
+    // The same query scored as capex + measured-power opex over 3 years,
+    // searched over non-uniform fleet shapes. Tracks what the richer
+    // objective/search cost on top of the row above.
+    let energy_config = PlanConfig {
+        objective: Objective::CapexPlusEnergy {
+            horizon_years: 3.0,
+            usd_per_kwh: 0.12,
+            power: PowerModel::Measured,
+        },
+        search: SearchStrategy::NonUniform { max_probes: 256 },
+        ..PlanConfig::default()
+    };
+    b.bench("plan: energy objective, 2.5k req/s @ p99<=40ms, 3y frontier", || {
+        let p = plan(&net, "resnet50", &catalog, &target, &energy_config)
+            .expect("meetable target");
+        assert!(p.best.meets_target);
+        assert!(p.best.energy_opex_usd > 0.0);
         p.best.replicas
     });
 

@@ -1,5 +1,18 @@
 //! Power breakdown model: where Sunrise's 12 W goes, and why removing
 //! SRAM + interposer PHYs makes it the most efficient chip in Table III.
+//!
+//! Two views of the same coefficients:
+//!
+//! - [`schedule_energy`] — the **energy** a schedule's work costs, joules.
+//!   No division by time, so it is safe for (and zero on) an empty or
+//!   zero-length schedule; this is what the serving layer accumulates per
+//!   executed batch (`coordinator::simserve` energy accounting) and what
+//!   the planner turns into an electricity bill.
+//! - [`breakdown`] — the same energy averaged over the schedule's runtime,
+//!   watts. A zero-length schedule did no work over no time: the
+//!   breakdown is **zeroed**, never NaN/inf (regression-tested — the
+//!   planner's opex path consumes these numbers and a silent NaN would
+//!   poison every downstream cost comparison).
 
 use crate::dataflow::schedule::NetworkSchedule;
 
@@ -18,8 +31,55 @@ impl PowerBreakdown {
     }
 }
 
+/// Dynamic energy decomposition of a schedule, joules. Pure work
+/// accounting — no time in the denominator — so a zero-length schedule
+/// yields exact zeros rather than NaN.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_j: f64,
+    pub dram_j: f64,
+    pub fabric_j: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total dynamic (activity-proportional) energy, joules. Static power
+    /// is deliberately absent: it is paid per wall-second whether or not
+    /// the chip executes, so time-window owners (the serving replay, the
+    /// planner's opex model) account it against *their* window.
+    pub fn dynamic_j(&self) -> f64 {
+        self.mac_j + self.dram_j + self.fabric_j
+    }
+}
+
+/// Decompose a schedule's work into component energies using the same
+/// coefficients the scheduler charged. See [`EnergyBreakdown`]; divide by
+/// the schedule's runtime (as [`breakdown`] does) to get watts.
+pub fn schedule_energy(
+    s: &NetworkSchedule,
+    mac_pj: f64,
+    dram_pj_per_byte: f64,
+    fabric_pj_per_byte: f64,
+) -> EnergyBreakdown {
+    let mut dram_bytes = 0u64;
+    let mut fabric_bytes = 0u64;
+    for l in &s.layers {
+        dram_bytes += l.traffic.weight_bytes + l.traffic.input_bytes + l.traffic.output_bytes;
+        fabric_bytes += l.traffic.input_bytes + l.traffic.output_bytes + l.traffic.psum_bytes;
+    }
+    EnergyBreakdown {
+        mac_j: s.total_macs as f64 * mac_pj * 1e-12,
+        dram_j: dram_bytes as f64 * dram_pj_per_byte * 1e-12,
+        fabric_j: fabric_bytes as f64 * fabric_pj_per_byte * 1e-12,
+    }
+}
+
 /// Decompose a schedule's energy into component powers using the same
 /// coefficients the scheduler charged.
+///
+/// A schedule with `total_ps == 0` returns an all-zero breakdown
+/// (including `static_w`: no time elapsed, so no static energy was
+/// drawn) instead of dividing by zero — NaN/inf watts would otherwise
+/// flow silently into the planner's energy-opex objective.
 pub fn breakdown(
     s: &NetworkSchedule,
     mac_pj: f64,
@@ -27,26 +87,27 @@ pub fn breakdown(
     fabric_pj_per_byte: f64,
     static_w: f64,
 ) -> PowerBreakdown {
-    let seconds = s.total_ps as f64 * 1e-12;
-    let mac_j = s.total_macs as f64 * mac_pj * 1e-12;
-    let mut dram_bytes = 0u64;
-    let mut fabric_bytes = 0u64;
-    for l in &s.layers {
-        dram_bytes += l.traffic.weight_bytes + l.traffic.input_bytes + l.traffic.output_bytes;
-        fabric_bytes += l.traffic.input_bytes + l.traffic.output_bytes + l.traffic.psum_bytes;
+    if s.total_ps == 0 {
+        return PowerBreakdown { mac_w: 0.0, dram_w: 0.0, fabric_w: 0.0, static_w: 0.0 };
     }
+    let seconds = s.total_ps as f64 * 1e-12;
+    let e = schedule_energy(s, mac_pj, dram_pj_per_byte, fabric_pj_per_byte);
     PowerBreakdown {
-        mac_w: mac_j / seconds,
-        dram_w: dram_bytes as f64 * dram_pj_per_byte * 1e-12 / seconds,
-        fabric_w: fabric_bytes as f64 * fabric_pj_per_byte * 1e-12 / seconds,
+        mac_w: e.mac_j / seconds,
+        dram_w: e.dram_j / seconds,
+        fabric_w: e.fabric_j / seconds,
         static_w,
     }
 }
 
 /// What the same traffic would cost over an interposer PHY (the
 /// conventional-chip comparison the paper's §III energy numbers make):
-/// 2.17 pJ/b vs HITOC's 0.02 pJ/b.
+/// 2.17 pJ/b vs HITOC's 0.02 pJ/b. Zero for a zero-length schedule
+/// (same guard as [`breakdown`]).
 pub fn interposer_penalty_w(s: &NetworkSchedule) -> f64 {
+    if s.total_ps == 0 {
+        return 0.0;
+    }
     let seconds = s.total_ps as f64 * 1e-12;
     let mut offchip_bytes = 0u64;
     for l in &s.layers {
@@ -98,5 +159,56 @@ mod tests {
         let s = chip.run(&resnet50(), 8);
         let penalty = interposer_penalty_w(&s);
         assert!(penalty > 0.5, "penalty {penalty} W");
+    }
+
+    #[test]
+    fn energy_times_runtime_matches_power_breakdown() {
+        // The two views are one model: energy / runtime == power,
+        // component by component.
+        let chip = SunriseChip::silicon();
+        let s = chip.run(&resnet50(), 8);
+        let e = schedule_energy(
+            &s,
+            chip.config.mac_pj,
+            chip.config.dram_pj_per_byte,
+            chip.resources.fabric_pj_per_byte,
+        );
+        let b = breakdown(
+            &s,
+            chip.config.mac_pj,
+            chip.config.dram_pj_per_byte,
+            chip.resources.fabric_pj_per_byte,
+            chip.config.static_w,
+        );
+        let seconds = s.total_ps as f64 * 1e-12;
+        for (j, w) in [(e.mac_j, b.mac_w), (e.dram_j, b.dram_w), (e.fabric_j, b.fabric_w)] {
+            assert!((j / seconds - w).abs() <= w.abs() * 1e-12, "energy/runtime {j} vs power {w}");
+        }
+        assert!(e.dynamic_j() > 0.0);
+    }
+
+    /// The zero-guard regression: a zero-length schedule must yield exact
+    /// zeros, not NaN/inf — these numbers feed the planner's opex sums,
+    /// where a single NaN would silently poison every cost comparison.
+    #[test]
+    fn zero_time_schedule_yields_zero_not_nan() {
+        let empty = NetworkSchedule {
+            layers: Vec::new(),
+            batch: 1,
+            total_ps: 0,
+            total_macs: 0,
+            energy_j: 0.0,
+            peak_mac_rate: 1.0,
+        };
+        let b = breakdown(&empty, 0.5, 2.0, 0.16, 8.0);
+        assert_eq!(b.mac_w, 0.0);
+        assert_eq!(b.dram_w, 0.0);
+        assert_eq!(b.fabric_w, 0.0);
+        assert_eq!(b.static_w, 0.0);
+        assert!(b.total().is_finite());
+        assert_eq!(interposer_penalty_w(&empty), 0.0);
+        let e = schedule_energy(&empty, 0.5, 2.0, 0.16);
+        assert_eq!(e, EnergyBreakdown::default());
+        assert_eq!(e.dynamic_j(), 0.0);
     }
 }

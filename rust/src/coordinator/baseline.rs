@@ -326,6 +326,9 @@ impl SimServer {
             per_replica_served: world.per_replica,
             sim_duration_s: to_seconds(end),
             replica_utilization: to_seconds(world.busy_ps) / (to_seconds(end) * replicas as f64),
+            // The frozen PR-2 path predates per-class energy accounting;
+            // the field exists only so the report type stays shared.
+            energy: crate::coordinator::simserve::EnergyReport::unmeasured(),
         }
     }
 }

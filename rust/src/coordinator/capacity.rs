@@ -37,12 +37,16 @@ use crate::sim::Time;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workloads::generator::{BurstyTraceIter, PoissonTraceIter, TraceRequest};
+use crate::workloads::generator::{
+    mix_marking_rng, BurstyTraceIter, ModelMixIter, PoissonTraceIter, TraceRequest,
+};
 use crate::workloads::Network;
+use std::sync::Arc;
 
 /// Arrival-process shape for grid points (and planner targets). Both
 /// stream in O(1) memory; the `rate` axis is the Poisson rate or the
-/// bursty *base* rate respectively.
+/// bursty *base* rate respectively. Either shape can carry a weighted
+/// multi-model traffic mix via [`stream_mix`](TraceShape::stream_mix).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TraceShape {
     /// Stationary Poisson arrivals at the grid rate.
@@ -82,6 +86,29 @@ impl TraceShape {
                 model,
             )),
         }
+    }
+
+    /// Multi-model form of [`stream`](TraceShape::stream): the same
+    /// arrival process at the aggregate `rate`, with each arrival marked
+    /// with a model drawn from the weighted `shares` (see
+    /// [`ModelMixIter`]: the marking RNG is independent of the arrival
+    /// RNG, so arrival *times* are bit-identical to the single-model
+    /// stream, and a one-share mix degenerates to exactly
+    /// [`stream`](TraceShape::stream) — the planner's single-model byte
+    /// compatibility rests on that).
+    pub fn stream_mix(
+        &self,
+        seed: u64,
+        rate: f64,
+        duration_s: f64,
+        shares: &[(Arc<str>, f64)],
+    ) -> Box<dyn Iterator<Item = TraceRequest> + Send> {
+        assert!(!shares.is_empty(), "model mix needs at least one share");
+        let base = self.stream(seed, rate, duration_s, &shares[0].0);
+        if shares.len() == 1 {
+            return base;
+        }
+        Box::new(ModelMixIter::new(base, mix_marking_rng(seed), shares))
     }
 
     pub(crate) fn validate(&self) -> Result<()> {
@@ -281,7 +308,9 @@ pub fn sweep_capacity_mix_threads(
         })
         .collect();
     let mut rates = grid.rates.clone();
-    rates.sort_by(|a, b| a.partial_cmp(b).expect("rates validated finite above"));
+    // total_cmp: a NaN-free total order, so a future non-finite rate that
+    // slips past validation can never panic mid-sweep (it sorts last).
+    rates.sort_by(f64::total_cmp);
     let mut points: Vec<(usize, usize, f64)> = Vec::new(); // (mix idx, server idx, rate)
     for mix_idx in 0..mixes.len() {
         for mb_idx in 0..servers.len() {
@@ -346,6 +375,7 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
             "p99 ms",
             "batch",
             "util %",
+            "meas W",
             "max depth",
         ],
     );
@@ -362,6 +392,7 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
             format!("{:.3}", s.p99_latency_s * 1e3),
             format!("{:.2}", s.mean_batch_size),
             format!("{:.1}", p.report.replica_utilization * 100.0),
+            format!("{:.1}", p.report.energy.avg_power_w),
             p.report.max_queue_depth.to_string(),
         ]);
     }
@@ -611,6 +642,43 @@ mod tests {
             hetero[0].report.snapshot.throughput_rps,
             homo[0].report.snapshot.throughput_rps
         );
+    }
+
+    #[test]
+    fn stream_mix_marks_models_without_retiming_arrivals() {
+        let shape = TraceShape::Poisson;
+        let single: Vec<TraceRequest> = shape.stream(42, 1000.0, 0.2, "a").collect();
+        let shares: Vec<(Arc<str>, f64)> = vec![(Arc::from("a"), 1.0), (Arc::from("b"), 1.0)];
+        let mixed: Vec<TraceRequest> = shape.stream_mix(42, 1000.0, 0.2, &shares).collect();
+        assert_eq!(single.len(), mixed.len());
+        for (s, m) in single.iter().zip(&mixed) {
+            assert_eq!(s.arrival_s.to_bits(), m.arrival_s.to_bits(), "marking moved an arrival");
+        }
+        assert!(mixed.iter().any(|r| &*r.model == "b"), "mix never marked the second model");
+        // A one-share mix degenerates to exactly the single-model stream.
+        let one: Vec<TraceRequest> = shape.stream_mix(42, 1000.0, 0.2, &shares[..1]).collect();
+        assert_eq!(one, single);
+    }
+
+    #[test]
+    fn grid_reports_measured_power() {
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![800.0],
+            replicas: vec![1],
+            max_batches: vec![8],
+            duration_s: 0.2,
+            ..GridConfig::default()
+        };
+        let points =
+            sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).expect("grid");
+        let e = &points[0].report.energy;
+        // One silicon replica: static 8 W, plus positive dynamic power,
+        // and never more than a saturated chip's schedule power envelope.
+        assert!(e.avg_power_w > 8.0, "measured power {} W below static", e.avg_power_w);
+        assert!(e.avg_power_w < 20.0, "measured power {} W implausible", e.avg_power_w);
+        let rendered = render_grid(&points);
+        assert!(rendered.contains("meas W"), "no measured-power column:\n{rendered}");
     }
 
     #[test]

@@ -46,7 +46,10 @@ pub mod simserve;
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued};
 pub use capacity::{sweep_capacity, CapacityPoint, GridConfig, TraceShape};
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use plan::{default_catalog, plan, ChipClass, Plan, PlanConfig, PlanTarget};
+pub use plan::{
+    default_catalog, plan, plan_models, ChipClass, ModelShare, Objective, Plan, PlanConfig,
+    PlanTarget, PowerModel, SearchStrategy,
+};
 pub use request::{InferRequest, InferResponse, ModelId, ModelRegistry, RequestId};
 pub use server::{Server, ServerConfig};
-pub use simserve::{SimServeConfig, SimServeReport, SimServer};
+pub use simserve::{EnergyReport, SimServeConfig, SimServeReport, SimServer};

@@ -26,6 +26,16 @@
 //! strictly additive. This is the substrate the capacity planner
 //! ([`plan`][mod@crate::coordinator::plan]) binary-searches over.
 //!
+//! **Measured energy.** Every replay keeps a per-replica ledger of busy
+//! picoseconds and dynamic joules (per-batch schedule energy from
+//! [`power::schedule_energy`][crate::chip::power::schedule_energy]
+//! coefficients, billed at batch completion), aggregated per chip class
+//! into [`EnergyReport`]: per-class utilization, measured average fleet
+//! power (dynamic + static over the window), and total energy. This is
+//! what the planner's `capex + energy_opex` objective consumes in place
+//! of rated nameplate watts. Utilization is a single integer-ps division
+//! and can never exceed 1.0 (pinned by test at saturation).
+//!
 //! The replay is **streaming and allocation-free in steady state**:
 //! arrivals are pulled one at a time from a trace iterator by a
 //! self-rescheduling `NextArrival` event (one outstanding wake-up, not one
@@ -124,8 +134,61 @@ pub struct SimServeReport {
     pub per_replica_served: Vec<u64>,
     /// Simulated makespan (last completion), seconds.
     pub sim_duration_s: f64,
-    /// Fraction of replica-seconds spent executing batches.
+    /// Fraction of replica-seconds spent executing batches over the
+    /// replay window. Busy time is accounted at batch *completion* (work
+    /// is only billed once it has finished inside the window) and the
+    /// ratio is a single integer-picosecond division, so the value can
+    /// never exceed 1.0 — not even by a float-rounding ulp at exact
+    /// saturation (pinned by test).
     pub replica_utilization: f64,
+    /// Per-class busy-time and measured energy accounting (dynamic joules
+    /// from the schedule's energy coefficients + static watts over the
+    /// window). Empty/zeroed on the frozen PR-2 baseline path, which
+    /// predates energy accounting.
+    pub energy: EnergyReport,
+}
+
+/// Measured busy-time/energy decomposition of one replay. "Measured"
+/// means derived from what the replay actually executed — per-batch
+/// dynamic energy from [`power::schedule_energy`] coefficients and
+/// per-replica busy picoseconds — as opposed to a rated nameplate power.
+/// This is what the planner's energy-opex objective consumes.
+///
+/// [`power::schedule_energy`]: crate::chip::power::schedule_energy
+#[derive(Debug, Clone, Default)]
+pub struct EnergyReport {
+    /// The replay window (makespan), ps — the denominator under every
+    /// utilization below.
+    pub window_ps: Time,
+    /// Replicas per chip class (indexed by class; classes absent from the
+    /// mix have 0).
+    pub per_class_replicas: Vec<usize>,
+    /// Busy ps summed over each class's replicas (each interval clipped
+    /// to the window by construction: only completed work is billed).
+    pub per_class_busy_ps: Vec<Time>,
+    /// `per_class_busy_ps / (per_class_replicas × window)`; 0 for classes
+    /// not in the mix. A saturated slow class is visible here even when
+    /// the fleet-average `replica_utilization` looks healthy.
+    pub per_class_utilization: Vec<f64>,
+    /// Dynamic (activity) energy per class, joules.
+    pub per_class_dynamic_j: Vec<f64>,
+    /// Fleet static power (summed over replicas' chip configs), W.
+    pub static_w: f64,
+    /// Total dynamic energy, joules.
+    pub dynamic_j: f64,
+    /// Measured average fleet power over the window: dynamic energy over
+    /// time plus static, W.
+    pub avg_power_w: f64,
+    /// Total energy drawn over the window (dynamic + static·window), J.
+    pub energy_j: f64,
+}
+
+impl EnergyReport {
+    /// The placeholder for replay paths that do not measure energy (the
+    /// frozen PR-2 baseline).
+    pub fn unmeasured() -> EnergyReport {
+        EnergyReport::default()
+    }
 }
 
 /// One resolved arrival pulled from a trace source.
@@ -155,6 +218,15 @@ pub struct SimServer {
     /// never registered". Classes are always aligned: a model registered
     /// in class 0 has a table in every class.
     service: Vec<Vec<Vec<Time>>>,
+    /// Per-class, per-model **dynamic energy per executed batch** (J),
+    /// shaped exactly like `service` (same `[0] = 0.0` convention):
+    /// the [`power::schedule_energy`] decomposition of the batch schedule
+    /// under the class's own coefficients. Static power is *not* in these
+    /// tables — it is charged per window second at report time, because a
+    /// replica burns it whether or not it executes.
+    ///
+    /// [`power::schedule_energy`]: crate::chip::power::schedule_energy
+    energy: Vec<Vec<Vec<f64>>>,
 }
 
 impl SimServer {
@@ -166,6 +238,7 @@ impl SimServer {
             registry: ModelRegistry::new(),
             nets: Vec::new(),
             service: vec![Vec::new()],
+            energy: vec![Vec::new()],
         }
     }
 
@@ -175,13 +248,14 @@ impl SimServer {
     /// every already-registered model are computed immediately, so
     /// `register`/`add_chip_class` can come in either order.
     pub fn add_chip_class(&mut self, chip: SunriseChip) -> u32 {
-        let tables = self
+        let (tables, energies): (Vec<_>, Vec<_>) = self
             .nets
             .iter()
-            .map(|net| Self::service_table_for(&chip, net, self.config.batcher.max_batch))
-            .collect();
+            .map(|net| Self::tables_for(&chip, net, self.config.batcher.max_batch))
+            .unzip();
         self.chips.push(chip);
         self.service.push(tables);
+        self.energy.push(energies);
         (self.chips.len() - 1) as u32
     }
 
@@ -202,21 +276,41 @@ impl SimServer {
             self.nets[id.index()] = net.clone();
         }
         let max_batch = self.config.batcher.max_batch;
-        for (chip, tables) in self.chips.iter().zip(self.service.iter_mut()) {
-            let table = Self::service_table_for(chip, net, max_batch);
+        for (chip, (tables, energies)) in self
+            .chips
+            .iter()
+            .zip(self.service.iter_mut().zip(self.energy.iter_mut()))
+        {
+            let (table, energy) = Self::tables_for(chip, net, max_batch);
             if id.index() >= tables.len() {
                 tables.resize_with(id.index() + 1, Vec::new);
+                energies.resize_with(id.index() + 1, Vec::new);
             }
             tables[id.index()] = table;
+            energies[id.index()] = energy;
         }
     }
 
-    fn service_table_for(chip: &SunriseChip, net: &Network, max_batch: u32) -> Vec<Time> {
+    /// Service-time and per-batch dynamic-energy tables for one
+    /// (chip, model): both indexed by batch size with `[0]` a zero
+    /// sentinel, both derived from the same cached schedules.
+    fn tables_for(chip: &SunriseChip, net: &Network, max_batch: u32) -> (Vec<Time>, Vec<f64>) {
         let mut table: Vec<Time> = vec![0];
+        let mut energy: Vec<f64> = vec![0.0];
         for b in 1..=max_batch {
-            table.push(chip.run(net, b).total_ps);
+            let s = chip.run(net, b);
+            table.push(s.total_ps);
+            energy.push(
+                crate::chip::power::schedule_energy(
+                    &s,
+                    chip.config.mac_pj,
+                    chip.config.dram_pj_per_byte,
+                    chip.resources.fabric_pj_per_byte,
+                )
+                .dynamic_j(),
+            );
         }
-        table
+        (table, energy)
     }
 
     /// The name⇄id table (shared with the materialized baseline replay).
@@ -248,6 +342,28 @@ impl SimServer {
             }
         }
         (speed as u64).max(1)
+    }
+
+    /// Airtight upper bound on the requests/s one replica of `class` can
+    /// sustain: the best batch-size throughput across registered models.
+    /// A replica executes batches sequentially, so over any window it
+    /// serves at most `max_{model,b} (b / service[b])` requests per
+    /// second regardless of how traffic batches. The planner's frontier
+    /// search uses the fleet sum to discard fleets that cannot keep up
+    /// with the offered rate without spending a replay on them.
+    pub fn class_capacity_rps(&self, class: usize) -> f64 {
+        let mut best = 0.0f64;
+        for table in &self.service[class] {
+            for (b, &ps) in table.iter().enumerate().skip(1) {
+                if ps > 0 {
+                    let rps = b as f64 * 1e12 / ps as f64;
+                    if rps > best {
+                        best = rps;
+                    }
+                }
+            }
+        }
+        best
     }
 
     /// Replay a materialized `trace` against `replicas` identical
@@ -316,19 +432,23 @@ impl SimServer {
         )
     }
 
-    /// A name→id resolver that caches the last interned `Arc` by pointer:
-    /// traces intern one `Arc<str>` per distinct model, so resolution is
-    /// one registry probe per model, not per request.
+    /// A name→id resolver that caches interned `Arc`s by pointer: traces
+    /// intern one `Arc<str>` per distinct model, so resolution costs one
+    /// registry probe per model, not per request. The cache is a small
+    /// linear scan (multi-model mixes interleave a handful of pointers;
+    /// a single-entry cache would thrash on every alternation), capped so
+    /// a pathological trace of unique `Arc`s cannot grow it unboundedly.
     fn resolver(&self) -> impl FnMut(&Arc<str>) -> Option<ModelId> + '_ {
-        let mut cache: Option<(Arc<str>, Option<ModelId>)> = None;
+        const MAX_CACHED: usize = 16;
+        let mut cache: Vec<(Arc<str>, Option<ModelId>)> = Vec::new();
         move |name: &Arc<str>| {
-            if let Some((cached, id)) = &cache {
-                if Arc::ptr_eq(cached, name) {
-                    return *id;
-                }
+            if let Some((_, id)) = cache.iter().find(|(cached, _)| Arc::ptr_eq(cached, name)) {
+                return *id;
             }
             let id = self.registry.resolve(name);
-            cache = Some((Arc::clone(name), id));
+            if cache.len() < MAX_CACHED {
+                cache.push((Arc::clone(name), id));
+            }
             id
         }
     }
@@ -353,6 +473,7 @@ impl SimServer {
         let mut world = ServeWorld {
             config: &self.config,
             service: &self.service,
+            energy: &self.energy,
             mix,
             source: arrivals,
             pending,
@@ -369,7 +490,8 @@ impl SimServer {
             max_depth: 0,
             max_queue_wait: 0,
             per_replica: vec![0; replicas],
-            busy_ps: 0,
+            busy_ps: vec![0; replicas],
+            dynamic_j: vec![0.0; replicas],
             last_done: 0,
             queue_ps: Vec::new(),
             total_ps: Vec::new(),
@@ -392,6 +514,44 @@ impl SimServer {
         let end = world.last_done.max(1);
         clock.advance_to(end);
         let sim_duration_s = to_seconds(end);
+
+        // Per-class aggregation of the per-replica busy/energy ledgers.
+        // Busy time is billed at batch completion (see `Ev::Done`), so
+        // every billed interval lies inside [0, end] by construction —
+        // work still in flight at the horizon is simply not billed — and
+        // the utilization ratios below are single divisions of integer
+        // picosecond sums, which cannot round past 1.0.
+        let n_classes = self.chips.len();
+        let mut per_class_replicas = vec![0usize; n_classes];
+        let mut per_class_busy_ps: Vec<Time> = vec![0; n_classes];
+        let mut per_class_dynamic_j = vec![0.0f64; n_classes];
+        let mut static_w = 0.0f64;
+        for (r, &class) in mix.iter().enumerate() {
+            let c = class as usize;
+            per_class_replicas[c] += 1;
+            per_class_busy_ps[c] += world.busy_ps[r];
+            per_class_dynamic_j[c] += world.dynamic_j[r];
+            static_w += self.chips[c].config.static_w;
+        }
+        let per_class_utilization: Vec<f64> = per_class_busy_ps
+            .iter()
+            .zip(&per_class_replicas)
+            .map(|(&busy, &n)| {
+                if n == 0 {
+                    0.0
+                } else {
+                    busy as f64 / (end as f64 * n as f64)
+                }
+            })
+            .collect();
+        let total_busy: u128 = world.busy_ps.iter().map(|&b| b as u128).sum();
+        let replica_utilization = total_busy as f64 / (end as f64 * replicas as f64);
+        debug_assert!(
+            replica_utilization <= 1.0,
+            "utilization {replica_utilization} exceeds 1.0"
+        );
+        let dynamic_j: f64 = per_class_dynamic_j.iter().sum();
+        let avg_power_w = dynamic_j / sim_duration_s + static_w;
         SimServeReport {
             snapshot: world.metrics.snapshot(),
             offered: world.offered,
@@ -403,7 +563,18 @@ impl SimServer {
             max_queue_wait_s: to_seconds(world.max_queue_wait),
             per_replica_served: world.per_replica,
             sim_duration_s,
-            replica_utilization: to_seconds(world.busy_ps) / (sim_duration_s * replicas as f64),
+            replica_utilization,
+            energy: EnergyReport {
+                window_ps: end,
+                per_class_replicas,
+                per_class_busy_ps,
+                per_class_utilization,
+                per_class_dynamic_j,
+                static_w,
+                dynamic_j,
+                avg_power_w,
+                energy_j: dynamic_j + static_w * sim_duration_s,
+            },
         }
     }
 }
@@ -428,6 +599,8 @@ struct ServeWorld<'a, I> {
     config: &'a SimServeConfig,
     /// Per-class, per-model service tables (`service[class][model]`).
     service: &'a [Vec<Vec<Time>>],
+    /// Per-class, per-model dynamic energy per batch (same shape).
+    energy: &'a [Vec<Vec<f64>>],
     /// Chip class per replica.
     mix: &'a [u32],
     /// The trace source; `pending` is its unconsumed head.
@@ -453,7 +626,14 @@ struct ServeWorld<'a, I> {
     max_depth: usize,
     max_queue_wait: Time,
     per_replica: Vec<u64>,
-    busy_ps: Time,
+    /// Busy ps per replica, billed at batch *completion* (never at
+    /// dispatch): a batch still executing at the horizon contributes
+    /// nothing, so the sum can never overstate time spent inside the
+    /// replay window.
+    busy_ps: Vec<Time>,
+    /// Dynamic energy per replica, joules (per-batch table lookups billed
+    /// at completion, like `busy_ps`).
+    dynamic_j: Vec<f64>,
     last_done: Time,
     /// Reused per-batch latency buffers (no steady-state allocation).
     queue_ps: Vec<Time>,
@@ -549,7 +729,6 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
 
     fn start(&mut self, replica: usize, batch: SimBatch, service: Time, sch: &mut Scheduler<Ev>) {
         self.busy[replica] = true;
-        self.busy_ps += service;
         self.running[replica] = Some((batch, service));
         sch.after(service, Ev::Done { replica: replica as u32 });
     }
@@ -575,8 +754,14 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
             }
             Ev::Done { replica } => {
                 let rep = replica as usize;
-                let (batch, _service) =
+                let (batch, service) =
                     self.running[rep].take().expect("completion on an idle replica");
+                // Bill busy time and energy now that the work has
+                // actually finished inside the window ([now - service,
+                // now] ⊆ [0, last completion] by construction).
+                self.busy_ps[rep] += service;
+                let e_table = &self.energy[self.mix[rep] as usize][batch.model.index()];
+                self.dynamic_j[rep] += e_table[batch.len().min(e_table.len() - 1)];
                 self.queue_ps.clear();
                 self.total_ps.clear();
                 for &enq in &batch.requests {
@@ -647,6 +832,10 @@ mod tests {
             assert_eq!(a.sim_duration_s.to_bits(), r.sim_duration_s.to_bits());
             assert_eq!(a.replica_utilization.to_bits(), r.replica_utilization.to_bits());
             assert_eq!(a.max_queue_wait_s.to_bits(), r.max_queue_wait_s.to_bits());
+            // The energy ledgers are part of the determinism contract too.
+            assert_eq!(a.energy.per_class_busy_ps, r.energy.per_class_busy_ps);
+            assert_eq!(a.energy.dynamic_j.to_bits(), r.energy.dynamic_j.to_bits());
+            assert_eq!(a.energy.avg_power_w.to_bits(), r.energy.avg_power_w.to_bits());
         }
     }
 
@@ -834,6 +1023,134 @@ mod tests {
             r.served + r.dropped + r.snapshot.errors,
             r.offered,
             "conservation identity broken for unregistered models"
+        );
+    }
+
+    /// The utilization-accounting regression pin: busy time is billed at
+    /// completion and the ratio is one integer division, so utilization
+    /// can never exceed 1.0 — not at sustained saturation (where the old
+    /// dispatch-time billing plus a double-rounded f64 ratio could creep
+    /// past it), not on any fleet shape.
+    #[test]
+    fn utilization_never_exceeds_one_even_at_saturation() {
+        // 4x overload on one replica: the replica is busy essentially the
+        // whole window.
+        let r = server(8, millis(2), 1_000_000).replay(&trace(17, 6000.0, 0.5), 1);
+        assert!(r.replica_utilization <= 1.0, "util {} > 1.0", r.replica_utilization);
+        assert!(
+            r.replica_utilization > 0.95,
+            "expected saturation, util {}",
+            r.replica_utilization
+        );
+        for (c, &u) in r.energy.per_class_utilization.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&u), "class {c} utilization {u} out of range");
+        }
+        // Saturated heterogeneous fleet: same bounds per class and fleet.
+        let mut s = server(8, millis(2), 1_000_000);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        let m = s.replay_mix(&trace(29, 9000.0, 0.4), &[0, big]);
+        assert!(m.replica_utilization <= 1.0, "mixed util {} > 1.0", m.replica_utilization);
+        for (c, &u) in m.energy.per_class_utilization.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&u), "class {c} utilization {u} out of range");
+        }
+    }
+
+    /// Per-class utilization is an exact decomposition of fleet
+    /// utilization: replica-weighted class utilizations recombine to the
+    /// fleet number (same integer sums, same single division).
+    #[test]
+    fn per_class_utilization_sums_to_fleet_utilization() {
+        let mut s = server(8, millis(2), 100_000);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        let r = s.replay_mix(&trace(31, 4000.0, 0.4), &[0, 0, big]);
+        let e = &r.energy;
+        assert_eq!(e.per_class_replicas, vec![2, 1]);
+        let replicas: usize = e.per_class_replicas.iter().sum();
+        let total_busy: u128 = e.per_class_busy_ps.iter().map(|&b| b as u128).sum();
+        let fleet = total_busy as f64 / (e.window_ps as f64 * replicas as f64);
+        assert_eq!(
+            fleet.to_bits(),
+            r.replica_utilization.to_bits(),
+            "per-class busy ledger does not recombine to fleet utilization"
+        );
+        // And the weighted mean of the per-class ratios agrees too (up to
+        // one rounding of the recombination arithmetic).
+        let weighted: f64 = e
+            .per_class_utilization
+            .iter()
+            .zip(&e.per_class_replicas)
+            .map(|(&u, &n)| u * n as f64)
+            .sum::<f64>()
+            / replicas as f64;
+        assert!((weighted - r.replica_utilization).abs() < 1e-12);
+    }
+
+    /// The fleet average can hide a drowning class: under round-robin a
+    /// slow replica paired with a 2x chip saturates while the fleet
+    /// average still looks healthy. Per-class utilization makes the
+    /// saturated class visible — the observability gap the PR-4
+    /// fleet-average number had.
+    #[test]
+    fn saturated_slow_class_visible_behind_healthy_fleet_average() {
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+            // Round-robin ignores speed, so the slow class drowns while
+            // the fast one coasts — exactly the masking scenario.
+            routing: Policy::RoundRobin,
+            queue_capacity: 1_000_000,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        s.register("resnet50", &resnet50());
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        let r = s.replay_mix(&trace(37, 4000.0, 0.4), &[0, big]);
+        let slow = r.energy.per_class_utilization[0];
+        let fast = r.energy.per_class_utilization[big as usize];
+        assert!(slow > 0.9, "slow class should be saturated, util {slow}");
+        assert!(fast < 0.8, "fast class should coast, util {fast}");
+        assert!(
+            r.replica_utilization < 0.95,
+            "fleet average {} should mask the saturated class",
+            r.replica_utilization
+        );
+        assert!(slow <= 1.0 && fast <= 1.0);
+    }
+
+    /// Energy-ledger identities: dynamic energy recombines across classes,
+    /// measured power is dynamic-over-window plus static, and the total
+    /// energy is power x window. Also ties the measured dynamic energy to
+    /// the schedule model: at full-batch saturation it approaches
+    /// served x (per-image schedule energy).
+    #[test]
+    fn energy_accounting_identities_hold() {
+        let mut s = server(8, millis(2), 1_000_000);
+        let big = s.add_chip_class(SunriseChip::new(doubled_config()));
+        let r = s.replay_mix(&trace(41, 5000.0, 0.4), &[0, big]);
+        let e = &r.energy;
+        assert!(e.dynamic_j > 0.0, "no dynamic energy recorded");
+        let per_class_sum: f64 = e.per_class_dynamic_j.iter().sum();
+        assert!((per_class_sum - e.dynamic_j).abs() <= e.dynamic_j * 1e-12);
+        // static_w: one silicon (8 W) + one doubled (14 W).
+        assert!((e.static_w - 22.0).abs() < 1e-9, "static {} W", e.static_w);
+        let window_s = to_seconds(e.window_ps);
+        assert!((e.avg_power_w - (e.dynamic_j / window_s + e.static_w)).abs() < 1e-9);
+        assert!((e.energy_j - e.avg_power_w * window_s).abs() <= e.energy_j * 1e-9);
+        // Tie-down to the chip model: the silicon replica's dynamic joules
+        // per served image sit near the batch-8 schedule's per-image
+        // energy (batches are nearly all full at this overload).
+        let chip = SunriseChip::silicon();
+        let sched = chip.run(&resnet50(), 8);
+        let per_image_j = crate::chip::power::schedule_energy(
+            &sched,
+            chip.config.mac_pj,
+            chip.config.dram_pj_per_byte,
+            chip.resources.fabric_pj_per_byte,
+        )
+        .dynamic_j()
+            / 8.0;
+        let measured_per_image = e.per_class_dynamic_j[0] / r.per_replica_served[0] as f64;
+        assert!(
+            (measured_per_image - per_image_j).abs() / per_image_j < 0.1,
+            "measured {measured_per_image} J/img vs schedule {per_image_j} J/img"
         );
     }
 

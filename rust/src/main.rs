@@ -14,6 +14,8 @@
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
 //!           `sunrise plan --rate 3000 --p99 30`
+//!           `sunrise plan --rate 3000 --p99 30 --horizon-years 3 \
+//!                         --model-mix resnet50=0.7,mlp=0.3`
 
 use sunrise::analysis::{report, roofline};
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
@@ -22,7 +24,10 @@ use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{
     curve, render_grid, saturation_knee, sweep_capacity, GridConfig, TraceShape,
 };
-use sunrise::coordinator::plan::{default_catalog, plan, render_plan, PlanConfig, PlanTarget};
+use sunrise::coordinator::plan::{
+    default_catalog, plan_models, render_plan, ModelShare, Objective, PlanConfig, PlanTarget,
+    PowerModel, SearchStrategy,
+};
 use sunrise::coordinator::server::{Server, ServerConfig};
 use sunrise::interconnect::Technology;
 use sunrise::runtime::executor::{Executor, SimExecutor};
@@ -269,13 +274,34 @@ fn cmd_sweep(args: &[String]) {
     );
 }
 
+/// Parse `--model-mix name=weight,name=weight` into shares (empty input
+/// ⇒ empty vec: all traffic targets `--model`).
+fn parse_model_mix(s: &str) -> Vec<ModelShare> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let Some((name, w)) = part.split_once('=') else {
+            usage_error(&format!("option --model-mix: `{part}` is not name=weight"));
+        };
+        let weight: f64 = w.trim().parse().unwrap_or_else(|_| {
+            usage_error(&format!("option --model-mix: `{}` is not a number", w.trim()))
+        });
+        out.push(ModelShare { name: name.trim().to_string(), weight });
+    }
+    out
+}
+
 fn cmd_plan(args: &[String]) {
     let cli = Cli::new(
         "sunrise plan",
         "cheapest chip fleet (mixed configurations) meeting a (rate, p99) target",
     )
     .opt("model", "resnet50", "workload: resnet50|resnet_mini|mlp|decoder")
-    .opt("rate", "2000", "target arrival rate, req/s")
+    .opt(
+        "model-mix",
+        "",
+        "weighted multi-model traffic, e.g. resnet50=0.7,mlp=0.3 (empty: all traffic on --model)",
+    )
+    .opt("rate", "2000", "target arrival rate, req/s (aggregate across the model mix)")
     .opt("p99", "50", "p99 latency target, ms")
     .opt("duration", "0.5", "trace duration per feasibility probe, s")
     .opt("seed", "42", "trace seed (plans are deterministic per seed)")
@@ -285,18 +311,51 @@ fn cmd_plan(args: &[String]) {
     .opt("max-replicas", "64", "largest fleet considered per replica mix")
     .opt("trace", "poisson", "arrival shape: poisson|bursty")
     .opt("burst-mult", "4.0", "bursty only: burst-phase rate = mult × base rate")
-    .opt("phase", "0.05", "bursty only: phase length, s");
+    .opt("phase", "0.05", "bursty only: phase length, s")
+    .opt(
+        "horizon-years",
+        "0",
+        "energy objective: bill capex + electricity over this horizon (0 = capex only)",
+    )
+    .opt("kwh-usd", "0.12", "energy objective: electricity price, USD/kWh")
+    .opt("power", "measured", "energy objective: watts source, measured|rated")
+    .opt(
+        "search",
+        "auto",
+        "fleet-shape search: uniform|frontier|auto (auto: frontier iff the energy objective is on)",
+    )
+    .opt("max-probes", "512", "frontier search: feasibility-replay budget");
     let a = cli.parse_slice_or_exit(args);
-    let net = net_by_name(a.get("model")).unwrap_or_else(|| {
-        eprintln!("unknown model {}", a.get("model"));
-        std::process::exit(2);
-    });
+    let mix = parse_model_mix(a.get("model-mix"));
+    // The traffic mix defines the model set when given; --model otherwise.
+    let model_names: Vec<String> = if mix.is_empty() {
+        vec![a.get("model").to_string()]
+    } else {
+        let mut names: Vec<String> = Vec::new();
+        for share in &mix {
+            if !names.contains(&share.name) {
+                names.push(share.name.clone());
+            }
+        }
+        names
+    };
+    let nets: Vec<(String, Network)> = model_names
+        .iter()
+        .map(|name| {
+            let net = net_by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown model {name}");
+                std::process::exit(2);
+            });
+            (name.clone(), net)
+        })
+        .collect();
     let target = PlanTarget {
         rate: a.get_f64("rate"),
         p99_s: a.get_f64("p99") / 1e3,
         duration_s: a.get_f64("duration"),
         seed: a.get_u64("seed"),
         shape: parse_shape(&a),
+        mix,
     };
     // Same bounds as cmd_sweep: an absurd max_batch would plan
     // 1..=max_batch service tables per chip class before anything runs.
@@ -308,6 +367,45 @@ fn cmd_plan(args: &[String]) {
     if !max_wait_ms.is_finite() || max_wait_ms < 0.0 || max_wait_ms > 60_000.0 {
         usage_error("option --max-wait-ms must be between 0 and 60000 (one minute)");
     }
+    let horizon_years = a.get_f64("horizon-years");
+    if !horizon_years.is_finite() || horizon_years < 0.0 {
+        usage_error("option --horizon-years must be a finite number >= 0");
+    }
+    let usd_per_kwh = a.get_f64("kwh-usd");
+    if !usd_per_kwh.is_finite() || usd_per_kwh <= 0.0 {
+        usage_error("option --kwh-usd must be a finite number > 0");
+    }
+    let power = match a.get("power") {
+        "measured" => PowerModel::Measured,
+        "rated" => PowerModel::Rated,
+        other => usage_error(&format!("option --power: unknown source `{other}` (measured|rated)")),
+    };
+    let objective = if horizon_years > 0.0 {
+        Objective::CapexPlusEnergy { horizon_years, usd_per_kwh, power }
+    } else {
+        Objective::Capex
+    };
+    let max_probes = a.get_usize("max-probes");
+    if max_probes == 0 {
+        usage_error("option --max-probes must be >= 1");
+    }
+    let search = match a.get("search") {
+        "uniform" => SearchStrategy::UniformScale,
+        "frontier" => SearchStrategy::NonUniform { max_probes },
+        // Default: the richer non-uniform search rides along with the
+        // energy objective; plain capex plans keep the pre-energy
+        // uniform-template search (and its byte-identical output).
+        "auto" => {
+            if horizon_years > 0.0 {
+                SearchStrategy::NonUniform { max_probes }
+            } else {
+                SearchStrategy::UniformScale
+            }
+        }
+        other => usage_error(&format!(
+            "option --search: unknown strategy `{other}` (uniform|frontier|auto)"
+        )),
+    };
     let config = PlanConfig {
         batcher: BatcherConfig {
             max_batch: max_batch as u32,
@@ -315,13 +413,17 @@ fn cmd_plan(args: &[String]) {
         },
         queue_capacity: a.get_usize("queue-cap"),
         max_replicas: a.get_usize("max-replicas"),
+        objective,
+        search,
         ..PlanConfig::default()
     };
     let catalog = default_catalog();
     let t0 = std::time::Instant::now();
+    let models: Vec<(&str, &Network)> =
+        nets.iter().map(|(name, net)| (name.as_str(), net)).collect();
     // An unmeetable target (or invalid knob) is a usage-level failure:
     // report it and exit 2, like every other subcommand's parse errors.
-    let p = plan(&net, a.get("model"), &catalog, &target, &config)
+    let p = plan_models(&models, &catalog, &target, &config)
         .unwrap_or_else(|e| usage_error(&format!("sunrise plan: {e}")));
     println!("{}", render_plan(&catalog, &p));
     println!(
@@ -334,6 +436,23 @@ fn cmd_plan(args: &[String]) {
         p.best.power_w,
         p.best.report.snapshot.p99_latency_s * 1e3,
     );
+    if let Objective::CapexPlusEnergy { horizon_years, usd_per_kwh, power } = p.objective {
+        let source = match power {
+            PowerModel::Measured => "measured",
+            PowerModel::Rated => "rated",
+        };
+        println!(
+            "energy objective ({source} power, {horizon_years} y at ${usd_per_kwh}/kWh): \
+             measured {:.1} W -> opex ${:.0}, total ${:.0}",
+            p.best.measured_power_w, p.best.energy_opex_usd, p.best.total_cost_usd,
+        );
+    }
+    if p.probe_budget_exhausted {
+        println!(
+            "note: the search stopped on its --max-probes budget, not on the bound proof — \
+             cheaper feasible fleets may exist; raise --max-probes to rule them out"
+        );
+    }
     println!("(planned in {:.0} ms wall)", t0.elapsed().as_secs_f64() * 1e3);
 }
 
@@ -433,7 +552,9 @@ fn main() {
                  \x20 serve      threaded serving demo over simulated chip replicas (wall clock)\n\
                  \x20 queue-sim  event-driven queueing simulation of raw chips under load\n\
                  \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server\n\
-                 \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target\n\
+                 \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target;\n\
+                 \x20            optional capex+energy objective (--horizon-years) and multi-model\n\
+                 \x20            traffic (--model-mix)\n\
                  \x20 roofline   ridge points + memory-wall summary (Sunrise vs HBM baseline)\n\
                  \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\n\
                  Every subcommand takes --help."

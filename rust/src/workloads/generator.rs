@@ -217,6 +217,85 @@ pub fn bursty_trace(
     out
 }
 
+/// Multi-model traffic: wrap any trace iterator and re-mark each arrival
+/// with a model drawn from a weighted mix.
+///
+/// This is the standard Poisson *marking* construction: marking a rate-λ
+/// Poisson process with independent category draws of probability `w_m`
+/// yields independent per-model Poisson streams of rate `w_m·λ`
+/// (superposition/thinning equivalence) — i.e. interleaved per-model
+/// arrival streams without merging iterators. Two determinism properties
+/// hold by construction:
+///
+/// - **Arrival times are untouched.** The marker draws from its *own*
+///   RNG stream (derived from the trace seed via [`mix_marking_rng`]),
+///   so the arrival process is bit-identical to the unmarked trace —
+///   changing the mix re-labels traffic, it never re-times it.
+/// - **A single-model mix is a no-op.** With one share the marker draws
+///   nothing and forwards requests unchanged (pinned by test), so
+///   single-model replays stay bit-identical to the un-wrapped iterator.
+#[derive(Debug, Clone)]
+pub struct ModelMixIter<I> {
+    inner: I,
+    rng: Rng,
+    models: Vec<Arc<str>>,
+    /// Cumulative normalized weights; the last entry is forced to 1.0 so
+    /// a `f64()` draw always lands in a bucket.
+    cum: Vec<f64>,
+}
+
+/// The marking RNG for a trace seed: independent of (and stable against)
+/// the arrival stream's draws, so the same seed always marks the same
+/// arrivals with the same models.
+pub fn mix_marking_rng(seed: u64) -> Rng {
+    // Any fixed perturbation works; xoring a constant keeps the marking
+    // stream decorrelated from Rng::new(seed)'s splitmix expansion.
+    Rng::new(seed ^ 0x6D69_785F_6D61_726B) // b"mix_mark"
+}
+
+impl<I: Iterator<Item = TraceRequest>> ModelMixIter<I> {
+    /// Wrap `inner`, re-marking each request with a model drawn from
+    /// `shares` (name, weight). Weights must be finite and positive; they
+    /// are normalized internally.
+    pub fn new(inner: I, rng: Rng, shares: &[(Arc<str>, f64)]) -> ModelMixIter<I> {
+        assert!(!shares.is_empty(), "model mix needs at least one share");
+        assert!(
+            shares.iter().all(|(_, w)| w.is_finite() && *w > 0.0),
+            "model-mix weights must be finite and positive"
+        );
+        let total: f64 = shares.iter().map(|(_, w)| w).sum();
+        let mut cum = Vec::with_capacity(shares.len());
+        let mut acc = 0.0;
+        for (_, w) in shares {
+            acc += w / total;
+            cum.push(acc);
+        }
+        // Guard against accumulated rounding leaving the last bucket
+        // fractionally short of a u=0.999… draw.
+        *cum.last_mut().expect("non-empty shares") = 1.0;
+        ModelMixIter {
+            inner,
+            rng,
+            models: shares.iter().map(|(m, _)| Arc::clone(m)).collect(),
+            cum,
+        }
+    }
+}
+
+impl<I: Iterator<Item = TraceRequest>> Iterator for ModelMixIter<I> {
+    type Item = TraceRequest;
+
+    fn next(&mut self) -> Option<TraceRequest> {
+        let mut req = self.inner.next()?;
+        if self.models.len() > 1 {
+            let u = self.rng.f64();
+            let idx = self.cum.iter().position(|&c| u < c).unwrap_or(self.models.len() - 1);
+            req.model = Arc::clone(&self.models[idx]);
+        }
+        Some(req)
+    }
+}
+
 /// Random GEMM-shaped conv layers (for fuzzing the scheduler).
 pub fn random_conv(rng: &mut Rng, id: usize) -> Layer {
     let hw = *rng.choose(&[7u32, 14, 28, 56, 112]);
@@ -315,6 +394,75 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn nan_duration_is_rejected() {
         let _ = BurstyTraceIter::new(Rng::new(1), 100.0, 1000.0, 0.5, f64::NAN, "m");
+    }
+
+    #[test]
+    fn mix_marking_preserves_arrival_times_exactly() {
+        // Marking re-labels traffic; it must never re-time it.
+        let plain: Vec<TraceRequest> =
+            PoissonTraceIter::new(Rng::new(11), 1500.0, 0.5, "a", 1).collect();
+        let shares: Vec<(Arc<str>, f64)> =
+            vec![(Arc::from("a"), 0.7), (Arc::from("b"), 0.3)];
+        let mixed: Vec<TraceRequest> = ModelMixIter::new(
+            PoissonTraceIter::new(Rng::new(11), 1500.0, 0.5, "a", 1),
+            mix_marking_rng(11),
+            &shares,
+        )
+        .collect();
+        assert_eq!(plain.len(), mixed.len());
+        for (p, m) in plain.iter().zip(&mixed) {
+            assert_eq!(p.arrival_s.to_bits(), m.arrival_s.to_bits(), "marking moved an arrival");
+            assert_eq!(p.samples, m.samples);
+        }
+    }
+
+    #[test]
+    fn mix_shares_approximate_weights_and_are_deterministic() {
+        let shares: Vec<(Arc<str>, f64)> =
+            vec![(Arc::from("big"), 3.0), (Arc::from("small"), 1.0)];
+        let gen = || -> Vec<TraceRequest> {
+            ModelMixIter::new(
+                PoissonTraceIter::new(Rng::new(5), 4000.0, 1.0, "big", 1),
+                mix_marking_rng(5),
+                &shares,
+            )
+            .collect()
+        };
+        let t = gen();
+        assert_eq!(t, gen(), "marked trace not deterministic per seed");
+        let big = t.iter().filter(|r| &*r.model == "big").count() as f64;
+        let small = t.iter().filter(|r| &*r.model == "small").count() as f64;
+        assert_eq!(big + small, t.len() as f64, "marker invented a model");
+        let frac = big / t.len() as f64;
+        assert!((frac - 0.75).abs() < 0.04, "big share {frac} far from 0.75");
+    }
+
+    #[test]
+    fn single_model_mix_is_bit_identical_passthrough() {
+        // One share draws nothing: the wrapped stream is the plain stream,
+        // Arc pointers and all — the byte-compat contract the planner's
+        // single-model default path relies on.
+        let plain: Vec<TraceRequest> =
+            PoissonTraceIter::new(Rng::new(9), 900.0, 0.3, "m", 2).collect();
+        let shares: Vec<(Arc<str>, f64)> = vec![(Arc::from("other"), 1.0)];
+        let mixed: Vec<TraceRequest> = ModelMixIter::new(
+            PoissonTraceIter::new(Rng::new(9), 900.0, 0.3, "m", 2),
+            mix_marking_rng(9),
+            &shares,
+        )
+        .collect();
+        assert_eq!(plain, mixed, "single-share mix must not re-mark requests");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn non_finite_mix_weight_is_rejected() {
+        let shares: Vec<(Arc<str>, f64)> = vec![(Arc::from("a"), f64::NAN)];
+        let _ = ModelMixIter::new(
+            PoissonTraceIter::new(Rng::new(1), 100.0, 0.1, "a", 1),
+            mix_marking_rng(1),
+            &shares,
+        );
     }
 
     #[test]

@@ -234,6 +234,52 @@ fn plan_subcommand_is_deterministic_end_to_end() {
 }
 
 #[test]
+fn plan_energy_objective_and_model_mix_end_to_end() {
+    // `--horizon-years` + `--model-mix`: the energy objective renders the
+    // extended (opex/total) table, reports the objective line, and is as
+    // deterministic as the default path.
+    let run = || {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_sunrise"))
+            .args([
+                "plan",
+                "--model-mix",
+                "resnet50=0.7,mlp=0.3",
+                "--rate",
+                "1500",
+                "--p99",
+                "40",
+                "--duration",
+                "0.15",
+                "--horizon-years",
+                "3",
+                "--max-replicas",
+                "12",
+                "--max-probes",
+                "64",
+            ])
+            .output()
+            .expect("spawn the sunrise binary");
+        assert!(
+            out.status.success(),
+            "energy/mix plan failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+        stdout
+            .lines()
+            .filter(|l| !l.contains("ms wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "energy/mix plan output not deterministic across runs");
+    for needle in ["opex $", "total $", "meas W", "energy objective"] {
+        assert!(a.contains(needle), "energy plan output lacks `{needle}`:\n{a}");
+    }
+}
+
+#[test]
 fn firmware_batch_loop_drives_uce_sequences() {
     // Firmware on the 13-bit core arms the UCE 16 times (16 layer batches).
     let mut uce = Uce::new(Sequencer::fixed(sunrise::memory::ns(5_000)));
