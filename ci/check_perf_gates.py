@@ -9,7 +9,11 @@ BENCH_hotpath.json:
 BENCH_serving.json:
   - the streaming serving replay must beat the frozen PR-2 materialized
     baseline by >=3x in replayed req/s (both rows replay the same trace
-    parameters, so the ns/op ratio is the req/s ratio).
+    parameters, so the ns/op ratio is the req/s ratio);
+  - replaying the same trace through the fault-injection entry point
+    with an empty fault plan must stay within 5% of the plain streaming
+    row (ratio >= 0.95): the chaos layer may not tax the fault-free
+    hot path.
 
 Exit 0 when every gate passes, 1 otherwise (CI retries the benches once
 on failure to rule out shared-runner noise before going red).
@@ -41,6 +45,12 @@ GATES = {
             3.0,
             "serving replay (streaming vs materialized baseline)",
         ),
+        (
+            "serving_replay: 0.5s x 20k req/s, streaming",
+            "serving_replay: 0.5s x 20k req/s, streaming, fault layer idle",
+            0.95,
+            "fault layer idle overhead (<=5% vs plain streaming)",
+        ),
     ],
 }
 
@@ -66,7 +76,7 @@ def check_file(path: str, gates) -> bool:
         status = "PASS" if ratio >= min_ratio else "FAIL"
         print(
             f"{status}: {label}: {ns[slow]:.0f} ns vs {ns[fast]:.0f} ns "
-            f"-> {ratio:.1f}x (gate >= {min_ratio:.0f}x)"
+            f"-> {ratio:.2f}x (gate >= {min_ratio:g}x)"
         )
         ok = ok and ratio >= min_ratio
     return ok

@@ -1,0 +1,107 @@
+//! Deterministic chaos on the virtual-time serving stack: replay one
+//! seeded Poisson trace through a 4-replica fleet while a fault plan
+//! crashes replicas, restarts them after a repair delay, and flips
+//! batches into transient errors — then print the availability ledger
+//! and check the request-conservation identity
+//! `served + dropped + shed + failed + errors + queued + in-flight ==
+//! offered`.
+//!
+//! The run also demonstrates the two determinism contracts pinned by
+//! the fault tests:
+//!   1. the same chaotic replay reproduces bit-for-bit, and
+//!   2. an *empty* fault plan is bit-identical to the fault-free entry
+//!      point — the chaos layer costs nothing when idle.
+//!
+//! Run: `cargo run --release --example chaos_replay`
+
+use sunrise::chip::sunrise::SunriseChip;
+use sunrise::coordinator::batcher::BatcherConfig;
+use sunrise::coordinator::clock::millis;
+use sunrise::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
+use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
+use sunrise::sim::from_seconds;
+use sunrise::util::rng::Rng;
+use sunrise::workloads::generator::poisson_trace;
+use sunrise::workloads::resnet::resnet50;
+
+fn main() {
+    let net = resnet50();
+    let config = SimServeConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+        ..SimServeConfig::default()
+    };
+    let mut server = SimServer::new(SunriseChip::silicon(), config);
+    server.register("resnet50", &net);
+
+    // One seeded trace, one seeded fault plan: crashes roughly every
+    // 60 ms per replica, ~25 ms repair, 5% transient batch errors. The
+    // fault stream is derived from its own RNG constant, so the arrival
+    // trace below is byte-identical with or without the chaos.
+    let (seed, rate, dur) = (42u64, 4000.0, 0.5);
+    let replicas = 4usize;
+    let trace = poisson_trace(&mut Rng::new(seed), rate, dur, "resnet50", 1);
+    let spec = FaultSpec {
+        mttf_s: 0.06,
+        mttr_s: 0.025,
+        error_prob: 0.05,
+        ..FaultSpec::default()
+    };
+    let plan = FaultPlan::generate(&spec, seed, replicas, from_seconds(dur));
+    let retry = RetryPolicy { max_retries: 3, ..RetryPolicy::default() };
+
+    let mix: Vec<u32> = vec![0; replicas];
+    let r = server.replay_faulted(&trace, &mix, &plan, &retry);
+    let a = &r.availability;
+
+    println!(
+        "chaotic replay: {} offered, {} served, {} failed, {} dropped, {} shed",
+        r.offered, r.served, r.failed, r.dropped, r.shed
+    );
+    println!(
+        "fault ledger: {} crashes, {} restarts, {} retries, {} transient errors",
+        a.crashes, a.restarts, a.retries, a.transient_errors
+    );
+    println!(
+        "availability {:.2}% (goodput {:.2}%), per-replica downtime {:?} s",
+        a.availability * 100.0,
+        a.goodput * 100.0,
+        a.per_replica_downtime_s
+            .iter()
+            .map(|d| (d * 1e3).round() / 1e3)
+            .collect::<Vec<f64>>()
+    );
+    println!(
+        "latency p50 {:.2} ms, p99 {:.2} ms (vs a fault-free p99 below)",
+        r.snapshot.p50_latency_s * 1e3,
+        r.snapshot.p99_latency_s * 1e3
+    );
+
+    // Conservation: chaos may delay, retry or fail work — it may never
+    // lose track of a request.
+    let accounted = r.served
+        + r.dropped
+        + r.shed
+        + r.failed
+        + r.snapshot.errors
+        + r.queued_at_end
+        + r.in_flight_at_end;
+    assert_eq!(accounted, r.offered, "conservation identity violated");
+    println!("request conservation under chaos: OK ({accounted} accounted)");
+
+    // Contract 1: chaotic replays are deterministic.
+    let again = server.replay_faulted(&trace, &mix, &plan, &retry);
+    assert!(r.snapshot.bitwise_eq(&again.snapshot), "chaotic replay not reproducible");
+    assert!(a.bitwise_eq(&again.availability), "availability ledger not reproducible");
+    println!("chaotic replay reproduces bit-for-bit: OK");
+
+    // Contract 2: an empty plan takes the exact fault-free path.
+    let quiet = server.replay_faulted(&trace, &mix, &FaultPlan::empty(), &RetryPolicy::default());
+    let plain = server.replay_mix(&trace, &mix);
+    assert!(quiet.snapshot.bitwise_eq(&plain.snapshot), "idle fault layer changed the replay");
+    assert_eq!(quiet.availability.crashes, 0);
+    println!(
+        "idle fault layer is bit-identical to the fault-free path: OK \
+         (fault-free p99 {:.2} ms)",
+        plain.snapshot.p99_latency_s * 1e3
+    );
+}

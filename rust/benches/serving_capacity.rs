@@ -5,7 +5,8 @@
 //! serial vs parallel, and one end-to-end `plan` query (informational).
 //! Companion JSON lands in `BENCH_serving.json` at the repo root;
 //! `ci/check_perf_gates.py` enforces the streaming row ≥3× the baseline
-//! row. EXPERIMENTS.md's bench-row glossary maps every row to its gate.
+//! row and the fault-idle row within 5% of the plain streaming row.
+//! EXPERIMENTS.md's bench-row glossary maps every row to its gate.
 //!
 //! Run: `cargo bench --bench serving_capacity`
 //! (set `SUNRISE_BENCH_QUICK=1` for the CI smoke configuration — it keeps
@@ -22,6 +23,7 @@ use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{sweep_capacity_threads, GridConfig};
 use sunrise::coordinator::clock::millis;
+use sunrise::coordinator::fault::{FaultPlan, RetryPolicy};
 use sunrise::coordinator::plan::{
     default_catalog, plan, Objective, PlanConfig, PlanTarget, PowerModel, SearchStrategy,
 };
@@ -57,6 +59,24 @@ fn main() {
             .replay_stream(PoissonTraceIter::new(Rng::new(seed), rate, dur, "resnet50", 1), 16)
             .served
     });
+    // --- serving_replay: fault machinery idle (the ≤5% overhead gate) ---
+    // The same streamed trace through `replay_stream_faulted` with an
+    // empty fault plan: the chaos layer is wired in but never fires. The
+    // CI gate holds this row within 5% of the plain streaming row —
+    // robustness may not tax the fault-free hot path.
+    let (empty_plan, retry) = (FaultPlan::empty(), RetryPolicy::default());
+    let mix16: Vec<u32> = vec![0; 16];
+    b.bench("serving_replay: 0.5s x 20k req/s, streaming, fault layer idle", || {
+        server
+            .replay_stream_faulted(
+                PoissonTraceIter::new(Rng::new(seed), rate, dur, "resnet50", 1),
+                &mix16,
+                &empty_plan,
+                &retry,
+            )
+            .served
+    });
+
     let trace_10k = poisson_trace(&mut Rng::new(seed), rate, dur, "resnet50", 1);
     b.bench("serving_replay: 0.5s x 20k req/s, materialized baseline", || {
         server.replay_materialized_baseline(&trace_10k, 16).served

@@ -315,10 +315,18 @@ impl SimServer {
                     world.batch_sizes as f64 / world.batches as f64
                 },
                 mean_queue_s: world.queue.mean(),
+                // Predates per-model attribution (and the whole fault
+                // layer): the frozen path serves every request or drops
+                // it at the door, so the new ledgers are neutral.
+                per_model: Vec::new(),
             },
             offered,
             served: world.served,
             dropped: world.dropped,
+            shed: 0,
+            failed: 0,
+            queued_at_end: 0,
+            in_flight_at_end: 0,
             full_batches: world.batcher.full_batches,
             timeout_batches: world.batcher.timeout_batches,
             max_queue_depth: world.max_depth,
@@ -329,6 +337,10 @@ impl SimServer {
             // The frozen PR-2 path predates per-class energy accounting;
             // the field exists only so the report type stays shared.
             energy: crate::coordinator::simserve::EnergyReport::unmeasured(),
+            availability: crate::coordinator::metrics::AvailabilityReport::perfect(
+                replicas,
+                world.served as f64 / offered.max(1) as f64,
+            ),
         }
     }
 }
@@ -349,6 +361,7 @@ mod tests {
             batcher: BatcherConfig { max_batch, max_wait: millis(2) },
             routing: Policy::LeastLoaded,
             queue_capacity: 10_000,
+            shed: None,
         };
         let mut s = SimServer::new(SunriseChip::silicon(), config);
         s.register("resnet50", &resnet50());

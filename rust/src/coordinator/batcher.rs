@@ -36,6 +36,43 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Admission-control shedding, evaluated per arriving request *before*
+/// it is queued. Distinct from the hard `queue_capacity` drop: a drop
+/// models a full buffer, a shed is a policy choice to refuse work that
+/// would miss its SLO anyway, so capacity loss (a crashed replica, a
+/// straggle window) degrades goodput gracefully instead of growing an
+/// unbounded backlog. Shed requests are counted separately from drops in
+/// the conservation invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedPolicy {
+    /// Shed once the total queued depth reaches this many requests.
+    pub max_queue_depth: usize,
+    /// Shed a model's requests while that model's observed p99 latency
+    /// exceeds this many picoseconds ([`Time::MAX`] disables the SLO
+    /// check). Integer compare against the per-model histogram — no
+    /// float conversion on the admission path.
+    pub p99_slo: Time,
+}
+
+impl ShedPolicy {
+    /// Depth-only shedding (no latency SLO).
+    pub fn depth(max_queue_depth: usize) -> ShedPolicy {
+        ShedPolicy { max_queue_depth, p99_slo: Time::MAX }
+    }
+
+    /// Add a per-model p99 SLO bound (picoseconds) to this policy.
+    pub fn with_slo(self, p99_slo: Time) -> ShedPolicy {
+        ShedPolicy { p99_slo, ..self }
+    }
+
+    /// Should a request for a model with observed p99 `model_p99` (None
+    /// until the model completes something) be shed at `total_depth`?
+    #[inline]
+    pub fn should_shed(&self, total_depth: usize, model_p99: Option<Time>) -> bool {
+        total_depth >= self.max_queue_depth || model_p99.is_some_and(|p| p > self.p99_slo)
+    }
+}
+
 /// Anything the batcher can queue: it only ever needs the enqueue stamp
 /// (for the `max_wait` deadline).
 pub trait Queued {
@@ -328,6 +365,25 @@ mod tests {
         let b3 = b.push(A, 5, 5).unwrap();
         assert_eq!(b3.requests.as_ptr(), ptr, "recycled buffer not reused");
         assert_eq!(b3.requests, vec![4, 5]);
+    }
+
+    #[test]
+    fn shed_policy_depth_and_slo_axes_are_independent() {
+        let depth_only = ShedPolicy::depth(4);
+        assert!(!depth_only.should_shed(3, None));
+        assert!(depth_only.should_shed(4, None));
+        assert!(
+            !depth_only.should_shed(0, Some(Time::MAX)),
+            "depth-only policy ignores latency"
+        );
+        let slo = ShedPolicy::depth(usize::MAX).with_slo(millis(50));
+        assert!(!slo.should_shed(1_000_000, None), "no observation, no SLO shed");
+        assert!(!slo.should_shed(0, Some(millis(50))), "at the SLO is still admitted");
+        assert!(slo.should_shed(0, Some(millis(50) + 1)));
+        let both = ShedPolicy::depth(4).with_slo(millis(50));
+        assert!(both.should_shed(4, Some(0)));
+        assert!(both.should_shed(0, Some(millis(60))));
+        assert!(!both.should_shed(3, Some(millis(40))));
     }
 
     #[test]

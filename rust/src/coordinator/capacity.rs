@@ -30,10 +30,11 @@
 use crate::chip::sunrise::{SunriseChip, SunriseConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::clock::millis;
+use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
 use crate::coordinator::router::Policy;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
 use crate::sim::sweep::{default_threads, parallel_map_threads};
-use crate::sim::Time;
+use crate::sim::{from_seconds, Time};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
@@ -147,6 +148,16 @@ pub struct GridConfig {
     pub routing: Policy,
     /// Arrival-process shape (Poisson by default).
     pub shape: TraceShape,
+    /// Statistical fault model applied to every grid point (quiet by
+    /// default). Each point expands it into a concrete
+    /// [`FaultPlan`] from `(seed, replicas, duration)` — deterministic
+    /// per point, so serial and parallel sweeps stay bit-identical. The
+    /// fault stream is independent of the arrival stream: turning faults
+    /// on never moves an arrival.
+    pub faults: FaultSpec,
+    /// Retry budget/deadline for crash orphans and transient errors
+    /// (only consulted when `faults` is non-quiet).
+    pub retry: RetryPolicy,
 }
 
 impl Default for GridConfig {
@@ -161,6 +172,8 @@ impl Default for GridConfig {
             queue_capacity: 10_000,
             routing: Policy::LeastLoaded,
             shape: TraceShape::Poisson,
+            faults: FaultSpec::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -272,6 +285,7 @@ pub fn sweep_capacity_mix_threads(
         grid.duration_s
     );
     grid.shape.validate()?;
+    grid.faults.validate()?;
     for mix in mixes {
         crate::ensure!(!mix.is_empty(), "capacity grid replica mixes must be non-empty");
         for &class in mix {
@@ -298,6 +312,7 @@ pub fn sweep_capacity_mix_threads(
                 batcher: BatcherConfig { max_batch, max_wait: grid.max_wait },
                 routing: grid.routing,
                 queue_capacity: grid.queue_capacity,
+                shed: None,
             };
             let mut server = SimServer::new(SunriseChip::new(chips[0].clone()), config);
             for extra in &chips[1..] {
@@ -323,7 +338,22 @@ pub fn sweep_capacity_mix_threads(
         let server = &servers[mb_idx];
         let mix = &mixes[mix_idx];
         let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
-        let report = server.replay_stream_mix(trace, mix);
+        // A quiet spec takes the exact fault-free path (no plan, no
+        // extra events — bit-identical to the pre-fault sweep). A live
+        // spec expands per point from (seed, fleet size, window), a pure
+        // function of the point's coordinates, so thread interleaving
+        // cannot reorder anything: serial == parallel still holds.
+        let report = if grid.faults.is_quiet() {
+            server.replay_stream_mix(trace, mix)
+        } else {
+            let plan = FaultPlan::generate(
+                &grid.faults,
+                grid.seed,
+                mix.len(),
+                from_seconds(grid.duration_s),
+            );
+            server.replay_stream_faulted(trace, mix, &plan, &grid.retry)
+        };
         CapacityPoint {
             rate,
             replicas: mix.len(),
@@ -370,6 +400,8 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
             "max_batch",
             "served",
             "dropped",
+            "failed",
+            "avail %",
             "thru req/s",
             "p50 ms",
             "p99 ms",
@@ -387,6 +419,8 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
             p.max_batch.to_string(),
             p.report.served.to_string(),
             p.report.dropped.to_string(),
+            p.report.failed.to_string(),
+            format!("{:.2}", p.report.availability.availability * 100.0),
             format!("{:.1}", s.throughput_rps),
             format!("{:.3}", s.p50_latency_s * 1e3),
             format!("{:.3}", s.p99_latency_s * 1e3),
@@ -502,6 +536,7 @@ mod tests {
                 batcher: BatcherConfig { max_batch: 8, max_wait: grid.max_wait },
                 routing: grid.routing,
                 queue_capacity: grid.queue_capacity,
+                shed: None,
             };
             let mut server = SimServer::new(SunriseChip::silicon(), config);
             server.register("resnet50", &net);
@@ -722,6 +757,72 @@ mod tests {
         );
         let err = bad_mix.expect_err("out-of-range class accepted").to_string();
         assert!(err.contains("chip class"), "error does not name the class: {err}");
+    }
+
+    #[test]
+    fn faulted_sweep_is_deterministic_and_quiet_spec_is_free() {
+        let net = resnet50();
+        let cfg = SunriseConfig::default();
+        let quiet = GridConfig {
+            rates: vec![800.0, 2000.0],
+            replicas: vec![2],
+            max_batches: vec![8],
+            duration_s: 0.2,
+            ..GridConfig::default()
+        };
+        assert!(quiet.faults.is_quiet());
+        let plain = sweep_capacity(&net, "resnet50", &cfg, &quiet).expect("grid");
+        // Re-running the quiet grid is bit-identical to the plain sweep:
+        // the fault axis costs nothing until a knob is turned.
+        let again = sweep_capacity(&net, "resnet50", &cfg, &quiet).expect("grid");
+        for (a, b) in plain.iter().zip(&again) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "quiet grid diverged");
+            assert_eq!(a.report.availability.crashes, 0);
+        }
+        // With crashes + transient errors, serial == parallel still holds
+        // bit-for-bit (each point derives its plan from its own
+        // coordinates, untouched by thread interleaving).
+        let chaotic = GridConfig {
+            faults: FaultSpec {
+                mttf_s: 0.05,
+                mttr_s: 0.02,
+                error_prob: 0.05,
+                ..FaultSpec::default()
+            },
+            ..quiet
+        };
+        let serial = sweep_capacity_threads(&net, "resnet50", &cfg, &chaotic, 1).expect("grid");
+        let parallel =
+            sweep_capacity_threads(&net, "resnet50", &cfg, &chaotic, 8).expect("grid");
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "faulted point diverged");
+            assert!(
+                a.report.availability.bitwise_eq(&b.report.availability),
+                "availability ledger diverged between serial and parallel"
+            );
+        }
+        // The chaos actually fired somewhere on a 0.2 s window at 50 ms
+        // MTTF across 2 replicas.
+        assert!(
+            serial.iter().any(|p| p.report.availability.crashes > 0),
+            "no crashes landed in the chaotic grid"
+        );
+        let rendered = render_grid(&serial);
+        assert!(rendered.contains("avail %"), "no availability column:\n{rendered}");
+    }
+
+    #[test]
+    fn invalid_fault_specs_are_usable_errors() {
+        let net = resnet50();
+        let cfg = SunriseConfig::default();
+        let grid = GridConfig {
+            faults: FaultSpec { mttf_s: -1.0, ..FaultSpec::default() },
+            ..GridConfig::default()
+        };
+        let err =
+            sweep_capacity(&net, "resnet50", &cfg, &grid).expect_err("bad mttf").to_string();
+        assert!(err.contains("mttf"), "error does not name mttf: {err}");
     }
 
     #[test]

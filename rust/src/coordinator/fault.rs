@@ -1,0 +1,364 @@
+//! Deterministic fault injection for the virtual-time serving stack.
+//!
+//! A [`FaultSpec`] describes a *statistical* failure model (crash MTTF,
+//! restart MTTR, straggle windows, transient batch errors);
+//! [`FaultPlan::generate`] expands it into a concrete, time-sorted list
+//! of [`TimedFault`] events for one replay window. Two contracts make
+//! chaos reproducible:
+//!
+//! 1. **Independent RNG stream.** The plan draws from
+//!    `Rng::new(seed ^ FAULT_STREAM)` — a stream disjoint from the
+//!    arrival-trace generator (same xor-constant pattern as the
+//!    model-mix marking stream), so turning faults on or off never
+//!    shifts a single arrival timestamp. The arrival byte stream is
+//!    bit-identical with and without a `FaultPlan`.
+//! 2. **Quiet plans are free.** A [`FaultSpec::default`] (all knobs
+//!    zero) generates an empty plan, and the replay core takes the
+//!    exact PR-5 code path — no extra events, no extra RNG draws —
+//!    pinned bit-identical by differential test.
+//!
+//! The per-batch transient-error stream is carried *inside* the plan
+//! ([`FaultPlan::error_rng`]) and consumed in completion order, which is
+//! itself deterministic under the wheel's FIFO tie-break, so faulted
+//! replays are exactly reproducible run-to-run and across serial vs
+//! parallel sweeps.
+
+use crate::sim::{from_seconds, to_seconds, Time};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// XOR'd into the user seed to derive the fault stream
+/// (b"fault_ev" — mirrors the `mix_mark` constant in the workload
+/// generator so every derived stream is disjoint from the arrival
+/// stream and from each other).
+const FAULT_STREAM: u64 = 0x6661_756C_745F_6576;
+
+/// Statistical fault model for one replay window. All knobs default to
+/// "off"; a default spec is [`quiet`](FaultSpec::is_quiet) and injects
+/// nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time to failure per replica, seconds. `0.0` disables
+    /// crashes.
+    pub mttf_s: f64,
+    /// Mean time to restart after a crash, seconds. `0.0` means a
+    /// crashed replica stays down for the rest of the window.
+    pub mttr_s: f64,
+    /// Mean interval between straggle windows per replica, seconds.
+    /// `0.0` disables straggling.
+    pub straggle_every_s: f64,
+    /// Mean straggle-window duration, seconds.
+    pub straggle_s: f64,
+    /// Service-time multiplier while a replica straggles (`>= 1.0`).
+    pub straggle_mult: f64,
+    /// Per-batch transient error probability in `[0, 1)`. An errored
+    /// batch is retried like a crash victim (it still burned the
+    /// replica's time).
+    pub error_prob: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            mttf_s: 0.0,
+            mttr_s: 0.0,
+            straggle_every_s: 0.0,
+            straggle_s: 0.0,
+            straggle_mult: 1.0,
+            error_prob: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when the spec injects nothing: no crashes, no straggles, no
+    /// transient errors. Quiet specs take the exact fault-free replay
+    /// path (bit-identical to PR-5).
+    pub fn is_quiet(&self) -> bool {
+        self.mttf_s == 0.0 && self.straggle_every_s == 0.0 && self.error_prob == 0.0
+    }
+
+    /// Validate knob ranges, returning a usable error (not a panic) for
+    /// CLI-facing callers.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.mttf_s >= 0.0 && self.mttf_s.is_finite(),
+            "fault mttf must be finite and >= 0, got {}",
+            self.mttf_s
+        );
+        crate::ensure!(
+            self.mttr_s >= 0.0 && self.mttr_s.is_finite(),
+            "fault mttr must be finite and >= 0, got {}",
+            self.mttr_s
+        );
+        crate::ensure!(
+            self.straggle_every_s >= 0.0 && self.straggle_every_s.is_finite(),
+            "straggle interval must be finite and >= 0, got {}",
+            self.straggle_every_s
+        );
+        crate::ensure!(
+            self.straggle_s >= 0.0 && self.straggle_s.is_finite(),
+            "straggle duration must be finite and >= 0, got {}",
+            self.straggle_s
+        );
+        crate::ensure!(
+            self.straggle_mult >= 1.0 && self.straggle_mult.is_finite(),
+            "straggle multiplier must be >= 1, got {}",
+            self.straggle_mult
+        );
+        crate::ensure!(
+            (0.0..1.0).contains(&self.error_prob),
+            "error probability must be in [0, 1), got {}",
+            self.error_prob
+        );
+        crate::ensure!(
+            self.straggle_every_s == 0.0 || self.straggle_s > 0.0,
+            "straggle interval set but straggle duration is 0"
+        );
+        Ok(())
+    }
+}
+
+/// What happens to a replica at a [`TimedFault`]'s timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Replica goes down; in-flight and queued batches are re-dispatched
+    /// (or failed once their retry budget / deadline is exhausted).
+    Crash,
+    /// Replica comes back up and drains any parked work.
+    Restart,
+    /// Service times on this replica are multiplied by
+    /// `straggle_mult` until the matching `StraggleEnd`.
+    StraggleStart,
+    /// Straggle window closes; service times return to normal.
+    StraggleEnd,
+}
+
+/// One concrete fault event, placed on the wheel at replay start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimedFault {
+    /// Virtual timestamp of the event.
+    pub at: Time,
+    /// Replica index the event applies to.
+    pub replica: u32,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// Concrete, reproducible fault schedule for one replay: a time-sorted
+/// event list plus the carried transient-error stream.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Time-sorted fault events (stable order: `(at, replica, kind)`).
+    pub faults: Vec<TimedFault>,
+    /// Per-batch transient error probability (consumed at completion).
+    pub error_prob: f64,
+    /// Service-time multiplier during straggle windows.
+    pub straggle_mult: f64,
+    /// Error stream, forked from the fault stream at generation time.
+    pub(crate) error_rng: Rng,
+}
+
+impl FaultPlan {
+    /// An empty plan: no events, no errors. Replays given an empty plan
+    /// are bit-identical to the fault-free path.
+    pub fn empty() -> Self {
+        FaultPlan {
+            faults: Vec::new(),
+            error_prob: 0.0,
+            straggle_mult: 1.0,
+            error_rng: Rng::new(FAULT_STREAM),
+        }
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.error_prob == 0.0
+    }
+
+    /// Expand `spec` into a concrete schedule for `replicas` replicas
+    /// over `[0, horizon)`.
+    ///
+    /// The RNG stream is `seed ^ FAULT_STREAM`, independent of the
+    /// arrival stream built from the same `seed`; each replica forks a
+    /// child stream so adding a replica never perturbs the schedule of
+    /// the others. Crash interarrivals and repair times are exponential
+    /// (memoryless, the classic MTTF/MTTR model); straggle windows
+    /// likewise.
+    pub fn generate(spec: &FaultSpec, seed: u64, replicas: usize, horizon: Time) -> Self {
+        let mut root = Rng::new(seed ^ FAULT_STREAM);
+        let mut faults = Vec::new();
+        let horizon_s = to_seconds(horizon);
+        for replica in 0..replicas as u32 {
+            let mut rng = root.fork();
+            if spec.mttf_s > 0.0 {
+                let mut t = rng.exponential(1.0 / spec.mttf_s);
+                while t < horizon_s {
+                    faults.push(TimedFault {
+                        at: from_seconds(t),
+                        replica,
+                        kind: FaultKind::Crash,
+                    });
+                    if spec.mttr_s <= 0.0 {
+                        break; // stays down for the rest of the window
+                    }
+                    let up = t + rng.exponential(1.0 / spec.mttr_s);
+                    if up >= horizon_s {
+                        break;
+                    }
+                    faults.push(TimedFault {
+                        at: from_seconds(up),
+                        replica,
+                        kind: FaultKind::Restart,
+                    });
+                    t = up + rng.exponential(1.0 / spec.mttf_s);
+                }
+            }
+            if spec.straggle_every_s > 0.0 && spec.straggle_s > 0.0 {
+                let mut t = rng.exponential(1.0 / spec.straggle_every_s);
+                while t < horizon_s {
+                    faults.push(TimedFault {
+                        at: from_seconds(t),
+                        replica,
+                        kind: FaultKind::StraggleStart,
+                    });
+                    let end = t + rng.exponential(1.0 / spec.straggle_s);
+                    if end >= horizon_s {
+                        break;
+                    }
+                    faults.push(TimedFault {
+                        at: from_seconds(end),
+                        replica,
+                        kind: FaultKind::StraggleEnd,
+                    });
+                    t = end + rng.exponential(1.0 / spec.straggle_every_s);
+                }
+            }
+        }
+        faults.sort_by_key(|f| (f.at, f.replica, f.kind));
+        FaultPlan {
+            faults,
+            error_prob: spec.error_prob,
+            straggle_mult: spec.straggle_mult.max(1.0),
+            error_rng: root.fork(),
+        }
+    }
+}
+
+/// Retry budget for batches orphaned by a crash or transient error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum re-dispatch attempts per batch before its requests are
+    /// counted `failed`.
+    pub max_retries: u32,
+    /// Absolute per-request deadline measured from enqueue. A request
+    /// whose deadline has passed is failed instead of retried (and a
+    /// completion past the deadline is failed, never served).
+    /// `Time::MAX` disables the deadline.
+    pub deadline: Time,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, deadline: Time::MAX }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::generator::PoissonTraceIter;
+
+    fn crashy() -> FaultSpec {
+        FaultSpec { mttf_s: 0.05, mttr_s: 0.02, ..FaultSpec::default() }
+    }
+
+    #[test]
+    fn quiet_spec_generates_empty_plan() {
+        let plan = FaultPlan::generate(&FaultSpec::default(), 42, 4, from_seconds(10.0));
+        assert!(plan.is_empty());
+        assert!(FaultSpec::default().is_quiet());
+        assert!(FaultPlan::empty().is_empty());
+    }
+
+    #[test]
+    fn generation_is_deterministic_for_seed() {
+        let spec = FaultSpec { straggle_every_s: 0.1, straggle_s: 0.01, ..crashy() };
+        let h = from_seconds(2.0);
+        let a = FaultPlan::generate(&spec, 7, 3, h);
+        let b = FaultPlan::generate(&spec, 7, 3, h);
+        assert_eq!(a.faults, b.faults);
+        assert!(!a.faults.is_empty(), "2 s window at 50 ms MTTF produced no crashes");
+        let c = FaultPlan::generate(&spec, 8, 3, h);
+        assert_ne!(a.faults, c.faults, "different seeds should differ");
+    }
+
+    #[test]
+    fn events_are_sorted_in_window_and_alternate_per_replica() {
+        let spec = crashy();
+        let h = from_seconds(1.0);
+        let plan = FaultPlan::generate(&spec, 42, 4, h);
+        assert!(plan.faults.windows(2).all(|w| w[0].at <= w[1].at), "not time-sorted");
+        for r in 0..4u32 {
+            let mine: Vec<_> = {
+                let mut v: Vec<_> =
+                    plan.faults.iter().filter(|f| f.replica == r).collect();
+                v.sort_by_key(|f| f.at);
+                v
+            };
+            for (i, f) in mine.iter().enumerate() {
+                assert!(f.at < h, "event past horizon");
+                let want =
+                    if i % 2 == 0 { FaultKind::Crash } else { FaultKind::Restart };
+                assert_eq!(f.kind, want, "replica {r} event {i} out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_mttr_means_one_crash_per_replica() {
+        let spec = FaultSpec { mttf_s: 0.01, mttr_s: 0.0, ..FaultSpec::default() };
+        let plan = FaultPlan::generate(&spec, 1, 8, from_seconds(5.0));
+        for r in 0..8u32 {
+            let n = plan.faults.iter().filter(|f| f.replica == r).count();
+            assert!(n <= 1, "replica {r} crashed {n} times with no restart");
+            assert!(plan
+                .faults
+                .iter()
+                .all(|f| f.kind == FaultKind::Crash));
+        }
+    }
+
+    #[test]
+    fn fault_stream_is_independent_of_arrival_stream() {
+        // The contract behind faults-on determinism: generating a fault
+        // plan from the same seed as the trace must not perturb a single
+        // arrival timestamp (they draw from disjoint xor-derived
+        // streams).
+        let seed = 42;
+        let take = |n: usize| -> Vec<(u64, u32)> {
+            PoissonTraceIter::new(Rng::new(seed), 1000.0, 1.0, "resnet50", 1)
+                .take(n)
+                .map(|r| ((r.arrival_s * 1e12) as u64, r.samples))
+                .collect()
+        };
+        let before = take(200);
+        let _plan = FaultPlan::generate(&crashy(), seed, 4, from_seconds(1.0));
+        let after = take(200);
+        assert_eq!(before, after, "fault generation perturbed the arrival stream");
+    }
+
+    #[test]
+    fn invalid_specs_are_usable_errors() {
+        let bad = FaultSpec { mttf_s: -1.0, ..FaultSpec::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("mttf"));
+        let bad = FaultSpec { error_prob: 1.5, ..FaultSpec::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("probability"));
+        let bad = FaultSpec { straggle_mult: 0.5, ..FaultSpec::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("multiplier"));
+        let bad = FaultSpec { straggle_every_s: 1.0, ..FaultSpec::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("duration"));
+        assert!(crashy().validate().is_ok());
+        assert!(FaultSpec::default().validate().is_ok());
+    }
+}

@@ -9,14 +9,36 @@
 //! snapshots (see [`MetricsSnapshot::bitwise_eq`]).
 //!
 //! The record path is integer-only: latencies arrive as [`Time`]
-//! picoseconds and land in log2-bucketed [`PsHistogram`]s (one
-//! `leading_zeros` per record — no float conversion, no binary search).
-//! Seconds appear exactly once, at [`snapshot`](Metrics::snapshot) time.
+//! picoseconds and land in sub-bucketed log2 [`PsHistogram`]s (one
+//! `leading_zeros` plus a shift per record — no float conversion, no
+//! binary search). Seconds appear exactly once, at
+//! [`snapshot`](Metrics::snapshot) time. Latencies are additionally
+//! attributed to per-model histograms (see [`ModelLatency`]) so SLO
+//! decisions can read a per-model p99 instead of the fleet-wide blur,
+//! and fault runs carry an [`AvailabilityReport`] ledger.
 
 use crate::coordinator::clock::{Clock, WallClock};
 use crate::sim::stats::PsHistogram;
 use crate::sim::{to_seconds, Time, PS_PER_S};
 use std::sync::{Arc, Mutex};
+
+/// Per-model latency summary: one entry per registered model that served
+/// at least one request, indexed by
+/// [`ModelId::index`](crate::coordinator::request::ModelId::index).
+/// SLO-aware shedding reads the per-model p99 — a fleet-wide p99 hides a
+/// saturated minority model behind a healthy majority.
+#[derive(Debug, Clone)]
+pub struct ModelLatency {
+    /// `ModelId` index of the model this row summarizes.
+    pub model: u32,
+    pub requests: u64,
+    /// Exact (true integer sum over this model's requests).
+    pub mean_latency_s: f64,
+    /// Sub-bucket lower edge, within 25% of the true quantile.
+    pub p50_latency_s: f64,
+    /// Sub-bucket lower edge, within 25% of the true quantile.
+    pub p99_latency_s: f64,
+}
 
 /// Snapshot of serving metrics.
 #[derive(Debug, Clone)]
@@ -27,20 +49,80 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     /// Exact (true integer sum over all requests, divided once).
     pub mean_latency_s: f64,
-    /// Lower edge of the log2 latency bucket holding the quantile rank:
-    /// within 2× of the true quantile (the bucket width), in exchange for
-    /// an O(1) integer record path. Means are exact; quantiles are
-    /// order-of-magnitude instruments here.
+    /// Lower edge of the latency sub-bucket holding the quantile rank:
+    /// within 25% of the true quantile (quarter-octave buckets), in
+    /// exchange for an O(1) integer record path. Means are exact.
     pub p50_latency_s: f64,
-    /// See [`p50_latency_s`](MetricsSnapshot::p50_latency_s): within 2×.
+    /// See [`p50_latency_s`](MetricsSnapshot::p50_latency_s): within 25%.
     pub p99_latency_s: f64,
     pub mean_batch_size: f64,
     pub mean_queue_s: f64,
+    /// Per-model latency rows, sorted by model index; empty when no
+    /// request carried a model tag (e.g. the frozen baseline path).
+    pub per_model: Vec<ModelLatency>,
+}
+
+/// Availability ledger for one replay window: what the fault layer did
+/// to the fleet and what the control plane did about it. All zeros (and
+/// availability 1.0) on a fault-free run.
+#[derive(Debug, Clone)]
+pub struct AvailabilityReport {
+    /// Replica crash events that fired inside the window.
+    pub crashes: u64,
+    /// Replica restarts inside the window.
+    pub restarts: u64,
+    /// Batch re-dispatch attempts (crash orphans + transient errors).
+    pub retries: u64,
+    /// Batches that completed with a transient error and were retried.
+    pub transient_errors: u64,
+    /// Per-replica downtime in seconds (crash → restart or window end).
+    pub per_replica_downtime_s: Vec<f64>,
+    /// Fraction of replica-time the fleet was up:
+    /// `1 − Σ downtime / (replicas × window)`.
+    pub availability: f64,
+    /// Goodput fraction: requests served ÷ requests offered.
+    pub goodput: f64,
+}
+
+impl AvailabilityReport {
+    /// The ledger of an undisturbed window: no events, full availability.
+    pub fn perfect(replicas: usize, goodput: f64) -> AvailabilityReport {
+        AvailabilityReport {
+            crashes: 0,
+            restarts: 0,
+            retries: 0,
+            transient_errors: 0,
+            per_replica_downtime_s: vec![0.0; replicas],
+            availability: 1.0,
+            goodput,
+        }
+    }
+
+    /// Exact bitwise equality (`f64` via `to_bits`), mirroring
+    /// [`MetricsSnapshot::bitwise_eq`] for determinism tests.
+    pub fn bitwise_eq(&self, other: &AvailabilityReport) -> bool {
+        self.crashes == other.crashes
+            && self.restarts == other.restarts
+            && self.retries == other.retries
+            && self.transient_errors == other.transient_errors
+            && self.per_replica_downtime_s.len() == other.per_replica_downtime_s.len()
+            && self
+                .per_replica_downtime_s
+                .iter()
+                .zip(&other.per_replica_downtime_s)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.availability.to_bits() == other.availability.to_bits()
+            && self.goodput.to_bits() == other.goodput.to_bits()
+    }
 }
 
 struct Inner {
     latency: PsHistogram,
     queue: PsHistogram,
+    /// Per-model latency histograms, indexed by `ModelId` index; grown
+    /// on demand. Entries for models that never complete stay absent
+    /// from the snapshot.
+    per_model: Vec<PsHistogram>,
     batch_sizes: u64,
     batches: u64,
     requests: u64,
@@ -74,6 +156,7 @@ impl Metrics {
             inner: Mutex::new(Inner {
                 latency: PsHistogram::new(),
                 queue: PsHistogram::new(),
+                per_model: Vec::new(),
                 batch_sizes: 0,
                 batches: 0,
                 requests: 0,
@@ -95,6 +178,45 @@ impl Metrics {
         }
         for &t in total_ps {
             g.latency.record(t);
+        }
+    }
+
+    /// [`record_batch`](Metrics::record_batch), additionally attributing
+    /// the latencies to `model`'s per-model histogram (grown on demand).
+    pub fn record_batch_model(
+        &self,
+        model: u32,
+        size: u32,
+        queue_ps: &[Time],
+        total_ps: &[Time],
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes += size as u64;
+        g.requests += total_ps.len() as u64;
+        for &q in queue_ps {
+            g.queue.record(q);
+        }
+        let idx = model as usize;
+        if g.per_model.len() <= idx {
+            g.per_model.resize_with(idx + 1, PsHistogram::new);
+        }
+        for &t in total_ps {
+            g.latency.record(t);
+            g.per_model[idx].record(t);
+        }
+    }
+
+    /// Current p99 latency of one model in picoseconds (integer — usable
+    /// in SLO compares on the record path without float conversion).
+    /// `None` until the model has completed at least one request.
+    pub fn model_p99_ps(&self, model: u32) -> Option<Time> {
+        let g = self.inner.lock().unwrap();
+        let h = g.per_model.get(model as usize)?;
+        if h.n == 0 {
+            None
+        } else {
+            Some(h.quantile(0.99))
         }
     }
 
@@ -120,6 +242,19 @@ impl Metrics {
                 g.batch_sizes as f64 / g.batches as f64
             },
             mean_queue_s: g.queue.mean_ps() / PS_PER_S,
+            per_model: g
+                .per_model
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| h.n > 0)
+                .map(|(i, h)| ModelLatency {
+                    model: i as u32,
+                    requests: h.n,
+                    mean_latency_s: h.mean_ps() / PS_PER_S,
+                    p50_latency_s: to_seconds(h.quantile(0.5)),
+                    p99_latency_s: to_seconds(h.quantile(0.99)),
+                })
+                .collect(),
         }
     }
 }
@@ -139,6 +274,14 @@ impl MetricsSnapshot {
             && self.p99_latency_s.to_bits() == other.p99_latency_s.to_bits()
             && self.mean_batch_size.to_bits() == other.mean_batch_size.to_bits()
             && self.mean_queue_s.to_bits() == other.mean_queue_s.to_bits()
+            && self.per_model.len() == other.per_model.len()
+            && self.per_model.iter().zip(&other.per_model).all(|(a, b)| {
+                a.model == b.model
+                    && a.requests == b.requests
+                    && a.mean_latency_s.to_bits() == b.mean_latency_s.to_bits()
+                    && a.p50_latency_s.to_bits() == b.p50_latency_s.to_bits()
+                    && a.p99_latency_s.to_bits() == b.p99_latency_s.to_bits()
+            })
     }
 
     pub fn report(&self) -> String {
@@ -216,6 +359,50 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.mean_queue_s, 2e-6, "mean of 1 us and 3 us");
         assert_eq!(s.mean_latency_s, 2e-3, "mean of 1 ms and 3 ms");
+    }
+
+    #[test]
+    fn per_model_histograms_split_the_fleet_blur() {
+        let clock = Arc::new(VirtualClock::new());
+        let m = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        // Model 0 is fast (1 ms), model 2 is slow (100 ms); model 1 never
+        // completes anything and must not appear.
+        m.record_batch_model(0, 2, &[0, 0], &[millis(1), millis(1)]);
+        m.record_batch_model(2, 2, &[0, 0], &[millis(100), millis(100)]);
+        clock.advance_to(crate::sim::from_seconds(1.0));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.per_model.len(), 2, "only models with completions appear");
+        assert_eq!(s.per_model[0].model, 0);
+        assert_eq!(s.per_model[1].model, 2);
+        assert_eq!(s.per_model[0].requests, 2);
+        assert_eq!(s.per_model[0].mean_latency_s, 1e-3, "per-model mean is exact");
+        assert_eq!(s.per_model[1].mean_latency_s, 100e-3);
+        assert!(
+            s.per_model[1].p99_latency_s > 10.0 * s.per_model[0].p99_latency_s,
+            "slow model's tail visible per-model"
+        );
+        // Fleet-wide p99 sees the slow model; per-model p99 of the fast
+        // model does not.
+        assert!(s.p99_latency_s > 50e-3);
+        assert!(s.per_model[0].p99_latency_s < 2e-3);
+        // Integer p99 accessor for the shed path.
+        assert!(m.model_p99_ps(0).unwrap() <= millis(1));
+        assert_eq!(m.model_p99_ps(1), None);
+        assert_eq!(m.model_p99_ps(7), None, "never-seen model is None, not a panic");
+    }
+
+    #[test]
+    fn availability_report_perfect_and_bitwise_eq() {
+        let a = AvailabilityReport::perfect(3, 1.0);
+        assert_eq!(a.crashes, 0);
+        assert_eq!(a.per_replica_downtime_s, vec![0.0; 3]);
+        assert_eq!(a.availability, 1.0);
+        assert!(a.bitwise_eq(&AvailabilityReport::perfect(3, 1.0)));
+        assert!(!a.bitwise_eq(&AvailabilityReport::perfect(2, 1.0)));
+        let mut b = AvailabilityReport::perfect(3, 1.0);
+        b.retries = 1;
+        assert!(!a.bitwise_eq(&b));
     }
 
     #[test]

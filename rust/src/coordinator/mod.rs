@@ -29,6 +29,9 @@
 //! - [`plan`][mod@plan] — the heterogeneous capacity planner: cheapest
 //!   chip fleet (mixed configurations, wafer-economics costs) meeting a
 //!   `(rate, p99)` target, by binary search over deterministic replays.
+//! - [`fault`] — deterministic fault injection: seeded crash/straggle/
+//!   error schedules on an RNG stream independent of the arrival trace,
+//!   plus the retry budget the control plane enforces.
 //! - [`baseline`] — the PR-2 materialized replay, frozen as the
 //!   `serving_replay` bench's comparison row.
 
@@ -36,6 +39,7 @@ pub mod baseline;
 pub mod batcher;
 pub mod capacity;
 pub mod clock;
+pub mod fault;
 pub mod metrics;
 pub mod plan;
 pub mod request;
@@ -43,9 +47,10 @@ pub mod router;
 pub mod server;
 pub mod simserve;
 
-pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued, ShedPolicy};
 pub use capacity::{sweep_capacity, CapacityPoint, GridConfig, TraceShape};
 pub use clock::{Clock, VirtualClock, WallClock};
+pub use fault::{FaultKind, FaultPlan, FaultSpec, RetryPolicy, TimedFault};
 pub use plan::{
     default_catalog, plan, plan_models, ChipClass, ModelShare, Objective, Plan, PlanConfig,
     PlanTarget, PowerModel, SearchStrategy,

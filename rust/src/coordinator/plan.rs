@@ -38,8 +38,8 @@
 //! bit-reproducible virtual-time replay of a seeded trace, so two runs of
 //! [`plan`] return identical fleets, costs and reports (pinned by test).
 //! Feasibility is assumed monotone in fleet growth (more chips never hurt
-//! p99). p99 comes from the integer-ps histogram and is a log2-bucket
-//! lower edge (within 2× — see
+//! p99). p99 comes from the integer-ps histogram and is a sub-bucket
+//! lower edge (within 25% — see
 //! [`MetricsSnapshot`](crate::coordinator::metrics::MetricsSnapshot)):
 //! the planner compares that instrument against the target, which is
 //! exactly what the capacity grids report too.
@@ -64,6 +64,7 @@
 use crate::chip::sunrise::{SunriseChip, SunriseConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::capacity::TraceShape;
+use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
 use crate::coordinator::router::Policy;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
 use crate::scaling::cost::hitoc_stack_cost;
@@ -213,6 +214,18 @@ pub struct PlanTarget {
     /// Empty ⇒ all traffic targets the planner's single model, exactly as
     /// before the mix existed (byte-identical plans).
     pub mix: Vec<ModelShare>,
+    /// Statistical fault model every feasibility probe must survive
+    /// (quiet by default — byte-identical plans). A non-quiet spec makes
+    /// the planner price redundancy: a fleet is only feasible if it
+    /// still meets the target while replicas crash, restart and straggle
+    /// per the spec, which typically buys an N+1 (or larger) fleet.
+    pub faults: FaultSpec,
+    /// Retry budget/deadline applied by faulted probes.
+    pub retry: RetryPolicy,
+    /// Minimum acceptable availability (fraction of replica-time up) for
+    /// a faulted probe; `0.0` (default) disables the bound. Fault-free
+    /// probes always measure 1.0.
+    pub min_availability: f64,
 }
 
 impl Default for PlanTarget {
@@ -224,6 +237,9 @@ impl Default for PlanTarget {
             seed: 42,
             shape: TraceShape::Poisson,
             mix: Vec::new(),
+            faults: FaultSpec::default(),
+            retry: RetryPolicy::default(),
+            min_availability: 0.0,
         }
     }
 }
@@ -422,6 +438,12 @@ impl<'a> Planner<'a> {
             target.duration_s
         );
         target.shape.validate()?;
+        target.faults.validate()?;
+        crate::ensure!(
+            (0.0..=1.0).contains(&target.min_availability),
+            "plan min_availability {} is not a fraction in [0, 1]",
+            target.min_availability
+        );
         crate::ensure!(config.max_replicas >= 1, "plan max_replicas must be >= 1");
         crate::ensure!(config.batcher.max_batch >= 1, "plan max_batch must be >= 1");
         if let Objective::CapexPlusEnergy { horizon_years, usd_per_kwh, .. } = config.objective {
@@ -483,6 +505,7 @@ impl<'a> Planner<'a> {
             batcher: config.batcher,
             routing: config.routing,
             queue_capacity: config.queue_capacity,
+            shed: None,
         };
         let mut server = SimServer::new(SunriseChip::new(catalog[0].config.clone()), serve);
         for class in &catalog[1..] {
@@ -517,12 +540,35 @@ impl<'a> Planner<'a> {
         // A one-share mix degenerates to exactly the single-model stream
         // (same RNG draws), so single-model plans stay byte-identical.
         let trace = t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
-        let report = self.server.replay_stream_mix(trace, &mix);
+        // Quiet fault specs take the exact fault-free replay (no plan,
+        // no extra events): pre-fault plans stay byte-identical. A live
+        // spec expands deterministically from (seed, fleet size, window),
+        // so a faulted probe is still a pure function of the candidate.
+        let report = if t.faults.is_quiet() {
+            self.server.replay_stream_mix(trace, &mix)
+        } else {
+            let plan = FaultPlan::generate(
+                &t.faults,
+                t.seed,
+                mix.len(),
+                crate::sim::from_seconds(t.duration_s),
+            );
+            self.server.replay_stream_faulted(trace, &mix, &plan, &t.retry)
+        };
         // `offered > 0` guards the vacuous case: an empty replay has
-        // p99 = 0 and would otherwise "meet" any target untested.
+        // p99 = 0 and would otherwise "meet" any target untested. Under
+        // faults a feasible fleet must also lose nothing to the chaos —
+        // no failed/shed requests, nothing stranded at the horizon — and
+        // clear the availability floor; all of those are trivially true
+        // on a fault-free probe, so quiet verdicts are unchanged.
         let meets_target = report.offered > 0
             && report.dropped == 0
             && report.snapshot.errors == 0
+            && report.failed == 0
+            && report.shed == 0
+            && report.queued_at_end == 0
+            && report.in_flight_at_end == 0
+            && report.availability.availability >= self.target.min_availability
             && report.snapshot.p99_latency_s <= self.target.p99_s;
         let cost_usd = self.capex(counts);
         let power_w = self.rated_power_w(counts);
@@ -1109,6 +1155,85 @@ mod tests {
                 c.counts
             );
         }
+    }
+
+    #[test]
+    fn fault_axis_buys_a_strictly_larger_redundant_fleet() {
+        // Crash/restart chaos (~23% downtime per replica: 100 ms MTTF,
+        // 30 ms MTTR) breaks the minimal fault-free fleet — during any
+        // outage the survivors fall below the offered rate and the
+        // backlog blows the p99 — so the planner must buy redundancy.
+        let net = resnet50();
+        let catalog = default_catalog();
+        let plain_target = quick_target(2500.0, 25.0);
+        let config = PlanConfig::default();
+        let plain =
+            plan(&net, "resnet50", &catalog, &plain_target, &config).expect("meetable");
+        let faulted_target = PlanTarget {
+            faults: FaultSpec { mttf_s: 0.1, mttr_s: 0.03, ..FaultSpec::default() },
+            retry: RetryPolicy { max_retries: 5, ..RetryPolicy::default() },
+            ..plain_target.clone()
+        };
+        let faulted = plan(&net, "resnet50", &catalog, &faulted_target, &config)
+            .expect("chaos target should be meetable with redundancy");
+        // The fault-free winner does not survive the chaos...
+        let planner =
+            Planner::new(&net, "resnet50", &catalog, &faulted_target, &config).unwrap();
+        let reprobe = planner.evaluate(&plain.best.counts);
+        assert!(
+            !reprobe.meets_target,
+            "the minimal fault-free fleet {:?} also met the target under faults",
+            plain.best.counts
+        );
+        // ...so the chaos pick is a strictly larger/costlier fleet.
+        assert!(faulted.best.meets_target);
+        assert!(
+            faulted.best.cost_usd >= plain.best.cost_usd,
+            "chaos-feasible fleets are a subset: cost cannot shrink"
+        );
+        assert!(
+            faulted.best.replicas > plain.best.replicas
+                || faulted.best.cost_usd > plain.best.cost_usd,
+            "faults bought no redundancy: {:?} (${}) vs fault-free {:?} (${})",
+            faulted.best.counts,
+            faulted.best.cost_usd,
+            plain.best.counts,
+            plain.best.cost_usd
+        );
+        // The chaos actually happened on the winning probe, and the
+        // winner lost nothing to it.
+        assert!(faulted.best.report.availability.crashes > 0, "no crash landed");
+        assert!(faulted.best.report.availability.availability < 1.0);
+        assert_eq!(faulted.best.report.failed, 0);
+        assert_eq!(faulted.best.report.queued_at_end, 0);
+        // Faulted plans are deterministic, like everything else here.
+        let again = plan(&net, "resnet50", &catalog, &faulted_target, &config)
+            .expect("meetable");
+        assert_eq!(faulted.best.counts, again.best.counts);
+        assert!(faulted.best.report.snapshot.bitwise_eq(&again.best.report.snapshot));
+        assert!(faulted
+            .best
+            .report
+            .availability
+            .bitwise_eq(&again.best.report.availability));
+    }
+
+    #[test]
+    fn min_availability_bound_is_enforced_and_validated() {
+        let net = resnet50();
+        let catalog = default_catalog();
+        // An out-of-range bound is a usable error.
+        let bad = PlanTarget { min_availability: 1.5, ..quick_target(500.0, 50.0) };
+        let err = plan(&net, "resnet50", &catalog, &bad, &PlanConfig::default())
+            .expect_err("bound > 1 accepted")
+            .to_string();
+        assert!(err.contains("min_availability"), "error does not name the bound: {err}");
+        // A fault-free probe measures availability 1.0, so even a 1.0
+        // floor changes nothing.
+        let strict = PlanTarget { min_availability: 1.0, ..quick_target(500.0, 50.0) };
+        let p = plan(&net, "resnet50", &catalog, &strict, &PlanConfig::default())
+            .expect("fault-free plan with availability floor");
+        assert_eq!(p.best.report.availability.availability, 1.0);
     }
 
     #[test]

@@ -37,6 +37,20 @@ pub enum Policy {
     LeastLoaded,
 }
 
+/// Replica health as the router sees it. Only [`Health::Up`] replicas
+/// receive new work; `Draining` replicas finish what they have but take
+/// nothing new; `Down` replicas are crashed (their in-flight work is the
+/// caller's problem — the serving loop re-dispatches it). With every
+/// replica `Up` the router's choices are bit-identical to the
+/// pre-health-aware router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Health {
+    #[default]
+    Up,
+    Draining,
+    Down,
+}
+
 /// The router: tracks per-replica in-flight work.
 #[derive(Debug)]
 pub struct Router {
@@ -45,6 +59,7 @@ pub struct Router {
     /// Relative replica speeds (arbitrary positive units — only ratios
     /// matter). Uniform for homogeneous pools.
     speed: Vec<u64>,
+    health: Vec<Health>,
     next_rr: usize,
     pub routed: u64,
 }
@@ -65,6 +80,7 @@ impl Router {
         Router {
             policy,
             inflight: vec![0; speeds.len()],
+            health: vec![Health::Up; speeds.len()],
             speed: speeds,
             next_rr: 0,
             routed: 0,
@@ -75,22 +91,64 @@ impl Router {
         self.inflight.len()
     }
 
+    /// Set a replica's health. Routing immediately stops (or resumes)
+    /// sending new work; in-flight accounting is untouched.
+    pub fn set_health(&mut self, replica: usize, health: Health) {
+        self.health[replica] = health;
+    }
+
+    /// A replica's current health.
+    pub fn health(&self, replica: usize) -> Health {
+        self.health[replica]
+    }
+
+    /// Number of replicas currently accepting new work.
+    pub fn n_routable(&self) -> usize {
+        self.health.iter().filter(|&&h| h == Health::Up).count()
+    }
+
+    /// True when at least one replica can take new work. [`route`]
+    /// panics when this is false — callers park work instead.
+    ///
+    /// [`route`]: Router::route
+    pub fn any_routable(&self) -> bool {
+        self.health.iter().any(|&h| h == Health::Up)
+    }
+
     /// Choose a replica for a batch of `weight` work units and mark it
-    /// in-flight.
+    /// in-flight. Only [`Health::Up`] replicas are considered; with the
+    /// whole fleet up the choice is bit-identical to the health-unaware
+    /// router. Panics if no replica is routable (guard with
+    /// [`any_routable`](Router::any_routable)).
     pub fn route(&mut self, weight: u64) -> usize {
         let idx = match self.policy {
             Policy::RoundRobin => {
-                let i = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.inflight.len();
+                let n = self.inflight.len();
+                let mut i = self.next_rr;
+                let mut hops = 0;
+                while self.health[i] != Health::Up {
+                    i = (i + 1) % n;
+                    hops += 1;
+                    assert!(hops <= n, "route() with no replica Up");
+                }
+                self.next_rr = (i + 1) % n;
                 i
             }
             Policy::LeastLoaded => {
-                // argmin of inflight[i]/speed[i]: a/b < c/d iff a*d < c*b
-                // (all non-negative, speeds > 0). Strict `<` keeps the
-                // first minimum, matching `Iterator::min_by_key` on plain
-                // depths when speeds are uniform.
-                let mut best = 0usize;
-                for i in 1..self.inflight.len() {
+                // argmin of inflight[i]/speed[i] over Up replicas:
+                // a/b < c/d iff a*d < c*b (all non-negative, speeds > 0).
+                // Strict `<` keeps the first minimum, matching
+                // `Iterator::min_by_key` on plain depths when speeds are
+                // uniform.
+                let mut best = self
+                    .health
+                    .iter()
+                    .position(|&h| h == Health::Up)
+                    .expect("route() with no replica Up");
+                for i in best + 1..self.inflight.len() {
+                    if self.health[i] != Health::Up {
+                        continue;
+                    }
                     let lhs = self.inflight[i] as u128 * self.speed[best] as u128;
                     let rhs = self.inflight[best] as u128 * self.speed[i] as u128;
                     if lhs < rhs {
@@ -302,6 +360,85 @@ mod tests {
                     let w = g.u64_below("cw", ledger[i]) + 1;
                     plain.complete(i, w);
                     weighted.complete(i, w);
+                    ledger[i] -= w;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn routing_skips_down_and_draining_replicas() {
+        let mut r = Router::new(Policy::RoundRobin, 3);
+        r.set_health(1, Health::Down);
+        assert_eq!(r.route(1), 0);
+        assert_eq!(r.route(1), 2, "round-robin must hop over the downed replica");
+        assert_eq!(r.route(1), 0);
+        let mut ll = Router::new(Policy::LeastLoaded, 3);
+        ll.set_health(0, Health::Draining);
+        assert_eq!(ll.route(1), 1, "least-loaded must skip a draining replica");
+        ll.set_health(0, Health::Up);
+        assert_eq!(ll.route(1), 0, "restored replica takes work again");
+        assert_eq!(ll.n_routable(), 3);
+        assert!(ll.any_routable());
+    }
+
+    #[test]
+    fn down_replica_can_still_complete_inflight_work() {
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        let i = r.route(7);
+        r.set_health(i, Health::Down);
+        r.complete(i, 7); // crash cleanup completes the orphaned work
+        assert_eq!(r.load(i), 0);
+        assert_eq!(r.health(i), Health::Down);
+    }
+
+    #[test]
+    #[should_panic(expected = "no replica Up")]
+    fn route_with_whole_fleet_down_panics() {
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        r.set_health(0, Health::Down);
+        r.set_health(1, Health::Down);
+        assert!(!r.any_routable());
+        r.route(1);
+    }
+
+    /// With every replica `Up`, the health-aware route loop makes exactly
+    /// the choices the pre-health router made — the faults-off
+    /// bit-identity contract at the router layer.
+    #[test]
+    fn property_all_up_matches_health_unaware_routing() {
+        use crate::util::proptest::check;
+        check(0xA11F, 50, |g| {
+            let n = g.usize("replicas", 1, 8);
+            let policy = if g.bool("rr") { Policy::RoundRobin } else { Policy::LeastLoaded };
+            let mut r = Router::new(policy, n);
+            let mut ledger = vec![0u64; n];
+            let mut rr_ref = 0usize;
+            for _ in 0..g.usize("ops", 1, 120) {
+                if g.bool("issue") || ledger.iter().all(|&w| w == 0) {
+                    let w = g.u64_below("w", 16) + 1;
+                    let idx = r.route(w);
+                    let want = match policy {
+                        Policy::RoundRobin => {
+                            let i = rr_ref;
+                            rr_ref = (rr_ref + 1) % n;
+                            i
+                        }
+                        Policy::LeastLoaded => {
+                            (0..n).min_by_key(|&i| (ledger[i], i)).unwrap()
+                        }
+                    };
+                    crate::prop_assert!(
+                        idx == want,
+                        "all-Up routing diverged: got {idx}, reference {want}"
+                    );
+                    ledger[idx] += w;
+                } else {
+                    let busy: Vec<usize> = (0..n).filter(|&i| ledger[i] > 0).collect();
+                    let &i = g.pick("replica", &busy);
+                    let w = g.u64_below("cw", ledger[i]) + 1;
+                    r.complete(i, w);
                     ledger[i] -= w;
                 }
             }

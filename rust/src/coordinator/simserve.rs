@@ -76,13 +76,15 @@
 //! ```
 
 use crate::chip::sunrise::SunriseChip;
-use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, ShedPolicy};
 use crate::coordinator::clock::{Clock, VirtualClock};
-use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::fault::{FaultKind, FaultPlan, RetryPolicy, TimedFault};
+use crate::coordinator::metrics::{AvailabilityReport, Metrics, MetricsSnapshot};
 use crate::coordinator::request::{ModelId, ModelRegistry};
-use crate::coordinator::router::{Policy, Router};
+use crate::coordinator::router::{Health, Policy, Router};
 use crate::sim::engine::{Engine, Scheduler, World};
 use crate::sim::{from_seconds, to_seconds, Time};
+use crate::util::rng::Rng;
 use crate::workloads::generator::TraceRequest;
 use crate::workloads::Network;
 use std::collections::VecDeque;
@@ -99,6 +101,10 @@ pub struct SimServeConfig {
     /// Admission bound on queued (not yet dispatched) requests; arrivals
     /// beyond it are dropped and counted.
     pub queue_capacity: usize,
+    /// Optional admission shedding (depth and/or per-model p99 SLO).
+    /// `None` (the default) admits everything up to `queue_capacity`,
+    /// exactly the pre-shedding behavior.
+    pub shed: Option<ShedPolicy>,
 }
 
 impl Default for SimServeConfig {
@@ -107,6 +113,7 @@ impl Default for SimServeConfig {
             batcher: BatcherConfig::default(),
             routing: Policy::LeastLoaded,
             queue_capacity: 1024,
+            shed: None,
         }
     }
 }
@@ -116,14 +123,29 @@ impl Default for SimServeConfig {
 pub struct SimServeReport {
     /// The standard serving metrics, on simulated time. Requests for
     /// unregistered models are counted in `snapshot.errors` (mirroring
-    /// the threaded server), so the conservation identity is
-    /// `served + dropped + snapshot.errors == offered`.
+    /// the threaded server). The full conservation identity is
+    /// `served + dropped + shed + failed + snapshot.errors
+    ///  + queued_at_end + in_flight_at_end == offered`;
+    /// on a fault-free, shed-free replay every new term is 0 and it
+    /// reduces to the PR-5 `served + dropped + errors == offered`.
     pub snapshot: MetricsSnapshot,
     /// Samples the trace offered (streamed traces are not materialized,
     /// so the replay itself is the count's source of truth).
     pub offered: u64,
     pub served: u64,
     pub dropped: u64,
+    /// Requests refused by the admission [`ShedPolicy`] (distinct from
+    /// `dropped`, the hard `queue_capacity` bound).
+    pub shed: u64,
+    /// Requests that exhausted their retry budget or absolute deadline
+    /// after crashes/transient errors.
+    pub failed: u64,
+    /// Requests still queued (batcher + parked crash orphans) when the
+    /// replay window closed — explicit, not silently vanished.
+    pub queued_at_end: u64,
+    /// Requests dispatched but not completed at window end (running or
+    /// waiting on a replica).
+    pub in_flight_at_end: u64,
     /// Batches dispatched because they filled / because the deadline hit.
     pub full_batches: u64,
     pub timeout_batches: u64,
@@ -146,6 +168,9 @@ pub struct SimServeReport {
     /// window). Empty/zeroed on the frozen PR-2 baseline path, which
     /// predates energy accounting.
     pub energy: EnergyReport,
+    /// Fault/retry/downtime ledger; all zeros (availability 1.0) on a
+    /// fault-free replay.
+    pub availability: AvailabilityReport,
 }
 
 /// Measured busy-time/energy decomposition of one replay. "Measured"
@@ -391,6 +416,36 @@ impl SimServer {
                 samples: r.samples,
             }),
             mix,
+            None,
+        )
+    }
+
+    /// [`replay_mix`](SimServer::replay_mix) under a concrete
+    /// [`FaultPlan`]: crash/restart/straggle events are pre-scheduled on
+    /// the wheel, routing skips `Down` replicas, orphaned batches are
+    /// re-dispatched under `retry`'s budget and absolute deadline, and
+    /// the report carries the availability ledger. With an
+    /// [empty](FaultPlan::is_empty) plan and the default policy this is
+    /// **bit-identical** to [`replay_mix`](SimServer::replay_mix)
+    /// (pinned by differential test): the fault machinery draws from its
+    /// own RNG stream and injects no events, so the arrival replay is
+    /// byte-for-byte the PR-5 path.
+    pub fn replay_faulted(
+        &self,
+        trace: &[TraceRequest],
+        mix: &[u32],
+        faults: &FaultPlan,
+        retry: &RetryPolicy,
+    ) -> SimServeReport {
+        let mut resolve = self.resolver();
+        self.replay_core(
+            trace.iter().map(move |r| StreamedArrival {
+                at: from_seconds(r.arrival_s),
+                model: resolve(&r.model),
+                samples: r.samples,
+            }),
+            mix,
+            Some((faults, retry)),
         )
     }
 
@@ -429,6 +484,33 @@ impl SimServer {
                 samples: r.samples,
             }),
             mix,
+            None,
+        )
+    }
+
+    /// Streaming form of [`replay_faulted`](SimServer::replay_faulted):
+    /// chaos over an O(1)-memory trace stream. Streaming == materialized
+    /// still holds under faults (pinned by test) because fault events
+    /// are positioned by the plan, not by how arrivals are delivered.
+    pub fn replay_stream_faulted<I>(
+        &self,
+        trace: I,
+        mix: &[u32],
+        faults: &FaultPlan,
+        retry: &RetryPolicy,
+    ) -> SimServeReport
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        let mut resolve = self.resolver();
+        self.replay_core(
+            trace.into_iter().map(move |r| StreamedArrival {
+                at: from_seconds(r.arrival_s),
+                model: resolve(&r.model),
+                samples: r.samples,
+            }),
+            mix,
+            Some((faults, retry)),
         )
     }
 
@@ -453,7 +535,12 @@ impl SimServer {
         }
     }
 
-    fn replay_core<I>(&self, mut arrivals: I, mix: &[u32]) -> SimServeReport
+    fn replay_core<I>(
+        &self,
+        mut arrivals: I,
+        mix: &[u32],
+        faults: Option<(&FaultPlan, &RetryPolicy)>,
+    ) -> SimServeReport
     where
         I: Iterator<Item = StreamedArrival>,
     {
@@ -470,6 +557,19 @@ impl SimServer {
         let clock = Arc::new(VirtualClock::new());
         let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
         let pending = arrivals.next();
+        // Fault state: with no plan (or an empty one) every guard below
+        // stays cold and the replay is bit-identical to the fault-free
+        // path — no extra events, no RNG draws, no health transitions.
+        let (fault_events, error_prob, straggle_mult, error_rng, retry) = match faults {
+            Some((plan, retry)) => (
+                plan.faults.as_slice(),
+                plan.error_prob,
+                plan.straggle_mult,
+                plan.error_rng.clone(),
+                *retry,
+            ),
+            None => (&[][..], 0.0, 1.0, Rng::new(0), RetryPolicy::default()),
+        };
         let mut world = ServeWorld {
             config: &self.config,
             service: &self.service,
@@ -484,9 +584,25 @@ impl SimServer {
             busy: vec![false; replicas],
             waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
             running: (0..replicas).map(|_| None).collect(),
+            faults: fault_events,
+            retry,
+            error_prob,
+            straggle_mult,
+            error_rng,
+            epoch: vec![0; replicas],
+            straggling: vec![false; replicas],
+            down_since: vec![None; replicas],
+            down_ps: vec![0; replicas],
+            parked: VecDeque::new(),
             offered: 0,
             served: 0,
             dropped: 0,
+            shed: 0,
+            failed: 0,
+            retries: 0,
+            crashes: 0,
+            restarts: 0,
+            transient_errors: 0,
             max_depth: 0,
             max_queue_wait: 0,
             per_replica: vec![0; replicas],
@@ -498,6 +614,9 @@ impl SimServer {
             timeouts: Vec::new(),
         };
         let mut engine: Engine<Ev> = Engine::new();
+        for (i, f) in world.faults.iter().enumerate() {
+            engine.schedule(f.at, Ev::Fault { idx: i as u32 });
+        }
         if let Some(first) = &world.pending {
             engine.schedule(first.at, Ev::NextArrival);
             world.armed_at = Some(first.at);
@@ -552,11 +671,54 @@ impl SimServer {
         );
         let dynamic_j: f64 = per_class_dynamic_j.iter().sum();
         let avg_power_w = dynamic_j / sim_duration_s + static_w;
+
+        // Residual work at window close: with faults a batch can sit
+        // parked (fleet fully down) or queued behind a dead replica when
+        // the event wheel drains, so the conservation identity surfaces
+        // it explicitly instead of letting it vanish. Both sums are 0 on
+        // a fault-free replay (the engine drains everything).
+        let queued_at_end = world.batcher.total_depth() as u64
+            + world.parked.iter().map(|(b, _)| b.len() as u64).sum::<u64>();
+        let in_flight_at_end = world
+            .running
+            .iter()
+            .flatten()
+            .map(|(b, _, _)| b.len() as u64)
+            .sum::<u64>()
+            + world
+                .waiting
+                .iter()
+                .flat_map(|q| q.iter())
+                .map(|(b, _, _)| b.len() as u64)
+                .sum::<u64>();
+
+        // Close any still-open down windows at the horizon, then fold the
+        // per-replica integer-ps downtime into one availability fraction.
+        let mut down_ps = world.down_ps;
+        for (r, since) in world.down_since.iter().enumerate() {
+            if let Some(s) = since {
+                down_ps[r] += end.saturating_sub(*s);
+            }
+        }
+        let total_down: u128 = down_ps.iter().map(|&d| d as u128).sum();
+        let availability = AvailabilityReport {
+            crashes: world.crashes,
+            restarts: world.restarts,
+            retries: world.retries,
+            transient_errors: world.transient_errors,
+            per_replica_downtime_s: down_ps.iter().map(|&d| to_seconds(d)).collect(),
+            availability: 1.0 - total_down as f64 / (end as f64 * replicas as f64),
+            goodput: world.served as f64 / world.offered.max(1) as f64,
+        };
         SimServeReport {
             snapshot: world.metrics.snapshot(),
             offered: world.offered,
             served: world.served,
             dropped: world.dropped,
+            shed: world.shed,
+            failed: world.failed,
+            queued_at_end,
+            in_flight_at_end,
             full_batches: world.batcher.full_batches,
             timeout_batches: world.batcher.timeout_batches,
             max_queue_depth: world.max_depth,
@@ -575,6 +737,7 @@ impl SimServer {
                 avg_power_w,
                 energy_j: dynamic_j + static_w * sim_duration_s,
             },
+            availability,
         }
     }
 }
@@ -587,8 +750,14 @@ enum Ev {
     NextArrival,
     /// Batcher deadline poll (scheduled per new queue head).
     FlushCheck,
-    /// The batch running on `replica` completes.
-    Done { replica: u32 },
+    /// The batch running on `replica` completes. `epoch` guards against
+    /// completions scheduled before a crash: the wheel cannot cancel, so
+    /// a crash bumps the replica's epoch and the stale `Done` becomes a
+    /// no-op (the batch was already re-dispatched or failed).
+    Done { replica: u32, epoch: u32 },
+    /// The `idx`-th entry of the fault plan fires (crash / restart /
+    /// straggle edge). Pre-scheduled at init; none exist without a plan.
+    Fault { idx: u32 },
 }
 
 /// The sim path queues bare enqueue stamps (the only per-request field the
@@ -615,14 +784,44 @@ struct ServeWorld<'a, I> {
     router: Router,
     busy: Vec<bool>,
     /// Dispatched batches waiting per replica (the worker channel), each
-    /// with its service time resolved once at dispatch.
-    waiting: Vec<VecDeque<(SimBatch, Time)>>,
+    /// with its service time resolved once at dispatch and the attempt
+    /// count it rides on (0 for first dispatch).
+    waiting: Vec<VecDeque<(SimBatch, Time, u32)>>,
     /// The batch each replica is currently executing, with its service
-    /// time.
-    running: Vec<Option<(SimBatch, Time)>>,
+    /// time and attempt count.
+    running: Vec<Option<(SimBatch, Time, u32)>>,
+    /// The fault schedule (empty slice without a plan); pre-scheduled as
+    /// `Ev::Fault` events at init, indexed back through this slice.
+    faults: &'a [TimedFault],
+    retry: RetryPolicy,
+    /// Per-batch transient-error probability. 0.0 without a plan, and
+    /// the guard on it means `error_rng` is then never drawn.
+    error_prob: f64,
+    /// Service-time multiplier applied while a replica is inside a
+    /// straggle window (1.0 without a plan; the f64 op only runs while
+    /// `straggling[r]`, keeping the quiet path integer-only).
+    straggle_mult: f64,
+    error_rng: Rng,
+    /// Per-replica completion epoch, bumped on crash so `Done` events
+    /// scheduled before the crash are recognized as stale.
+    epoch: Vec<u32>,
+    straggling: Vec<bool>,
+    /// When each currently-down replica crashed (None = up).
+    down_since: Vec<Option<Time>>,
+    /// Accumulated downtime per replica over closed down-windows.
+    down_ps: Vec<Time>,
+    /// Batches with nowhere routable to go (whole fleet down), re-placed
+    /// on the next restart.
+    parked: VecDeque<(SimBatch, u32)>,
     offered: u64,
     served: u64,
     dropped: u64,
+    shed: u64,
+    failed: u64,
+    retries: u64,
+    crashes: u64,
+    restarts: u64,
+    transient_errors: u64,
     max_depth: usize,
     max_queue_wait: Time,
     per_replica: Vec<u64>,
@@ -676,6 +875,20 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
             return;
         };
         for _ in 0..a.samples {
+            if let Some(policy) = &self.config.shed {
+                // SLO-aware admission: refuse work the backlog (or this
+                // model's observed p99) says we can't serve in time —
+                // cheaper to reject at the door than to time out later.
+                let p99 = if policy.p99_slo != Time::MAX {
+                    self.metrics.model_p99_ps(model.index() as u32)
+                } else {
+                    None
+                };
+                if policy.should_shed(self.batcher.total_depth(), p99) {
+                    self.shed += 1;
+                    continue;
+                }
+            }
             if self.batcher.total_depth() >= self.config.queue_capacity {
                 self.dropped += 1;
                 continue;
@@ -714,23 +927,85 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
         for &enq in &batch.requests {
             self.max_queue_wait = self.max_queue_wait.max(batch.formed_at.saturating_sub(enq));
         }
+        self.place(batch, 0, sch);
+    }
+
+    /// Route `batch` to a live replica (or park it when nothing is
+    /// routable) and start or queue it there. `tries` rides along so a
+    /// re-dispatched batch keeps its retry count.
+    fn place(&mut self, batch: SimBatch, tries: u32, sch: &mut Scheduler<Ev>) {
+        if !self.router.any_routable() {
+            self.parked.push_back((batch, tries));
+            return;
+        }
         // Route first, then resolve the service time from the routed
         // replica's class: on a mixed fleet the batch's cost depends on
         // which replica runs it.
         let replica = self.router.route(batch.len() as u64);
-        let table = &self.service[self.mix[replica] as usize][batch.model.index()];
-        let service = table[batch.len().min(table.len() - 1)];
+        let service = self.service_for(replica, &batch);
         if self.busy[replica] {
-            self.waiting[replica].push_back((batch, service));
+            self.waiting[replica].push_back((batch, service, tries));
         } else {
-            self.start(replica, batch, service, sch);
+            self.start(replica, batch, service, tries, sch);
         }
     }
 
-    fn start(&mut self, replica: usize, batch: SimBatch, service: Time, sch: &mut Scheduler<Ev>) {
+    /// Service time for `batch` on `replica`: class/model table lookup,
+    /// inflated while the replica is inside a straggle window.
+    fn service_for(&self, replica: usize, batch: &SimBatch) -> Time {
+        let table = &self.service[self.mix[replica] as usize][batch.model.index()];
+        let service = table[batch.len().min(table.len() - 1)];
+        if self.straggling[replica] {
+            (service as f64 * self.straggle_mult).round() as Time
+        } else {
+            service
+        }
+    }
+
+    fn start(
+        &mut self,
+        replica: usize,
+        batch: SimBatch,
+        service: Time,
+        tries: u32,
+        sch: &mut Scheduler<Ev>,
+    ) {
         self.busy[replica] = true;
-        self.running[replica] = Some((batch, service));
-        sch.after(service, Ev::Done { replica: replica as u32 });
+        self.running[replica] = Some((batch, service, tries));
+        sch.after(
+            service,
+            Ev::Done { replica: replica as u32, epoch: self.epoch[replica] },
+        );
+    }
+
+    /// A batch whose attempt died (replica crash or transient execution
+    /// error): spend one retry, drop members past the absolute deadline,
+    /// and re-place the rest. Budget or deadline exhausted ⇒ `failed`.
+    fn requeue_or_fail(
+        &mut self,
+        mut batch: SimBatch,
+        tries: u32,
+        now: Time,
+        sch: &mut Scheduler<Ev>,
+    ) {
+        let next = tries + 1;
+        if next > self.retry.max_retries {
+            self.failed += batch.len() as u64;
+            self.batcher.recycle(batch.requests);
+            return;
+        }
+        self.retries += 1;
+        if self.retry.deadline != Time::MAX {
+            let deadline = self.retry.deadline;
+            let before = batch.len();
+            batch.requests.retain(|&enq| now <= enq.saturating_add(deadline));
+            self.failed += (before - batch.len()) as u64;
+            if batch.requests.is_empty() {
+                self.batcher.recycle(batch.requests);
+                return;
+            }
+        }
+        self.place(batch, next, sch);
     }
 }
 
@@ -752,32 +1027,114 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                 }
                 self.timeouts = timeouts;
             }
-            Ev::Done { replica } => {
+            Ev::Done { replica, epoch } => {
                 let rep = replica as usize;
-                let (batch, service) =
+                if epoch != self.epoch[rep] {
+                    // Scheduled before a crash on this replica; the
+                    // batch it named was already re-dispatched or failed.
+                    return;
+                }
+                let (batch, service, tries) =
                     self.running[rep].take().expect("completion on an idle replica");
                 // Bill busy time and energy now that the work has
                 // actually finished inside the window ([now - service,
-                // now] ⊆ [0, last completion] by construction).
+                // now] ⊆ [0, last completion] by construction). A batch
+                // that then errors transiently still burned this time.
                 self.busy_ps[rep] += service;
                 let e_table = &self.energy[self.mix[rep] as usize][batch.model.index()];
                 self.dynamic_j[rep] += e_table[batch.len().min(e_table.len() - 1)];
-                self.queue_ps.clear();
-                self.total_ps.clear();
-                for &enq in &batch.requests {
-                    self.queue_ps.push(batch.formed_at.saturating_sub(enq));
-                    self.total_ps.push(now.saturating_sub(enq));
-                }
-                self.metrics
-                    .record_batch(batch.len() as u32, &self.queue_ps, &self.total_ps);
-                self.served += batch.len() as u64;
-                self.per_replica[rep] += batch.len() as u64;
                 self.router.complete(rep, batch.len() as u64);
                 self.busy[rep] = false;
                 self.last_done = self.last_done.max(now);
-                self.batcher.recycle(batch.requests);
-                if let Some((next, service)) = self.waiting[rep].pop_front() {
-                    self.start(rep, next, service, sch);
+                if self.error_prob > 0.0 && self.error_rng.chance(self.error_prob) {
+                    // Transient execution error: the attempt produced
+                    // nothing. Free the replica for its queue first, then
+                    // re-place (possibly right back here, now at the tail).
+                    self.transient_errors += 1;
+                    if let Some((next, svc, t)) = self.waiting[rep].pop_front() {
+                        self.start(rep, next, svc, t, sch);
+                    }
+                    self.requeue_or_fail(batch, tries, now, sch);
+                } else {
+                    self.queue_ps.clear();
+                    self.total_ps.clear();
+                    let mut expired = 0u64;
+                    for &enq in &batch.requests {
+                        if self.retry.deadline != Time::MAX
+                            && now > enq.saturating_add(self.retry.deadline)
+                        {
+                            // Completed, but past its absolute deadline
+                            // (retries pushed it over): the client is
+                            // gone, so it counts as failed, not served.
+                            expired += 1;
+                            continue;
+                        }
+                        self.queue_ps.push(batch.formed_at.saturating_sub(enq));
+                        self.total_ps.push(now.saturating_sub(enq));
+                    }
+                    self.metrics.record_batch_model(
+                        batch.model.index() as u32,
+                        batch.len() as u32,
+                        &self.queue_ps,
+                        &self.total_ps,
+                    );
+                    self.failed += expired;
+                    self.served += batch.len() as u64 - expired;
+                    self.per_replica[rep] += batch.len() as u64 - expired;
+                    self.batcher.recycle(batch.requests);
+                    if let Some((next, svc, t)) = self.waiting[rep].pop_front() {
+                        self.start(rep, next, svc, t, sch);
+                    }
+                }
+            }
+            Ev::Fault { idx } => {
+                let fault = self.faults[idx as usize];
+                let rep = fault.replica as usize;
+                match fault.kind {
+                    FaultKind::Crash => {
+                        if self.down_since[rep].is_some() {
+                            return; // already down
+                        }
+                        self.crashes += 1;
+                        self.router.set_health(rep, Health::Down);
+                        self.epoch[rep] = self.epoch[rep].wrapping_add(1);
+                        self.down_since[rep] = Some(now);
+                        // In-flight and channel-queued work dies with the
+                        // replica: free its router ledger and retry each
+                        // batch across the survivors. Busy time is billed
+                        // at completion, so the killed attempt costs the
+                        // energy/utilization ledgers nothing.
+                        if let Some((batch, _svc, tries)) = self.running[rep].take() {
+                            self.busy[rep] = false;
+                            self.router.complete(rep, batch.len() as u64);
+                            self.requeue_or_fail(batch, tries, now, sch);
+                        }
+                        let mut q = std::mem::take(&mut self.waiting[rep]);
+                        for (batch, _svc, tries) in q.drain(..) {
+                            self.router.complete(rep, batch.len() as u64);
+                            self.requeue_or_fail(batch, tries, now, sch);
+                        }
+                        self.waiting[rep] = q;
+                    }
+                    FaultKind::Restart => {
+                        if self.down_since[rep].is_none() {
+                            return; // no matching crash landed
+                        }
+                        self.restarts += 1;
+                        self.router.set_health(rep, Health::Up);
+                        let since = self.down_since[rep].take().expect("checked above");
+                        self.down_ps[rep] += now.saturating_sub(since);
+                        // Re-place work that had nowhere to go while the
+                        // whole fleet was down (no retry spent: parking
+                        // is the control plane's wait, not an attempt).
+                        let mut parked = std::mem::take(&mut self.parked);
+                        for (batch, tries) in parked.drain(..) {
+                            self.place(batch, tries, sch);
+                        }
+                        self.parked = parked;
+                    }
+                    FaultKind::StraggleStart => self.straggling[rep] = true,
+                    FaultKind::StraggleEnd => self.straggling[rep] = false,
                 }
             }
         }
@@ -798,6 +1155,7 @@ mod tests {
             batcher: BatcherConfig { max_batch, max_wait },
             routing: Policy::LeastLoaded,
             queue_capacity,
+            shed: None,
         };
         let mut s = SimServer::new(SunriseChip::silicon(), config);
         s.register("resnet50", &resnet50());
@@ -938,6 +1296,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
             routing: Policy::LeastLoaded,
             queue_capacity: 10_000,
+            shed: None,
         };
         let mut s = SimServer::new(SunriseChip::silicon(), config);
         let big = s.add_chip_class(SunriseChip::new(doubled_config()));
@@ -1098,6 +1457,7 @@ mod tests {
             // the fast one coasts — exactly the masking scenario.
             routing: Policy::RoundRobin,
             queue_capacity: 1_000_000,
+            shed: None,
         };
         let mut s = SimServer::new(SunriseChip::silicon(), config);
         s.register("resnet50", &resnet50());
@@ -1152,6 +1512,251 @@ mod tests {
             (measured_per_image - per_image_j).abs() / per_image_j < 0.1,
             "measured {measured_per_image} J/img vs schedule {per_image_j} J/img"
         );
+    }
+
+    // ---- fault injection, retry and shedding ----
+
+    use crate::coordinator::fault::FaultSpec;
+
+    /// The extended conservation identity's two sides.
+    fn conservation(r: &SimServeReport) -> (u64, u64) {
+        let accounted = r.served
+            + r.dropped
+            + r.shed
+            + r.failed
+            + r.snapshot.errors
+            + r.queued_at_end
+            + r.in_flight_at_end;
+        (accounted, r.offered)
+    }
+
+    /// Full-report bitwise equality (tighter than snapshot-only).
+    fn reports_bitwise_eq(a: &SimServeReport, b: &SimServeReport) -> bool {
+        a.snapshot.bitwise_eq(&b.snapshot)
+            && a.availability.bitwise_eq(&b.availability)
+            && (a.offered, a.served, a.dropped, a.shed, a.failed)
+                == (b.offered, b.served, b.dropped, b.shed, b.failed)
+            && (a.queued_at_end, a.in_flight_at_end) == (b.queued_at_end, b.in_flight_at_end)
+            && a.per_replica_served == b.per_replica_served
+            && a.sim_duration_s.to_bits() == b.sim_duration_s.to_bits()
+            && a.replica_utilization.to_bits() == b.replica_utilization.to_bits()
+            && a.energy.energy_j.to_bits() == b.energy.energy_j.to_bits()
+    }
+
+    #[test]
+    fn faults_off_replay_is_bit_identical_to_fault_free_path() {
+        // The frozen-contract differential: an empty plan plus the
+        // default retry policy must replay byte-for-byte the fault-free
+        // path — no extra events, no RNG draws, no f64 ops.
+        let t = trace(42, 1500.0, 0.3);
+        let s = server(8, millis(2), 10_000);
+        let plain = s.replay_mix(&t, &[0, 0, 0]);
+        let faulted =
+            s.replay_faulted(&t, &[0, 0, 0], &FaultPlan::empty(), &RetryPolicy::default());
+        assert!(
+            reports_bitwise_eq(&plain, &faulted),
+            "faults-off replay diverged from the fault-free path"
+        );
+        assert_eq!(faulted.availability.crashes, 0);
+        assert_eq!(faulted.availability.availability, 1.0);
+        assert_eq!(faulted.shed + faulted.failed, 0);
+        assert_eq!(faulted.queued_at_end + faulted.in_flight_at_end, 0);
+    }
+
+    #[test]
+    fn crash_kills_inflight_work_and_restart_revives_the_replica() {
+        let t = trace(7, 2000.0, 0.2);
+        let s = server(8, millis(2), 100_000);
+        let mk = |faults: Vec<TimedFault>| FaultPlan { faults, ..FaultPlan::empty() };
+        // Replica 0 dies at 50 ms and stays down; the survivor carries
+        // the fleet (retry budget covers the single crash).
+        let dead =
+            mk(vec![TimedFault { at: millis(50), replica: 0, kind: FaultKind::Crash }]);
+        let r = s.replay_faulted(&t, &[0, 0], &dead, &RetryPolicy::default());
+        assert_eq!(r.availability.crashes, 1);
+        assert_eq!(r.availability.restarts, 0);
+        assert!(r.availability.availability < 1.0);
+        assert!(r.availability.per_replica_downtime_s[0] > 0.0);
+        assert_eq!(r.availability.per_replica_downtime_s[1], 0.0);
+        assert!(r.served > 0);
+        let (accounted, offered) = conservation(&r);
+        assert_eq!(accounted, offered, "conservation broke under a crash");
+        // With a restart the downtime window closes early and
+        // availability improves.
+        let revived = mk(vec![
+            TimedFault { at: millis(50), replica: 0, kind: FaultKind::Crash },
+            TimedFault { at: millis(80), replica: 0, kind: FaultKind::Restart },
+        ]);
+        let r2 = s.replay_faulted(&t, &[0, 0], &revived, &RetryPolicy::default());
+        assert_eq!(r2.availability.restarts, 1);
+        assert!(
+            r2.availability.per_replica_downtime_s[0]
+                < r.availability.per_replica_downtime_s[0]
+        );
+        assert!(r2.availability.availability > r.availability.availability);
+        let (accounted, offered) = conservation(&r2);
+        assert_eq!(accounted, offered);
+    }
+
+    #[test]
+    fn whole_fleet_down_parks_work_until_restart() {
+        let t = trace(11, 1000.0, 0.2);
+        let s = server(8, millis(2), 100_000);
+        let plan = FaultPlan {
+            faults: vec![
+                TimedFault { at: millis(20), replica: 0, kind: FaultKind::Crash },
+                TimedFault { at: millis(20), replica: 1, kind: FaultKind::Crash },
+                TimedFault { at: millis(120), replica: 0, kind: FaultKind::Restart },
+            ],
+            ..FaultPlan::empty()
+        };
+        let r = s.replay_faulted(&t, &[0, 0], &plan, &RetryPolicy::default());
+        // Batches routed while nothing was up were parked, not lost, and
+        // drained when replica 0 came back.
+        let (accounted, offered) = conservation(&r);
+        assert_eq!(accounted, offered, "parked work leaked from the ledger");
+        assert!(r.served > 0, "restart should have drained the parked queue");
+        assert!(r.availability.retries >= 1, "crash orphans should have been retried");
+        // Replica 1 never came back: its downtime runs to the horizon.
+        assert!(r.availability.per_replica_downtime_s[1] > 0.0);
+        assert_eq!(r.availability.restarts, 1);
+    }
+
+    #[test]
+    fn deadline_exhaustion_fails_requests_instead_of_serving_late() {
+        // A 10 ms absolute deadline with the only replica down 20–80 ms:
+        // requests arriving in the outage can never meet the deadline, so
+        // they must land in `failed` — and nothing served may be late.
+        let t = trace(3, 1000.0, 0.1);
+        let s = server(8, millis(2), 100_000);
+        let plan = FaultPlan {
+            faults: vec![
+                TimedFault { at: millis(20), replica: 0, kind: FaultKind::Crash },
+                TimedFault { at: millis(80), replica: 0, kind: FaultKind::Restart },
+            ],
+            ..FaultPlan::empty()
+        };
+        let retry = RetryPolicy { max_retries: 8, deadline: millis(10) };
+        let r = s.replay_faulted(&t, &[0], &plan, &retry);
+        assert!(r.failed > 0, "outage-spanning requests should exhaust the deadline");
+        assert!(r.served > 0, "pre-outage requests should still be served");
+        let (accounted, offered) = conservation(&r);
+        assert_eq!(accounted, offered);
+        // Served latencies all met the deadline: the recorded p99 (a
+        // bucket lower edge ≤ the true served max) cannot exceed it.
+        assert!(
+            r.snapshot.p99_latency_s <= 0.010 + 1e-12,
+            "served p99 {} s exceeds the 10 ms deadline",
+            r.snapshot.p99_latency_s
+        );
+    }
+
+    #[test]
+    fn property_conservation_holds_under_randomized_fault_plans() {
+        crate::util::proptest::check(0xFA17, 16, |g| {
+            let seed = g.u64_below("seed", 1 << 20);
+            let replicas = g.usize("replicas", 1, 3);
+            let rate = 500.0 + 250.0 * g.usize("rate_step", 0, 8) as f64;
+            let straggle = g.bool("straggle");
+            let spec = FaultSpec {
+                mttf_s: *g.pick("mttf", &[0.02, 0.05, 0.1]),
+                mttr_s: *g.pick("mttr", &[0.0, 0.01, 0.05]),
+                straggle_every_s: if straggle { 0.05 } else { 0.0 },
+                straggle_s: if straggle { 0.02 } else { 0.0 },
+                straggle_mult: 3.0,
+                error_prob: *g.pick("err", &[0.0, 0.05, 0.2]),
+            };
+            spec.validate().map_err(|e| e.to_string())?;
+            let window = 0.2;
+            let plan = FaultPlan::generate(&spec, seed, replicas, from_seconds(window));
+            let retry = RetryPolicy {
+                max_retries: g.usize("retries", 0, 3) as u32,
+                deadline: if g.bool("deadline") { millis(50) } else { Time::MAX },
+            };
+            let t = trace(seed, rate, window);
+            let s = server(8, millis(2), 4_096);
+            let mix = vec![0u32; replicas];
+            let r = s.replay_faulted(&t, &mix, &plan, &retry);
+            let (accounted, offered) = conservation(&r);
+            crate::prop_assert!(
+                accounted == offered,
+                "conservation broke: accounted {accounted} != offered {offered} \
+                 (served {} dropped {} shed {} failed {} errors {} queued {} inflight {})",
+                r.served,
+                r.dropped,
+                r.shed,
+                r.failed,
+                r.snapshot.errors,
+                r.queued_at_end,
+                r.in_flight_at_end
+            );
+            crate::prop_assert!(
+                r.availability.availability <= 1.0 && r.availability.availability >= 0.0,
+                "availability {} out of [0,1]",
+                r.availability.availability
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn faulted_replay_is_deterministic_and_streaming_matches_materialized() {
+        let spec = FaultSpec {
+            mttf_s: 0.04,
+            mttr_s: 0.02,
+            error_prob: 0.1,
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::generate(&spec, 9, 3, from_seconds(0.3));
+        assert!(!plan.is_empty(), "spec should produce a non-empty plan");
+        let retry = RetryPolicy::default();
+        let t = trace(9, 1500.0, 0.3);
+        let s = server(8, millis(2), 10_000);
+        let a = s.replay_faulted(&t, &[0, 0, 0], &plan, &retry);
+        let b = s.replay_faulted(&t, &[0, 0, 0], &plan, &retry);
+        assert!(reports_bitwise_eq(&a, &b), "faulted replay nondeterministic");
+        let streamed = s.replay_stream_faulted(
+            PoissonTraceIter::new(Rng::new(9), 1500.0, 0.3, "resnet50", 1),
+            &[0, 0, 0],
+            &plan,
+            &retry,
+        );
+        assert!(reports_bitwise_eq(&a, &streamed), "faulted streaming diverged");
+        // The chaos actually happened (this is not a quiet run).
+        assert!(a.availability.crashes > 0);
+        assert!(a.availability.retries > 0);
+    }
+
+    #[test]
+    fn shed_policy_rejects_at_the_door_under_overload() {
+        let mk = |shed: ShedPolicy| {
+            let config = SimServeConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+                routing: Policy::LeastLoaded,
+                queue_capacity: 1_000_000,
+                shed: Some(shed),
+            };
+            let mut s = SimServer::new(SunriseChip::silicon(), config);
+            s.register("resnet50", &resnet50());
+            s
+        };
+        // Depth axis: a 64-deep admission bound under 4× overload sheds
+        // and keeps the backlog at the bound (no hard capacity drops).
+        let r = mk(ShedPolicy::depth(64)).replay(&trace(21, 4000.0, 0.3), 1);
+        assert!(r.shed > 0, "4x overload should shed at depth 64");
+        assert_eq!(r.dropped, 0, "shedding should pre-empt hard drops");
+        assert!(r.max_queue_depth <= 64, "depth bound leaked: {}", r.max_queue_depth);
+        let (accounted, offered) = conservation(&r);
+        assert_eq!(accounted, offered);
+        // SLO axis: once the observed p99 blows the 1 ms budget, later
+        // arrivals are refused even though the queue is nowhere near the
+        // depth bound.
+        let r = mk(ShedPolicy::depth(1_000_000).with_slo(millis(1)))
+            .replay(&trace(21, 4000.0, 0.3), 1);
+        assert!(r.shed > 0, "overloaded p99 should trip the SLO shed");
+        assert!(r.served > 0, "healthy warm-up should still be served");
+        let (accounted, offered) = conservation(&r);
+        assert_eq!(accounted, offered);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
+//!           `sunrise sweep --faults --mttf 0.05 --mttr 0.02 --error-prob 0.05`
 //!           `sunrise plan --rate 3000 --p99 30`
+//!           `sunrise plan --rate 3000 --p99 30 --mttf 0.1 --mttr 0.03`
 //!           `sunrise plan --rate 3000 --p99 30 --horizon-years 3 \
 //!                         --model-mix resnet50=0.7,mlp=0.3`
 
@@ -24,6 +26,7 @@ use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{
     curve, render_grid, saturation_knee, sweep_capacity, GridConfig, TraceShape,
 };
+use sunrise::coordinator::fault::{FaultSpec, RetryPolicy};
 use sunrise::coordinator::plan::{
     default_catalog, plan_models, render_plan, ModelShare, Objective, PlanConfig, PlanTarget,
     PowerModel, SearchStrategy,
@@ -198,6 +201,36 @@ fn parse_shape(a: &Args) -> TraceShape {
     }
 }
 
+/// Parse the shared fault-injection knobs (`--mttf`/`--mttr`/
+/// `--error-prob`, used by `sweep --faults` and `plan`). Range checking
+/// happens in [`FaultSpec::validate`] inside the library entry points,
+/// which both commands already surface as usage errors.
+fn parse_fault_spec(a: &Args) -> FaultSpec {
+    FaultSpec {
+        mttf_s: a.get_f64("mttf"),
+        mttr_s: a.get_f64("mttr"),
+        error_prob: a.get_f64("error-prob"),
+        ..FaultSpec::default()
+    }
+}
+
+/// Parse the shared `--retries`/`--deadline-ms` retry policy
+/// (`--deadline-ms 0` keeps the default "no deadline").
+fn parse_retry(a: &Args) -> RetryPolicy {
+    let deadline_ms = a.get_f64("deadline-ms");
+    if !deadline_ms.is_finite() || deadline_ms < 0.0 {
+        usage_error("option --deadline-ms must be a finite number >= 0 (0 = no deadline)");
+    }
+    RetryPolicy {
+        max_retries: a.get_usize("retries") as u32,
+        deadline: if deadline_ms == 0.0 {
+            RetryPolicy::default().deadline
+        } else {
+            from_seconds(deadline_ms / 1e3)
+        },
+    }
+}
+
 fn cmd_sweep(args: &[String]) {
     let cli = Cli::new(
         "sunrise sweep",
@@ -214,7 +247,13 @@ fn cmd_sweep(args: &[String]) {
     .opt("trace", "poisson", "arrival shape: poisson|bursty (bursts stream in O(1) memory too)")
     .opt("burst-mult", "4.0", "bursty only: burst-phase rate = mult × base rate")
     .opt("phase", "0.05", "bursty only: phase length, s")
-    .opt("knee-frac", "0.9", "knee threshold: throughput < frac × offered rate");
+    .opt("knee-frac", "0.9", "knee threshold: throughput < frac × offered rate")
+    .flag("faults", "inject seeded crash/restart + transient-error chaos into every point")
+    .opt("mttf", "0.05", "faults: mean time between crashes per replica, s (0 = no crashes)")
+    .opt("mttr", "0.02", "faults: mean downtime per crash, s (0 = crashed replicas stay down)")
+    .opt("error-prob", "0.0", "faults: per-batch transient-error probability in [0, 1)")
+    .opt("retries", "2", "faults: re-dispatch budget per batch before its requests fail")
+    .opt("deadline-ms", "0", "faults: absolute retry deadline from enqueue, ms (0 = none)");
     let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
         eprintln!("unknown model {}", a.get("model"));
@@ -235,6 +274,8 @@ fn cmd_sweep(args: &[String]) {
         max_wait: from_seconds(a.get_f64("max-wait-ms") / 1e3),
         queue_capacity: a.get_usize("queue-cap"),
         shape: parse_shape(&a),
+        faults: if a.flag("faults") { parse_fault_spec(&a) } else { FaultSpec::default() },
+        retry: parse_retry(&a),
         ..GridConfig::default()
     };
     // `is_finite` rejects NaN and ±inf (an infinite rate or duration
@@ -324,7 +365,13 @@ fn cmd_plan(args: &[String]) {
         "auto",
         "fleet-shape search: uniform|frontier|auto (auto: frontier iff the energy objective is on)",
     )
-    .opt("max-probes", "512", "frontier search: feasibility-replay budget");
+    .opt("max-probes", "512", "frontier search: feasibility-replay budget")
+    .opt("mttf", "0", "chaos axis: mean time between crashes per replica, s (0 = faults off)")
+    .opt("mttr", "0.02", "chaos axis: mean downtime per crash, s (0 = crashed stays down)")
+    .opt("error-prob", "0.0", "chaos axis: per-batch transient-error probability in [0, 1)")
+    .opt("retries", "2", "chaos axis: re-dispatch budget per batch before its requests fail")
+    .opt("deadline-ms", "0", "chaos axis: absolute retry deadline from enqueue, ms (0 = none)")
+    .opt("availability", "0", "minimum measured fleet availability in [0, 1] (0 = no floor)");
     let a = cli.parse_slice_or_exit(args);
     let mix = parse_model_mix(a.get("model-mix"));
     // The traffic mix defines the model set when given; --model otherwise.
@@ -356,6 +403,9 @@ fn cmd_plan(args: &[String]) {
         seed: a.get_u64("seed"),
         shape: parse_shape(&a),
         mix,
+        faults: parse_fault_spec(&a),
+        retry: parse_retry(&a),
+        min_availability: a.get_f64("availability"),
     };
     // Same bounds as cmd_sweep: an absurd max_batch would plan
     // 1..=max_batch service tables per chip class before anything runs.
@@ -551,10 +601,12 @@ fn main() {
                  \x20 simulate   run a workload on the simulated Sunrise chip\n\
                  \x20 serve      threaded serving demo over simulated chip replicas (wall clock)\n\
                  \x20 queue-sim  event-driven queueing simulation of raw chips under load\n\
-                 \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server\n\
+                 \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server;\n\
+                 \x20            optional seeded chaos per point (--faults)\n\
                  \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target;\n\
-                 \x20            optional capex+energy objective (--horizon-years) and multi-model\n\
-                 \x20            traffic (--model-mix)\n\
+                 \x20            optional capex+energy objective (--horizon-years), multi-model\n\
+                 \x20            traffic (--model-mix) and a fault axis (--mttf) that prices\n\
+                 \x20            N+1 redundancy\n\
                  \x20 roofline   ridge points + memory-wall summary (Sunrise vs HBM baseline)\n\
                  \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\n\
                  Every subcommand takes --help."
