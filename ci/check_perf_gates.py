@@ -13,7 +13,10 @@ BENCH_serving.json:
   - replaying the same trace through the fault-injection entry point
     with an empty fault plan must stay within 5% of the plain streaming
     row (ratio >= 0.95): the chaos layer may not tax the fault-free
-    hot path.
+    hot path;
+  - the sharded replay (32-replica fleet split into 8 cells on scoped
+    threads) must beat the same fleet replayed as 1 cell by >=3x in
+    wall time: parallel cells plus smaller per-cell routing scans.
 
 Exit 0 when every gate passes, 1 otherwise (CI retries the benches once
 on failure to rule out shared-runner noise before going red).
@@ -50,6 +53,12 @@ GATES = {
             "serving_replay: 0.5s x 20k req/s, streaming, fault layer idle",
             0.95,
             "fault layer idle overhead (<=5% vs plain streaming)",
+        ),
+        (
+            "serving_replay: sharded fleet, 32 replicas, 1 cell",
+            "serving_replay: sharded fleet, 32 replicas, 8 cells",
+            3.0,
+            "sharded replay speedup (8 cells vs 1 cell)",
         ),
     ],
 }

@@ -5,7 +5,9 @@
 //! serial vs parallel, and one end-to-end `plan` query (informational).
 //! Companion JSON lands in `BENCH_serving.json` at the repo root;
 //! `ci/check_perf_gates.py` enforces the streaming row ≥3× the baseline
-//! row and the fault-idle row within 5% of the plain streaming row.
+//! row, the fault-idle row within 5% of the plain streaming row, and the
+//! 8-cell sharded row ≥3× the 1-cell row (the sharded-replay speedup).
+//! An `events_per_sec_core` row tracks the single-core hot loop.
 //! EXPERIMENTS.md's bench-row glossary maps every row to its gate.
 //!
 //! Run: `cargo bench --bench serving_capacity`
@@ -27,6 +29,7 @@ use sunrise::coordinator::fault::{FaultPlan, RetryPolicy};
 use sunrise::coordinator::plan::{
     default_catalog, plan, Objective, PlanConfig, PlanTarget, PowerModel, SearchStrategy,
 };
+use sunrise::coordinator::shard::CellPlan;
 use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
 use sunrise::sim::sweep::default_threads;
 use sunrise::util::bench::Bencher;
@@ -161,6 +164,54 @@ fn main() {
         assert!(p.best.energy_opex_usd > 0.0);
         p.best.replicas
     });
+
+    // --- sharded replay: 1 cell vs 8 cells (the ≥3× speedup gate) ---
+    // The same 32-replica fleet and streamed trace, replayed whole vs
+    // partitioned into 8 cells on scoped threads. The CI gate requires
+    // the 8-cell row ≥3× the 1-cell row in wall time: the win is both
+    // parallelism (cells replay concurrently) and work (each cell's
+    // least-loaded scan walks 4 replicas instead of 32). Fixed row names
+    // in quick and full mode — the gate reads them by name.
+    let mix32: Vec<u32> = vec![0; 32];
+    let (srate, sdur) = if quick { (20_000.0, 0.25) } else { (40_000.0, 0.5) };
+    b.bench("serving_replay: sharded fleet, 32 replicas, 1 cell", || {
+        server
+            .replay_sharded(
+                || PoissonTraceIter::new(Rng::new(seed), srate, sdur, "resnet50", 1),
+                &mix32,
+                &CellPlan::single(),
+            )
+            .served
+    });
+    b.bench("serving_replay: sharded fleet, 32 replicas, 8 cells", || {
+        server
+            .replay_sharded(
+                || PoissonTraceIter::new(Rng::new(seed), srate, sdur, "resnet50", 1),
+                &mix32,
+                &CellPlan::cells(8),
+            )
+            .served
+    });
+
+    // --- events_per_sec_core: the per-cell hot-loop figure of merit ---
+    // One cell, quiet faults, streaming replay on a single thread: how
+    // many simulator events (arrivals + batch completions) one core
+    // retires per second. Informational row (no gate) — the absolute
+    // number is what the sharded rows multiply.
+    let probe = server.replay_stream(
+        PoissonTraceIter::new(Rng::new(seed), rate, dur, "resnet50", 1),
+        16,
+    );
+    let events = probe.offered + probe.snapshot.batches;
+    let m = b.bench("serving_replay: events_per_sec_core (1 cell, quiet, streaming)", || {
+        server
+            .replay_stream(PoissonTraceIter::new(Rng::new(seed), rate, dur, "resnet50", 1), 16)
+            .served
+    });
+    let events_per_sec_core = events as f64 / (m.median_ns * 1e-9);
+    println!(
+        "(single-core hot loop: {events} events/replay ≈ {events_per_sec_core:.2e} events/s/core)"
+    );
 
     b.summary("serving");
 }

@@ -32,6 +32,7 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::clock::millis;
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
 use crate::coordinator::router::Policy;
+use crate::coordinator::shard::CellPlan;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
 use crate::sim::sweep::{default_threads, parallel_map_threads};
 use crate::sim::{from_seconds, Time};
@@ -158,6 +159,14 @@ pub struct GridConfig {
     /// Retry budget/deadline for crash orphans and transient errors
     /// (only consulted when `faults` is non-quiet).
     pub retry: RetryPolicy,
+    /// Shard each point's fleet into this many cells
+    /// ([`shard`](crate::coordinator::shard)); `1` (the default) takes
+    /// the exact unsharded replay path. Non-quiet `faults` derive
+    /// per-cell fault streams from the point seed.
+    pub cells: usize,
+    /// Worker threads per sharded point (`0` = one per core). Only
+    /// consulted when `cells > 1`.
+    pub shard_threads: usize,
 }
 
 impl Default for GridConfig {
@@ -174,6 +183,8 @@ impl Default for GridConfig {
             shape: TraceShape::Poisson,
             faults: FaultSpec::default(),
             retry: RetryPolicy::default(),
+            cells: 1,
+            shard_threads: 0,
         }
     }
 }
@@ -300,6 +311,7 @@ pub fn sweep_capacity_mix_threads(
         grid.max_batches.iter().all(|&b| b >= 1),
         "capacity grid max_batch values must all be >= 1"
     );
+    crate::ensure!(grid.cells >= 1, "capacity grid cells must be >= 1");
     // One virtual server per max_batch (its service tables are planned
     // once per chip class, then shared read-only by every grid point —
     // replays take `&self` and the chip's schedule cache is thread-safe);
@@ -337,15 +349,39 @@ pub fn sweep_capacity_mix_threads(
     Ok(parallel_map_threads(&points, threads, |_, &(mix_idx, mb_idx, rate)| {
         let server = &servers[mb_idx];
         let mix = &mixes[mix_idx];
-        let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
         // A quiet spec takes the exact fault-free path (no plan, no
         // extra events — bit-identical to the pre-fault sweep). A live
         // spec expands per point from (seed, fleet size, window), a pure
         // function of the point's coordinates, so thread interleaving
         // cannot reorder anything: serial == parallel still holds.
-        let report = if grid.faults.is_quiet() {
+        // With `cells > 1` the point replays sharded — also a pure
+        // function of its coordinates (per-cell seeds derive from the
+        // point seed), merged deterministically.
+        let report = if grid.cells > 1 {
+            let plan = CellPlan {
+                cells: grid.cells,
+                threads: grid.shard_threads,
+                inter_cell_latency: 0,
+            };
+            let make_trace = || grid.shape.stream(grid.seed, rate, grid.duration_s, model);
+            if grid.faults.is_quiet() {
+                server.replay_sharded(make_trace, mix, &plan)
+            } else {
+                server.replay_sharded_faulted(
+                    make_trace,
+                    mix,
+                    &grid.faults,
+                    &grid.retry,
+                    grid.seed,
+                    from_seconds(grid.duration_s),
+                    &plan,
+                )
+            }
+        } else if grid.faults.is_quiet() {
+            let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
             server.replay_stream_mix(trace, mix)
         } else {
+            let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
             let plan = FaultPlan::generate(
                 &grid.faults,
                 grid.seed,
@@ -511,6 +547,64 @@ mod tests {
             assert_eq!(a.offered, b.offered);
             assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "point diverged");
         }
+    }
+
+    #[test]
+    fn sharded_grid_conserves_and_stays_deterministic() {
+        // `cells > 1` grid points replay sharded; the sweep stays
+        // bit-identical between serial and parallel grid walks (each
+        // point's sharded merge is itself deterministic) and every
+        // merged point satisfies the conservation identity.
+        let net = resnet50();
+        let grid = GridConfig {
+            rates: vec![400.0, 2500.0],
+            replicas: vec![2, 4],
+            max_batches: vec![4],
+            duration_s: 0.2,
+            cells: 2,
+            shard_threads: 2,
+            ..GridConfig::default()
+        };
+        let cfg = SunriseConfig::default();
+        let serial = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 1).expect("grid");
+        let parallel = sweep_capacity_threads(&net, "resnet50", &cfg, &grid, 8).expect("grid");
+        assert_eq!(serial.len(), 8);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "sharded point diverged");
+            let r = &a.report;
+            assert_eq!(
+                r.served
+                    + r.dropped
+                    + r.shed
+                    + r.failed
+                    + r.snapshot.errors
+                    + r.queued_at_end
+                    + r.in_flight_at_end,
+                r.offered,
+                "conservation broke on a sharded grid point"
+            );
+            assert_eq!(r.per_replica_served.len(), a.replicas);
+        }
+        // And offered counts match the unsharded grid: the front door
+        // partitions the same trace, it does not resample it.
+        let unsharded = sweep_capacity_threads(
+            &net,
+            "resnet50",
+            &cfg,
+            &GridConfig { cells: 1, ..grid.clone() },
+            1,
+        )
+        .expect("grid");
+        for (s, u) in serial.iter().zip(&unsharded) {
+            assert_eq!(s.offered, u.offered, "sharding changed the offered trace");
+        }
+    }
+
+    #[test]
+    fn zero_cells_grid_is_rejected() {
+        let net = resnet50();
+        let grid = GridConfig { cells: 0, ..small_grid() };
+        assert!(sweep_capacity(&net, "resnet50", &SunriseConfig::default(), &grid).is_err());
     }
 
     #[test]

@@ -224,6 +224,32 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Fold another collector's ledger into this one **exactly**:
+    /// histograms merge bucket-wise ([`PsHistogram::merge_from`]), the
+    /// counters add, and per-model rows align by model index (the shorter
+    /// vector is grown). The absorbing collector's clock and `started`
+    /// stamp are untouched — they define the window the merged snapshot
+    /// is taken over, which is how the sharded replay snapshots N
+    /// per-cell ledgers against the fleet-wide makespan. Order-invariant
+    /// (integer sums), so the merged snapshot is bit-identical across
+    /// any cell completion order.
+    pub fn absorb(&self, other: &Metrics) {
+        let o = other.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
+        g.latency.merge_from(&o.latency);
+        g.queue.merge_from(&o.queue);
+        if g.per_model.len() < o.per_model.len() {
+            g.per_model.resize_with(o.per_model.len(), PsHistogram::new);
+        }
+        for (h, oh) in g.per_model.iter_mut().zip(&o.per_model) {
+            h.merge_from(oh);
+        }
+        g.batch_sizes += o.batch_sizes;
+        g.batches += o.batches;
+        g.requests += o.requests;
+        g.errors += o.errors;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let now = self.clock.now();
         let g = self.inner.lock().unwrap();
@@ -390,6 +416,36 @@ mod tests {
         assert!(m.model_p99_ps(0).unwrap() <= millis(1));
         assert_eq!(m.model_p99_ps(1), None);
         assert_eq!(m.model_p99_ps(7), None, "never-seen model is None, not a panic");
+    }
+
+    #[test]
+    fn absorb_equals_recording_into_one_collector() {
+        // Two cell collectors vs one whole-fleet collector fed the same
+        // records: absorbing the cells must snapshot bit-identically to
+        // the whole (same clock, same end — only the ledger paths differ).
+        let clock = Arc::new(VirtualClock::new());
+        let whole = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let cell_a = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let cell_b = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let feed = |m: &Metrics, model: u32, lat: Time| {
+            m.record_batch_model(model, 2, &[micros(5), micros(9)], &[lat, lat + micros(7)]);
+        };
+        feed(&whole, 0, millis(1));
+        feed(&whole, 2, millis(40));
+        feed(&cell_a, 0, millis(1));
+        feed(&cell_b, 2, millis(40));
+        whole.record_error();
+        cell_b.record_error();
+        let merged = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        // Absorb in either order: the integer ledgers commute.
+        merged.absorb(&cell_b);
+        merged.absorb(&cell_a);
+        clock.advance_to(crate::sim::from_seconds(1.0));
+        let a = merged.snapshot();
+        let b = whole.snapshot();
+        assert!(a.bitwise_eq(&b), "absorbed cells diverged from the whole:\n{a:?}\n{b:?}");
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.per_model.len(), 2);
     }
 
     #[test]

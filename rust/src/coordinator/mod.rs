@@ -32,6 +32,11 @@
 //! - [`fault`] — deterministic fault injection: seeded crash/straggle/
 //!   error schedules on an RNG stream independent of the arrival trace,
 //!   plus the retry budget the control plane enforces.
+//! - [`shard`] — sharded parallel replay: the fleet partitioned into
+//!   deterministic cells (own wheel, RNG streams, ledgers per cell)
+//!   replayed on scoped threads and merged exactly — `cells=1` is the
+//!   unsharded code path, N-cell merges are bit-identical across thread
+//!   counts.
 //! - [`baseline`] — the PR-2 materialized replay, frozen as the
 //!   `serving_replay` bench's comparison row.
 
@@ -45,6 +50,7 @@ pub mod plan;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod simserve;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued, ShedPolicy};
@@ -57,4 +63,5 @@ pub use plan::{
 };
 pub use request::{InferRequest, InferResponse, ModelId, ModelRegistry, RequestId};
 pub use server::{Server, ServerConfig};
+pub use shard::CellPlan;
 pub use simserve::{EnergyReport, SimServeConfig, SimServeReport, SimServer};

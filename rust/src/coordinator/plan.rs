@@ -66,6 +66,7 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::capacity::TraceShape;
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
 use crate::coordinator::router::Policy;
+use crate::coordinator::shard::CellPlan;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
 use crate::scaling::cost::hitoc_stack_cost;
 use crate::scaling::process::Node;
@@ -262,6 +263,15 @@ pub struct PlanConfig {
     pub objective: Objective,
     /// How fleet shapes are searched (default: uniform template scaling).
     pub search: SearchStrategy,
+    /// Shard each feasibility probe's fleet into this many cells
+    /// ([`shard`](crate::coordinator::shard)); `1` (the default) keeps
+    /// the exact unsharded replay path, so existing plans stay
+    /// byte-identical. Sharded probes model the front-door-partitioned
+    /// deployment (and replay on every core for large fleets).
+    pub cells: usize,
+    /// Worker threads per sharded probe (`0` = one per core); only
+    /// consulted when `cells > 1`.
+    pub shard_threads: usize,
 }
 
 impl Default for PlanConfig {
@@ -274,6 +284,8 @@ impl Default for PlanConfig {
             mix_templates: Vec::new(),
             objective: Objective::Capex,
             search: SearchStrategy::UniformScale,
+            cells: 1,
+            shard_threads: 0,
         }
     }
 }
@@ -537,16 +549,41 @@ impl<'a> Planner<'a> {
             }
         }
         let t = &self.target;
-        // A one-share mix degenerates to exactly the single-model stream
-        // (same RNG draws), so single-model plans stay byte-identical.
-        let trace = t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
         // Quiet fault specs take the exact fault-free replay (no plan,
         // no extra events): pre-fault plans stay byte-identical. A live
         // spec expands deterministically from (seed, fleet size, window),
         // so a faulted probe is still a pure function of the candidate.
-        let report = if t.faults.is_quiet() {
+        // With `cells > 1` the probe replays sharded (per-cell fault
+        // streams derive from the target seed) and merges exactly.
+        let report = if self.config.cells > 1 {
+            let plan = CellPlan {
+                cells: self.config.cells,
+                threads: self.config.shard_threads,
+                inter_cell_latency: 0,
+            };
+            // A one-share mix degenerates to exactly the single-model
+            // stream (same RNG draws), so single-model probes shard the
+            // same trace the unsharded probe replays.
+            let make_trace =
+                || t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
+            if t.faults.is_quiet() {
+                self.server.replay_sharded(make_trace, &mix, &plan)
+            } else {
+                self.server.replay_sharded_faulted(
+                    make_trace,
+                    &mix,
+                    &t.faults,
+                    &t.retry,
+                    t.seed,
+                    crate::sim::from_seconds(t.duration_s),
+                    &plan,
+                )
+            }
+        } else if t.faults.is_quiet() {
+            let trace = t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
             self.server.replay_stream_mix(trace, &mix)
         } else {
+            let trace = t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
             let plan = FaultPlan::generate(
                 &t.faults,
                 t.seed,
@@ -1096,6 +1133,42 @@ mod tests {
             assert_eq!(x.counts, y.counts);
             assert!(x.report.snapshot.bitwise_eq(&y.report.snapshot));
         }
+    }
+
+    #[test]
+    fn sharded_probes_plan_deterministically_and_conserve() {
+        // A cells>1 planner still returns a deterministic, feasible
+        // plan, its probes satisfy the conservation identity, and the
+        // cells=1 config is byte-identical to the default path (it IS
+        // the default path).
+        let net = resnet50();
+        let catalog = default_catalog();
+        let target = quick_target(2500.0, 40.0);
+        let sharded_cfg = PlanConfig { cells: 2, shard_threads: 2, ..PlanConfig::default() };
+        let a = plan(&net, "resnet50", &catalog, &target, &sharded_cfg).expect("meetable");
+        let b = plan(&net, "resnet50", &catalog, &target, &sharded_cfg).expect("meetable");
+        assert_eq!(a.best.counts, b.best.counts, "sharded plan nondeterministic");
+        assert!(a.best.report.snapshot.bitwise_eq(&b.best.report.snapshot));
+        assert!(a.best.meets_target);
+        let r = &a.best.report;
+        assert_eq!(
+            r.served
+                + r.dropped
+                + r.shed
+                + r.failed
+                + r.snapshot.errors
+                + r.queued_at_end
+                + r.in_flight_at_end,
+            r.offered,
+            "conservation broke on a sharded probe"
+        );
+        let one_cell_cfg = PlanConfig { cells: 1, ..PlanConfig::default() };
+        let c = plan(&net, "resnet50", &catalog, &target, &one_cell_cfg).expect("meetable");
+        let d = plan(&net, "resnet50", &catalog, &target, &PlanConfig::default())
+            .expect("meetable");
+        assert_eq!(c.best.counts, d.best.counts);
+        assert!(c.best.report.snapshot.bitwise_eq(&d.best.report.snapshot));
+        assert_eq!(c.best.cost_usd.to_bits(), d.best.cost_usd.to_bits());
     }
 
     #[test]

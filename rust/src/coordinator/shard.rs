@@ -1,0 +1,642 @@
+//! Sharded, deterministic parallel replay: planet-scale virtual-time
+//! serving on every core.
+//!
+//! A [`CellPlan`] partitions the replica fleet into **cells**. Each cell
+//! is a complete, self-contained serving stack — its own event wheel,
+//! its own batcher/router/metrics, its own integer-picosecond ledgers,
+//! and its own RNG streams (the per-cell fault stream is derived from
+//! the seed the same way `fault.rs` derives `seed ^ b"fault_ev"`, so
+//! cells never share a random draw). A deterministic **front door**
+//! assigns every arrival to exactly one cell by hashing its global
+//! arrival index, and charges a fixed inter-cell hop
+//! ([`CellPlan::inter_cell_latency`]) on the way in. Cells replay
+//! concurrently on [`sweep`](crate::sim::sweep)-style scoped threads and
+//! their [`SimServeReport`]s merge deterministically in fixed cell
+//! order: histograms by exact bucket-wise addition
+//! ([`PsHistogram::merge_from`](crate::sim::stats::PsHistogram::merge_from)
+//! via [`Metrics::absorb`]), counters by integer sums, per-replica
+//! vectors by un-striding back to global replica indices.
+//!
+//! Two determinism contracts, both pinned by test:
+//!
+//! 1. **`cells = 1` is the exact existing code path.** The plan
+//!    delegates straight to
+//!    [`replay_stream_mix`](SimServer::replay_stream_mix) /
+//!    [`replay_stream_faulted`](SimServer::replay_stream_faulted) — not
+//!    a reimplementation that happens to agree, the same calls — so a
+//!    single-cell sharded replay is bit-identical to the serial replay
+//!    by construction.
+//! 2. **N-cell merges are deterministic.** Cell results come back in
+//!    input order regardless of thread interleaving
+//!    ([`parallel_map_threads`] reassembles them), every fold runs in
+//!    fixed cell order, and each cell's replay is itself bit-identical
+//!    run to run — so `threads = 1` and `threads = k` sharded replays
+//!    are bit-identical, the sharded analogue of the serial == parallel
+//!    sweep pin.
+//!
+//! What sharding *changes*: an N-cell fleet is a different (but equally
+//! deterministic) serving system than a 1-cell fleet — the front door
+//! partitions traffic before the router sees it, so routing decisions,
+//! batch formation and therefore latencies legitimately differ from the
+//! whole-fleet replay. The merged report still satisfies the full
+//! conservation identity (every term is a sum of per-cell terms that
+//! each satisfy it) and its integer ledgers are exact; derived f64
+//! aggregates are deterministic but summed in cell order rather than
+//! global replica order.
+
+use crate::coordinator::clock::{Clock, VirtualClock};
+use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
+use crate::coordinator::metrics::{AvailabilityReport, Metrics};
+use crate::coordinator::simserve::{EnergyReport, SimServeReport, SimServer};
+use crate::sim::sweep::{default_threads, parallel_map_threads};
+use crate::sim::{to_seconds, Time};
+use crate::workloads::generator::TraceRequest;
+use std::sync::Arc;
+
+/// XOR'd into the user seed to derive per-cell streams (b"cell_idx" —
+/// the same derivation idiom as `FAULT_STREAM` in
+/// [`fault`](crate::coordinator::fault) and the mix-marking stream in
+/// the workload generator, so cell streams are disjoint from the
+/// arrival stream, the fault stream, and each other).
+const CELL_STREAM: u64 = 0x6365_6C6C_5F69_6478;
+
+/// splitmix64's finalizer: a cheap, high-quality 64-bit mix used both to
+/// derive per-cell seeds and to hash arrival indices at the front door.
+/// (Private to `util::rng`, so restated here; pinned by test against
+/// drift.)
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The seed cell `cell`'s fault stream derives from: mixing the cell
+/// index through the finalizer (rather than xor'ing it raw) keeps
+/// neighbouring cells' streams statistically unrelated.
+pub fn cell_seed(seed: u64, cell: usize) -> u64 {
+    mix64(seed ^ CELL_STREAM ^ (cell as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Front-door assignment: which cell the `index`-th arrival of the trace
+/// lands in. A pure function of (index, cells) — independent of rate,
+/// model, and thread interleaving — so every cell can regenerate the
+/// full deterministic trace and keep exactly its share.
+fn cell_of(index: u64, cells: usize) -> usize {
+    (mix64(index ^ CELL_STREAM) % cells as u64) as usize
+}
+
+/// How to shard one replay: cell count, worker threads, and the fixed
+/// front-door→cell hop charged to every arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellPlan {
+    /// Number of cells the replica fleet is partitioned into (clamped to
+    /// the replica count; `1` = the exact unsharded code path).
+    pub cells: usize,
+    /// Worker threads for the cell replays (`0` = one per available
+    /// core; `1` = serial, the determinism baseline).
+    pub threads: usize,
+    /// Fixed inter-cell latency, ps: the front door is not free, so each
+    /// arrival reaches its cell this much after its trace timestamp. A
+    /// pure time translation on quiet replays (pinned by test).
+    pub inter_cell_latency: Time,
+}
+
+impl CellPlan {
+    /// The unsharded plan: one cell, existing code path.
+    pub fn single() -> CellPlan {
+        CellPlan { cells: 1, threads: 0, inter_cell_latency: 0 }
+    }
+
+    /// `cells` cells, auto thread count, free front door.
+    pub fn cells(cells: usize) -> CellPlan {
+        CellPlan { cells, threads: 0, inter_cell_latency: 0 }
+    }
+
+    /// Same plan with a fixed front-door hop.
+    pub fn with_latency(mut self, inter_cell_latency: Time) -> CellPlan {
+        self.inter_cell_latency = inter_cell_latency;
+        self
+    }
+}
+
+impl Default for CellPlan {
+    fn default() -> Self {
+        CellPlan::single()
+    }
+}
+
+impl SimServer {
+    /// Sharded replay of a streamed trace over a heterogeneous fleet.
+    ///
+    /// `make_trace` must be a pure trace constructor (every in-tree
+    /// generator is: a fixed seed regenerates the identical stream):
+    /// each cell calls it once and filters the stream down to its
+    /// front-door share, so the trace is regenerated per cell rather
+    /// than materialized or sent across threads — the same O(1)-memory
+    /// discipline as the capacity grid.
+    ///
+    /// With `plan.cells <= 1` this *is*
+    /// [`replay_stream_mix`](SimServer::replay_stream_mix) (exact code
+    /// path, bit-identical — pinned by test).
+    pub fn replay_sharded<F, I>(&self, make_trace: F, mix: &[u32], plan: &CellPlan) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        self.shard_replay(make_trace, mix, None, plan)
+    }
+
+    /// Sharded chaos: each cell expands `spec` into its own
+    /// [`FaultPlan`] from [`cell_seed`]`(seed, cell)` over its own
+    /// replica slice — per-cell fault streams, derived the way the
+    /// whole-fleet plan derives `seed ^ b"fault_ev"`. With
+    /// `plan.cells <= 1` the whole-fleet plan is generated from the
+    /// plain `seed` and replayed on the exact
+    /// [`replay_stream_faulted`](SimServer::replay_stream_faulted)
+    /// path, matching the planner's unsharded behavior byte for byte.
+    #[allow(clippy::too_many_arguments)]
+    pub fn replay_sharded_faulted<F, I>(
+        &self,
+        make_trace: F,
+        mix: &[u32],
+        spec: &FaultSpec,
+        retry: &RetryPolicy,
+        seed: u64,
+        horizon: Time,
+        plan: &CellPlan,
+    ) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        self.shard_replay(make_trace, mix, Some((spec, retry, seed, horizon)), plan)
+    }
+
+    fn shard_replay<F, I>(
+        &self,
+        make_trace: F,
+        mix: &[u32],
+        chaos: Option<(&FaultSpec, &RetryPolicy, u64, Time)>,
+        plan: &CellPlan,
+    ) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        assert!(!mix.is_empty(), "replica mix must name at least one replica");
+        let cells = plan.cells.max(1).min(mix.len());
+        if cells <= 1 {
+            // The exact existing code path — delegation, not a
+            // reimplementation, so `cells=1` cannot drift.
+            return match chaos {
+                None => self.replay_stream_mix(make_trace(), mix),
+                Some((spec, retry, seed, horizon)) => {
+                    let fp = FaultPlan::generate(spec, seed, mix.len(), horizon);
+                    self.replay_stream_faulted(make_trace(), mix, &fp, retry)
+                }
+            };
+        }
+        // Strided replica partition: global replica `r` belongs to cell
+        // `r % cells` as its local replica `r / cells` — the same
+        // dealing the sweep harness uses, so heterogeneous mixes spread
+        // every chip class across cells instead of giving one cell all
+        // the slow replicas.
+        let cell_mixes: Vec<Vec<u32>> = (0..cells)
+            .map(|c| mix.iter().skip(c).step_by(cells).copied().collect())
+            .collect();
+        let threads = if plan.threads == 0 { default_threads() } else { plan.threads };
+        let delay = plan.inter_cell_latency;
+        let cell_ids: Vec<usize> = (0..cells).collect();
+        let results: Vec<(SimServeReport, Metrics)> =
+            parallel_map_threads(&cell_ids, threads, |_, &c| {
+                let cell_mix = &cell_mixes[c];
+                // Each cell regenerates the whole deterministic trace
+                // and keeps its front-door share; the kept arrivals'
+                // global order is preserved, so per-cell streams stay
+                // non-decreasing in time.
+                let trace = make_trace()
+                    .into_iter()
+                    .enumerate()
+                    .filter(move |(i, _)| cell_of(*i as u64, cells) == c)
+                    .map(|(_, r)| r);
+                match chaos {
+                    None => self.replay_cell(trace, cell_mix, None, delay),
+                    Some((spec, retry, seed, horizon)) => {
+                        let fp =
+                            FaultPlan::generate(spec, cell_seed(seed, c), cell_mix.len(), horizon);
+                        self.replay_cell(trace, cell_mix, Some((&fp, retry)), delay)
+                    }
+                }
+            });
+        merge_cell_reports(mix, cells, results)
+    }
+}
+
+/// Fold per-cell reports into one fleet report, in fixed cell order.
+///
+/// Exact pieces: the latency/queue/per-model histograms merge by
+/// bucket-wise addition ([`Metrics::absorb`]), every counter is an
+/// integer sum, per-replica vectors un-stride back to global indices,
+/// and the conservation identity holds because each cell's does.
+/// Semantics of the folds that are *not* sums: the merged window is the
+/// latest cell's makespan (cells that finished early were simply idle
+/// after their last completion); `max_queue_depth`/`max_queue_wait_s`
+/// are maxima over cells (front-door queues are disjoint, so the fleet
+/// max is the max of the cell maxima); a replica still down when its
+/// own cell's window closed is billed downtime to that horizon.
+fn merge_cell_reports(
+    mix: &[u32],
+    cells: usize,
+    results: Vec<(SimServeReport, Metrics)>,
+) -> SimServeReport {
+    let replicas = mix.len();
+    let end: Time =
+        results.iter().map(|(r, _)| r.energy.window_ps).max().unwrap_or(1).max(1);
+    let sim_duration_s = to_seconds(end);
+
+    // Merged snapshot: a fresh collector (clock at 0, so the merged
+    // window starts where every cell's did) absorbing each cell's raw
+    // integer-ps histograms, then advanced to the merged makespan and
+    // folded once — the exact procedure one whole-fleet collector would
+    // have followed.
+    let clock = Arc::new(VirtualClock::new());
+    let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+    for (_, m) in &results {
+        metrics.absorb(m);
+    }
+    clock.advance_to(end);
+    let snapshot = metrics.snapshot();
+
+    let sum = |f: fn(&SimServeReport) -> u64| -> u64 { results.iter().map(|(r, _)| f(r)).sum() };
+    let offered = sum(|r| r.offered);
+    let served = sum(|r| r.served);
+
+    // Un-stride per-replica vectors: global replica r lived in cell
+    // r % cells as local replica r / cells.
+    let per_replica_served: Vec<u64> =
+        (0..replicas).map(|r| results[r % cells].0.per_replica_served[r / cells]).collect();
+    let per_replica_downtime_s: Vec<f64> = (0..replicas)
+        .map(|r| results[r % cells].0.availability.per_replica_downtime_s[r / cells])
+        .collect();
+
+    // Per-class ledgers are elementwise integer (busy ps, replicas) and
+    // f64 (dynamic J) sums in cell order; the ratios are recomputed
+    // against the merged window exactly as the unsharded report
+    // computes them.
+    let n_classes = results[0].0.energy.per_class_replicas.len();
+    let mut per_class_replicas = vec![0usize; n_classes];
+    let mut per_class_busy_ps: Vec<Time> = vec![0; n_classes];
+    let mut per_class_dynamic_j = vec![0.0f64; n_classes];
+    let mut static_w = 0.0f64;
+    for (r, _) in &results {
+        for c in 0..n_classes {
+            per_class_replicas[c] += r.energy.per_class_replicas[c];
+            per_class_busy_ps[c] += r.energy.per_class_busy_ps[c];
+            per_class_dynamic_j[c] += r.energy.per_class_dynamic_j[c];
+        }
+        static_w += r.energy.static_w;
+    }
+    let per_class_utilization: Vec<f64> = per_class_busy_ps
+        .iter()
+        .zip(&per_class_replicas)
+        .map(|(&busy, &n)| if n == 0 { 0.0 } else { busy as f64 / (end as f64 * n as f64) })
+        .collect();
+    let total_busy: u128 = per_class_busy_ps.iter().map(|&b| b as u128).sum();
+    let replica_utilization = total_busy as f64 / (end as f64 * replicas as f64);
+    let dynamic_j: f64 = per_class_dynamic_j.iter().sum();
+    let avg_power_w = dynamic_j / sim_duration_s + static_w;
+
+    let total_down_s: f64 = per_replica_downtime_s.iter().sum();
+    let availability = AvailabilityReport {
+        crashes: sum(|r| r.availability.crashes),
+        restarts: sum(|r| r.availability.restarts),
+        retries: sum(|r| r.availability.retries),
+        transient_errors: sum(|r| r.availability.transient_errors),
+        per_replica_downtime_s,
+        availability: 1.0 - total_down_s / (sim_duration_s * replicas as f64),
+        goodput: served as f64 / offered.max(1) as f64,
+    };
+
+    SimServeReport {
+        snapshot,
+        offered,
+        served,
+        dropped: sum(|r| r.dropped),
+        shed: sum(|r| r.shed),
+        failed: sum(|r| r.failed),
+        queued_at_end: sum(|r| r.queued_at_end),
+        in_flight_at_end: sum(|r| r.in_flight_at_end),
+        full_batches: sum(|r| r.full_batches),
+        timeout_batches: sum(|r| r.timeout_batches),
+        max_queue_depth: results.iter().map(|(r, _)| r.max_queue_depth).max().unwrap_or(0),
+        max_queue_wait_s: results
+            .iter()
+            .map(|(r, _)| r.max_queue_wait_s)
+            .fold(0.0, f64::max),
+        per_replica_served,
+        sim_duration_s,
+        replica_utilization,
+        energy: EnergyReport {
+            window_ps: end,
+            per_class_replicas,
+            per_class_busy_ps,
+            per_class_utilization,
+            per_class_dynamic_j,
+            static_w,
+            dynamic_j,
+            avg_power_w,
+            energy_j: dynamic_j + static_w * sim_duration_s,
+        },
+        availability,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::sunrise::{SunriseChip, SunriseConfig};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::clock::millis;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::simserve::SimServeConfig;
+    use crate::sim::from_seconds;
+    use crate::util::rng::Rng;
+    use crate::workloads::generator::PoissonTraceIter;
+    use crate::workloads::resnet::resnet50;
+
+    fn server(max_batch: u32, queue_capacity: usize) -> SimServer {
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch, max_wait: millis(2) },
+            routing: Policy::LeastLoaded,
+            queue_capacity,
+            shed: None,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        s.register("resnet50", &resnet50());
+        s
+    }
+
+    fn trace(seed: u64, rate: f64, duration_s: f64) -> impl Iterator<Item = TraceRequest> {
+        PoissonTraceIter::new(Rng::new(seed), rate, duration_s, "resnet50", 1)
+    }
+
+    /// Full-report bitwise equality (the shard merge's determinism
+    /// contract is report-wide, not snapshot-only).
+    fn reports_bitwise_eq(a: &SimServeReport, b: &SimServeReport) -> bool {
+        a.snapshot.bitwise_eq(&b.snapshot)
+            && a.availability.bitwise_eq(&b.availability)
+            && (a.offered, a.served, a.dropped, a.shed, a.failed)
+                == (b.offered, b.served, b.dropped, b.shed, b.failed)
+            && (a.queued_at_end, a.in_flight_at_end) == (b.queued_at_end, b.in_flight_at_end)
+            && (a.full_batches, a.timeout_batches) == (b.full_batches, b.timeout_batches)
+            && a.max_queue_depth == b.max_queue_depth
+            && a.max_queue_wait_s.to_bits() == b.max_queue_wait_s.to_bits()
+            && a.per_replica_served == b.per_replica_served
+            && a.sim_duration_s.to_bits() == b.sim_duration_s.to_bits()
+            && a.replica_utilization.to_bits() == b.replica_utilization.to_bits()
+            && a.energy.per_class_busy_ps == b.energy.per_class_busy_ps
+            && a.energy.dynamic_j.to_bits() == b.energy.dynamic_j.to_bits()
+            && a.energy.energy_j.to_bits() == b.energy.energy_j.to_bits()
+    }
+
+    fn conservation(r: &SimServeReport) -> (u64, u64) {
+        let accounted = r.served
+            + r.dropped
+            + r.shed
+            + r.failed
+            + r.snapshot.errors
+            + r.queued_at_end
+            + r.in_flight_at_end;
+        (accounted, r.offered)
+    }
+
+    #[test]
+    fn cells_1_is_bit_identical_to_the_existing_path() {
+        // The frozen contract: a single-cell sharded replay IS the
+        // serial replay — quiet and faulted, heterogeneous mix included.
+        let mut s = server(8, 10_000);
+        let big = s.add_chip_class(SunriseChip::new(SunriseConfig::scaled(2.0)));
+        let mix = [0, big, 0];
+        let quiet_serial = s.replay_stream_mix(trace(42, 2000.0, 0.3), &mix);
+        let quiet_sharded =
+            s.replay_sharded(|| trace(42, 2000.0, 0.3), &mix, &CellPlan::single());
+        assert!(
+            reports_bitwise_eq(&quiet_serial, &quiet_sharded),
+            "cells=1 sharded replay diverged from replay_stream_mix"
+        );
+
+        let spec = FaultSpec { mttf_s: 0.05, mttr_s: 0.02, error_prob: 0.05, ..FaultSpec::default() };
+        let retry = RetryPolicy::default();
+        let horizon = from_seconds(0.3);
+        let fp = FaultPlan::generate(&spec, 42, mix.len(), horizon);
+        let faulted_serial = s.replay_stream_faulted(trace(42, 2000.0, 0.3), &mix, &fp, &retry);
+        let faulted_sharded = s.replay_sharded_faulted(
+            || trace(42, 2000.0, 0.3),
+            &mix,
+            &spec,
+            &retry,
+            42,
+            horizon,
+            &CellPlan::single(),
+        );
+        assert!(
+            reports_bitwise_eq(&faulted_serial, &faulted_sharded),
+            "cells=1 faulted sharded replay diverged from replay_stream_faulted"
+        );
+        assert!(faulted_serial.availability.crashes > 0, "chaos never fired");
+    }
+
+    #[test]
+    fn sharded_merge_is_deterministic_across_runs_and_thread_counts() {
+        // The sharded analogue of serial == parallel sweeps: the merged
+        // report is bit-identical whether the four cells replayed on one
+        // thread or eight, and across repeat runs.
+        let s = server(8, 100_000);
+        let mix = vec![0u32; 8];
+        let serial = s.replay_sharded(
+            || trace(7, 6000.0, 0.3),
+            &mix,
+            &CellPlan { cells: 4, threads: 1, inter_cell_latency: 0 },
+        );
+        let parallel = s.replay_sharded(
+            || trace(7, 6000.0, 0.3),
+            &mix,
+            &CellPlan { cells: 4, threads: 8, inter_cell_latency: 0 },
+        );
+        assert!(
+            reports_bitwise_eq(&serial, &parallel),
+            "sharded merge diverged between thread counts"
+        );
+        let again = s.replay_sharded(
+            || trace(7, 6000.0, 0.3),
+            &mix,
+            &CellPlan { cells: 4, threads: 8, inter_cell_latency: 0 },
+        );
+        assert!(reports_bitwise_eq(&serial, &again), "sharded replay nondeterministic");
+        let (accounted, offered) = conservation(&serial);
+        assert_eq!(accounted, offered);
+        // The front door actually spread the traffic: every replica of
+        // every cell served something at this overload.
+        assert!(serial.per_replica_served.iter().all(|&n| n > 0), "a starved cell replica");
+    }
+
+    #[test]
+    fn front_door_partitions_the_trace_exactly() {
+        // Offered traffic is invariant under the cell count: the front
+        // door assigns every arrival to exactly one cell, so the merged
+        // offered/served ledger neither loses nor duplicates requests.
+        let s = server(8, 100_000);
+        let whole = s.replay_sharded(|| trace(11, 3000.0, 0.25), &[0, 0, 0, 0], &CellPlan::single());
+        for cells in [2usize, 3, 4] {
+            let sharded =
+                s.replay_sharded(|| trace(11, 3000.0, 0.25), &[0, 0, 0, 0], &CellPlan::cells(cells));
+            assert_eq!(sharded.offered, whole.offered, "front door lost arrivals at {cells} cells");
+            let (accounted, offered) = conservation(&sharded);
+            assert_eq!(accounted, offered, "conservation broke at {cells} cells");
+            assert_eq!(sharded.per_replica_served.len(), 4);
+        }
+    }
+
+    #[test]
+    fn inter_cell_latency_is_a_pure_time_translation_when_quiet() {
+        // Every arrival shifts by exactly L, every downstream event
+        // shifts with it: latencies are bit-identical, the makespan
+        // moves by exactly L.
+        let s = server(8, 100_000);
+        let mix = [0, 0, 0, 0];
+        let base = s.replay_sharded(|| trace(13, 2500.0, 0.25), &mix, &CellPlan::cells(4));
+        let hop = millis(5);
+        let delayed = s.replay_sharded(
+            || trace(13, 2500.0, 0.25),
+            &mix,
+            &CellPlan::cells(4).with_latency(hop),
+        );
+        assert_eq!(delayed.energy.window_ps, base.energy.window_ps + hop);
+        assert_eq!(delayed.offered, base.offered);
+        assert_eq!(delayed.served, base.served);
+        assert_eq!(delayed.per_replica_served, base.per_replica_served);
+        assert_eq!(
+            delayed.snapshot.p50_latency_s.to_bits(),
+            base.snapshot.p50_latency_s.to_bits(),
+            "a pure translation must not change latencies"
+        );
+        assert_eq!(
+            delayed.snapshot.p99_latency_s.to_bits(),
+            base.snapshot.p99_latency_s.to_bits()
+        );
+        assert_eq!(
+            delayed.max_queue_wait_s.to_bits(),
+            base.max_queue_wait_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn cell_seed_streams_are_distinct_and_stable() {
+        // Derivation pin: the constant and the mix must not drift, or
+        // every sharded chaos replay silently changes.
+        assert_eq!(CELL_STREAM, u64::from_be_bytes(*b"cell_idx"));
+        let seeds: Vec<u64> = (0..8).map(|c| cell_seed(42, c)).collect();
+        for (i, &a) in seeds.iter().enumerate() {
+            assert_ne!(a, 42, "cell seed collided with the user seed");
+            for &b in &seeds[i + 1..] {
+                assert_ne!(a, b, "two cells derived the same fault-stream seed");
+            }
+        }
+        // mix64 is the splitmix64 finalizer: golden value for x=1 (the
+        // same constant set rng.rs uses).
+        assert_eq!(mix64(0), 0);
+        assert_eq!(mix64(1), 0x5692_161D_100B_05E5);
+    }
+
+    #[test]
+    fn property_sharded_replay_conserves_and_merges_exactly() {
+        // Randomized cell counts × replica mixes × fault plans: the
+        // merged report satisfies the conservation identity, merges
+        // per-cell request counts exactly, and is bit-identical between
+        // a serial (threads=1) and parallel (threads=8) merge.
+        crate::util::proptest::check(0x5AAD, 12, |g| {
+            let seed = g.u64_below("seed", 1 << 16);
+            let replicas = g.usize("replicas", 1, 9);
+            let cells = g.usize("cells", 1, 5);
+            let rate = 1000.0 + 500.0 * g.usize("rate_step", 0, 6) as f64;
+            let classes = g.usize("classes", 1, 3); // heterogeneous mixes too
+            let faulty = g.bool("faulty");
+            let mut s = server(8, 4_096);
+            for _ in 1..classes {
+                s.add_chip_class(SunriseChip::new(SunriseConfig::scaled(2.0)));
+            }
+            let mix: Vec<u32> =
+                (0..replicas).map(|r| (r % classes) as u32).collect();
+            let window = 0.15;
+            let spec = if faulty {
+                FaultSpec { mttf_s: 0.04, mttr_s: 0.02, error_prob: 0.05, ..FaultSpec::default() }
+            } else {
+                FaultSpec::default()
+            };
+            let retry = RetryPolicy::default();
+            let horizon = from_seconds(window);
+            let replay = |threads: usize| {
+                let plan = CellPlan { cells, threads, inter_cell_latency: 0 };
+                if spec.is_quiet() {
+                    s.replay_sharded(|| trace(seed, rate, window), &mix, &plan)
+                } else {
+                    s.replay_sharded_faulted(
+                        || trace(seed, rate, window),
+                        &mix,
+                        &spec,
+                        &retry,
+                        seed,
+                        horizon,
+                        &plan,
+                    )
+                }
+            };
+            let serial = replay(1);
+            let parallel = replay(8);
+            crate::prop_assert!(
+                reports_bitwise_eq(&serial, &parallel),
+                "serial/parallel sharded merge diverged \
+                 (seed {seed}, {replicas} replicas, {cells} cells)"
+            );
+            let (accounted, offered) = conservation(&serial);
+            crate::prop_assert!(
+                accounted == offered,
+                "conservation broke: accounted {accounted} != offered {offered} \
+                 (served {} dropped {} shed {} failed {} errors {} queued {} inflight {})",
+                serial.served,
+                serial.dropped,
+                serial.shed,
+                serial.failed,
+                serial.snapshot.errors,
+                serial.queued_at_end,
+                serial.in_flight_at_end
+            );
+            // Exact histogram merge: the merged snapshot holds exactly
+            // the per-cell recorded requests (counts live in the same
+            // PsHistograms the quantiles read from).
+            crate::prop_assert!(
+                serial.snapshot.requests == serial.served + serial.failed,
+                "merged histogram count {} != recorded completions {}",
+                serial.snapshot.requests,
+                serial.served + serial.failed
+            );
+            crate::prop_assert!(
+                serial.per_replica_served.len() == replicas,
+                "per-replica vector lost replicas in the merge"
+            );
+            crate::prop_assert!(
+                (0.0..=1.0).contains(&serial.availability.availability),
+                "availability {} out of [0,1]",
+                serial.availability.availability
+            );
+            crate::prop_assert!(
+                serial.replica_utilization <= 1.0,
+                "merged utilization {} > 1.0",
+                serial.replica_utilization
+            );
+            Ok(())
+        });
+    }
+}

@@ -535,12 +535,54 @@ impl SimServer {
         }
     }
 
+    /// One shard-cell's replay: [`replay_core`](Self::replay_core) over a
+    /// `TraceRequest` stream with every arrival shifted by `delay` (the
+    /// fixed front-door→cell hop), returning the [`Metrics`] collector
+    /// alongside the report so [`shard`](crate::coordinator::shard) can
+    /// fold per-cell histograms into one fleet snapshot exactly.
+    pub(crate) fn replay_cell<I>(
+        &self,
+        trace: I,
+        mix: &[u32],
+        faults: Option<(&FaultPlan, &RetryPolicy)>,
+        delay: Time,
+    ) -> (SimServeReport, Metrics)
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        let mut resolve = self.resolver();
+        self.replay_core_with_metrics(
+            trace.into_iter().map(move |r| StreamedArrival {
+                at: from_seconds(r.arrival_s).saturating_add(delay),
+                model: resolve(&r.model),
+                samples: r.samples,
+            }),
+            mix,
+            faults,
+        )
+    }
+
     fn replay_core<I>(
+        &self,
+        arrivals: I,
+        mix: &[u32],
+        faults: Option<(&FaultPlan, &RetryPolicy)>,
+    ) -> SimServeReport
+    where
+        I: Iterator<Item = StreamedArrival>,
+    {
+        self.replay_core_with_metrics(arrivals, mix, faults).0
+    }
+
+    /// The replay engine proper. Returns the report plus the metrics
+    /// collector it recorded into: the sharded merge needs the raw
+    /// integer-ps histograms, not just the folded snapshot.
+    fn replay_core_with_metrics<I>(
         &self,
         mut arrivals: I,
         mix: &[u32],
         faults: Option<(&FaultPlan, &RetryPolicy)>,
-    ) -> SimServeReport
+    ) -> (SimServeReport, Metrics)
     where
         I: Iterator<Item = StreamedArrival>,
     {
@@ -581,18 +623,12 @@ impl SimServer {
             metrics,
             batcher: DynamicBatcher::new(self.config.batcher),
             router: Router::with_speeds(self.config.routing, speeds),
-            busy: vec![false; replicas],
-            waiting: (0..replicas).map(|_| VecDeque::new()).collect(),
-            running: (0..replicas).map(|_| None).collect(),
+            fleet: ReplicaTable::new(replicas),
             faults: fault_events,
             retry,
             error_prob,
             straggle_mult,
             error_rng,
-            epoch: vec![0; replicas],
-            straggling: vec![false; replicas],
-            down_since: vec![None; replicas],
-            down_ps: vec![0; replicas],
             parked: VecDeque::new(),
             offered: 0,
             served: 0,
@@ -605,9 +641,6 @@ impl SimServer {
             transient_errors: 0,
             max_depth: 0,
             max_queue_wait: 0,
-            per_replica: vec![0; replicas],
-            busy_ps: vec![0; replicas],
-            dynamic_j: vec![0.0; replicas],
             last_done: 0,
             queue_ps: Vec::new(),
             total_ps: Vec::new(),
@@ -648,8 +681,8 @@ impl SimServer {
         for (r, &class) in mix.iter().enumerate() {
             let c = class as usize;
             per_class_replicas[c] += 1;
-            per_class_busy_ps[c] += world.busy_ps[r];
-            per_class_dynamic_j[c] += world.dynamic_j[r];
+            per_class_busy_ps[c] += world.fleet.busy_ps[r];
+            per_class_dynamic_j[c] += world.fleet.dynamic_j[r];
             static_w += self.chips[c].config.static_w;
         }
         let per_class_utilization: Vec<f64> = per_class_busy_ps
@@ -663,7 +696,7 @@ impl SimServer {
                 }
             })
             .collect();
-        let total_busy: u128 = world.busy_ps.iter().map(|&b| b as u128).sum();
+        let total_busy: u128 = world.fleet.busy_ps.iter().map(|&b| b as u128).sum();
         let replica_utilization = total_busy as f64 / (end as f64 * replicas as f64);
         debug_assert!(
             replica_utilization <= 1.0,
@@ -680,12 +713,14 @@ impl SimServer {
         let queued_at_end = world.batcher.total_depth() as u64
             + world.parked.iter().map(|(b, _)| b.len() as u64).sum::<u64>();
         let in_flight_at_end = world
+            .fleet
             .running
             .iter()
             .flatten()
             .map(|(b, _, _)| b.len() as u64)
             .sum::<u64>()
             + world
+                .fleet
                 .waiting
                 .iter()
                 .flat_map(|q| q.iter())
@@ -694,8 +729,8 @@ impl SimServer {
 
         // Close any still-open down windows at the horizon, then fold the
         // per-replica integer-ps downtime into one availability fraction.
-        let mut down_ps = world.down_ps;
-        for (r, since) in world.down_since.iter().enumerate() {
+        let mut down_ps = world.fleet.down_ps;
+        for (r, since) in world.fleet.down_since.iter().enumerate() {
             if let Some(s) = since {
                 down_ps[r] += end.saturating_sub(*s);
             }
@@ -710,7 +745,7 @@ impl SimServer {
             availability: 1.0 - total_down as f64 / (end as f64 * replicas as f64),
             goodput: world.served as f64 / world.offered.max(1) as f64,
         };
-        SimServeReport {
+        let report = SimServeReport {
             snapshot: world.metrics.snapshot(),
             offered: world.offered,
             served: world.served,
@@ -723,7 +758,7 @@ impl SimServer {
             timeout_batches: world.batcher.timeout_batches,
             max_queue_depth: world.max_depth,
             max_queue_wait_s: to_seconds(world.max_queue_wait),
-            per_replica_served: world.per_replica,
+            per_replica_served: world.fleet.served,
             sim_duration_s,
             replica_utilization,
             energy: EnergyReport {
@@ -738,7 +773,8 @@ impl SimServer {
                 energy_j: dynamic_j + static_w * sim_duration_s,
             },
             availability,
-        }
+        };
+        (report, world.metrics)
     }
 }
 
@@ -764,6 +800,58 @@ enum Ev {
 /// replay metrics read) — see [`Queued`](crate::coordinator::batcher::Queued).
 type SimBatch = Batch<Time>;
 
+/// Per-replica state as a struct of arrays: parallel vecs indexed by
+/// replica, not a `Vec<Replica>` of structs. The hot loop touches only
+/// the columns an event reads (`Done` walks `epoch`/`running`/`busy_ps`
+/// without dragging queue or downtime state through cache), and every
+/// column is one O(replicas) allocation at replay start — nothing per
+/// event.
+struct ReplicaTable {
+    busy: Vec<bool>,
+    /// Dispatched batches waiting per replica (the worker channel), each
+    /// with its service time resolved once at dispatch and the attempt
+    /// count it rides on (0 for first dispatch).
+    waiting: Vec<VecDeque<(SimBatch, Time, u32)>>,
+    /// The batch each replica is currently executing, with its service
+    /// time and attempt count.
+    running: Vec<Option<(SimBatch, Time, u32)>>,
+    /// Per-replica completion epoch, bumped on crash so `Done` events
+    /// scheduled before the crash are recognized as stale.
+    epoch: Vec<u32>,
+    straggling: Vec<bool>,
+    /// When each currently-down replica crashed (None = up).
+    down_since: Vec<Option<Time>>,
+    /// Accumulated downtime per replica over closed down-windows.
+    down_ps: Vec<Time>,
+    /// Requests served per replica.
+    served: Vec<u64>,
+    /// Busy ps per replica, billed at batch *completion* (never at
+    /// dispatch): a batch still executing at the horizon contributes
+    /// nothing, so the sum can never overstate time spent inside the
+    /// replay window.
+    busy_ps: Vec<Time>,
+    /// Dynamic energy per replica, joules (per-batch table lookups billed
+    /// at completion, like `busy_ps`).
+    dynamic_j: Vec<f64>,
+}
+
+impl ReplicaTable {
+    fn new(n: usize) -> ReplicaTable {
+        ReplicaTable {
+            busy: vec![false; n],
+            waiting: (0..n).map(|_| VecDeque::new()).collect(),
+            running: (0..n).map(|_| None).collect(),
+            epoch: vec![0; n],
+            straggling: vec![false; n],
+            down_since: vec![None; n],
+            down_ps: vec![0; n],
+            served: vec![0; n],
+            busy_ps: vec![0; n],
+            dynamic_j: vec![0.0; n],
+        }
+    }
+}
+
 struct ServeWorld<'a, I> {
     config: &'a SimServeConfig,
     /// Per-class, per-model service tables (`service[class][model]`).
@@ -782,14 +870,8 @@ struct ServeWorld<'a, I> {
     metrics: Metrics,
     batcher: DynamicBatcher<Time>,
     router: Router,
-    busy: Vec<bool>,
-    /// Dispatched batches waiting per replica (the worker channel), each
-    /// with its service time resolved once at dispatch and the attempt
-    /// count it rides on (0 for first dispatch).
-    waiting: Vec<VecDeque<(SimBatch, Time, u32)>>,
-    /// The batch each replica is currently executing, with its service
-    /// time and attempt count.
-    running: Vec<Option<(SimBatch, Time, u32)>>,
+    /// Struct-of-arrays per-replica state (see [`ReplicaTable`]).
+    fleet: ReplicaTable,
     /// The fault schedule (empty slice without a plan); pre-scheduled as
     /// `Ev::Fault` events at init, indexed back through this slice.
     faults: &'a [TimedFault],
@@ -802,14 +884,6 @@ struct ServeWorld<'a, I> {
     /// `straggling[r]`, keeping the quiet path integer-only).
     straggle_mult: f64,
     error_rng: Rng,
-    /// Per-replica completion epoch, bumped on crash so `Done` events
-    /// scheduled before the crash are recognized as stale.
-    epoch: Vec<u32>,
-    straggling: Vec<bool>,
-    /// When each currently-down replica crashed (None = up).
-    down_since: Vec<Option<Time>>,
-    /// Accumulated downtime per replica over closed down-windows.
-    down_ps: Vec<Time>,
     /// Batches with nowhere routable to go (whole fleet down), re-placed
     /// on the next restart.
     parked: VecDeque<(SimBatch, u32)>,
@@ -824,15 +898,6 @@ struct ServeWorld<'a, I> {
     transient_errors: u64,
     max_depth: usize,
     max_queue_wait: Time,
-    per_replica: Vec<u64>,
-    /// Busy ps per replica, billed at batch *completion* (never at
-    /// dispatch): a batch still executing at the horizon contributes
-    /// nothing, so the sum can never overstate time spent inside the
-    /// replay window.
-    busy_ps: Vec<Time>,
-    /// Dynamic energy per replica, joules (per-batch table lookups billed
-    /// at completion, like `busy_ps`).
-    dynamic_j: Vec<f64>,
     last_done: Time,
     /// Reused per-batch latency buffers (no steady-state allocation).
     queue_ps: Vec<Time>,
@@ -846,7 +911,23 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
     /// the stream head. Called at the top of *every* event handler, so an
     /// arrival sharing a timestamp with a `FlushCheck`/`Done` is processed
     /// first — the order pre-scheduled arrival events replayed in.
+    ///
+    /// Same-timestamp arrival runs drain as one batch: the `while` pulls
+    /// every arrival stamped `now` inside a single event dispatch, so a
+    /// burst costs one wheel wake-up and one re-arm, not one event per
+    /// request.
+    #[inline]
     fn ingest(&mut self, now: Time, sch: &mut Scheduler<Ev>) {
+        match &self.pending {
+            // Stream exhausted: nothing to drain, nothing to arm.
+            None => return,
+            // Fast path for the events *between* arrivals (every
+            // `Done`/`FlushCheck` under light load): the head is in the
+            // future and its wake-up is already armed — skip straight
+            // back to the caller's event.
+            Some(a) if a.at > now && self.armed_at == Some(a.at) => return,
+            Some(_) => {}
+        }
         while let Some(a) = self.pending {
             if a.at > now {
                 break;
@@ -874,40 +955,60 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
             }
             return;
         };
-        for _ in 0..a.samples {
-            if let Some(policy) = &self.config.shed {
-                // SLO-aware admission: refuse work the backlog (or this
-                // model's observed p99) says we can't serve in time —
-                // cheaper to reject at the door than to time out later.
-                let p99 = if policy.p99_slo != Time::MAX {
-                    self.metrics.model_p99_ps(model.index() as u32)
-                } else {
-                    None
-                };
-                if policy.should_shed(self.batcher.total_depth(), p99) {
-                    self.shed += 1;
-                    continue;
+        match self.config.shed {
+            // Quiet fast path: no shed policy configured (every capacity
+            // grid point and quiet plan evaluation), so the per-sample
+            // loop is the capacity check plus the push — no `Option`
+            // probe, no p99 fetch, no shed branch.
+            None => {
+                for _ in 0..a.samples {
+                    self.admit(model, now, sch);
                 }
             }
-            if self.batcher.total_depth() >= self.config.queue_capacity {
-                self.dropped += 1;
-                continue;
-            }
-            let was_empty = self.batcher.depth(model) == 0;
-            match self.batcher.push(model, now, now) {
-                Some(batch) => self.dispatch(batch, sch),
-                // Queued into a previously-empty queue: this request is
-                // the new head — arm its deadline. Queues only empty
-                // wholesale (full batch or whole-queue flush), so every
-                // head was once a first-into-empty push and owns a check;
-                // later members need none.
-                None if was_empty => {
-                    sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
+            Some(policy) => {
+                for _ in 0..a.samples {
+                    // SLO-aware admission: refuse work the backlog (or
+                    // this model's observed p99) says we can't serve in
+                    // time — cheaper to reject at the door than to time
+                    // out later.
+                    let p99 = if policy.p99_slo != Time::MAX {
+                        self.metrics.model_p99_ps(model.index() as u32)
+                    } else {
+                        None
+                    };
+                    if policy.should_shed(self.batcher.total_depth(), p99) {
+                        self.shed += 1;
+                        continue;
+                    }
+                    self.admit(model, now, sch);
                 }
-                None => {}
             }
         }
         self.max_depth = self.max_depth.max(self.batcher.total_depth());
+    }
+
+    /// Admit one sample past the shed gate: hard capacity check, then
+    /// queue it (dispatching the batch it completes, arming a deadline
+    /// when it starts a fresh queue head).
+    #[inline]
+    fn admit(&mut self, model: ModelId, now: Time, sch: &mut Scheduler<Ev>) {
+        if self.batcher.total_depth() >= self.config.queue_capacity {
+            self.dropped += 1;
+            return;
+        }
+        let was_empty = self.batcher.depth(model) == 0;
+        match self.batcher.push(model, now, now) {
+            Some(batch) => self.dispatch(batch, sch),
+            // Queued into a previously-empty queue: this request is the
+            // new head — arm its deadline. Queues only empty wholesale
+            // (full batch or whole-queue flush), so every head was once a
+            // first-into-empty push and owns a check; later members need
+            // none.
+            None if was_empty => {
+                sch.after(self.batcher.config.max_wait, Ev::FlushCheck);
+            }
+            None => {}
+        }
     }
 
     fn dispatch(&mut self, batch: SimBatch, sch: &mut Scheduler<Ev>) {
@@ -943,8 +1044,8 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
         // which replica runs it.
         let replica = self.router.route(batch.len() as u64);
         let service = self.service_for(replica, &batch);
-        if self.busy[replica] {
-            self.waiting[replica].push_back((batch, service, tries));
+        if self.fleet.busy[replica] {
+            self.fleet.waiting[replica].push_back((batch, service, tries));
         } else {
             self.start(replica, batch, service, tries, sch);
         }
@@ -955,7 +1056,7 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
     fn service_for(&self, replica: usize, batch: &SimBatch) -> Time {
         let table = &self.service[self.mix[replica] as usize][batch.model.index()];
         let service = table[batch.len().min(table.len() - 1)];
-        if self.straggling[replica] {
+        if self.fleet.straggling[replica] {
             (service as f64 * self.straggle_mult).round() as Time
         } else {
             service
@@ -970,11 +1071,11 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
         tries: u32,
         sch: &mut Scheduler<Ev>,
     ) {
-        self.busy[replica] = true;
-        self.running[replica] = Some((batch, service, tries));
+        self.fleet.busy[replica] = true;
+        self.fleet.running[replica] = Some((batch, service, tries));
         sch.after(
             service,
-            Ev::Done { replica: replica as u32, epoch: self.epoch[replica] },
+            Ev::Done { replica: replica as u32, epoch: self.fleet.epoch[replica] },
         );
     }
 
@@ -1029,29 +1130,29 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
             }
             Ev::Done { replica, epoch } => {
                 let rep = replica as usize;
-                if epoch != self.epoch[rep] {
+                if epoch != self.fleet.epoch[rep] {
                     // Scheduled before a crash on this replica; the
                     // batch it named was already re-dispatched or failed.
                     return;
                 }
                 let (batch, service, tries) =
-                    self.running[rep].take().expect("completion on an idle replica");
+                    self.fleet.running[rep].take().expect("completion on an idle replica");
                 // Bill busy time and energy now that the work has
                 // actually finished inside the window ([now - service,
                 // now] ⊆ [0, last completion] by construction). A batch
                 // that then errors transiently still burned this time.
-                self.busy_ps[rep] += service;
+                self.fleet.busy_ps[rep] += service;
                 let e_table = &self.energy[self.mix[rep] as usize][batch.model.index()];
-                self.dynamic_j[rep] += e_table[batch.len().min(e_table.len() - 1)];
+                self.fleet.dynamic_j[rep] += e_table[batch.len().min(e_table.len() - 1)];
                 self.router.complete(rep, batch.len() as u64);
-                self.busy[rep] = false;
+                self.fleet.busy[rep] = false;
                 self.last_done = self.last_done.max(now);
                 if self.error_prob > 0.0 && self.error_rng.chance(self.error_prob) {
                     // Transient execution error: the attempt produced
                     // nothing. Free the replica for its queue first, then
                     // re-place (possibly right back here, now at the tail).
                     self.transient_errors += 1;
-                    if let Some((next, svc, t)) = self.waiting[rep].pop_front() {
+                    if let Some((next, svc, t)) = self.fleet.waiting[rep].pop_front() {
                         self.start(rep, next, svc, t, sch);
                     }
                     self.requeue_or_fail(batch, tries, now, sch);
@@ -1080,9 +1181,9 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                     );
                     self.failed += expired;
                     self.served += batch.len() as u64 - expired;
-                    self.per_replica[rep] += batch.len() as u64 - expired;
+                    self.fleet.served[rep] += batch.len() as u64 - expired;
                     self.batcher.recycle(batch.requests);
-                    if let Some((next, svc, t)) = self.waiting[rep].pop_front() {
+                    if let Some((next, svc, t)) = self.fleet.waiting[rep].pop_front() {
                         self.start(rep, next, svc, t, sch);
                     }
                 }
@@ -1092,38 +1193,38 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                 let rep = fault.replica as usize;
                 match fault.kind {
                     FaultKind::Crash => {
-                        if self.down_since[rep].is_some() {
+                        if self.fleet.down_since[rep].is_some() {
                             return; // already down
                         }
                         self.crashes += 1;
                         self.router.set_health(rep, Health::Down);
-                        self.epoch[rep] = self.epoch[rep].wrapping_add(1);
-                        self.down_since[rep] = Some(now);
+                        self.fleet.epoch[rep] = self.fleet.epoch[rep].wrapping_add(1);
+                        self.fleet.down_since[rep] = Some(now);
                         // In-flight and channel-queued work dies with the
                         // replica: free its router ledger and retry each
                         // batch across the survivors. Busy time is billed
                         // at completion, so the killed attempt costs the
                         // energy/utilization ledgers nothing.
-                        if let Some((batch, _svc, tries)) = self.running[rep].take() {
-                            self.busy[rep] = false;
+                        if let Some((batch, _svc, tries)) = self.fleet.running[rep].take() {
+                            self.fleet.busy[rep] = false;
                             self.router.complete(rep, batch.len() as u64);
                             self.requeue_or_fail(batch, tries, now, sch);
                         }
-                        let mut q = std::mem::take(&mut self.waiting[rep]);
+                        let mut q = std::mem::take(&mut self.fleet.waiting[rep]);
                         for (batch, _svc, tries) in q.drain(..) {
                             self.router.complete(rep, batch.len() as u64);
                             self.requeue_or_fail(batch, tries, now, sch);
                         }
-                        self.waiting[rep] = q;
+                        self.fleet.waiting[rep] = q;
                     }
                     FaultKind::Restart => {
-                        if self.down_since[rep].is_none() {
+                        if self.fleet.down_since[rep].is_none() {
                             return; // no matching crash landed
                         }
                         self.restarts += 1;
                         self.router.set_health(rep, Health::Up);
-                        let since = self.down_since[rep].take().expect("checked above");
-                        self.down_ps[rep] += now.saturating_sub(since);
+                        let since = self.fleet.down_since[rep].take().expect("checked above");
+                        self.fleet.down_ps[rep] += now.saturating_sub(since);
                         // Re-place work that had nowhere to go while the
                         // whole fleet was down (no retry spent: parking
                         // is the control plane's wait, not an attempt).
@@ -1133,8 +1234,8 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                         }
                         self.parked = parked;
                     }
-                    FaultKind::StraggleStart => self.straggling[rep] = true,
-                    FaultKind::StraggleEnd => self.straggling[rep] = false,
+                    FaultKind::StraggleStart => self.fleet.straggling[rep] = true,
+                    FaultKind::StraggleEnd => self.fleet.straggling[rep] = false,
                 }
             }
         }

@@ -14,6 +14,7 @@
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
 //!           `sunrise sweep --faults --mttf 0.05 --mttr 0.02 --error-prob 0.05`
+//!           `sunrise sweep --replicas 8,16 --cells 4`
 //!           `sunrise plan --rate 3000 --p99 30`
 //!           `sunrise plan --rate 3000 --p99 30 --mttf 0.1 --mttr 0.03`
 //!           `sunrise plan --rate 3000 --p99 30 --horizon-years 3 \
@@ -253,7 +254,9 @@ fn cmd_sweep(args: &[String]) {
     .opt("mttr", "0.02", "faults: mean downtime per crash, s (0 = crashed replicas stay down)")
     .opt("error-prob", "0.0", "faults: per-batch transient-error probability in [0, 1)")
     .opt("retries", "2", "faults: re-dispatch budget per batch before its requests fail")
-    .opt("deadline-ms", "0", "faults: absolute retry deadline from enqueue, ms (0 = none)");
+    .opt("deadline-ms", "0", "faults: absolute retry deadline from enqueue, ms (0 = none)")
+    .opt("cells", "1", "shard each point's fleet into N deterministic cells (1 = unsharded)")
+    .opt("shard-threads", "0", "worker threads per sharded point (0 = one per core)");
     let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
         eprintln!("unknown model {}", a.get("model"));
@@ -276,8 +279,13 @@ fn cmd_sweep(args: &[String]) {
         shape: parse_shape(&a),
         faults: if a.flag("faults") { parse_fault_spec(&a) } else { FaultSpec::default() },
         retry: parse_retry(&a),
+        cells: a.get_usize("cells"),
+        shard_threads: a.get_usize("shard-threads"),
         ..GridConfig::default()
     };
+    if grid.cells == 0 {
+        usage_error("option --cells must be >= 1");
+    }
     // `is_finite` rejects NaN and ±inf (an infinite rate or duration
     // would make trace generation loop forever).
     if !grid.duration_s.is_finite() || grid.duration_s <= 0.0 {
@@ -371,7 +379,9 @@ fn cmd_plan(args: &[String]) {
     .opt("error-prob", "0.0", "chaos axis: per-batch transient-error probability in [0, 1)")
     .opt("retries", "2", "chaos axis: re-dispatch budget per batch before its requests fail")
     .opt("deadline-ms", "0", "chaos axis: absolute retry deadline from enqueue, ms (0 = none)")
-    .opt("availability", "0", "minimum measured fleet availability in [0, 1] (0 = no floor)");
+    .opt("availability", "0", "minimum measured fleet availability in [0, 1] (0 = no floor)")
+    .opt("cells", "1", "shard each probe's fleet into N deterministic cells (1 = unsharded)")
+    .opt("shard-threads", "0", "worker threads per sharded probe (0 = one per core)");
     let a = cli.parse_slice_or_exit(args);
     let mix = parse_model_mix(a.get("model-mix"));
     // The traffic mix defines the model set when given; --model otherwise.
@@ -465,8 +475,13 @@ fn cmd_plan(args: &[String]) {
         max_replicas: a.get_usize("max-replicas"),
         objective,
         search,
+        cells: a.get_usize("cells"),
+        shard_threads: a.get_usize("shard-threads"),
         ..PlanConfig::default()
     };
+    if config.cells == 0 {
+        usage_error("option --cells must be >= 1");
+    }
     let catalog = default_catalog();
     let t0 = std::time::Instant::now();
     let models: Vec<(&str, &Network)> =
@@ -602,7 +617,8 @@ fn main() {
                  \x20 serve      threaded serving demo over simulated chip replicas (wall clock)\n\
                  \x20 queue-sim  event-driven queueing simulation of raw chips under load\n\
                  \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server;\n\
-                 \x20            optional seeded chaos per point (--faults)\n\
+                 \x20            optional seeded chaos per point (--faults) and sharded\n\
+                 \x20            parallel replay (--cells)\n\
                  \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target;\n\
                  \x20            optional capex+energy objective (--horizon-years), multi-model\n\
                  \x20            traffic (--model-mix) and a fault axis (--mttf) that prices\n\

@@ -123,7 +123,7 @@ impl Histogram {
 /// assert!(p50 <= 2_000, "lower edge never overshoots");
 /// assert!(2_000 as f64 <= p50 as f64 * 1.25, "within a quarter octave");
 /// ```
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PsHistogram {
     counts: [u64; Self::SLOTS],
     pub n: u64,
@@ -203,6 +203,40 @@ impl PsHistogram {
         } else {
             self.sum as f64 / self.n as f64
         }
+    }
+
+    /// Fold `other` into `self` **exactly**: bucket-wise count addition
+    /// plus integer `n`/`sum` sums and `min`/`max` folds. Because every
+    /// slot count is an exact integer, merging per-cell histograms is
+    /// associative, commutative, and bit-identical to having recorded all
+    /// samples into one histogram — the property the sharded-replay
+    /// ledger merge rests on (pinned by `merge_equals_whole` and the
+    /// shard-layer property test):
+    ///
+    /// ```
+    /// use sunrise::sim::stats::PsHistogram;
+    ///
+    /// let (mut a, mut b, mut whole) =
+    ///     (PsHistogram::new(), PsHistogram::new(), PsHistogram::new());
+    /// for v in [3u64, 900, 1_000_000] {
+    ///     a.record(v);
+    ///     whole.record(v);
+    /// }
+    /// for v in [17u64, 40_000] {
+    ///     b.record(v);
+    ///     whole.record(v);
+    /// }
+    /// a.merge_from(&b);
+    /// assert_eq!(a, whole, "bucket-wise merge is exact");
+    /// ```
+    pub fn merge_from(&mut self, other: &PsHistogram) {
+        for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 
     /// Approximate quantile (picoseconds) from sub-bucket lower edges.
@@ -420,6 +454,63 @@ mod tests {
         let h = PsHistogram::new();
         assert_eq!(h.quantile(0.5), 0);
         assert_eq!(h.mean_ps(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_whole() {
+        let mut parts = [PsHistogram::new(), PsHistogram::new(), PsHistogram::new()];
+        let mut whole = PsHistogram::new();
+        for (i, &v) in [1u64, 7, 8, 900, 1024, 2047, 40_000, 1 << 40, u64::MAX]
+            .iter()
+            .enumerate()
+        {
+            parts[i % 3].record(v);
+            whole.record(v);
+        }
+        let mut merged = PsHistogram::new();
+        for p in &parts {
+            merged.merge_from(p);
+        }
+        assert_eq!(merged, whole, "merge must be exact, not approximate");
+        // Merging an empty histogram is the identity (min stays folded
+        // correctly even though empties carry min = u64::MAX).
+        let before = merged.clone();
+        merged.merge_from(&PsHistogram::new());
+        assert_eq!(merged, before);
+    }
+
+    /// Satellite property (sharded-replay merge layer): for random sample
+    /// sets split across a random number of shards, the shard-merged
+    /// histogram equals the whole-fleet histogram slot for slot — hence
+    /// every quantile, the mean, min and max agree exactly.
+    #[test]
+    fn property_sharded_merge_is_exact() {
+        use crate::util::proptest::check;
+        check(0x5A4D, 40, |g| {
+            let shards = g.usize("shards", 1, 9);
+            let n = g.usize("n", 0, 300);
+            let mut parts: Vec<PsHistogram> =
+                (0..shards).map(|_| PsHistogram::new()).collect();
+            let mut whole = PsHistogram::new();
+            for _ in 0..n {
+                let base = 1u64 << g.usize("lg", 0, 50);
+                let v = base + g.u64_below("off", base.max(1));
+                parts[g.usize("shard", 0, shards)].record(v);
+                whole.record(v);
+            }
+            let mut merged = PsHistogram::new();
+            for p in &parts {
+                merged.merge_from(p);
+            }
+            crate::prop_assert!(merged == whole, "shard merge diverged from whole");
+            for q in [0.5, 0.9, 0.99, 1.0] {
+                crate::prop_assert!(
+                    merged.quantile(q) == whole.quantile(q),
+                    "q{q} diverged after an equal merge?!"
+                );
+            }
+            Ok(())
+        });
     }
 
     /// Satellite property: the integer-ps histogram agrees with the f64

@@ -43,19 +43,26 @@ where
     if threads <= 1 || items.len() <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let chunk_len = items.len().div_ceil(threads);
+    // Interleaved (strided) assignment: worker `w` takes items
+    // `w, w + threads, w + 2·threads, …`. Contiguous chunking assigned
+    // each worker one monotone slice of the grid, so a cost-skewed axis
+    // (e.g. rate ascending — later points saturate and run longest) put
+    // all the expensive points on the last worker while earlier ones sat
+    // idle. Striding deals every worker a cross-section of the cost
+    // gradient; results are still reassembled into input order, so
+    // output is byte-identical to the chunked (and serial) versions.
     let f = &f;
-    let per_chunk: Vec<Vec<R>> = thread::scope(|scope| {
-        let handles: Vec<_> = items
-            .chunks(chunk_len)
-            .enumerate()
-            .map(|(ci, chunk)| {
+    let per_worker: Vec<Vec<(usize, R)>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
                 scope.spawn(move || {
-                    chunk
+                    items
                         .iter()
                         .enumerate()
-                        .map(|(j, t)| f(ci * chunk_len + j, t))
-                        .collect::<Vec<R>>()
+                        .skip(w)
+                        .step_by(threads)
+                        .map(|(i, t)| (i, f(i, t)))
+                        .collect::<Vec<(usize, R)>>()
                 })
             })
             .collect();
@@ -64,7 +71,14 @@ where
             .map(|h| h.join().expect("sweep worker panicked"))
             .collect()
     });
-    per_chunk.into_iter().flatten().collect()
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        debug_assert!(out[i].is_none(), "item {i} computed twice");
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|r| r.expect("every item visited exactly once"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -107,5 +121,28 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(parallel_map(&empty, |_, &x| x).is_empty());
         assert_eq!(parallel_map_threads(&[9u32], 16, |_, &x| x + 1), vec![10]);
+    }
+
+    /// The load-balance contract behind the strided assignment: any run
+    /// of `threads` consecutive items is handled by `threads` distinct
+    /// workers, so a cost gradient along the input (the expensive tail of
+    /// a rate-ascending grid) is dealt across all workers instead of
+    /// piling onto the last one.
+    #[test]
+    fn consecutive_items_land_on_distinct_workers() {
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let items: Vec<u32> = (0..61).collect();
+        let threads = 4;
+        let who: Vec<ThreadId> =
+            parallel_map_threads(&items, threads, |_, _| std::thread::current().id());
+        for window in who.windows(threads) {
+            let distinct: HashSet<ThreadId> = window.iter().copied().collect();
+            assert_eq!(
+                distinct.len(),
+                threads,
+                "a window of {threads} consecutive items shared a worker"
+            );
+        }
     }
 }
