@@ -16,7 +16,15 @@ BENCH_serving.json:
     hot path;
   - the sharded replay (32-replica fleet split into 8 cells on scoped
     threads) must beat the same fleet replayed as 1 cell by >=3x in
-    wall time: parallel cells plus smaller per-cell routing scans.
+    wall time: parallel cells plus smaller per-cell routing scans;
+  - the tournament-tree indexed router must beat the frozen linear-scan
+    reference by >=2x on the 512-replica dispatch workload (the
+    O(1)-dispatch claim; the 128-replica pair is informational);
+  - ratchet: the events_per_sec_core hot-loop row must stay within 5%
+    of the committed baseline in ci/events_per_sec_baseline.json
+    (>= 0.95x). Skipped with an INFO line while the baseline file is
+    still the unmeasured stub; promote it by committing a measured
+    ns_per_op from a CI bench run.
 
 Exit 0 when every gate passes, 1 otherwise (CI retries the benches once
 on failure to rule out shared-runner noise before going red).
@@ -60,8 +68,58 @@ GATES = {
             3.0,
             "sharded replay speedup (8 cells vs 1 cell)",
         ),
+        (
+            "dispatch: 512 replicas, linear-scan reference",
+            "dispatch: 512 replicas, indexed router",
+            2.0,
+            "O(1) dispatch (indexed router vs linear scan, 512 replicas)",
+        ),
     ],
 }
+
+# The ratcheted hot-loop gate: the events_per_sec_core row may not
+# regress below RATCHET_MIN_RATIO x the committed baseline. The baseline
+# file starts life as an unmeasured stub ("measured": false); the gate
+# arms itself the moment a measured ns_per_op is committed there.
+RATCHET_BASELINE = "ci/events_per_sec_baseline.json"
+RATCHET_ROW = "serving_replay: events_per_sec_core (1 cell, quiet, streaming)"
+RATCHET_MIN_RATIO = 0.95
+
+
+def check_ratchet() -> bool:
+    try:
+        with open(RATCHET_BASELINE) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {RATCHET_BASELINE} missing (commit the stub or a measured baseline)")
+        return False
+    if not base.get("measured", False):
+        print(
+            f"INFO: events_per_sec_core ratchet not armed yet "
+            f"({RATCHET_BASELINE} is an unmeasured stub; commit a measured "
+            f"ns_per_op from a CI bench run to arm it)"
+        )
+        return True
+    try:
+        with open("BENCH_serving.json") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print("FAIL: BENCH_serving.json missing for the events_per_sec_core ratchet")
+        return False
+    ns = {r["name"]: r["ns_per_op"] for r in doc["results"]}
+    if RATCHET_ROW not in ns:
+        print(f"FAIL: BENCH_serving.json has no measured row: {RATCHET_ROW}")
+        return False
+    baseline_ns = base["ns_per_op"]
+    # Throughput ratio = baseline time / current time (lower ns is faster).
+    ratio = baseline_ns / ns[RATCHET_ROW]
+    status = "PASS" if ratio >= RATCHET_MIN_RATIO else "FAIL"
+    print(
+        f"{status}: events_per_sec_core ratchet: {ns[RATCHET_ROW]:.0f} ns vs "
+        f"baseline {baseline_ns:.0f} ns -> {ratio:.2f}x "
+        f"(gate >= {RATCHET_MIN_RATIO:g}x of committed baseline)"
+    )
+    return ratio >= RATCHET_MIN_RATIO
 
 
 def check_file(path: str, gates) -> bool:
@@ -95,6 +153,7 @@ def main() -> int:
     ok = True
     for path, gates in GATES.items():
         ok = check_file(path, gates) and ok
+    ok = check_ratchet() and ok
     return 0 if ok else 1
 
 

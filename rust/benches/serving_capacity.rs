@@ -5,9 +5,12 @@
 //! serial vs parallel, and one end-to-end `plan` query (informational).
 //! Companion JSON lands in `BENCH_serving.json` at the repo root;
 //! `ci/check_perf_gates.py` enforces the streaming row ≥3× the baseline
-//! row, the fault-idle row within 5% of the plain streaming row, and the
-//! 8-cell sharded row ≥3× the 1-cell row (the sharded-replay speedup).
-//! An `events_per_sec_core` row tracks the single-core hot loop.
+//! row, the fault-idle row within 5% of the plain streaming row, the
+//! 8-cell sharded row ≥3× the 1-cell row (the sharded-replay speedup),
+//! and the 512-replica `dispatch` row ≥2× its frozen linear-scan
+//! reference (the O(1)-dispatch win). An `events_per_sec_core` row
+//! tracks the single-core hot loop and ratchets against the committed
+//! baseline in `ci/events_per_sec_baseline.json` once one is measured.
 //! EXPERIMENTS.md's bench-row glossary maps every row to its gate.
 //!
 //! Run: `cargo bench --bench serving_capacity`
@@ -29,6 +32,7 @@ use sunrise::coordinator::fault::{FaultPlan, RetryPolicy};
 use sunrise::coordinator::plan::{
     default_catalog, plan, Objective, PlanConfig, PlanTarget, PowerModel, SearchStrategy,
 };
+use sunrise::coordinator::router::{Health, Policy, Router, ScanRouter};
 use sunrise::coordinator::shard::CellPlan;
 use sunrise::coordinator::simserve::{SimServeConfig, SimServer};
 use sunrise::sim::sweep::default_threads;
@@ -213,5 +217,98 @@ fn main() {
         "(single-core hot loop: {events} events/replay ≈ {events_per_sec_core:.2e} events/s/core)"
     );
 
+    // --- dispatch: indexed router vs the frozen linear-scan reference ---
+    // Pure router microbench: the same deterministic route/complete/
+    // health-churn workload through the tournament-tree `Router` and the
+    // frozen `ScanRouter` oracle, at 128 and 512 replicas. The CI gate
+    // requires the indexed row ≥2× the reference at 512 replicas — the
+    // O(1)-dispatch claim, measured. Before timing, both implementations
+    // are driven through the workload once and their choice checksums
+    // compared: the speed win is only admissible on bit-identical
+    // decisions.
+    let ops = if quick { 1024 } else { 8192 };
+    for n in [128usize, 512] {
+        let speeds: Vec<u64> = (0..n).map(|i| 1 + (i % 3) as u64).collect();
+        let mut indexed = Router::with_speeds(Policy::LeastLoaded, speeds.clone());
+        let mut scan = ScanRouter::with_speeds(Policy::LeastLoaded, speeds.clone());
+        let a = dispatch_churn(
+            &mut indexed,
+            n,
+            ops,
+            |r, w| r.route(w),
+            |r, i, w| r.complete(i, w),
+            |r, i, h| r.set_health(i, h),
+        );
+        let b_sum = dispatch_churn(
+            &mut scan,
+            n,
+            ops,
+            |r, w| r.route(w),
+            |r, i, w| r.complete(i, w),
+            |r, i, h| r.set_health(i, h),
+        );
+        assert_eq!(a, b_sum, "indexed router diverged from the linear-scan oracle at n={n}");
+        b.bench(&format!("dispatch: {n} replicas, indexed router"), || {
+            let mut r = Router::with_speeds(Policy::LeastLoaded, speeds.clone());
+            dispatch_churn(
+                &mut r,
+                n,
+                ops,
+                |r, w| r.route(w),
+                |r, i, w| r.complete(i, w),
+                |r, i, h| r.set_health(i, h),
+            )
+        });
+        b.bench(&format!("dispatch: {n} replicas, linear-scan reference"), || {
+            let mut r = ScanRouter::with_speeds(Policy::LeastLoaded, speeds.clone());
+            dispatch_churn(
+                &mut r,
+                n,
+                ops,
+                |r, w| r.route(w),
+                |r, i, w| r.complete(i, w),
+                |r, i, h| r.set_health(i, h),
+            )
+        });
+    }
+
     b.summary("serving");
+}
+
+/// The dispatch workload both router implementations replay: `ops`
+/// weighted routes with completions trailing `n` behind (a standing
+/// in-flight population, like a busy fleet) and a health flip every 64
+/// ops (crash on even rounds, restore on odd; victims cycle through
+/// replicas 1.. so replica 0 keeps the fleet routable). Deterministic —
+/// the same call sequence hits both routers — and returns a checksum of
+/// every routing choice so the harness can pin their decisions equal
+/// before timing either.
+fn dispatch_churn<R>(
+    router: &mut R,
+    n: usize,
+    ops: usize,
+    mut route: impl FnMut(&mut R, u64) -> usize,
+    mut complete: impl FnMut(&mut R, usize, u64),
+    mut set_health: impl FnMut(&mut R, usize, Health),
+) -> u64 {
+    let mut outstanding: std::collections::VecDeque<(usize, u64)> =
+        std::collections::VecDeque::with_capacity(n + 1);
+    let mut checksum = 0u64;
+    for i in 0..ops {
+        if n > 1 && i % 64 == 0 {
+            let round = i / 64;
+            let victim = 1 + round % (n - 1);
+            let h = if round % 2 == 0 { Health::Down } else { Health::Up };
+            set_health(router, victim, h);
+        }
+        let w = 1 + (i % 7) as u64;
+        let idx = route(router, w);
+        checksum = checksum.wrapping_mul(31).wrapping_add(idx as u64);
+        outstanding.push_back((idx, w));
+        if outstanding.len() > n {
+            let (r, w) = outstanding.pop_front().expect("nonempty");
+            complete(router, r, w);
+        }
+    }
+    checksum
 }

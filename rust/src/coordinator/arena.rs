@@ -1,0 +1,344 @@
+//! Slab arena with intrusive index-linked FIFOs — the allocation-free
+//! queue substrate for the replay hot loop.
+//!
+//! The serving replay keeps many logical FIFOs alive at once: one
+//! waiting queue per replica (the "worker channel") plus the parked
+//! queue for batches with nowhere routable to go. Backing each with its
+//! own `VecDeque` means per-queue heap blocks, growth reallocations at
+//! unpredictable moments, and cache-scattered nodes. This module
+//! replaces all of them with **one slab**: a single `Vec` of slots in
+//! which every queue entry lives, threaded into per-queue FIFOs by
+//! intrusive `next` indices. A [`Fifo`] is just a `(head, tail, len)`
+//! triple of `u32` slot indices — cheap to store per replica, trivially
+//! drainable by handle swap.
+//!
+//! Freed slots go on an internal free list and are reused in LIFO
+//! order, so after the warm-up high-water mark the arena **never
+//! allocates again**: steady-state push/pop is index relinking only.
+//! One arena, one allocation curve, zero per-queue churn.
+//!
+//! Determinism: operations are plain index manipulation — no hashing,
+//! no addresses, no capacity-dependent behavior — so replays that push
+//! and pop in the same order observe the same values regardless of how
+//! the slab grew. The FIFO semantics are pinned against a `VecDeque`
+//! reference model by `property_fifo_matches_vecdeque_model` below.
+//!
+//! ```
+//! use sunrise::coordinator::arena::{Arena, Fifo};
+//!
+//! let mut arena: Arena<&str> = Arena::with_capacity(4);
+//! let mut a = Fifo::new();
+//! let mut b = Fifo::new();
+//! arena.push_back(&mut a, "a1");
+//! arena.push_back(&mut b, "b1"); // queues interleave freely in one slab
+//! arena.push_back(&mut a, "a2");
+//! assert_eq!(arena.pop_front(&mut a), Some("a1"));
+//! assert_eq!(arena.pop_front(&mut a), Some("a2"));
+//! assert_eq!(arena.pop_front(&mut a), None);
+//! assert_eq!(arena.pop_front(&mut b), Some("b1"));
+//! ```
+
+/// Null slot index: end-of-queue / empty free list. Slab arenas are far
+/// below `u32::MAX` slots (a 4-billion-entry queue would be ~100 GB of
+/// batches), and `u32` halves the intrusive-link footprint vs `usize`.
+const NIL: u32 = u32::MAX;
+
+/// One slab slot: the stored value (taken on pop) plus the intrusive
+/// link. A slot on the free list reuses `next` as the free-list link.
+#[derive(Debug)]
+struct Slot<T> {
+    value: Option<T>,
+    next: u32,
+}
+
+/// Handle to one FIFO threaded through an [`Arena`]. Plain data — no
+/// lifetime tie to the arena, so it can live in a struct-of-arrays
+/// column (`Vec<Fifo>` per replica) while the arena lives elsewhere.
+/// All operations go through the arena; mixing handles across arenas is
+/// a logic error (debug-unchecked, like indexing into the wrong `Vec`).
+#[derive(Debug, Clone, Default)]
+pub struct Fifo {
+    head: u32,
+    tail: u32,
+    len: u32,
+}
+
+impl Fifo {
+    /// An empty queue (no slots reserved until the first push).
+    pub fn new() -> Fifo {
+        Fifo { head: NIL, tail: NIL, len: 0 }
+    }
+
+    /// Entries currently queued. O(1) — maintained, not counted.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The slab: every queue entry of every [`Fifo`] lives in `slots`;
+/// `free_head` threads the vacant ones. See the module docs.
+#[derive(Debug)]
+pub struct Arena<T> {
+    slots: Vec<Slot<T>>,
+    free_head: u32,
+    /// Live (queued) entries across all FIFOs; `slots.len() - live` are
+    /// on the free list.
+    live: usize,
+}
+
+impl<T> Arena<T> {
+    /// An empty arena that will grow on demand.
+    pub fn new() -> Arena<T> {
+        Arena::with_capacity(0)
+    }
+
+    /// An arena with `cap` slots pre-reserved — the "one allocation at
+    /// replay start" entry point. Pushing past `cap` grows the slab
+    /// amortized (Vec doubling); after the high-water mark it never
+    /// allocates again.
+    pub fn with_capacity(cap: usize) -> Arena<T> {
+        Arena { slots: Vec::with_capacity(cap), free_head: NIL, live: 0 }
+    }
+
+    /// Append `value` to the back of `fifo`. O(1); allocation-free when
+    /// the free list is non-empty or the slab has spare capacity.
+    pub fn push_back(&mut self, fifo: &mut Fifo, value: T) {
+        let idx = if self.free_head != NIL {
+            let idx = self.free_head;
+            let slot = &mut self.slots[idx as usize];
+            self.free_head = slot.next;
+            slot.value = Some(value);
+            slot.next = NIL;
+            idx
+        } else {
+            assert!(self.slots.len() < NIL as usize, "arena slot index overflow");
+            let idx = self.slots.len() as u32;
+            self.slots.push(Slot { value: Some(value), next: NIL });
+            idx
+        };
+        if fifo.tail == NIL {
+            fifo.head = idx;
+        } else {
+            self.slots[fifo.tail as usize].next = idx;
+        }
+        fifo.tail = idx;
+        fifo.len += 1;
+        self.live += 1;
+    }
+
+    /// Remove and return the front of `fifo`; `None` when empty. O(1).
+    /// The vacated slot goes to the free list for the next push.
+    pub fn pop_front(&mut self, fifo: &mut Fifo) -> Option<T> {
+        if fifo.head == NIL {
+            return None;
+        }
+        let idx = fifo.head;
+        let slot = &mut self.slots[idx as usize];
+        let value = slot.value.take().expect("queued arena slot holds no value");
+        fifo.head = slot.next;
+        if fifo.head == NIL {
+            fifo.tail = NIL;
+        }
+        slot.next = self.free_head;
+        self.free_head = idx;
+        fifo.len -= 1;
+        self.live -= 1;
+        Some(value)
+    }
+
+    /// Iterate `fifo` front-to-back without consuming it (end-of-replay
+    /// accounting walks the residual queues this way).
+    pub fn iter<'a>(&'a self, fifo: &Fifo) -> impl Iterator<Item = &'a T> {
+        let mut cur = fifo.head;
+        std::iter::from_fn(move || {
+            if cur == NIL {
+                return None;
+            }
+            let slot = &self.slots[cur as usize];
+            cur = slot.next;
+            Some(slot.value.as_ref().expect("queued arena slot holds no value"))
+        })
+    }
+
+    /// Live entries across every FIFO in the arena. O(1).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Total slots ever created (high-water mark): `slot_count() -
+    /// live()` slots sit on the free list. A steady-state loop's slot
+    /// count stops growing once warm — the allocation-freedom signal the
+    /// recycling property test pins.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Arena<T> {
+        Arena::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn fifo_order_and_emptiness() {
+        let mut arena: Arena<u32> = Arena::new();
+        let mut q = Fifo::new();
+        assert!(q.is_empty());
+        assert_eq!(arena.pop_front(&mut q), None);
+        for v in 0..5 {
+            arena.push_back(&mut q, v);
+        }
+        assert_eq!(q.len(), 5);
+        for v in 0..5 {
+            assert_eq!(arena.pop_front(&mut q), Some(v));
+        }
+        assert!(q.is_empty());
+        assert_eq!(arena.pop_front(&mut q), None);
+        assert_eq!(arena.live(), 0);
+    }
+
+    #[test]
+    fn interleaved_queues_do_not_cross_talk() {
+        let mut arena: Arena<(usize, u32)> = Arena::new();
+        let mut qs = vec![Fifo::new(); 4];
+        for round in 0..8u32 {
+            for (i, q) in qs.iter_mut().enumerate() {
+                arena.push_back(q, (i, round));
+            }
+        }
+        // Pop queues in a different order than they were pushed.
+        for (i, q) in qs.iter_mut().enumerate().rev() {
+            for round in 0..8u32 {
+                assert_eq!(arena.pop_front(q), Some((i, round)));
+            }
+        }
+    }
+
+    #[test]
+    fn drain_by_handle_swap() {
+        // The crash-drain idiom: swap the handle out, pop the snapshot
+        // dry while pushing new work to the replaced (empty) handle.
+        let mut arena: Arena<u32> = Arena::new();
+        let mut q = Fifo::new();
+        for v in 0..4 {
+            arena.push_back(&mut q, v);
+        }
+        let mut snapshot = std::mem::replace(&mut q, Fifo::new());
+        let mut drained = Vec::new();
+        while let Some(v) = arena.pop_front(&mut snapshot) {
+            drained.push(v);
+            arena.push_back(&mut q, v + 100); // re-place elsewhere mid-drain
+        }
+        assert_eq!(drained, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(arena.pop_front(&mut q), Some(100));
+    }
+
+    #[test]
+    fn slots_recycle_steady_state_is_allocation_free() {
+        let mut arena: Arena<u64> = Arena::with_capacity(8);
+        let mut q = Fifo::new();
+        for v in 0..8 {
+            arena.push_back(&mut q, v);
+        }
+        let high_water = arena.slot_count();
+        // Bounded-depth churn far past the warm-up: the slab must not
+        // grow — every push lands on a recycled slot.
+        for v in 0..10_000u64 {
+            arena.pop_front(&mut q).unwrap();
+            arena.push_back(&mut q, v);
+            assert_eq!(arena.slot_count(), high_water, "arena grew in steady state");
+        }
+        assert_eq!(q.len(), 8);
+    }
+
+    /// The satellite pin: arbitrary interleavings of push/pop/iter/drain
+    /// across several queues in one arena match a per-queue `VecDeque`
+    /// reference model exactly, and the slab never holds more slots than
+    /// the peak live population (recycling works).
+    #[test]
+    fn property_fifo_matches_vecdeque_model() {
+        use crate::util::proptest::check;
+        check(0xA12E_4A, 60, |g| {
+            let n_queues = g.usize("queues", 1, 5);
+            let mut arena: Arena<u64> = Arena::new();
+            let mut fifos = vec![Fifo::new(); n_queues];
+            let mut model: Vec<VecDeque<u64>> = vec![VecDeque::new(); n_queues];
+            let mut next_val = 0u64;
+            let mut peak_live = 0usize;
+            for _ in 0..g.usize("ops", 1, 250) {
+                let q = g.usize("q", 0, n_queues);
+                match g.usize("op", 0, 7) {
+                    // Push (~43%).
+                    0..=2 => {
+                        arena.push_back(&mut fifos[q], next_val);
+                        model[q].push_back(next_val);
+                        next_val += 1;
+                    }
+                    // Pop (~29%).
+                    3..=4 => {
+                        crate::prop_assert!(
+                            arena.pop_front(&mut fifos[q]) == model[q].pop_front(),
+                            "pop_front diverged from VecDeque model on queue {q}"
+                        );
+                    }
+                    // Non-consuming walk (~14%).
+                    5 => {
+                        let got: Vec<u64> = arena.iter(&fifos[q]).copied().collect();
+                        let want: Vec<u64> = model[q].iter().copied().collect();
+                        crate::prop_assert!(
+                            got == want,
+                            "iter diverged on queue {q}: {got:?} vs {want:?}"
+                        );
+                    }
+                    // Handle-swap drain, the crash idiom (~14%).
+                    _ => {
+                        let mut snap = std::mem::replace(&mut fifos[q], Fifo::new());
+                        while let Some(v) = arena.pop_front(&mut snap) {
+                            crate::prop_assert!(
+                                model[q].pop_front() == Some(v),
+                                "drain diverged from model on queue {q}"
+                            );
+                        }
+                        crate::prop_assert!(
+                            model[q].is_empty(),
+                            "drain left entries in the model for queue {q}"
+                        );
+                    }
+                }
+                let live: usize = model.iter().map(|m| m.len()).sum();
+                peak_live = peak_live.max(live);
+                crate::prop_assert!(
+                    arena.live() == live,
+                    "live count {} diverged from model {live}",
+                    arena.live()
+                );
+                crate::prop_assert!(
+                    arena.slot_count() <= peak_live,
+                    "slab has {} slots but peak live was only {peak_live} — \
+                     slots are not being recycled",
+                    arena.slot_count()
+                );
+                for (f, m) in fifos.iter().zip(&model) {
+                    crate::prop_assert!(
+                        f.len() == m.len(),
+                        "fifo len {} diverged from model {}",
+                        f.len(),
+                        m.len()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -188,6 +188,13 @@ impl<R: Queued> DynamicBatcher<R> {
         }
     }
 
+    /// Buffers currently sitting on the free list (bounded by the pool
+    /// cap). Observability for allocation-freedom tests: a steady-state
+    /// replay loop's pool stops churning size once warm.
+    pub fn pooled_buffers(&self) -> usize {
+        self.free.len()
+    }
+
     /// Add a request for `model`; returns a full batch if one formed.
     pub fn push(&mut self, model: ModelId, req: R, now: Time) -> Option<Batch<R>> {
         let idx = model.index();
@@ -365,6 +372,27 @@ mod tests {
         let b3 = b.push(A, 5, 5).unwrap();
         assert_eq!(b3.requests.as_ptr(), ptr, "recycled buffer not reused");
         assert_eq!(b3.requests, vec![4, 5]);
+    }
+
+    #[test]
+    fn free_list_is_capped_and_observable() {
+        let mut b: DynamicBatcher<Time> =
+            DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: millis(1000) });
+        assert_eq!(b.pooled_buffers(), 0);
+        for _ in 0..MAX_POOLED_BUFFERS + 10 {
+            b.recycle(Vec::with_capacity(2));
+        }
+        assert_eq!(
+            b.pooled_buffers(),
+            MAX_POOLED_BUFFERS,
+            "pool must stop growing at the cap"
+        );
+        // A formed batch pulls from the pool; recycling it restores it.
+        b.push(A, 0, 0);
+        let batch = b.push(A, 1, 1).unwrap();
+        assert_eq!(b.pooled_buffers(), MAX_POOLED_BUFFERS - 1);
+        b.recycle(batch.requests);
+        assert_eq!(b.pooled_buffers(), MAX_POOLED_BUFFERS);
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //!
 //! - [`request`] — request/response types and the `ModelId` registry
 //!   (names resolve to dense ids once, at the submit/trace boundary).
+//! - [`arena`] — slab arena with intrusive index-linked FIFOs: the
+//!   allocation-free backing store for the replay's per-replica waiting
+//!   queues and the parked queue.
 //! - [`batcher`] — dynamic batching policy (size + deadline), pure logic,
 //!   id-indexed queues with pooled batch buffers.
 //! - [`router`] — replica selection (round-robin / least-loaded).
@@ -40,6 +43,7 @@
 //! - [`baseline`] — the PR-2 materialized replay, frozen as the
 //!   `serving_replay` bench's comparison row.
 
+pub mod arena;
 pub mod baseline;
 pub mod batcher;
 pub mod capacity;
@@ -53,6 +57,7 @@ pub mod server;
 pub mod shard;
 pub mod simserve;
 
+pub use arena::{Arena, Fifo};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued, ShedPolicy};
 pub use capacity::{sweep_capacity, CapacityPoint, GridConfig, TraceShape};
 pub use clock::{Clock, VirtualClock, WallClock};

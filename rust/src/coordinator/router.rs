@@ -17,6 +17,25 @@
 //! the pre-heterogeneous behavior, pinned bit-identical by
 //! `property_uniform_speeds_match_unweighted`.
 //!
+//! **O(1) dispatch.** Least-loaded selection is served from a
+//! **tournament tree** (a segment-tree argmin over replica indices):
+//! every internal node stores the index winning its subtree under the
+//! exact cross-multiplied key, with health folded into the comparison
+//! (non-`Up` replicas lose to any `Up` replica) and ties going to the
+//! left — i.e. the lowest index, because left subtrees cover lower
+//! indices. [`route`](Router::route) reads the root in O(1);
+//! [`route`](Router::route), [`complete`](Router::complete) and
+//! [`set_health`](Router::set_health) each rebuild one leaf-to-root path
+//! in O(log n). The pre-tree linear scan is kept verbatim as
+//! [`ScanRouter`] — the differential oracle
+//! (`indexed_router_matches_linear_oracle` pins the tree bit-identical
+//! to the scan under randomized route/complete/health/speed sequences)
+//! and the frozen reference row of the `dispatch` bench pair in
+//! `benches/serving_capacity.rs`. An incremental `up` counter makes
+//! [`n_routable`](Router::n_routable) /
+//! [`any_routable`](Router::any_routable) O(1) as well, so no per-event
+//! cost in the replay hot loop grows with fleet size.
+//!
 //! ```
 //! use sunrise::coordinator::router::{Policy, Router};
 //!
@@ -51,7 +70,9 @@ pub enum Health {
     Down,
 }
 
-/// The router: tracks per-replica in-flight work.
+/// The router: tracks per-replica in-flight work and serves least-loaded
+/// queries from a tournament tree (see the module docs for the layout
+/// and the `ScanRouter` oracle contract).
 #[derive(Debug)]
 pub struct Router {
     pub policy: Policy,
@@ -60,9 +81,23 @@ pub struct Router {
     /// matter). Uniform for homogeneous pools.
     speed: Vec<u64>,
     health: Vec<Health>,
+    /// Number of `Up` replicas, maintained incrementally by
+    /// [`set_health`](Router::set_health): `n_routable`/`any_routable`
+    /// are O(1) reads, not health scans.
+    up: usize,
+    /// Tournament tree over replica indices: `tree[1]` is the overall
+    /// least-loaded winner, leaves live at `base..base + n` (leaf `i`
+    /// permanently holds `i`; padding leaves past `n` hold [`NO_REPLICA`]
+    /// and never win). `base` is `n.next_power_of_two()`.
+    tree: Vec<u32>,
+    base: usize,
     next_rr: usize,
     pub routed: u64,
 }
+
+/// Sentinel for tournament-tree padding leaves (fleets are far below
+/// `u32::MAX` replicas).
+const NO_REPLICA: u32 = u32::MAX;
 
 impl Router {
     /// A homogeneous router: every replica at speed 1.
@@ -77,7 +112,217 @@ impl Router {
     pub fn with_speeds(policy: Policy, speeds: Vec<u64>) -> Router {
         assert!(!speeds.is_empty());
         assert!(speeds.iter().all(|&s| s > 0), "replica speeds must be > 0");
-        Router {
+        let n = speeds.len();
+        let mut r = Router {
+            policy,
+            inflight: vec![0; n],
+            health: vec![Health::Up; n],
+            speed: speeds,
+            up: n,
+            tree: Vec::new(),
+            base: n.next_power_of_two(),
+            next_rr: 0,
+            routed: 0,
+        };
+        r.tree = vec![NO_REPLICA; 2 * r.base];
+        for i in 0..n {
+            r.tree[r.base + i] = i as u32;
+        }
+        // One bottom-up pass: every internal node gets its subtree winner
+        // (the single O(n) moment; queries and updates never rescan).
+        for node in (1..r.base).rev() {
+            r.tree[node] = r.winner(r.tree[2 * node], r.tree[2 * node + 1]);
+        }
+        r
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Tournament combine: which of two subtree winners advances. The
+    /// left argument always comes from the lower-index subtree, so
+    /// tie-to-left IS tie-to-lowest-index — exactly the linear scan's
+    /// strict-`<`-replaces-best rule. Health folds into the key: a
+    /// non-`Up` replica loses to any `Up` one (and among non-`Up`
+    /// replicas the index is arbitrary but deterministic — `route`
+    /// never reads the root without checking `up > 0` first).
+    #[inline]
+    fn winner(&self, a: u32, b: u32) -> u32 {
+        if a == NO_REPLICA {
+            return b;
+        }
+        if b == NO_REPLICA {
+            return a;
+        }
+        let (ai, bi) = (a as usize, b as usize);
+        match (self.health[ai] == Health::Up, self.health[bi] == Health::Up) {
+            (true, false) => a,
+            (false, true) => b,
+            (false, false) => a,
+            (true, true) => {
+                // a/b ≤ c/d iff a*d ≤ c*b (all non-negative, speeds > 0);
+                // `<=` keeps the left (lower-index) winner on ties.
+                let lhs = self.inflight[ai] as u128 * self.speed[bi] as u128;
+                let rhs = self.inflight[bi] as u128 * self.speed[ai] as u128;
+                if lhs <= rhs {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Rebuild the leaf-to-root path after replica `i`'s key (inflight or
+    /// health) changed: O(log n). No early exit — even when a node's
+    /// winner index is unchanged, its *key* changed, so every ancestor
+    /// must re-compare.
+    #[inline]
+    fn reindex(&mut self, i: usize) {
+        let mut node = (self.base + i) / 2;
+        while node >= 1 {
+            self.tree[node] = self.winner(self.tree[2 * node], self.tree[2 * node + 1]);
+            node /= 2;
+        }
+    }
+
+    /// Set a replica's health. Routing immediately stops (or resumes)
+    /// sending new work; in-flight accounting is untouched. O(log n):
+    /// bumps the `up` counter and rebuilds one tree path.
+    pub fn set_health(&mut self, replica: usize, health: Health) {
+        let was_up = self.health[replica] == Health::Up;
+        let is_up = health == Health::Up;
+        self.up = self.up + is_up as usize - was_up as usize;
+        self.health[replica] = health;
+        self.reindex(replica);
+    }
+
+    /// A replica's current health.
+    pub fn health(&self, replica: usize) -> Health {
+        self.health[replica]
+    }
+
+    /// Number of replicas currently accepting new work. O(1): maintained
+    /// incrementally by [`set_health`](Router::set_health), pinned
+    /// against a health scan by `property_up_count_matches_health_scan`.
+    pub fn n_routable(&self) -> usize {
+        self.up
+    }
+
+    /// True when at least one replica can take new work. [`route`]
+    /// panics when this is false — callers park work instead. O(1).
+    ///
+    /// [`route`]: Router::route
+    pub fn any_routable(&self) -> bool {
+        self.up > 0
+    }
+
+    /// Choose a replica for a batch of `weight` work units and mark it
+    /// in-flight. Only [`Health::Up`] replicas are considered; with the
+    /// whole fleet up the choice is bit-identical to the health-unaware
+    /// router. Panics if no replica is routable (guard with
+    /// [`any_routable`](Router::any_routable)).
+    ///
+    /// [`Policy::LeastLoaded`] reads the tournament-tree root — O(1) —
+    /// then rebuilds the chosen replica's path for the new in-flight
+    /// weight, O(log n); bit-identical to [`ScanRouter::route`] (the
+    /// linear-scan oracle) by differential property test.
+    pub fn route(&mut self, weight: u64) -> usize {
+        assert!(self.up > 0, "route() with no replica Up");
+        let idx = match self.policy {
+            Policy::RoundRobin => {
+                let n = self.inflight.len();
+                let mut i = self.next_rr;
+                while self.health[i] != Health::Up {
+                    i = (i + 1) % n;
+                }
+                self.next_rr = (i + 1) % n;
+                i
+            }
+            Policy::LeastLoaded => self.tree[1] as usize,
+        };
+        self.inflight[idx] += weight;
+        self.reindex(idx);
+        self.routed += 1;
+        idx
+    }
+
+    /// Mark `weight` units complete on a replica. O(log n).
+    pub fn complete(&mut self, replica: usize, weight: u64) {
+        assert!(
+            self.inflight[replica] >= weight,
+            "completing more work than in flight on replica {replica}"
+        );
+        self.inflight[replica] -= weight;
+        self.reindex(replica);
+    }
+
+    pub fn load(&self, replica: usize) -> u64 {
+        self.inflight[replica]
+    }
+
+    /// The relative speed weight of a replica.
+    pub fn speed(&self, replica: usize) -> u64 {
+        self.speed[replica]
+    }
+
+    /// Max/min in-flight ratio (balance quality; 1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.inflight.iter().max().unwrap() as f64;
+        let min = *self.inflight.iter().min().unwrap() as f64;
+        if min == 0.0 {
+            if max == 0.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            max / min
+        }
+    }
+}
+
+/// The **frozen linear-scan router** — the PR-4..7 implementation kept
+/// verbatim, with the O(n) least-loaded scan and O(n) health scans.
+///
+/// It exists for two jobs and sits on no hot path:
+///
+/// 1. **Differential oracle.** `indexed_router_matches_linear_oracle`
+///    drives a [`Router`] and a `ScanRouter` through identical
+///    randomized route/complete/health sequences over identical speed
+///    vectors and asserts every routing choice matches — the
+///    bit-identity contract that lets the tournament tree replace the
+///    scan without perturbing a single replay.
+/// 2. **Bench reference.** The `dispatch` rows in
+///    `benches/serving_capacity.rs` race the indexed router against this
+///    scan at 128 and 512 replicas; `ci/check_perf_gates.py` gates the
+///    512-replica pair ≥2×.
+///
+/// Like `sim::engine::legacy` and `coordinator::baseline`, this type is
+/// frozen: it must keep the before/after measurable forever. Do not
+/// optimize it.
+#[derive(Debug)]
+pub struct ScanRouter {
+    pub policy: Policy,
+    inflight: Vec<u64>,
+    speed: Vec<u64>,
+    health: Vec<Health>,
+    next_rr: usize,
+    pub routed: u64,
+}
+
+impl ScanRouter {
+    /// A homogeneous scan router: every replica at speed 1.
+    pub fn new(policy: Policy, n_replicas: usize) -> ScanRouter {
+        ScanRouter::with_speeds(policy, vec![1; n_replicas])
+    }
+
+    /// The linear-scan router over the given relative speeds.
+    pub fn with_speeds(policy: Policy, speeds: Vec<u64>) -> ScanRouter {
+        assert!(!speeds.is_empty());
+        assert!(speeds.iter().all(|&s| s > 0), "replica speeds must be > 0");
+        ScanRouter {
             policy,
             inflight: vec![0; speeds.len()],
             health: vec![Health::Up; speeds.len()],
@@ -87,39 +332,24 @@ impl Router {
         }
     }
 
-    pub fn n_replicas(&self) -> usize {
-        self.inflight.len()
-    }
-
-    /// Set a replica's health. Routing immediately stops (or resumes)
-    /// sending new work; in-flight accounting is untouched.
+    /// Set a replica's health (no counter: health is re-scanned).
     pub fn set_health(&mut self, replica: usize, health: Health) {
         self.health[replica] = health;
     }
 
-    /// A replica's current health.
-    pub fn health(&self, replica: usize) -> Health {
-        self.health[replica]
-    }
-
-    /// Number of replicas currently accepting new work.
+    /// Number of `Up` replicas — the frozen O(n) health scan.
     pub fn n_routable(&self) -> usize {
         self.health.iter().filter(|&&h| h == Health::Up).count()
     }
 
-    /// True when at least one replica can take new work. [`route`]
-    /// panics when this is false — callers park work instead.
-    ///
-    /// [`route`]: Router::route
+    /// Any `Up` replica? — the frozen O(n) health scan.
     pub fn any_routable(&self) -> bool {
         self.health.iter().any(|&h| h == Health::Up)
     }
 
-    /// Choose a replica for a batch of `weight` work units and mark it
-    /// in-flight. Only [`Health::Up`] replicas are considered; with the
-    /// whole fleet up the choice is bit-identical to the health-unaware
-    /// router. Panics if no replica is routable (guard with
-    /// [`any_routable`](Router::any_routable)).
+    /// The frozen O(n) route: round-robin hop loop or the linear
+    /// least-loaded scan (argmin of `inflight/speed` over `Up` replicas
+    /// by strict-`<`-replaces-best, i.e. first-index ties).
     pub fn route(&mut self, weight: u64) -> usize {
         let idx = match self.policy {
             Policy::RoundRobin => {
@@ -137,9 +367,7 @@ impl Router {
             Policy::LeastLoaded => {
                 // argmin of inflight[i]/speed[i] over Up replicas:
                 // a/b < c/d iff a*d < c*b (all non-negative, speeds > 0).
-                // Strict `<` keeps the first minimum, matching
-                // `Iterator::min_by_key` on plain depths when speeds are
-                // uniform.
+                // Strict `<` keeps the first minimum.
                 let mut best = self
                     .health
                     .iter()
@@ -174,26 +402,6 @@ impl Router {
 
     pub fn load(&self, replica: usize) -> u64 {
         self.inflight[replica]
-    }
-
-    /// The relative speed weight of a replica.
-    pub fn speed(&self, replica: usize) -> u64 {
-        self.speed[replica]
-    }
-
-    /// Max/min in-flight ratio (balance quality; 1.0 = perfect).
-    pub fn imbalance(&self) -> f64 {
-        let max = *self.inflight.iter().max().unwrap() as f64;
-        let min = *self.inflight.iter().min().unwrap() as f64;
-        if min == 0.0 {
-            if max == 0.0 {
-                1.0
-            } else {
-                f64::INFINITY
-            }
-        } else {
-            max / min
-        }
     }
 }
 
@@ -403,6 +611,15 @@ mod tests {
         r.route(1);
     }
 
+    #[test]
+    #[should_panic(expected = "no replica Up")]
+    fn round_robin_with_whole_fleet_down_panics() {
+        let mut r = Router::new(Policy::RoundRobin, 2);
+        r.set_health(0, Health::Down);
+        r.set_health(1, Health::Draining);
+        r.route(1);
+    }
+
     /// With every replica `Up`, the health-aware route loop makes exactly
     /// the choices the pre-health router made — the faults-off
     /// bit-identity contract at the router layer.
@@ -476,5 +693,132 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// **The tentpole differential:** the tournament-tree router makes
+    /// exactly the choices the frozen linear scan makes — randomized
+    /// speed vectors (uniform and heterogeneous), batch weights, health
+    /// transitions (Up/Draining/Down on random replicas, never reading
+    /// `route` with the whole fleet down), and interleaved completions.
+    /// Fleet sizes straddle power-of-two tree boundaries so padding
+    /// leaves are exercised.
+    #[test]
+    fn indexed_router_matches_linear_oracle() {
+        use crate::util::proptest::check;
+        check(0x0D15_BA7C, 60, |g| {
+            let n = *g.pick("n", &[1usize, 2, 3, 5, 8, 9, 16, 17, 33, 64, 65]);
+            let uniform = g.bool("uniform");
+            let speeds: Vec<u64> = if uniform {
+                vec![g.u64_below("us", 6) + 1; n]
+            } else {
+                (0..n).map(|_| g.u64_below("s", 9) + 1).collect()
+            };
+            let mut indexed = Router::with_speeds(Policy::LeastLoaded, speeds.clone());
+            let mut oracle = ScanRouter::with_speeds(Policy::LeastLoaded, speeds);
+            let mut ledger = vec![0u64; n];
+            for _ in 0..g.usize("ops", 1, 200) {
+                match g.usize("op", 0, 10) {
+                    // Health transition (30%): mirrored on both routers.
+                    0..=2 => {
+                        let i = g.usize("hr", 0, n);
+                        let h = *g.pick("h", &[Health::Up, Health::Draining, Health::Down]);
+                        indexed.set_health(i, h);
+                        oracle.set_health(i, h);
+                        crate::prop_assert!(
+                            indexed.n_routable() == oracle.n_routable(),
+                            "up-count {} diverged from health scan {}",
+                            indexed.n_routable(),
+                            oracle.n_routable()
+                        );
+                    }
+                    // Complete (20%) when anything is in flight.
+                    3..=4 if ledger.iter().any(|&w| w > 0) => {
+                        let busy: Vec<usize> = (0..n).filter(|&i| ledger[i] > 0).collect();
+                        let &i = g.pick("cr", &busy);
+                        let w = g.u64_below("cw", ledger[i]) + 1;
+                        indexed.complete(i, w);
+                        oracle.complete(i, w);
+                        ledger[i] -= w;
+                    }
+                    // Route (the rest), guarded like the serving loop.
+                    _ => {
+                        crate::prop_assert!(
+                            indexed.any_routable() == oracle.any_routable(),
+                            "any_routable diverged"
+                        );
+                        if !indexed.any_routable() {
+                            continue;
+                        }
+                        let w = g.u64_below("w", 24) + 1;
+                        let a = indexed.route(w);
+                        let b = oracle.route(w);
+                        crate::prop_assert!(
+                            a == b,
+                            "indexed router chose {a}, linear oracle chose {b} \
+                             (loads {ledger:?})"
+                        );
+                        ledger[a] += w;
+                    }
+                }
+            }
+            for i in 0..n {
+                crate::prop_assert!(
+                    indexed.load(i) == oracle.load(i),
+                    "replica {i} load diverged: {} vs {}",
+                    indexed.load(i),
+                    oracle.load(i)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The satellite pin: the maintained `up` counter always equals the
+    /// O(n) health scan it replaced, under randomized health churn
+    /// (including redundant transitions like Down→Down and
+    /// Draining→Down, which must not double-count).
+    #[test]
+    fn property_up_count_matches_health_scan() {
+        use crate::util::proptest::check;
+        check(0x09C0_0147, 50, |g| {
+            let n = g.usize("replicas", 1, 33);
+            let mut r = Router::new(Policy::LeastLoaded, n);
+            for _ in 0..g.usize("ops", 1, 150) {
+                let i = g.usize("replica", 0, n);
+                let h = *g.pick("h", &[Health::Up, Health::Draining, Health::Down]);
+                r.set_health(i, h);
+                let scanned = (0..n).filter(|&j| r.health(j) == Health::Up).count();
+                crate::prop_assert!(
+                    r.n_routable() == scanned,
+                    "up counter {} drifted from scan {scanned}",
+                    r.n_routable()
+                );
+                crate::prop_assert!(
+                    r.any_routable() == (scanned > 0),
+                    "any_routable diverged from scan"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Tree sizing edge cases: single replica (root IS the leaf) and
+    /// non-power-of-two fleets (padding leaves must never win).
+    #[test]
+    fn tree_handles_single_and_non_power_of_two_fleets() {
+        let mut one = Router::new(Policy::LeastLoaded, 1);
+        assert_eq!(one.route(5), 0);
+        assert_eq!(one.load(0), 5);
+        one.complete(0, 5);
+        assert_eq!(one.route(1), 0);
+
+        // n=5: base=8, three padding leaves. Load everything, then free
+        // the last replica — it must win even though it borders padding.
+        let mut r = Router::new(Policy::LeastLoaded, 5);
+        for _ in 0..5 {
+            r.route(10);
+        }
+        r.complete(4, 10);
+        assert_eq!(r.route(1), 4, "freed last replica must win the tournament");
     }
 }

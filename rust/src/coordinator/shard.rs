@@ -43,6 +43,13 @@
 //! each satisfy it) and its integer ledgers are exact; derived f64
 //! aggregates are deterministic but summed in cell order rather than
 //! global replica order.
+//!
+//! Per-cell dispatch cost is fleet-size-independent: each cell's
+//! [`Router`](crate::coordinator::router::Router) answers least-loaded
+//! queries from a tournament tree (O(1) query, O(log replicas) update)
+//! and its waiting/parked queues live in one slab
+//! [`Arena`](crate::coordinator::arena::Arena), so scaling a cell's
+//! replica count doesn't grow the per-event work inside the hot loop.
 
 use crate::coordinator::clock::{Clock, VirtualClock};
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};

@@ -46,6 +46,14 @@
 //! land in integer-picosecond histograms. A 60 s × 100k req/s trace (~6M
 //! requests) replays in O(1) arrival memory.
 //!
+//! Dispatch cost is **fleet-size-independent**: the router answers
+//! least-loaded queries from a tournament tree (O(1) query, O(log n)
+//! update — see [`router`](crate::coordinator::router)), `up`-counting
+//! makes routability checks O(1), and every per-replica waiting queue
+//! plus the parked queue threads through one slab
+//! [`Arena`](crate::coordinator::arena::Arena) — index relinking, not
+//! allocator traffic, per queue operation.
+//!
 //! Event-order equivalence with the old pre-scheduled form: every event
 //! handler first ingests all arrivals due at the current timestamp, so
 //! same-time (arrival, flush/done) collisions still process the arrival
@@ -76,6 +84,7 @@
 //! ```
 
 use crate::chip::sunrise::SunriseChip;
+use crate::coordinator::arena::{Arena, Fifo};
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, ShedPolicy};
 use crate::coordinator::clock::{Clock, VirtualClock};
 use crate::coordinator::fault::{FaultKind, FaultPlan, RetryPolicy, TimedFault};
@@ -87,7 +96,6 @@ use crate::sim::{from_seconds, to_seconds, Time};
 use crate::util::rng::Rng;
 use crate::workloads::generator::TraceRequest;
 use crate::workloads::Network;
-use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Virtual-time server configuration (mirrors
@@ -629,7 +637,12 @@ impl SimServer {
             error_prob,
             straggle_mult,
             error_rng,
-            parked: VecDeque::new(),
+            // One warm slab for every waiting/parked queue entry: sized
+            // for a couple of queued batches per replica up front; deeper
+            // backlogs grow it amortized to a high-water mark and then
+            // it never allocates again.
+            arena: Arena::with_capacity(2 * replicas),
+            parked: Fifo::new(),
             offered: 0,
             served: 0,
             dropped: 0,
@@ -711,7 +724,7 @@ impl SimServer {
         // it explicitly instead of letting it vanish. Both sums are 0 on
         // a fault-free replay (the engine drains everything).
         let queued_at_end = world.batcher.total_depth() as u64
-            + world.parked.iter().map(|(b, _)| b.len() as u64).sum::<u64>();
+            + world.arena.iter(&world.parked).map(|(b, _, _)| b.len() as u64).sum::<u64>();
         let in_flight_at_end = world
             .fleet
             .running
@@ -723,7 +736,7 @@ impl SimServer {
                 .fleet
                 .waiting
                 .iter()
-                .flat_map(|q| q.iter())
+                .flat_map(|q| world.arena.iter(q))
                 .map(|(b, _, _)| b.len() as u64)
                 .sum::<u64>();
 
@@ -810,8 +823,12 @@ struct ReplicaTable {
     busy: Vec<bool>,
     /// Dispatched batches waiting per replica (the worker channel), each
     /// with its service time resolved once at dispatch and the attempt
-    /// count it rides on (0 for first dispatch).
-    waiting: Vec<VecDeque<(SimBatch, Time, u32)>>,
+    /// count it rides on (0 for first dispatch). A [`Fifo`] handle per
+    /// replica into the world's shared slab [`Arena`] — entries of every
+    /// replica's queue (and the parked queue) live in one slab, so
+    /// steady-state queue churn relinks indices instead of touching the
+    /// allocator (see [`crate::coordinator::arena`]).
+    waiting: Vec<Fifo>,
     /// The batch each replica is currently executing, with its service
     /// time and attempt count.
     running: Vec<Option<(SimBatch, Time, u32)>>,
@@ -839,7 +856,7 @@ impl ReplicaTable {
     fn new(n: usize) -> ReplicaTable {
         ReplicaTable {
             busy: vec![false; n],
-            waiting: (0..n).map(|_| VecDeque::new()).collect(),
+            waiting: vec![Fifo::new(); n],
             running: (0..n).map(|_| None).collect(),
             epoch: vec![0; n],
             straggling: vec![false; n],
@@ -884,9 +901,16 @@ struct ServeWorld<'a, I> {
     /// `straggling[r]`, keeping the quiet path integer-only).
     straggle_mult: f64,
     error_rng: Rng,
+    /// The slab every queued-batch entry lives in: per-replica `waiting`
+    /// FIFOs and `parked` all thread through it, so one warm slab serves
+    /// the whole fleet and steady-state queue traffic never allocates.
+    /// Entries are `(batch, service, tries)`; `parked` entries carry a 0
+    /// service placeholder (service is resolved at re-place time, when
+    /// the routed replica's class is known).
+    arena: Arena<(SimBatch, Time, u32)>,
     /// Batches with nowhere routable to go (whole fleet down), re-placed
-    /// on the next restart.
-    parked: VecDeque<(SimBatch, u32)>,
+    /// on the next restart. A [`Fifo`] into `arena`.
+    parked: Fifo,
     offered: u64,
     served: u64,
     dropped: u64,
@@ -1036,7 +1060,7 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
     /// re-dispatched batch keeps its retry count.
     fn place(&mut self, batch: SimBatch, tries: u32, sch: &mut Scheduler<Ev>) {
         if !self.router.any_routable() {
-            self.parked.push_back((batch, tries));
+            self.arena.push_back(&mut self.parked, (batch, 0, tries));
             return;
         }
         // Route first, then resolve the service time from the routed
@@ -1045,7 +1069,7 @@ impl<I: Iterator<Item = StreamedArrival>> ServeWorld<'_, I> {
         let replica = self.router.route(batch.len() as u64);
         let service = self.service_for(replica, &batch);
         if self.fleet.busy[replica] {
-            self.fleet.waiting[replica].push_back((batch, service, tries));
+            self.arena.push_back(&mut self.fleet.waiting[replica], (batch, service, tries));
         } else {
             self.start(replica, batch, service, tries, sch);
         }
@@ -1152,7 +1176,8 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                     // nothing. Free the replica for its queue first, then
                     // re-place (possibly right back here, now at the tail).
                     self.transient_errors += 1;
-                    if let Some((next, svc, t)) = self.fleet.waiting[rep].pop_front() {
+                    if let Some((next, svc, t)) = self.arena.pop_front(&mut self.fleet.waiting[rep])
+                    {
                         self.start(rep, next, svc, t, sch);
                     }
                     self.requeue_or_fail(batch, tries, now, sch);
@@ -1183,7 +1208,8 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                     self.served += batch.len() as u64 - expired;
                     self.fleet.served[rep] += batch.len() as u64 - expired;
                     self.batcher.recycle(batch.requests);
-                    if let Some((next, svc, t)) = self.fleet.waiting[rep].pop_front() {
+                    if let Some((next, svc, t)) = self.arena.pop_front(&mut self.fleet.waiting[rep])
+                    {
                         self.start(rep, next, svc, t, sch);
                     }
                 }
@@ -1210,12 +1236,17 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                             self.router.complete(rep, batch.len() as u64);
                             self.requeue_or_fail(batch, tries, now, sch);
                         }
-                        let mut q = std::mem::take(&mut self.fleet.waiting[rep]);
-                        for (batch, _svc, tries) in q.drain(..) {
+                        // Handle-swap drain: snapshot the FIFO handle,
+                        // pop the snapshot dry (re-placement pushes go
+                        // to other replicas' live handles in the same
+                        // slab — never back into the snapshot, since
+                        // this replica is Down).
+                        let mut q =
+                            std::mem::replace(&mut self.fleet.waiting[rep], Fifo::new());
+                        while let Some((batch, _svc, tries)) = self.arena.pop_front(&mut q) {
                             self.router.complete(rep, batch.len() as u64);
                             self.requeue_or_fail(batch, tries, now, sch);
                         }
-                        self.fleet.waiting[rep] = q;
                     }
                     FaultKind::Restart => {
                         if self.fleet.down_since[rep].is_none() {
@@ -1228,11 +1259,11 @@ impl<I: Iterator<Item = StreamedArrival>> World for ServeWorld<'_, I> {
                         // Re-place work that had nowhere to go while the
                         // whole fleet was down (no retry spent: parking
                         // is the control plane's wait, not an attempt).
-                        let mut parked = std::mem::take(&mut self.parked);
-                        for (batch, tries) in parked.drain(..) {
+                        let mut parked = std::mem::replace(&mut self.parked, Fifo::new());
+                        while let Some((batch, _svc, tries)) = self.arena.pop_front(&mut parked)
+                        {
                             self.place(batch, tries, sch);
                         }
-                        self.parked = parked;
                     }
                     FaultKind::StraggleStart => self.fleet.straggling[rep] = true,
                     FaultKind::StraggleEnd => self.fleet.straggling[rep] = false,
