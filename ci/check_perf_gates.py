@@ -26,6 +26,13 @@ BENCH_serving.json:
     still the unmeasured stub; promote it by committing a measured
     ns_per_op from a CI bench run.
 
+BENCH_llm_gate.json (written by the serving bench's semantic probe):
+  - the capacity-bound gate: a small-memory fleet under per-request KV
+    footprints larger than its feature-side DRAM must report shed > 0,
+    AND the same token workload on the full-memory class must stay
+    feasible (nothing shed/failed/dropped). Skipped with an INFO line
+    while the committed file is the unmeasured stub.
+
 Exit 0 when every gate passes, 1 otherwise (CI retries the benches once
 on failure to rule out shared-runner noise before going red).
 """
@@ -122,6 +129,42 @@ def check_ratchet() -> bool:
     return ratio >= RATCHET_MIN_RATIO
 
 
+LLM_GATE = "BENCH_llm_gate.json"
+
+
+def check_llm_gate() -> bool:
+    """The KV-capacity binding-constraint gate (semantic, not a timing ratio).
+
+    The serving bench probes the same token-level workload against a
+    small-memory fleet (must shed at admission: capacity is the binding
+    constraint) and the full-memory class (must serve everything: the
+    constraint flips away with more memory). Both verdicts must hold.
+    """
+    try:
+        with open(LLM_GATE) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {LLM_GATE} missing (commit the stub or run the serving bench)")
+        return False
+    if not doc.get("measured", False):
+        print(
+            f"INFO: llm capacity-bound gate not armed yet ({LLM_GATE} is an "
+            f"unmeasured stub; `cargo bench --bench serving_capacity` writes "
+            f"the measured probe)"
+        )
+        return True
+    shed = doc.get("capacity_bound_shed", 0)
+    feasible = doc.get("larger_memory_feasible", False)
+    ok = shed > 0 and feasible
+    status = "PASS" if ok else "FAIL"
+    print(
+        f"{status}: llm capacity-bound gate: small-memory fleet shed {shed} "
+        f"request(s) (need > 0), larger-memory class feasible: {feasible} "
+        f"(need true); {doc.get('tokens_per_sec', 0):.3g} replayed tokens/s"
+    )
+    return ok
+
+
 def check_file(path: str, gates) -> bool:
     try:
         with open(path) as f:
@@ -154,6 +197,7 @@ def main() -> int:
     for path, gates in GATES.items():
         ok = check_file(path, gates) and ok
     ok = check_ratchet() and ok
+    ok = check_llm_gate() and ok
     return 0 if ok else 1
 
 

@@ -29,6 +29,7 @@ use sunrise::coordinator::batcher::BatcherConfig;
 use sunrise::coordinator::capacity::{sweep_capacity_threads, GridConfig};
 use sunrise::coordinator::clock::millis;
 use sunrise::coordinator::fault::{FaultPlan, RetryPolicy};
+use sunrise::coordinator::llm::LlmConfig;
 use sunrise::coordinator::plan::{
     default_catalog, plan, Objective, PlanConfig, PlanTarget, PowerModel, SearchStrategy,
 };
@@ -216,6 +217,97 @@ fn main() {
     println!(
         "(single-core hot loop: {events} events/replay ≈ {events_per_sec_core:.2e} events/s/core)"
     );
+
+    // --- continuous batching: the token-level replay, tokens/s ---
+    // The same 16-replica fleet serving autoregressive decode: each
+    // request prefills 64 tokens and decodes ~8 more, continuous-batched
+    // at token boundaries with per-replica KV accounting. Informational
+    // row (no ratio gate) — the println reports replayed tokens/s, the
+    // figure the ISSUE's capacity analysis is denominated in.
+    let llm = LlmConfig {
+        decode_mean: 8.0,
+        prefill_tokens: 64,
+        kv_bytes_per_token: 16_384,
+        ..LlmConfig::default()
+    };
+    let (llm_rate, llm_dur) = if quick { (2_000.0, 0.2) } else { (5_000.0, 0.5) };
+    let tok_probe = server.replay_llm_stream(
+        PoissonTraceIter::new(Rng::new(seed), llm_rate, llm_dur, "resnet50", 1),
+        &mix16,
+        &llm,
+        seed,
+    );
+    assert!(tok_probe.tokens.conserves(), "bench llm probe broke token conservation");
+    let tokens_done = tok_probe.tokens.prefill + tok_probe.tokens.decoded;
+    let m = b.bench("serving_replay: continuous batching, 16 replicas, llm decode", || {
+        server
+            .replay_llm_stream(
+                PoissonTraceIter::new(Rng::new(seed), llm_rate, llm_dur, "resnet50", 1),
+                &mix16,
+                &llm,
+                seed,
+            )
+            .served
+    });
+    let tokens_per_sec = tokens_done as f64 / (m.median_ns * 1e-9);
+    println!(
+        "(continuous batching: {tokens_done} tokens/replay ≈ {tokens_per_sec:.2e} replayed tokens/s)"
+    );
+
+    // --- llm gate probe: KV capacity as the binding constraint ---
+    // Not a timing row — a semantic probe for `ci/check_perf_gates.py`:
+    // the same token workload must (a) shed on a fleet whose per-request
+    // KV footprint exceeds the small chip's feature-side DRAM, and
+    // (b) stay fully served on the full-memory class. The measured
+    // verdicts land in BENCH_llm_gate.json next to BENCH_serving.json.
+    let pressure = LlmConfig {
+        decode_mean: 8.0,
+        prefill_tokens: 128,
+        kv_bytes_per_token: 150_000,
+        ..LlmConfig::default()
+    };
+    let gate_cfg = SimServeConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: millis(2) },
+        queue_capacity: 100_000,
+        ..SimServeConfig::default()
+    };
+    let small_chip = SunriseConfig {
+        dram_bits: SunriseConfig::default().dram_bits / 16.0,
+        ..SunriseConfig::default()
+    };
+    let mut small_server = SimServer::new(SunriseChip::new(small_chip), gate_cfg.clone());
+    small_server.register("resnet50", &net);
+    let mix4: Vec<u32> = vec![0; 4];
+    let gate_trace = || PoissonTraceIter::new(Rng::new(seed), 2_000.0, 0.2, "resnet50", 1);
+    let bound = small_server.replay_llm_stream(gate_trace(), &mix4, &pressure, seed);
+    let mut big_server = SimServer::new(SunriseChip::silicon(), gate_cfg);
+    big_server.register("resnet50", &net);
+    let feasible_report = big_server.replay_llm_stream(gate_trace(), &mix4, &pressure, seed);
+    let larger_memory_feasible = feasible_report.shed == 0
+        && feasible_report.failed == 0
+        && feasible_report.dropped == 0
+        && feasible_report.tokens.conserves();
+    println!(
+        "(llm gate probe: small-memory fleet shed {} of {} requests; \
+         full-memory fleet feasible: {larger_memory_feasible})",
+        bound.shed, bound.offered
+    );
+    {
+        use sunrise::util::json::Json;
+        let doc = Json::obj(vec![
+            ("measured", Json::Bool(true)),
+            ("capacity_bound_shed", Json::num(bound.shed as f64)),
+            ("capacity_bound_offered", Json::num(bound.offered as f64)),
+            ("larger_memory_feasible", Json::Bool(larger_memory_feasible)),
+            ("tokens_per_sec", Json::num(tokens_per_sec)),
+        ]);
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_llm_gate.json");
+        match std::fs::write(&path, doc.to_pretty()) {
+            Ok(()) => println!("(wrote {})", path.display()),
+            Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+        }
+    }
 
     // --- dispatch: indexed router vs the frozen linear-scan reference ---
     // Pure router microbench: the same deterministic route/complete/

@@ -170,6 +170,16 @@ impl SunriseChip {
         self.config.dram_bits / 8.0 / 1e6
     }
 
+    /// Feature-side DRAM available for KV caches, bytes.
+    ///
+    /// The weight side of the bonded DRAM holds resident model weights;
+    /// the remaining `1 - weight_side_frac` (the DSU/feature side) is
+    /// what autoregressive serving can fill with per-request KV state.
+    /// On silicon (4.5 Gb, 50/50 split) this is ~281 MB.
+    pub fn kv_capacity_bytes(&self) -> u64 {
+        (self.config.dram_bits / 8.0 * (1.0 - self.config.weight_side_frac)) as u64
+    }
+
     /// Run a network at `batch` under the paper's weight-stationary flow.
     /// Memoized: repeated runs of the same (network, batch) return the
     /// cached schedule behind an `Arc` (no recompute, no clone).

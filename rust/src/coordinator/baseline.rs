@@ -341,6 +341,11 @@ impl SimServer {
                 replicas,
                 world.served as f64 / offered.max(1) as f64,
             ),
+            // The frozen path predates token-level serving: every request
+            // is a one-shot batch job, so both ledgers stay at their
+            // (empty) defaults.
+            tokens: crate::coordinator::llm::TokenLedger::default(),
+            kv: crate::coordinator::llm::KvReport::default(),
         }
     }
 }

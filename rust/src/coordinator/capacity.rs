@@ -31,6 +31,7 @@ use crate::chip::sunrise::{SunriseChip, SunriseConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::clock::millis;
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
+use crate::coordinator::llm::LlmConfig;
 use crate::coordinator::router::Policy;
 use crate::coordinator::shard::CellPlan;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
@@ -167,6 +168,13 @@ pub struct GridConfig {
     /// Worker threads per sharded point (`0` = one per core). Only
     /// consulted when `cells > 1`.
     pub shard_threads: usize,
+    /// Token-level (LLM) workload axis: `None` (the default) replays
+    /// one-shot requests on the exact existing path; `Some` replays
+    /// autoregressive decode with per-replica KV-capacity accounting
+    /// ([`llm`](crate::coordinator::llm)). A
+    /// [one-shot](LlmConfig::is_one_shot) config delegates to the
+    /// one-shot path and is bit-identical to `None`.
+    pub llm: Option<LlmConfig>,
 }
 
 impl Default for GridConfig {
@@ -185,6 +193,7 @@ impl Default for GridConfig {
             retry: RetryPolicy::default(),
             cells: 1,
             shard_threads: 0,
+            llm: None,
         }
     }
 }
@@ -297,6 +306,9 @@ pub fn sweep_capacity_mix_threads(
     );
     grid.shape.validate()?;
     grid.faults.validate()?;
+    if let Some(llm) = &grid.llm {
+        llm.validate()?;
+    }
     for mix in mixes {
         crate::ensure!(!mix.is_empty(), "capacity grid replica mixes must be non-empty");
         for &class in mix {
@@ -356,8 +368,46 @@ pub fn sweep_capacity_mix_threads(
         // cannot reorder anything: serial == parallel still holds.
         // With `cells > 1` the point replays sharded — also a pure
         // function of its coordinates (per-cell seeds derive from the
-        // point seed), merged deterministically.
-        let report = if grid.cells > 1 {
+        // point seed), merged deterministically. A token-level grid
+        // (`llm: Some`) routes through the LLM entry points, which
+        // delegate one-shot configs to the exact branches below.
+        let report = if let Some(llm) = &grid.llm {
+            if grid.cells > 1 {
+                let plan = CellPlan {
+                    cells: grid.cells,
+                    threads: grid.shard_threads,
+                    inter_cell_latency: 0,
+                };
+                let make_trace = || grid.shape.stream(grid.seed, rate, grid.duration_s, model);
+                if grid.faults.is_quiet() {
+                    server.replay_sharded_llm(make_trace, mix, llm, grid.seed, &plan)
+                } else {
+                    server.replay_sharded_llm_faulted(
+                        make_trace,
+                        mix,
+                        llm,
+                        &grid.faults,
+                        &grid.retry,
+                        grid.seed,
+                        from_seconds(grid.duration_s),
+                        &plan,
+                    )
+                }
+            } else {
+                let trace = grid.shape.stream(grid.seed, rate, grid.duration_s, model);
+                if grid.faults.is_quiet() {
+                    server.replay_llm_stream(trace, mix, llm, grid.seed)
+                } else {
+                    let plan = FaultPlan::generate(
+                        &grid.faults,
+                        grid.seed,
+                        mix.len(),
+                        from_seconds(grid.duration_s),
+                    );
+                    server.replay_llm_stream_faulted(trace, mix, llm, grid.seed, &plan, &grid.retry)
+                }
+            }
+        } else if grid.cells > 1 {
             let plan = CellPlan {
                 cells: grid.cells,
                 threads: grid.shard_threads,
@@ -428,28 +478,32 @@ pub fn curve<'a>(
 
 /// Render the grid as an aligned text table.
 pub fn render_grid(points: &[CapacityPoint]) -> String {
-    let mut t = Table::new(
-        "capacity grid (virtual-time serving)",
-        &[
-            "rate req/s",
-            "replicas",
-            "max_batch",
-            "served",
-            "dropped",
-            "failed",
-            "avail %",
-            "thru req/s",
-            "p50 ms",
-            "p99 ms",
-            "batch",
-            "util %",
-            "meas W",
-            "max depth",
-        ],
-    );
+    // Token columns appear only when at least one point carried a
+    // token-level workload, so one-shot grids render unchanged.
+    let llm = points.iter().any(|p| p.report.tokens.offered > 0);
+    let mut header = vec![
+        "rate req/s",
+        "replicas",
+        "max_batch",
+        "served",
+        "dropped",
+        "failed",
+        "avail %",
+        "thru req/s",
+        "p50 ms",
+        "p99 ms",
+        "batch",
+        "util %",
+        "meas W",
+        "max depth",
+    ];
+    if llm {
+        header.extend_from_slice(&["tok/s", "tok shed", "kv hi %"]);
+    }
+    let mut t = Table::new("capacity grid (virtual-time serving)", &header);
     for p in points {
         let s = &p.report.snapshot;
-        t.row(&[
+        let mut row = vec![
             format!("{:.0}", p.rate),
             p.replicas.to_string(),
             p.max_batch.to_string(),
@@ -464,7 +518,25 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
             format!("{:.1}", p.report.replica_utilization * 100.0),
             format!("{:.1}", p.report.energy.avg_power_w),
             p.report.max_queue_depth.to_string(),
-        ]);
+        ];
+        if llm {
+            let tok = &p.report.tokens;
+            let tok_ps = (tok.prefill + tok.decoded) as f64 / p.duration_s.max(1e-12);
+            // The hottest replica's high-water mark as a fraction of its
+            // class capacity — the "how close to the wall" column.
+            let kv_hi = p
+                .report
+                .kv
+                .high_water_bytes
+                .iter()
+                .zip(&p.report.kv.capacity_bytes)
+                .map(|(&h, &c)| if c == 0 { 0.0 } else { h as f64 / c as f64 })
+                .fold(0.0_f64, f64::max);
+            row.push(format!("{tok_ps:.0}"));
+            row.push(tok.shed.to_string());
+            row.push(format!("{:.1}", kv_hi * 100.0));
+        }
+        t.row(&row);
     }
     t.render()
 }
@@ -472,7 +544,9 @@ pub fn render_grid(points: &[CapacityPoint]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::llm::TokenLedger;
     use crate::workloads::generator::{bursty_trace, poisson_trace};
+    use crate::workloads::mlp;
     use crate::workloads::resnet::resnet50;
 
     fn small_grid() -> GridConfig {
@@ -938,5 +1012,129 @@ mod tests {
         let rendered = render_grid(&points);
         assert!(rendered.contains("p99 ms"));
         assert!(rendered.lines().count() >= 6, "table too short:\n{rendered}");
+        // One-shot grids never grow the token columns.
+        assert!(!rendered.contains("tok/s"), "token columns on a one-shot grid:\n{rendered}");
+    }
+
+    #[test]
+    fn llm_grid_conserves_tokens_and_stays_deterministic() {
+        // A token-level grid sweeps like any other: serial == parallel
+        // bit-for-bit (token and KV ledgers included), every point
+        // satisfies the token conservation identity, and the rendered
+        // table grows the token columns.
+        let net = mlp::quickstart();
+        let grid = GridConfig {
+            rates: vec![300.0, 1200.0],
+            replicas: vec![1, 2],
+            max_batches: vec![4],
+            duration_s: 0.2,
+            llm: Some(LlmConfig {
+                decode_mean: 4.0,
+                prefill_tokens: 32,
+                kv_bytes_per_token: 4096,
+                ..LlmConfig::default()
+            }),
+            ..GridConfig::default()
+        };
+        let cfg = SunriseConfig::default();
+        let serial = sweep_capacity_threads(&net, "mlp", &cfg, &grid, 1).expect("grid");
+        let parallel = sweep_capacity_threads(&net, "mlp", &cfg, &grid, 8).expect("grid");
+        assert_eq!(serial.len(), 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "llm point diverged");
+            assert_eq!(a.report.tokens, b.report.tokens, "token ledger diverged");
+            assert_eq!(a.report.kv, b.report.kv, "kv report diverged");
+            let t = &a.report.tokens;
+            assert!(t.offered > 0, "llm point offered no tokens");
+            assert!(t.conserves(), "token conservation broke: {t:?}");
+            assert_eq!(a.report.kv.capacity_bytes.len(), a.replicas);
+            for (hi, cap) in
+                a.report.kv.high_water_bytes.iter().zip(&a.report.kv.capacity_bytes)
+            {
+                assert!(hi <= cap, "high-water {hi} above capacity {cap}");
+            }
+        }
+        let rendered = render_grid(&serial);
+        assert!(rendered.contains("tok/s"), "missing token columns:\n{rendered}");
+        assert!(rendered.contains("kv hi %"), "missing kv column:\n{rendered}");
+    }
+
+    #[test]
+    fn one_shot_llm_grid_is_bit_identical_to_the_plain_grid() {
+        // `llm: Some(one_shot)` delegates every point to the exact
+        // one-shot path — the whole grid is bit-identical to
+        // `llm: None`, quiet and faulted alike.
+        let net = resnet50();
+        let cfg = SunriseConfig::default();
+        for faults in [
+            FaultSpec::default(),
+            FaultSpec { mttf_s: 0.08, mttr_s: 0.02, ..FaultSpec::default() },
+        ] {
+            let plain = GridConfig {
+                rates: vec![400.0, 1600.0],
+                replicas: vec![2],
+                max_batches: vec![8],
+                duration_s: 0.2,
+                faults: faults.clone(),
+                ..GridConfig::default()
+            };
+            let degenerate =
+                GridConfig { llm: Some(LlmConfig::one_shot()), ..plain.clone() };
+            let a = sweep_capacity_threads(&net, "resnet50", &cfg, &plain, 1).expect("grid");
+            let b =
+                sweep_capacity_threads(&net, "resnet50", &cfg, &degenerate, 1).expect("grid");
+            for (p, q) in a.iter().zip(&b) {
+                assert!(
+                    p.report.snapshot.bitwise_eq(&q.report.snapshot),
+                    "one-shot llm grid diverged from plain grid"
+                );
+                assert_eq!(p.report.served, q.report.served);
+                assert_eq!(q.report.tokens, TokenLedger::default());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_llm_grid_points_merge_and_conserve() {
+        // `cells > 1` + `llm: Some` composes: points replay through the
+        // sharded LLM path, merges stay deterministic across thread
+        // counts, and the token volume matches the unsharded grid (the
+        // decode marking runs before the cell filter).
+        let net = mlp::quickstart();
+        let grid = GridConfig {
+            rates: vec![500.0, 2000.0],
+            replicas: vec![2],
+            max_batches: vec![4],
+            duration_s: 0.2,
+            cells: 2,
+            shard_threads: 2,
+            llm: Some(LlmConfig {
+                decode_mean: 3.0,
+                prefill_tokens: 16,
+                kv_bytes_per_token: 2048,
+                ..LlmConfig::default()
+            }),
+            ..GridConfig::default()
+        };
+        let cfg = SunriseConfig::default();
+        let serial = sweep_capacity_threads(&net, "mlp", &cfg, &grid, 1).expect("grid");
+        let parallel = sweep_capacity_threads(&net, "mlp", &cfg, &grid, 8).expect("grid");
+        let unsharded = sweep_capacity_threads(
+            &net,
+            "mlp",
+            &cfg,
+            &GridConfig { cells: 1, ..grid.clone() },
+            1,
+        )
+        .expect("grid");
+        for ((a, b), u) in serial.iter().zip(&parallel).zip(&unsharded) {
+            assert!(a.report.snapshot.bitwise_eq(&b.report.snapshot), "sharded llm diverged");
+            assert_eq!(a.report.tokens, b.report.tokens);
+            assert!(a.report.tokens.conserves(), "sharded llm broke token conservation");
+            assert_eq!(
+                a.report.tokens.offered, u.report.tokens.offered,
+                "sharding resampled the decode stream"
+            );
+        }
     }
 }

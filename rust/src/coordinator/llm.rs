@@ -1,0 +1,1532 @@
+//! Token-level autoregressive (LLM) serving on the virtual-time replay
+//! stack: prefill/decode phases, per-request KV-cache footprints, and
+//! **continuous batching** — requests join and leave a replica's running
+//! batch at token boundaries instead of riding one-shot batches.
+//!
+//! The paper's third headline claim is 20× memory *capacity*; one-shot
+//! replays can run a replica out of bandwidth or compute but never out
+//! of memory. Here every admitted request reserves its full KV footprint
+//! (`(prefill + decode_len) × kv_bytes_per_token`) on the routed
+//! replica's feature-side DRAM
+//! ([`kv_capacity_bytes`](crate::chip::sunrise::SunriseChip::kv_capacity_bytes)),
+//! occupancy grows one token per decode step, and admission control
+//! sheds what can never fit — which is what lets the capacity planner's
+//! binding constraint flip between bandwidth, compute, and capacity per
+//! chip class.
+//!
+//! **Replica model.** Each replica runs at most one *decode step* at a
+//! time over its resident set (≤ `max_batch` requests). A step costs the
+//! per-model service-table time at the resident batch size (a decode
+//! step is one forward pass of the resident batch) and decodes one token
+//! for every resident. Steps are self-rescheduling wheel events exactly
+//! like the arrival stream's `NextArrival`: one `StepDone` is armed per
+//! busy replica, epoch-guarded against crashes. Prefill charges its KV
+//! bytes (and the prefill-token ledger) when a request joins the
+//! resident set but takes no step time — on Sunrise's near-memory
+//! arrays prefill is compute-dense and fast; decode is the memory-bound
+//! regime this axis models.
+//!
+//! **Admission.** The front door reuses the one-shot plumbing: the
+//! [`ShedPolicy`] gate and hard `queue_capacity` bound apply to the
+//! total queued depth, then the request routes (depth-normalized
+//! least-loaded) and is capacity-checked against the routed replica: a
+//! footprint larger than the class capacity sheds immediately (it can
+//! never fit), and a request that cannot reserve now, arriving to a
+//! full per-replica queue, sheds as **capacity shed** — sustained
+//! capacity pressure is visible as `shed > 0`, which is exactly what
+//! the planner's feasibility predicate rejects.
+//!
+//! **Determinism contracts** (both pinned by test):
+//!
+//! - *Decode-stream independence.* Decode lengths come from their own
+//!   RNG stream (`seed ^ b"decodlen"`, see
+//!   [`decode_marking_rng`](crate::workloads::generator::decode_marking_rng)),
+//!   so arrivals are byte-identical with the LLM axis on or off.
+//! - *One-shot delegation.* A config with decode length pinned to 1 and
+//!   zero KV growth ([`LlmConfig::is_one_shot`]) **delegates** to the
+//!   one-shot replay verbatim — bit-identical by construction, quiet and
+//!   faulted, and pinned by differential test anyway.
+//!
+//! **Token conservation.** Every ledger term is the request's *full
+//! footprint* in tokens (`prefill + decode_len`), so the identity
+//! `served + failed + shed + dropped + errored + queued_at_end +
+//! in_flight_at_end == offered` holds exactly at any horizon
+//! ([`TokenLedger::conserves`], property-tested under chaos). The
+//! `prefill`/`decoded` counters are cumulative *work-executed* ledgers
+//! (a crash victim's re-decode decodes its tokens twice), not
+//! conservation terms.
+
+use crate::coordinator::arena::{Arena, Fifo};
+use crate::coordinator::batcher::ShedPolicy;
+use crate::coordinator::clock::{Clock, VirtualClock};
+use crate::coordinator::fault::{FaultKind, FaultPlan, RetryPolicy, TimedFault};
+use crate::coordinator::metrics::{AvailabilityReport, Metrics};
+use crate::coordinator::request::ModelId;
+use crate::coordinator::router::{Health, Router};
+use crate::coordinator::simserve::{EnergyReport, SimServeReport, SimServer};
+use crate::sim::engine::{Engine, Scheduler, World};
+use crate::sim::{from_seconds, to_seconds, Time};
+use crate::util::rng::Rng;
+use crate::workloads::generator::{decode_marking_rng, DecodeLenIter, TraceRequest};
+use crate::Result;
+use std::sync::Arc;
+
+/// The token-level workload axis: how requests decode and what their KV
+/// state costs. `Default` is a mid-size decoder profile; use
+/// [`one_shot`](LlmConfig::one_shot) for the degenerate config that
+/// replays bit-identically to the one-shot path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmConfig {
+    /// Mean decode length (geometric; `<= 1` pins every length to 1).
+    pub decode_mean: f64,
+    /// Per-model decode-mean overrides (model name, mean).
+    pub per_model: Vec<(String, f64)>,
+    /// Prompt tokens per request: charged to KV at join time, zero step
+    /// time (prefill is compute-dense on near-memory arrays; decode is
+    /// the memory-bound phase this axis models).
+    pub prefill_tokens: u32,
+    /// KV-cache bytes per token (per request). 0 disables the capacity
+    /// axis entirely (no reservation, no admission pressure).
+    pub kv_bytes_per_token: u64,
+}
+
+impl Default for LlmConfig {
+    fn default() -> LlmConfig {
+        LlmConfig {
+            decode_mean: 32.0,
+            per_model: Vec::new(),
+            prefill_tokens: 128,
+            kv_bytes_per_token: 65_536,
+        }
+    }
+}
+
+impl LlmConfig {
+    /// The degenerate config: decode length 1, no KV growth. Replays
+    /// **delegate** to the one-shot path, so they are bit-identical to
+    /// it by construction (and pinned by differential test).
+    pub fn one_shot() -> LlmConfig {
+        LlmConfig {
+            decode_mean: 1.0,
+            per_model: Vec::new(),
+            prefill_tokens: 0,
+            kv_bytes_per_token: 0,
+        }
+    }
+
+    /// True when this config is the one-shot degenerate case: every
+    /// decode length pins to 1 and KV never grows, so token-level
+    /// machinery would change nothing observable.
+    pub fn is_one_shot(&self) -> bool {
+        self.decode_mean <= 1.0 && self.per_model.is_empty() && self.kv_bytes_per_token == 0
+    }
+
+    /// Validate knob ranges, returning a usable error (not a panic) for
+    /// CLI-facing callers — same contract as `FaultSpec::validate`.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.decode_mean.is_finite() && self.decode_mean >= 0.0,
+            "decode mean must be finite and >= 0, got {}",
+            self.decode_mean
+        );
+        for (name, m) in &self.per_model {
+            crate::ensure!(
+                m.is_finite() && *m >= 0.0,
+                "decode mean for model {name} must be finite and >= 0, got {m}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Token-level conservation ledger. Every term except `prefill` /
+/// `decoded` is denominated in **full request footprints**
+/// (`prefill + decode_len` tokens), so the identity
+/// [`conserves`](TokenLedger::conserves) holds exactly at any horizon —
+/// including mid-decode, where a request's footprint sits in
+/// `in_flight_at_end` whole, not split by how far it got.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TokenLedger {
+    /// Footprint tokens the trace offered.
+    pub offered: u64,
+    /// Footprints of requests served to completion.
+    pub served: u64,
+    /// Footprints of requests that exhausted retries or their deadline.
+    pub failed: u64,
+    /// Footprints refused by the shed gate or by capacity admission.
+    pub shed: u64,
+    /// Footprints dropped at the hard `queue_capacity` bound.
+    pub dropped: u64,
+    /// Footprints of requests for unregistered models.
+    pub errored: u64,
+    /// Footprints still queued (waiting or parked) at the horizon.
+    pub queued_at_end: u64,
+    /// Footprints resident (mid-decode) at the horizon.
+    pub in_flight_at_end: u64,
+    /// Cumulative prefill tokens *executed* (charged at join). A crash
+    /// victim re-joins and prefills again — this is a work ledger, not a
+    /// conservation term.
+    pub prefill: u64,
+    /// Cumulative tokens *decoded* (one per resident per successful
+    /// step). Work lost to crashes stays counted; re-decode counts
+    /// again.
+    pub decoded: u64,
+}
+
+impl TokenLedger {
+    /// The token conservation identity: everything offered is exactly
+    /// one of served / failed / shed / dropped / errored / queued /
+    /// in-flight.
+    pub fn conserves(&self) -> bool {
+        self.served
+            + self.failed
+            + self.shed
+            + self.dropped
+            + self.errored
+            + self.queued_at_end
+            + self.in_flight_at_end
+            == self.offered
+    }
+
+    /// Elementwise sum, for the sharded merge.
+    pub(crate) fn absorb(&mut self, other: &TokenLedger) {
+        self.offered += other.offered;
+        self.served += other.served;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.dropped += other.dropped;
+        self.errored += other.errored;
+        self.queued_at_end += other.queued_at_end;
+        self.in_flight_at_end += other.in_flight_at_end;
+        self.prefill += other.prefill;
+        self.decoded += other.decoded;
+    }
+}
+
+/// Per-replica KV-cache occupancy at the replay horizon. Indexed by
+/// replica (like `per_replica_served`); empty on one-shot replays.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KvReport {
+    /// Class capacity of each replica's chip (feature-side DRAM bytes).
+    pub capacity_bytes: Vec<u64>,
+    /// Bytes in use at the horizon (0 on a drained quiet replay).
+    pub bytes_in_use: Vec<u64>,
+    /// High-water mark of bytes in use over the whole replay. Never
+    /// exceeds `capacity_bytes` (admission reserves full footprints
+    /// up front — property-tested against the event log).
+    pub high_water_bytes: Vec<u64>,
+}
+
+/// One KV-occupancy change, for the logged replay variant
+/// ([`SimServer::replay_llm_logged`]): the brute-force oracle replays
+/// these deltas to recompute occupancy and the high-water mark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvEvent {
+    pub at: Time,
+    pub replica: u32,
+    /// Signed change in `bytes_in_use` (prefill charge, step growth, or
+    /// a release at retire/crash).
+    pub delta: i64,
+}
+
+impl SimServer {
+    /// Replay a streamed trace token-by-token: decode lengths are drawn
+    /// from the trace seed's `b"decodlen"` stream, requests occupy KV
+    /// capacity on their replica, and decode steps continuous-batch.
+    /// A [one-shot](LlmConfig::is_one_shot) config **delegates** to
+    /// [`replay_stream_mix`](SimServer::replay_stream_mix) verbatim
+    /// (bit-identical by construction; the token/KV ledgers stay zero
+    /// because that path *is* the one-shot path).
+    pub fn replay_llm_stream<I>(
+        &self,
+        trace: I,
+        mix: &[u32],
+        llm: &LlmConfig,
+        seed: u64,
+    ) -> SimServeReport
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        if llm.is_one_shot() {
+            return self.replay_stream_mix(trace, mix);
+        }
+        let marked = DecodeLenIter::new(
+            trace.into_iter(),
+            decode_marking_rng(seed),
+            llm.decode_mean,
+            &llm.per_model,
+        );
+        self.replay_llm_core(marked, mix, llm, None, 0, false).0
+    }
+
+    /// [`replay_llm_stream`](SimServer::replay_llm_stream) under a
+    /// concrete [`FaultPlan`]: crashes evict a replica's residents (their
+    /// KV is gone — survivors re-decode from scratch under `retry`'s
+    /// budget), transient errors waste a decode step without advancing
+    /// it. One-shot configs delegate to
+    /// [`replay_stream_faulted`](SimServer::replay_stream_faulted).
+    pub fn replay_llm_stream_faulted<I>(
+        &self,
+        trace: I,
+        mix: &[u32],
+        llm: &LlmConfig,
+        seed: u64,
+        faults: &FaultPlan,
+        retry: &RetryPolicy,
+    ) -> SimServeReport
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        if llm.is_one_shot() {
+            return self.replay_stream_faulted(trace, mix, faults, retry);
+        }
+        let marked = DecodeLenIter::new(
+            trace.into_iter(),
+            decode_marking_rng(seed),
+            llm.decode_mean,
+            &llm.per_model,
+        );
+        self.replay_llm_core(marked, mix, llm, Some((faults, retry)), 0, false).0
+    }
+
+    /// Test-facing logged variant: always runs the token-level world
+    /// (no one-shot delegation) and returns every KV-occupancy delta, so
+    /// a brute-force oracle can recompute occupancy and the high-water
+    /// mark from first principles.
+    pub fn replay_llm_logged<I>(
+        &self,
+        trace: I,
+        mix: &[u32],
+        llm: &LlmConfig,
+        seed: u64,
+    ) -> (SimServeReport, Vec<KvEvent>)
+    where
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        let marked = DecodeLenIter::new(
+            trace.into_iter(),
+            decode_marking_rng(seed),
+            llm.decode_mean,
+            &llm.per_model,
+        );
+        let (report, _metrics, log) = self.replay_llm_core(marked, mix, llm, None, 0, true);
+        (report, log)
+    }
+
+    /// One shard-cell's token-level replay: a **pre-marked**
+    /// `(request, decode_len)` stream (the shard layer marks the full
+    /// enumerated trace *before* its front-door filter, so request *i*
+    /// draws the same length at every cell count), arrivals shifted by
+    /// the front-door hop. Returns the metrics collector for the exact
+    /// merge.
+    pub(crate) fn replay_llm_cell<I>(
+        &self,
+        marked: I,
+        mix: &[u32],
+        llm: &LlmConfig,
+        faults: Option<(&FaultPlan, &RetryPolicy)>,
+        delay: Time,
+    ) -> (SimServeReport, Metrics)
+    where
+        I: IntoIterator<Item = (TraceRequest, u32)>,
+    {
+        let (report, metrics, _log) =
+            self.replay_llm_core(marked.into_iter(), mix, llm, faults, delay, false);
+        (report, metrics)
+    }
+
+    /// The token-level replay engine. Mirrors `replay_core_with_metrics`
+    /// end to end (setup, fault destructuring, end-of-window ledger
+    /// closing) with the batcher swapped for per-replica resident sets.
+    fn replay_llm_core<I>(
+        &self,
+        marked: I,
+        mix: &[u32],
+        llm: &LlmConfig,
+        faults: Option<(&FaultPlan, &RetryPolicy)>,
+        delay: Time,
+        want_log: bool,
+    ) -> (SimServeReport, Metrics, Vec<KvEvent>)
+    where
+        I: Iterator<Item = (TraceRequest, u32)>,
+    {
+        if let Err(e) = llm.validate() {
+            panic!("invalid LLM config: {e}");
+        }
+        let replicas = mix.len();
+        assert!(replicas > 0, "replica mix must name at least one replica");
+        for &class in mix {
+            assert!(
+                (class as usize) < self.n_chip_classes(),
+                "mix names chip class {class}, but only {} exist",
+                self.n_chip_classes()
+            );
+        }
+        let speeds: Vec<u64> = mix.iter().map(|&c| self.class_speed(c as usize)).collect();
+        let kv_cap: Vec<u64> = mix
+            .iter()
+            .map(|&c| self.class_chip(c as usize).kv_capacity_bytes())
+            .collect();
+        let clock = Arc::new(VirtualClock::new());
+        let metrics = Metrics::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let mut resolve = self.resolver();
+        let mut arrivals = marked.map(move |(r, len)| LlmArrival {
+            at: from_seconds(r.arrival_s).saturating_add(delay),
+            model: resolve(&r.model),
+            samples: r.samples,
+            decode_len: len.max(1),
+        });
+        let pending = arrivals.next();
+        let (fault_events, error_prob, straggle_mult, error_rng, retry) = match faults {
+            Some((plan, retry)) => (
+                plan.faults.as_slice(),
+                plan.error_prob,
+                plan.straggle_mult,
+                plan.error_rng.clone(),
+                *retry,
+            ),
+            None => (&[][..], 0.0, 1.0, Rng::new(0), RetryPolicy::default()),
+        };
+        // An errored step decodes nothing and retries in place; prob 1.0
+        // would retry forever. FaultSpec::validate already bounds it.
+        assert!(error_prob < 1.0, "transient error probability must be < 1");
+        let n_models = self.service_tables()[0].len();
+        let mut world = LlmWorld {
+            service: self.service_tables(),
+            energy: self.energy_tables(),
+            mix,
+            max_batch: self.config.batcher.max_batch as usize,
+            queue_capacity: self.config.queue_capacity,
+            shed: self.config.shed,
+            prefill: llm.prefill_tokens as u64,
+            bpt: llm.kv_bytes_per_token,
+            source: arrivals,
+            pending,
+            armed_at: None,
+            metrics,
+            router: Router::with_speeds(self.config.routing, speeds),
+            residents: vec![Vec::new(); replicas],
+            stepping: vec![false; replicas],
+            step_ps: vec![0; replicas],
+            step_j: vec![0.0; replicas],
+            epoch: vec![0; replicas],
+            straggling: vec![false; replicas],
+            down_since: vec![None; replicas],
+            down_ps: vec![0; replicas],
+            rep_served: vec![0; replicas],
+            busy_ps: vec![0; replicas],
+            dynamic_j: vec![0.0; replicas],
+            waiting: vec![Fifo::new(); replicas],
+            kv_used: vec![0; replicas],
+            kv_reserved: vec![0; replicas],
+            kv_high: vec![0; replicas],
+            kv_cap,
+            arena: Arena::with_capacity(2 * replicas),
+            parked: Fifo::new(),
+            queue_depth: 0,
+            counts: vec![0; n_models],
+            faults: fault_events,
+            retry,
+            error_prob,
+            straggle_mult,
+            error_rng,
+            offered: 0,
+            served: 0,
+            dropped: 0,
+            shed_n: 0,
+            failed: 0,
+            retries: 0,
+            crashes: 0,
+            restarts: 0,
+            transient_errors: 0,
+            max_depth: 0,
+            max_queue_wait: 0,
+            last_done: 0,
+            tokens: TokenLedger::default(),
+            queue_ps: Vec::new(),
+            total_ps: Vec::new(),
+            log: if want_log { Some(Vec::new()) } else { None },
+        };
+        let mut engine: Engine<LlmEv> = Engine::new();
+        for (i, f) in world.faults.iter().enumerate() {
+            engine.schedule(f.at, LlmEv::Fault { idx: i as u32 });
+        }
+        if let Some(first) = &world.pending {
+            engine.schedule(first.at, LlmEv::NextArrival);
+            world.armed_at = Some(first.at);
+        }
+        engine.run(&mut world);
+        debug_assert!(engine.is_idle(), "llm replay left events pending");
+        debug_assert!(world.pending.is_none(), "trace not fully consumed");
+
+        let end = world.last_done.max(1);
+        clock.advance_to(end);
+        let sim_duration_s = to_seconds(end);
+
+        // Per-class busy/energy aggregation, identical to the one-shot
+        // core: billed at step completion, so every interval is inside
+        // the window and the ratios cannot round past 1.0.
+        let n_classes = self.n_chip_classes();
+        let mut per_class_replicas = vec![0usize; n_classes];
+        let mut per_class_busy_ps: Vec<Time> = vec![0; n_classes];
+        let mut per_class_dynamic_j = vec![0.0f64; n_classes];
+        let mut static_w = 0.0f64;
+        for (r, &class) in mix.iter().enumerate() {
+            let c = class as usize;
+            per_class_replicas[c] += 1;
+            per_class_busy_ps[c] += world.busy_ps[r];
+            per_class_dynamic_j[c] += world.dynamic_j[r];
+            static_w += self.class_chip(c).config.static_w;
+        }
+        let per_class_utilization: Vec<f64> = per_class_busy_ps
+            .iter()
+            .zip(&per_class_replicas)
+            .map(|(&busy, &n)| if n == 0 { 0.0 } else { busy as f64 / (end as f64 * n as f64) })
+            .collect();
+        let total_busy: u128 = world.busy_ps.iter().map(|&b| b as u128).sum();
+        let replica_utilization = total_busy as f64 / (end as f64 * replicas as f64);
+        let dynamic_j: f64 = per_class_dynamic_j.iter().sum();
+        let avg_power_w = dynamic_j / sim_duration_s + static_w;
+
+        // Residual work: waiting + parked requests are queued; residents
+        // are in flight. Token terms use full footprints, so the token
+        // identity closes exactly alongside the request identity.
+        let mut queued_at_end = 0u64;
+        for q in &world.waiting {
+            for req in world.arena.iter(q) {
+                queued_at_end += 1;
+                world.tokens.queued_at_end += world.prefill + req.decode_len as u64;
+            }
+        }
+        for req in world.arena.iter(&world.parked) {
+            queued_at_end += 1;
+            world.tokens.queued_at_end += world.prefill + req.decode_len as u64;
+        }
+        let mut in_flight_at_end = 0u64;
+        for residents in &world.residents {
+            for req in residents {
+                in_flight_at_end += 1;
+                world.tokens.in_flight_at_end += world.prefill + req.decode_len as u64;
+            }
+        }
+        let mut down_ps = world.down_ps;
+        for (r, since) in world.down_since.iter().enumerate() {
+            if let Some(s) = since {
+                down_ps[r] += end.saturating_sub(*s);
+            }
+        }
+        let total_down: u128 = down_ps.iter().map(|&d| d as u128).sum();
+        let availability = AvailabilityReport {
+            crashes: world.crashes,
+            restarts: world.restarts,
+            retries: world.retries,
+            transient_errors: world.transient_errors,
+            per_replica_downtime_s: down_ps.iter().map(|&d| to_seconds(d)).collect(),
+            availability: 1.0 - total_down as f64 / (end as f64 * replicas as f64),
+            goodput: world.served as f64 / world.offered.max(1) as f64,
+        };
+        let report = SimServeReport {
+            snapshot: world.metrics.snapshot(),
+            offered: world.offered,
+            served: world.served,
+            dropped: world.dropped,
+            shed: world.shed_n,
+            failed: world.failed,
+            queued_at_end,
+            in_flight_at_end,
+            full_batches: 0,
+            timeout_batches: 0,
+            max_queue_depth: world.max_depth,
+            // On this path: the largest enqueue→join wait (continuous
+            // batching has no batch-formation deadline to bound it).
+            max_queue_wait_s: to_seconds(world.max_queue_wait),
+            per_replica_served: world.rep_served,
+            sim_duration_s,
+            replica_utilization,
+            energy: EnergyReport {
+                window_ps: end,
+                per_class_replicas,
+                per_class_busy_ps,
+                per_class_utilization,
+                per_class_dynamic_j,
+                static_w,
+                dynamic_j,
+                avg_power_w,
+                energy_j: dynamic_j + static_w * sim_duration_s,
+            },
+            availability,
+            tokens: world.tokens,
+            kv: KvReport {
+                capacity_bytes: world.kv_cap,
+                bytes_in_use: world.kv_used,
+                high_water_bytes: world.kv_high,
+            },
+        };
+        (report, world.metrics, world.log.unwrap_or_default())
+    }
+}
+
+/// Token-level serving events.
+#[derive(Debug, Clone, Copy)]
+enum LlmEv {
+    /// Wake-up at the next pending arrival's timestamp (one armed for
+    /// the stream head at any moment, exactly like the one-shot path).
+    NextArrival,
+    /// The decode step running on `replica` completes. Epoch-guarded
+    /// like the one-shot `Done`: a crash bumps the epoch and the stale
+    /// completion becomes a no-op.
+    StepDone { replica: u32, epoch: u32 },
+    /// The `idx`-th fault-plan entry fires.
+    Fault { idx: u32 },
+}
+
+/// One resolved arrival from the marked trace stream.
+#[derive(Debug, Clone, Copy)]
+struct LlmArrival {
+    at: Time,
+    model: Option<ModelId>,
+    samples: u32,
+    decode_len: u32,
+}
+
+/// One in-system request: enqueue/join stamps plus decode progress.
+/// `Copy` so the slab arena and resident vectors move it freely.
+#[derive(Debug, Clone, Copy)]
+struct LlmReq {
+    model: ModelId,
+    /// Arrival (enqueue) stamp — latency baseline.
+    enq: Time,
+    /// When it last joined a resident set (queue-wait numerator).
+    joined_at: Time,
+    decode_len: u32,
+    /// Tokens decoded so far this attempt (reset on crash: the KV died
+    /// with the replica, decode restarts).
+    decoded: u32,
+    tries: u32,
+}
+
+struct LlmWorld<'a, I> {
+    service: &'a [Vec<Vec<Time>>],
+    energy: &'a [Vec<Vec<f64>>],
+    mix: &'a [u32],
+    /// Max residents per replica (reuses the batcher's `max_batch`).
+    max_batch: usize,
+    queue_capacity: usize,
+    shed: Option<ShedPolicy>,
+    /// Prefill tokens per request.
+    prefill: u64,
+    /// KV bytes per token.
+    bpt: u64,
+    source: I,
+    pending: Option<LlmArrival>,
+    armed_at: Option<Time>,
+    metrics: Metrics,
+    router: Router,
+    /// The continuous batch per replica: requests decoding in lockstep.
+    residents: Vec<Vec<LlmReq>>,
+    /// Whether a `StepDone` is armed for the replica.
+    stepping: Vec<bool>,
+    /// Service time of the step in flight (billed at completion).
+    step_ps: Vec<Time>,
+    /// Dynamic energy of the step in flight (billed at completion).
+    step_j: Vec<f64>,
+    epoch: Vec<u32>,
+    straggling: Vec<bool>,
+    down_since: Vec<Option<Time>>,
+    down_ps: Vec<Time>,
+    rep_served: Vec<u64>,
+    busy_ps: Vec<Time>,
+    dynamic_j: Vec<f64>,
+    /// Admitted-but-not-resident queue per replica ([`Fifo`] into the
+    /// shared slab). FIFO join order: the head blocks (head-of-line) so
+    /// join order is deterministic and starvation-free.
+    waiting: Vec<Fifo>,
+    /// KV bytes actually written per replica (prefill + decoded).
+    kv_used: Vec<u64>,
+    /// KV bytes reserved per replica (full footprints of residents).
+    /// `kv_used[r] <= kv_reserved[r] <= kv_cap[r]` is the admission
+    /// invariant that makes the occupancy bound unconditional.
+    kv_reserved: Vec<u64>,
+    kv_high: Vec<u64>,
+    kv_cap: Vec<u64>,
+    arena: Arena<LlmReq>,
+    /// Requests with nowhere routable to go (whole fleet down).
+    parked: Fifo,
+    /// Total queued requests (all waiting FIFOs + parked), maintained
+    /// incrementally for the O(1) admission checks.
+    queue_depth: usize,
+    /// Reused per-model resident-count scratch for step costing.
+    counts: Vec<u32>,
+    faults: &'a [TimedFault],
+    retry: RetryPolicy,
+    error_prob: f64,
+    straggle_mult: f64,
+    error_rng: Rng,
+    offered: u64,
+    served: u64,
+    dropped: u64,
+    shed_n: u64,
+    failed: u64,
+    retries: u64,
+    crashes: u64,
+    restarts: u64,
+    transient_errors: u64,
+    max_depth: usize,
+    max_queue_wait: Time,
+    last_done: Time,
+    tokens: TokenLedger,
+    queue_ps: Vec<Time>,
+    total_ps: Vec<Time>,
+    /// KV-delta log for the brute-force oracle (None on normal runs).
+    log: Option<Vec<KvEvent>>,
+}
+
+impl<I: Iterator<Item = LlmArrival>> LlmWorld<'_, I> {
+    /// Ingest every arrival due at `now`, then arm one `NextArrival` for
+    /// the stream head — the same arrival-first, one-armed-wake-up
+    /// contract as the one-shot path's `ingest`.
+    #[inline]
+    fn ingest(&mut self, now: Time, sch: &mut Scheduler<LlmEv>) {
+        match &self.pending {
+            None => return,
+            Some(a) if a.at > now && self.armed_at == Some(a.at) => return,
+            Some(_) => {}
+        }
+        while let Some(a) = self.pending {
+            if a.at > now {
+                break;
+            }
+            assert!(a.at == now, "trace arrival times must be non-decreasing");
+            self.pending = self.source.next();
+            self.arrive(a, now, sch);
+        }
+        if let Some(next) = &self.pending {
+            if self.armed_at != Some(next.at) {
+                sch.at(next.at, LlmEv::NextArrival);
+                self.armed_at = Some(next.at);
+            }
+        }
+    }
+
+    fn arrive(&mut self, a: LlmArrival, now: Time, sch: &mut Scheduler<LlmEv>) {
+        self.offered += a.samples as u64;
+        let full = self.prefill + a.decode_len as u64;
+        self.tokens.offered += a.samples as u64 * full;
+        let Some(model) = a.model else {
+            // Unregistered model: per-sample errors, never queued —
+            // mirrors the one-shot boundary exactly.
+            for _ in 0..a.samples {
+                self.metrics.record_error();
+            }
+            self.tokens.errored += a.samples as u64 * full;
+            return;
+        };
+        for _ in 0..a.samples {
+            self.admit(model, a.decode_len, now, sch);
+        }
+        self.max_depth = self.max_depth.max(self.queue_depth);
+    }
+
+    /// Front-door admission for one sample. Order: shed-policy gate,
+    /// hard queue bound, route, then the two capacity checks against
+    /// the routed replica (impossible footprint; full-queue-and-full-
+    /// capacity). Each rejection is charged in both request and token
+    /// ledgers.
+    fn admit(&mut self, model: ModelId, decode_len: u32, now: Time, sch: &mut Scheduler<LlmEv>) {
+        let full_tokens = self.prefill + decode_len as u64;
+        if let Some(policy) = self.shed {
+            let p99 = if policy.p99_slo != Time::MAX {
+                self.metrics.model_p99_ps(model.index() as u32)
+            } else {
+                None
+            };
+            if policy.should_shed(self.queue_depth, p99) {
+                self.shed_n += 1;
+                self.tokens.shed += full_tokens;
+                return;
+            }
+        }
+        if self.queue_depth >= self.queue_capacity {
+            self.dropped += 1;
+            self.tokens.dropped += full_tokens;
+            return;
+        }
+        let req = LlmReq { model, enq: now, joined_at: now, decode_len, decoded: 0, tries: 0 };
+        if !self.router.any_routable() {
+            self.arena.push_back(&mut self.parked, req);
+            self.queue_depth += 1;
+            return;
+        }
+        let r = self.router.route(1);
+        let footprint = full_tokens * self.bpt;
+        // Impossible footprint: larger than the whole class capacity —
+        // no amount of waiting makes it fit. Shed at the door.
+        if self.bpt > 0 && footprint > self.kv_cap[r] {
+            self.router.complete(r, 1);
+            self.shed_n += 1;
+            self.tokens.shed += full_tokens;
+            return;
+        }
+        // Capacity shed: can't reserve now *and* the replica's join
+        // queue is already a full batch deep — sustained capacity
+        // pressure surfaces as shed, not an unbounded queue. This is
+        // the signal the planner's feasibility predicate keys on.
+        if self.bpt > 0
+            && self.kv_reserved[r] + footprint > self.kv_cap[r]
+            && self.waiting[r].len() >= self.max_batch
+        {
+            self.router.complete(r, 1);
+            self.shed_n += 1;
+            self.tokens.shed += full_tokens;
+            return;
+        }
+        self.enqueue(r, req, now, sch);
+    }
+
+    /// Queue `req` on replica `r` and, if the replica is idle, fill and
+    /// start a step. A busy replica picks queued work up at its next
+    /// token boundary (`StepDone`) — that is the continuous batch.
+    fn enqueue(&mut self, r: usize, req: LlmReq, now: Time, sch: &mut Scheduler<LlmEv>) {
+        self.arena.push_back(&mut self.waiting[r], req);
+        self.queue_depth += 1;
+        if !self.stepping[r] && self.down_since[r].is_none() {
+            self.try_fill(r, now);
+            if !self.residents[r].is_empty() {
+                self.start_step(r, sch);
+            }
+        }
+    }
+
+    /// Move waiting requests into the resident set while there is both a
+    /// batch slot and reservable KV capacity. FIFO head-of-line: if the
+    /// head does not fit, nothing behind it jumps the line (join order
+    /// stays deterministic and starvation-free). Prefill KV and the
+    /// prefill-token ledger are charged at join.
+    fn try_fill(&mut self, r: usize, now: Time) {
+        while self.residents[r].len() < self.max_batch {
+            let Some(head) = self.arena.iter(&self.waiting[r]).next().copied() else {
+                break;
+            };
+            let footprint = (self.prefill + head.decode_len as u64) * self.bpt;
+            if self.bpt > 0 && self.kv_reserved[r] + footprint > self.kv_cap[r] {
+                break;
+            }
+            let mut req = self.arena.pop_front(&mut self.waiting[r]).expect("peeked head");
+            self.queue_depth -= 1;
+            self.kv_reserved[r] += footprint;
+            self.kv_add(r, (self.prefill * self.bpt) as i64, now);
+            self.tokens.prefill += self.prefill;
+            req.joined_at = now;
+            self.max_queue_wait = self.max_queue_wait.max(now.saturating_sub(req.enq));
+            self.residents[r].push(req);
+        }
+    }
+
+    /// Apply a KV-occupancy delta: maintain in-use bytes, the high-water
+    /// mark, and (when logging) the oracle event stream. The occupancy
+    /// bound is a debug invariant here because admission already
+    /// guarantees it via reservations.
+    fn kv_add(&mut self, r: usize, delta: i64, at: Time) {
+        if delta == 0 {
+            return;
+        }
+        let cur = self.kv_used[r] as i64 + delta;
+        debug_assert!(cur >= 0, "KV ledger went negative on replica {r}");
+        self.kv_used[r] = cur as u64;
+        debug_assert!(
+            self.kv_used[r] <= self.kv_reserved[r],
+            "KV use {} exceeds reservation {} on replica {r}",
+            self.kv_used[r],
+            self.kv_reserved[r]
+        );
+        if self.kv_used[r] > self.kv_high[r] {
+            self.kv_high[r] = self.kv_used[r];
+        }
+        if let Some(log) = &mut self.log {
+            log.push(KvEvent { at, replica: r as u32, delta });
+        }
+    }
+
+    /// Cost of one decode step over `r`'s residents: per-model resident
+    /// counts looked up in the class service/energy tables (a step is
+    /// one forward pass at the resident batch size per model), straggle
+    /// multiplier applied like the one-shot path.
+    fn step_cost(&mut self, r: usize) -> (Time, f64) {
+        let class = self.mix[r] as usize;
+        for req in &self.residents[r] {
+            self.counts[req.model.index()] += 1;
+        }
+        let mut service: Time = 0;
+        let mut energy = 0.0f64;
+        for req in &self.residents[r] {
+            let m = req.model.index();
+            let n = self.counts[m] as usize;
+            if n > 0 {
+                self.counts[m] = 0;
+                let table = &self.service[class][m];
+                service += table[n.min(table.len() - 1)];
+                let e_table = &self.energy[class][m];
+                energy += e_table[n.min(e_table.len() - 1)];
+            }
+        }
+        let service = if self.straggling[r] {
+            (service as f64 * self.straggle_mult).round() as Time
+        } else {
+            service
+        };
+        (service.max(1), energy)
+    }
+
+    fn start_step(&mut self, r: usize, sch: &mut Scheduler<LlmEv>) {
+        debug_assert!(!self.residents[r].is_empty());
+        debug_assert!(!self.stepping[r]);
+        let (service, energy) = self.step_cost(r);
+        self.stepping[r] = true;
+        self.step_ps[r] = service;
+        self.step_j[r] = energy;
+        sch.after(service, LlmEv::StepDone { replica: r as u32, epoch: self.epoch[r] });
+    }
+
+    /// A finished request leaves the batch: free its KV, settle the
+    /// request/token ledgers (deadline expiry fails it — the client is
+    /// gone), and record its latency pair.
+    fn retire(&mut self, r: usize, req: LlmReq, now: Time) {
+        let full_tokens = self.prefill + req.decode_len as u64;
+        self.kv_add(r, -((full_tokens * self.bpt) as i64), now);
+        self.kv_reserved[r] -= full_tokens * self.bpt;
+        self.router.complete(r, 1);
+        if self.retry.deadline != Time::MAX && now > req.enq.saturating_add(self.retry.deadline) {
+            self.failed += 1;
+            self.tokens.failed += full_tokens;
+            return;
+        }
+        self.served += 1;
+        self.rep_served[r] += 1;
+        self.tokens.served += full_tokens;
+        self.queue_ps.clear();
+        self.total_ps.clear();
+        self.queue_ps.push(req.joined_at.saturating_sub(req.enq));
+        self.total_ps.push(now.saturating_sub(req.enq));
+        self.metrics.record_batch_model(req.model.index() as u32, 1, &self.queue_ps, &self.total_ps);
+    }
+
+    /// A crash victim (evicted resident or orphaned queue entry): spend
+    /// a retry, honor the absolute deadline, and re-place across the
+    /// survivors. An evicted resident's decode restarts from token 0 —
+    /// its KV died with the replica (the decoded-work ledger keeps the
+    /// lost tokens; conservation terms are footprint-based and unmoved).
+    fn requeue_or_fail(&mut self, mut req: LlmReq, now: Time, sch: &mut Scheduler<LlmEv>) {
+        let full_tokens = self.prefill + req.decode_len as u64;
+        let next = req.tries + 1;
+        if next > self.retry.max_retries {
+            self.failed += 1;
+            self.tokens.failed += full_tokens;
+            return;
+        }
+        self.retries += 1;
+        if self.retry.deadline != Time::MAX && now > req.enq.saturating_add(self.retry.deadline) {
+            self.failed += 1;
+            self.tokens.failed += full_tokens;
+            return;
+        }
+        req.tries = next;
+        req.decoded = 0;
+        self.place(req, now, sch);
+    }
+
+    /// Re-place an already-admitted request (crash retry or parked-queue
+    /// drain): route and queue, parking when nothing is routable. The
+    /// door's shed rules do not re-apply — the request was admitted
+    /// once; renewed capacity pressure shows up as queueing, conserved
+    /// at the horizon.
+    fn place(&mut self, req: LlmReq, now: Time, sch: &mut Scheduler<LlmEv>) {
+        if !self.router.any_routable() {
+            self.arena.push_back(&mut self.parked, req);
+            self.queue_depth += 1;
+            return;
+        }
+        let r = self.router.route(1);
+        self.enqueue(r, req, now, sch);
+    }
+}
+
+impl<I: Iterator<Item = LlmArrival>> World for LlmWorld<'_, I> {
+    type Event = LlmEv;
+
+    fn handle(&mut self, ev: LlmEv, sch: &mut Scheduler<LlmEv>) {
+        let now = sch.now();
+        self.ingest(now, sch);
+        match ev {
+            LlmEv::NextArrival => {}
+            LlmEv::StepDone { replica, epoch } => {
+                let rep = replica as usize;
+                if epoch != self.epoch[rep] {
+                    return; // scheduled before a crash; residents already re-placed
+                }
+                debug_assert!(self.stepping[rep], "completion on an idle replica");
+                self.stepping[rep] = false;
+                // Bill the step now that it finished inside the window —
+                // an errored step still burned the time and energy.
+                self.busy_ps[rep] += self.step_ps[rep];
+                self.dynamic_j[rep] += self.step_j[rep];
+                self.last_done = self.last_done.max(now);
+                if self.error_prob > 0.0 && self.error_rng.chance(self.error_prob) {
+                    // Transient device error: the step produced nothing —
+                    // no tokens decoded, no KV written, residents stay
+                    // put and the step simply runs again.
+                    self.transient_errors += 1;
+                    self.start_step(rep, sch);
+                    return;
+                }
+                // One token decoded per resident, one KV write each.
+                let n = self.residents[rep].len() as u64;
+                for req in &mut self.residents[rep] {
+                    req.decoded += 1;
+                }
+                self.tokens.decoded += n;
+                self.kv_add(rep, (n * self.bpt) as i64, now);
+                // Retire finishers in join order, then refill from the
+                // queue at this token boundary — the continuous batch.
+                let mut i = 0;
+                while i < self.residents[rep].len() {
+                    if self.residents[rep][i].decoded >= self.residents[rep][i].decode_len {
+                        let req = self.residents[rep].remove(i);
+                        self.retire(rep, req, now);
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.try_fill(rep, now);
+                if !self.residents[rep].is_empty() {
+                    self.start_step(rep, sch);
+                }
+            }
+            LlmEv::Fault { idx } => {
+                let fault = self.faults[idx as usize];
+                let rep = fault.replica as usize;
+                match fault.kind {
+                    FaultKind::Crash => {
+                        if self.down_since[rep].is_some() {
+                            return; // already down
+                        }
+                        self.crashes += 1;
+                        self.router.set_health(rep, Health::Down);
+                        self.epoch[rep] = self.epoch[rep].wrapping_add(1);
+                        self.down_since[rep] = Some(now);
+                        self.stepping[rep] = false;
+                        // Residents die with the replica; their KV is
+                        // gone (free what was actually written and the
+                        // full reservation), then retry each across the
+                        // survivors.
+                        let residents = std::mem::take(&mut self.residents[rep]);
+                        for req in residents {
+                            let written = (self.prefill + req.decoded as u64) * self.bpt;
+                            self.kv_add(rep, -(written as i64), now);
+                            self.kv_reserved[rep] -=
+                                (self.prefill + req.decode_len as u64) * self.bpt;
+                            self.router.complete(rep, 1);
+                            self.requeue_or_fail(req, now, sch);
+                        }
+                        // Queue orphans held no KV. Handle-swap drain,
+                        // exactly like the one-shot crash path.
+                        let mut q = std::mem::replace(&mut self.waiting[rep], Fifo::new());
+                        while let Some(req) = self.arena.pop_front(&mut q) {
+                            self.queue_depth -= 1;
+                            self.router.complete(rep, 1);
+                            self.requeue_or_fail(req, now, sch);
+                        }
+                    }
+                    FaultKind::Restart => {
+                        if self.down_since[rep].is_none() {
+                            return; // no matching crash landed
+                        }
+                        self.restarts += 1;
+                        self.router.set_health(rep, Health::Up);
+                        let since = self.down_since[rep].take().expect("checked above");
+                        self.down_ps[rep] += now.saturating_sub(since);
+                        let mut parked = std::mem::replace(&mut self.parked, Fifo::new());
+                        while let Some(req) = self.arena.pop_front(&mut parked) {
+                            self.queue_depth -= 1;
+                            self.place(req, now, sch);
+                        }
+                    }
+                    FaultKind::StraggleStart => self.straggling[rep] = true,
+                    FaultKind::StraggleEnd => self.straggling[rep] = false,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::sunrise::{SunriseChip, SunriseConfig};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::clock::millis;
+    use crate::coordinator::fault::FaultSpec;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::simserve::SimServeConfig;
+    use crate::workloads::generator::{poisson_trace, PoissonTraceIter};
+    use crate::workloads::mlp;
+
+    fn config(max_batch: u32, queue_capacity: usize) -> SimServeConfig {
+        SimServeConfig {
+            batcher: BatcherConfig { max_batch, max_wait: millis(2) },
+            routing: Policy::LeastLoaded,
+            queue_capacity,
+            shed: None,
+        }
+    }
+
+    fn server(max_batch: u32, queue_capacity: usize) -> SimServer {
+        let mut s = SimServer::new(SunriseChip::silicon(), config(max_batch, queue_capacity));
+        s.register("mlp", &mlp::quickstart());
+        s
+    }
+
+    /// A Sunrise with 1/16th the bonded DRAM: kv capacity ~17.6 MB
+    /// instead of ~281 MB, so realistic KV footprints bind.
+    fn small_memory_server(max_batch: u32, queue_capacity: usize) -> SimServer {
+        let mut cfg = SunriseConfig::default();
+        cfg.dram_bits /= 16.0;
+        let mut s = SimServer::new(SunriseChip::new(cfg), config(max_batch, queue_capacity));
+        s.register("mlp", &mlp::quickstart());
+        s
+    }
+
+    fn trace(seed: u64, rate: f64, duration_s: f64) -> Vec<TraceRequest> {
+        poisson_trace(&mut Rng::new(seed), rate, duration_s, "mlp", 1)
+    }
+
+    fn burst(samples: u32) -> Vec<TraceRequest> {
+        vec![TraceRequest { arrival_s: 0.0, model: Arc::from("mlp"), samples }]
+    }
+
+    /// The full request-level conservation identity on an LLM replay.
+    fn request_conservation(r: &SimServeReport) -> (u64, u64) {
+        let accounted = r.served
+            + r.dropped
+            + r.shed
+            + r.failed
+            + r.snapshot.errors
+            + r.queued_at_end
+            + r.in_flight_at_end;
+        (accounted, r.offered)
+    }
+
+    fn llm_reports_eq(a: &SimServeReport, b: &SimServeReport) -> bool {
+        a.snapshot.bitwise_eq(&b.snapshot)
+            && a.offered == b.offered
+            && a.served == b.served
+            && a.dropped == b.dropped
+            && a.shed == b.shed
+            && a.failed == b.failed
+            && a.queued_at_end == b.queued_at_end
+            && a.in_flight_at_end == b.in_flight_at_end
+            && a.max_queue_depth == b.max_queue_depth
+            && a.per_replica_served == b.per_replica_served
+            && a.sim_duration_s.to_bits() == b.sim_duration_s.to_bits()
+            && a.energy.dynamic_j.to_bits() == b.energy.dynamic_j.to_bits()
+            && a.availability.bitwise_eq(&b.availability)
+            && a.tokens == b.tokens
+            && a.kv == b.kv
+    }
+
+    #[test]
+    fn one_shot_config_classification() {
+        assert!(LlmConfig::one_shot().is_one_shot());
+        assert!(!LlmConfig::default().is_one_shot());
+        // Any decode growth or KV growth leaves the one-shot regime.
+        let mut c = LlmConfig::one_shot();
+        c.decode_mean = 2.0;
+        assert!(!c.is_one_shot());
+        let mut c = LlmConfig::one_shot();
+        c.kv_bytes_per_token = 1;
+        assert!(!c.is_one_shot());
+        assert!(LlmConfig::default().validate().is_ok());
+        assert!(LlmConfig { decode_mean: f64::NAN, ..LlmConfig::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn one_shot_llm_replay_bit_identical_to_stream_mix_quiet() {
+        // The differential oracle, quiet half: decode length pinned to 1
+        // and zero KV growth must replay bit-identically to the one-shot
+        // path (it *is* the one-shot path, by delegation — this test
+        // pins that the delegation predicate never drifts).
+        let s = server(8, 10_000);
+        let llm = LlmConfig::one_shot();
+        let a = s.replay_llm_stream(
+            PoissonTraceIter::new(Rng::new(7), 1200.0, 0.2, "mlp", 1),
+            &[0, 0],
+            &llm,
+            7,
+        );
+        let b = s.replay_stream_mix(
+            PoissonTraceIter::new(Rng::new(7), 1200.0, 0.2, "mlp", 1),
+            &[0, 0],
+        );
+        assert!(
+            a.snapshot.bitwise_eq(&b.snapshot),
+            "one-shot LLM config diverged from replay_stream_mix:\n  llm: {}\n  one: {}",
+            a.snapshot.report(),
+            b.snapshot.report()
+        );
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+        assert_eq!(a.full_batches, b.full_batches);
+        assert_eq!(a.sim_duration_s.to_bits(), b.sim_duration_s.to_bits());
+        // The delegated path is the one-shot path: token/KV ledgers are
+        // the zero defaults, not partially-filled ghosts.
+        assert_eq!(a.tokens, TokenLedger::default());
+        assert_eq!(a.kv, KvReport::default());
+    }
+
+    #[test]
+    fn one_shot_llm_replay_bit_identical_to_stream_faulted() {
+        // The differential oracle, faulted half: same delegation under a
+        // non-trivial fault plan (crashes, stragglers, transient errors).
+        let spec = FaultSpec {
+            mttf_s: 0.04,
+            mttr_s: 0.02,
+            straggle_every_s: 0.05,
+            straggle_s: 0.02,
+            straggle_mult: 3.0,
+            error_prob: 0.1,
+        };
+        let plan = FaultPlan::generate(&spec, 11, 3, from_seconds(0.3));
+        assert!(!plan.is_empty());
+        let retry = RetryPolicy::default();
+        let s = server(8, 10_000);
+        let llm = LlmConfig::one_shot();
+        let a = s.replay_llm_stream_faulted(
+            PoissonTraceIter::new(Rng::new(11), 1500.0, 0.3, "mlp", 1),
+            &[0, 0, 0],
+            &llm,
+            11,
+            &plan,
+            &retry,
+        );
+        let b = s.replay_stream_faulted(
+            PoissonTraceIter::new(Rng::new(11), 1500.0, 0.3, "mlp", 1),
+            &[0, 0, 0],
+            &plan,
+            &retry,
+        );
+        assert!(
+            a.snapshot.bitwise_eq(&b.snapshot),
+            "faulted one-shot LLM config diverged from replay_stream_faulted"
+        );
+        assert!(a.availability.bitwise_eq(&b.availability));
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.queued_at_end, b.queued_at_end);
+        assert_eq!(a.in_flight_at_end, b.in_flight_at_end);
+    }
+
+    #[test]
+    fn llm_replay_is_deterministic_across_runs_and_instances() {
+        let llm = LlmConfig::default();
+        let s1 = server(8, 10_000);
+        let a = s1.replay_llm_stream(trace(42, 1000.0, 0.2), &[0, 0], &llm, 42);
+        let b = s1.replay_llm_stream(trace(42, 1000.0, 0.2), &[0, 0], &llm, 42);
+        let c = server(8, 10_000).replay_llm_stream(trace(42, 1000.0, 0.2), &[0, 0], &llm, 42);
+        assert!(llm_reports_eq(&a, &b), "same-instance LLM replay diverged");
+        assert!(llm_reports_eq(&a, &c), "fresh-instance LLM replay diverged");
+        // And the run did real token-level work.
+        assert!(a.tokens.decoded > a.served, "decode steps should outnumber requests");
+        assert!(a.kv.high_water_bytes.iter().any(|&h| h > 0), "KV never charged");
+    }
+
+    #[test]
+    fn quiet_llm_replay_serves_everything_and_conserves_tokens() {
+        let llm = LlmConfig::default();
+        let s = server(8, 10_000);
+        let r = s.replay_llm_stream(trace(3, 1500.0, 0.2), &[0, 0], &llm, 3);
+        // Quiet + ample capacity: the engine drains everything.
+        assert!(r.offered > 100, "trace too small to mean anything");
+        assert_eq!(r.served, r.offered);
+        assert_eq!(r.queued_at_end + r.in_flight_at_end, 0);
+        let (accounted, offered) = request_conservation(&r);
+        assert_eq!(accounted, offered);
+        assert!(r.tokens.conserves(), "token ledger broke: {:?}", r.tokens);
+        assert_eq!(r.tokens.served, r.tokens.offered);
+        // Every served request decoded its full length and prefilled once.
+        assert_eq!(
+            r.tokens.prefill + r.tokens.decoded,
+            r.tokens.served,
+            "work ledgers disagree with footprints on a quiet drain"
+        );
+        // Drained: every byte of KV was released.
+        assert!(r.kv.bytes_in_use.iter().all(|&b| b == 0));
+        assert!(r.kv.high_water_bytes.iter().all(|&h| h > 0));
+        assert!(r
+            .kv
+            .high_water_bytes
+            .iter()
+            .zip(&r.kv.capacity_bytes)
+            .all(|(&h, &c)| h <= c));
+        // Throughput in tokens is the headline number downstream
+        // (bench + CI gate); it must be strictly more than request
+        // throughput for a decode_mean > 1 workload.
+        assert!(r.tokens.decoded > r.served);
+    }
+
+    #[test]
+    fn continuous_batch_overlaps_requests_at_token_boundaries() {
+        // One burst of 8 same-timestamp requests, max_batch 8: the first
+        // starts alone, the other 7 join at the first token boundary —
+        // the KV high-water mark then carries >= 8 concurrent prefills,
+        // which no single request can explain.
+        let llm = LlmConfig::default();
+        let s = server(8, 10_000);
+        let r = s.replay_llm_stream(burst(8), &[0], &llm, 5);
+        assert_eq!(r.served, 8);
+        assert!(r.tokens.conserves());
+        let prefill_bytes = llm.prefill_tokens as u64 * llm.kv_bytes_per_token;
+        assert!(
+            r.kv.high_water_bytes[0] >= 8 * prefill_bytes,
+            "no continuous-batch overlap: high water {} < 8 prefills {}",
+            r.kv.high_water_bytes[0],
+            8 * prefill_bytes
+        );
+    }
+
+    #[test]
+    fn kv_high_water_matches_brute_force_replay_of_event_log() {
+        // The logged replay hands back every KV delta; folding them by
+        // hand must reproduce the incremental high-water mark and final
+        // occupancy exactly, and never cross capacity at any timestamp.
+        for (s, label) in [(server(8, 10_000), "ample"), (small_memory_server(4, 10_000), "tight")]
+        {
+            let llm = LlmConfig { kv_bytes_per_token: 100_000, ..LlmConfig::default() };
+            let (r, log) = s.replay_llm_logged(trace(13, 900.0, 0.1), &[0, 0], &llm, 13);
+            assert!(!log.is_empty(), "{label}: no KV events logged");
+            let replicas = r.kv.capacity_bytes.len();
+            let mut in_use = vec![0i64; replicas];
+            let mut high = vec![0i64; replicas];
+            let mut last_at = 0;
+            for ev in &log {
+                assert!(ev.at >= last_at, "{label}: KV log out of order");
+                last_at = ev.at;
+                let rep = ev.replica as usize;
+                in_use[rep] += ev.delta;
+                assert!(in_use[rep] >= 0, "{label}: occupancy went negative");
+                assert!(
+                    in_use[rep] as u64 <= r.kv.capacity_bytes[rep],
+                    "{label}: occupancy {} over capacity {} at t={}",
+                    in_use[rep],
+                    r.kv.capacity_bytes[rep],
+                    ev.at
+                );
+                high[rep] = high[rep].max(in_use[rep]);
+            }
+            let high: Vec<u64> = high.into_iter().map(|h| h as u64).collect();
+            let in_use: Vec<u64> = in_use.into_iter().map(|b| b as u64).collect();
+            assert_eq!(high, r.kv.high_water_bytes, "{label}: high-water mismatch");
+            assert_eq!(in_use, r.kv.bytes_in_use, "{label}: final occupancy mismatch");
+            assert!(r.tokens.conserves(), "{label}: {:?}", r.tokens);
+        }
+    }
+
+    #[test]
+    fn capacity_pressure_sheds_and_still_conserves() {
+        // ~17.6 MB of KV and 100 KB/token: one resident fits, a second
+        // doesn't. A 32-request burst against max_batch 4 must shed at
+        // the door once the join queue is a full batch deep — the
+        // planner's capacity-bound signal.
+        let s = small_memory_server(4, 10_000);
+        let llm = LlmConfig { kv_bytes_per_token: 100_000, ..LlmConfig::default() };
+        let r = s.replay_llm_stream(burst(32), &[0], &llm, 21);
+        assert_eq!(r.offered, 32);
+        assert!(r.shed > 0, "capacity never bound: {r:?}");
+        assert_eq!(r.served + r.shed, r.offered, "burst should drain to served+shed");
+        assert!(r.tokens.conserves());
+        assert!(r.kv.high_water_bytes[0] <= r.kv.capacity_bytes[0]);
+        assert!(r.kv.bytes_in_use[0] == 0);
+    }
+
+    #[test]
+    fn impossible_footprint_sheds_everything() {
+        // 200 KB/token puts even the bare prefill footprint past the
+        // small chip's capacity: nothing can ever fit, so everything
+        // sheds at the door and no KV is ever charged.
+        let s = small_memory_server(4, 10_000);
+        let llm = LlmConfig { kv_bytes_per_token: 200_000, ..LlmConfig::default() };
+        let r = s.replay_llm_stream(trace(17, 800.0, 0.05), &[0], &llm, 17);
+        assert!(r.offered > 0);
+        assert_eq!(r.shed, r.offered);
+        assert_eq!(r.served, 0);
+        assert!(r.tokens.conserves());
+        assert_eq!(r.tokens.shed, r.tokens.offered);
+        assert_eq!(r.kv.high_water_bytes[0], 0);
+    }
+
+    #[test]
+    fn zero_kv_bytes_disables_the_capacity_axis() {
+        // bpt = 0 with decode_mean > 1 is still token-level serving
+        // (multi-step decode), just without capacity pressure: no door
+        // checks, no KV ledger movement.
+        let llm = LlmConfig { kv_bytes_per_token: 0, prefill_tokens: 0, ..LlmConfig::default() };
+        let s = small_memory_server(4, 10_000);
+        let r = s.replay_llm_stream(trace(19, 900.0, 0.1), &[0, 0], &llm, 19);
+        assert_eq!(r.served, r.offered);
+        assert_eq!(r.shed, 0);
+        assert!(r.tokens.conserves());
+        assert!(r.kv.high_water_bytes.iter().all(|&h| h == 0));
+        assert!(r.tokens.decoded > r.served);
+    }
+
+    #[test]
+    fn shed_policy_gates_the_token_door_too() {
+        // The PR-6 shed plumbing applies ahead of capacity: a depth-1
+        // gate against a same-timestamp burst sheds almost everything.
+        let mut s = server(8, 10_000);
+        s.config.shed = Some(ShedPolicy::depth(1));
+        let llm = LlmConfig::default();
+        let r = s.replay_llm_stream(burst(16), &[0], &llm, 23);
+        assert!(r.shed > 0, "depth gate never fired");
+        assert!(r.tokens.conserves());
+        let (accounted, offered) = request_conservation(&r);
+        assert_eq!(accounted, offered);
+    }
+
+    #[test]
+    fn property_token_conservation_holds_under_randomized_chaos() {
+        // The tentpole invariant: across random seeds, fleet sizes,
+        // decode distributions, KV footprints and fault plans, every
+        // offered footprint token is exactly one of served / failed /
+        // shed / dropped / errored / queued / in-flight — and occupancy
+        // never crosses capacity.
+        crate::util::proptest::check(0x709E_25, 16, |g| {
+            let seed = g.u64_below("seed", 1 << 20);
+            let replicas = g.usize("replicas", 1, 3);
+            let rate = 400.0 + 200.0 * g.usize("rate_step", 0, 8) as f64;
+            let small = g.bool("small_memory");
+            let llm = LlmConfig {
+                decode_mean: *g.pick("decode_mean", &[1.5, 8.0, 32.0]),
+                per_model: Vec::new(),
+                prefill_tokens: *g.pick("prefill", &[0, 128]),
+                kv_bytes_per_token: *g.pick("bpt", &[0, 65_536, 200_000]),
+            };
+            let spec = FaultSpec {
+                mttf_s: *g.pick("mttf", &[0.0, 0.02, 0.05]),
+                mttr_s: *g.pick("mttr", &[0.0, 0.01, 0.05]),
+                straggle_every_s: if g.bool("straggle") { 0.05 } else { 0.0 },
+                straggle_s: 0.02,
+                straggle_mult: 3.0,
+                error_prob: *g.pick("err", &[0.0, 0.05, 0.2]),
+            };
+            spec.validate().map_err(|e| e.to_string())?;
+            let window = 0.15;
+            let plan = FaultPlan::generate(&spec, seed, replicas, from_seconds(window));
+            let retry = RetryPolicy {
+                max_retries: g.usize("retries", 0, 3) as u32,
+                deadline: if g.bool("deadline") { millis(50) } else { Time::MAX },
+            };
+            let s = if small { small_memory_server(4, 4_096) } else { server(8, 4_096) };
+            let mix = vec![0u32; replicas];
+            let r = s.replay_llm_stream_faulted(
+                trace(seed, rate, window),
+                &mix,
+                &llm,
+                seed,
+                &plan,
+                &retry,
+            );
+            crate::prop_assert!(
+                r.tokens.conserves(),
+                "token conservation broke: {:?} (request ledger: served {} dropped {} shed {} \
+                 failed {} errors {} queued {} inflight {} offered {})",
+                r.tokens,
+                r.served,
+                r.dropped,
+                r.shed,
+                r.failed,
+                r.snapshot.errors,
+                r.queued_at_end,
+                r.in_flight_at_end,
+                r.offered
+            );
+            let (accounted, offered) = request_conservation(&r);
+            crate::prop_assert!(
+                accounted == offered,
+                "request conservation broke: accounted {accounted} != offered {offered}"
+            );
+            for rep in 0..r.kv.capacity_bytes.len() {
+                crate::prop_assert!(
+                    r.kv.high_water_bytes[rep] <= r.kv.capacity_bytes[rep],
+                    "replica {rep} KV high water {} over capacity {}",
+                    r.kv.high_water_bytes[rep],
+                    r.kv.capacity_bytes[rep]
+                );
+                crate::prop_assert!(
+                    r.kv.bytes_in_use[rep] <= r.kv.high_water_bytes[rep],
+                    "replica {rep} final occupancy above its own high water"
+                );
+            }
+            crate::prop_assert!(
+                r.availability.availability >= 0.0 && r.availability.availability <= 1.0,
+                "availability {} out of [0,1]",
+                r.availability.availability
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn faulted_llm_replay_is_deterministic() {
+        let spec = FaultSpec {
+            mttf_s: 0.03,
+            mttr_s: 0.02,
+            error_prob: 0.1,
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::generate(&spec, 31, 2, from_seconds(0.2));
+        assert!(!plan.is_empty());
+        let retry = RetryPolicy::default();
+        let llm = LlmConfig::default();
+        let s = server(8, 10_000);
+        let a = s.replay_llm_stream_faulted(trace(31, 1200.0, 0.2), &[0, 0], &llm, 31, &plan, &retry);
+        let b = s.replay_llm_stream_faulted(trace(31, 1200.0, 0.2), &[0, 0], &llm, 31, &plan, &retry);
+        assert!(llm_reports_eq(&a, &b), "faulted LLM replay nondeterministic");
+        assert!(
+            a.availability.crashes > 0 || a.availability.transient_errors > 0,
+            "chaos never landed — the test proves nothing"
+        );
+        assert!(a.tokens.conserves(), "{:?}", a.tokens);
+    }
+
+    #[test]
+    fn per_model_decode_mean_reroutes_token_volume() {
+        // Two registered models; overriding one model's decode mean
+        // changes its token volume while arrivals stay identical.
+        let mut s = server(8, 10_000);
+        s.register("mlp-wide", &mlp::quickstart());
+        let mk_trace = || {
+            let mut t = trace(37, 600.0, 0.1);
+            for (i, req) in t.iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    req.model = Arc::from("mlp-wide");
+                }
+            }
+            t
+        };
+        let base = LlmConfig { decode_mean: 4.0, ..LlmConfig::default() };
+        let boosted = LlmConfig {
+            decode_mean: 4.0,
+            per_model: vec![("mlp-wide".to_string(), 64.0)],
+            ..LlmConfig::default()
+        };
+        let a = s.replay_llm_stream(mk_trace(), &[0, 0], &base, 37);
+        let b = s.replay_llm_stream(mk_trace(), &[0, 0], &boosted, 37);
+        assert_eq!(a.offered, b.offered, "arrivals must not move with the decode axis");
+        assert!(
+            b.tokens.offered > a.tokens.offered,
+            "per-model boost did not raise token volume: {} vs {}",
+            b.tokens.offered,
+            a.tokens.offered
+        );
+        assert!(a.tokens.conserves() && b.tokens.conserves());
+    }
+}

@@ -35,6 +35,12 @@
 //! - [`fault`] — deterministic fault injection: seeded crash/straggle/
 //!   error schedules on an RNG stream independent of the arrival trace,
 //!   plus the retry budget the control plane enforces.
+//! - [`llm`] — token-level autoregressive serving: prefill/decode
+//!   phases, per-replica KV-cache capacity accounting against the
+//!   chip's feature-side DRAM, and a continuous batcher that admits and
+//!   retires requests at token boundaries; conservation extends to a
+//!   token ledger, and the degenerate config delegates bit-identically
+//!   to the one-shot replay.
 //! - [`shard`] — sharded parallel replay: the fleet partitioned into
 //!   deterministic cells (own wheel, RNG streams, ledgers per cell)
 //!   replayed on scoped threads and merged exactly — `cells=1` is the
@@ -49,6 +55,7 @@ pub mod batcher;
 pub mod capacity;
 pub mod clock;
 pub mod fault;
+pub mod llm;
 pub mod metrics;
 pub mod plan;
 pub mod request;
@@ -62,6 +69,7 @@ pub use batcher::{Batch, BatcherConfig, DynamicBatcher, Queued, ShedPolicy};
 pub use capacity::{sweep_capacity, CapacityPoint, GridConfig, TraceShape};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use fault::{FaultKind, FaultPlan, FaultSpec, RetryPolicy, TimedFault};
+pub use llm::{KvEvent, KvReport, LlmConfig, TokenLedger};
 pub use plan::{
     default_catalog, plan, plan_models, ChipClass, ModelShare, Objective, Plan, PlanConfig,
     PlanTarget, PowerModel, SearchStrategy,

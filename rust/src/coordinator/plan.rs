@@ -65,6 +65,7 @@ use crate::chip::sunrise::{SunriseChip, SunriseConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::capacity::TraceShape;
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
+use crate::coordinator::llm::LlmConfig;
 use crate::coordinator::router::Policy;
 use crate::coordinator::shard::CellPlan;
 use crate::coordinator::simserve::{SimServeConfig, SimServeReport, SimServer};
@@ -227,6 +228,16 @@ pub struct PlanTarget {
     /// a faulted probe; `0.0` (default) disables the bound. Fault-free
     /// probes always measure 1.0.
     pub min_availability: f64,
+    /// Token-level (LLM) workload: `None` (default) probes with one-shot
+    /// requests on the exact existing path (byte-identical plans). `Some`
+    /// probes with autoregressive decode and per-replica KV-capacity
+    /// accounting — which adds **memory capacity** to the planner's
+    /// binding constraints: a class whose feature-side DRAM cannot hold
+    /// the decode footprints sheds at admission, fails
+    /// [`meets_target`](FleetCandidate::meets_target) at any fleet size,
+    /// and loses to a larger-memory class even when it wins on
+    /// bandwidth/compute price (pinned by test).
+    pub llm: Option<LlmConfig>,
 }
 
 impl Default for PlanTarget {
@@ -241,6 +252,7 @@ impl Default for PlanTarget {
             faults: FaultSpec::default(),
             retry: RetryPolicy::default(),
             min_availability: 0.0,
+            llm: None,
         }
     }
 }
@@ -451,6 +463,9 @@ impl<'a> Planner<'a> {
         );
         target.shape.validate()?;
         target.faults.validate()?;
+        if let Some(llm) = &target.llm {
+            llm.validate()?;
+        }
         crate::ensure!(
             (0.0..=1.0).contains(&target.min_availability),
             "plan min_availability {} is not a fraction in [0, 1]",
@@ -555,7 +570,46 @@ impl<'a> Planner<'a> {
         // so a faulted probe is still a pure function of the candidate.
         // With `cells > 1` the probe replays sharded (per-cell fault
         // streams derive from the target seed) and merges exactly.
-        let report = if self.config.cells > 1 {
+        // A token-level target (`llm: Some`) probes through the LLM
+        // entry points; one-shot configs delegate to the branches below.
+        let report = if let Some(llm) = &t.llm {
+            if self.config.cells > 1 {
+                let plan = CellPlan {
+                    cells: self.config.cells,
+                    threads: self.config.shard_threads,
+                    inter_cell_latency: 0,
+                };
+                let make_trace =
+                    || t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
+                if t.faults.is_quiet() {
+                    self.server.replay_sharded_llm(make_trace, &mix, llm, t.seed, &plan)
+                } else {
+                    self.server.replay_sharded_llm_faulted(
+                        make_trace,
+                        &mix,
+                        llm,
+                        &t.faults,
+                        &t.retry,
+                        t.seed,
+                        crate::sim::from_seconds(t.duration_s),
+                        &plan,
+                    )
+                }
+            } else {
+                let trace = t.shape.stream_mix(t.seed, t.rate, t.duration_s, &self.shares);
+                if t.faults.is_quiet() {
+                    self.server.replay_llm_stream(trace, &mix, llm, t.seed)
+                } else {
+                    let plan = FaultPlan::generate(
+                        &t.faults,
+                        t.seed,
+                        mix.len(),
+                        crate::sim::from_seconds(t.duration_s),
+                    );
+                    self.server.replay_llm_stream_faulted(trace, &mix, llm, t.seed, &plan, &t.retry)
+                }
+            }
+        } else if self.config.cells > 1 {
             let plan = CellPlan {
                 cells: self.config.cells,
                 threads: self.config.shard_threads,
@@ -1289,6 +1343,110 @@ mod tests {
             .report
             .availability
             .bitwise_eq(&again.best.report.availability));
+    }
+
+    #[test]
+    fn kv_capacity_flips_the_binding_constraint_between_chip_classes() {
+        // Two classes: a cheap small-memory chip (1/16th the DRAM, so
+        // ~17.6 MB of feature-side KV capacity) and a pricey full-memory
+        // chip (~281 MB). On one-shot traffic — or token traffic with
+        // tiny KV footprints — the cheap class wins: the binding
+        // constraint is compute/bandwidth and both classes clear it.
+        // Once `kv_bytes_per_token` pushes the *minimum* request
+        // footprint ((prefill + 1) × bpt ≈ 19.4 MB) past the small
+        // chip's capacity, every request sheds at admission there: the
+        // small class is infeasible at ANY fleet size and the planner
+        // flips to the larger-memory class — capacity, not speed, now
+        // binds.
+        let net = mlp::quickstart();
+        let big = SunriseConfig::default();
+        let small = SunriseConfig { dram_bits: big.dram_bits / 16.0, ..big.clone() };
+        let catalog = vec![
+            ChipClass {
+                name: "small-mem".into(),
+                config: small,
+                unit_cost_usd: 500.0,
+                unit_power_w: 8.0,
+            },
+            ChipClass {
+                name: "big-mem".into(),
+                config: big,
+                unit_cost_usd: 2000.0,
+                unit_power_w: 9.0,
+            },
+        ];
+        let config = PlanConfig { max_replicas: 8, ..PlanConfig::default() };
+        let base = PlanTarget { rate: 300.0, p99_s: 0.2, ..PlanTarget::default() };
+        let llm = |bpt: u64| {
+            Some(LlmConfig {
+                decode_mean: 8.0,
+                prefill_tokens: 128,
+                kv_bytes_per_token: bpt,
+                ..LlmConfig::default()
+            })
+        };
+        // Tiny footprints: the cheap small-memory class wins.
+        let cheap_target = PlanTarget { llm: llm(1024), ..base.clone() };
+        let cheap = plan(&net, "mlp", &catalog, &cheap_target, &config)
+            .expect("low-footprint target is meetable");
+        assert!(cheap.best.meets_target);
+        assert!(
+            cheap.best.counts[0] > 0 && cheap.best.counts[1] == 0,
+            "cheap small-memory class should win at low KV pressure: {:?}",
+            cheap.best.counts
+        );
+        assert!(cheap.best.report.tokens.conserves());
+        // Big footprints: the small class sheds everything — the planner
+        // flips to the larger-memory class even at 4x the unit price.
+        let bound_target = PlanTarget { llm: llm(150_000), ..base.clone() };
+        let bound = plan(&net, "mlp", &catalog, &bound_target, &config)
+            .expect("high-footprint target is meetable on the big class");
+        assert!(bound.best.meets_target);
+        assert!(
+            bound.best.counts[0] == 0 && bound.best.counts[1] > 0,
+            "planner failed to flip to the larger-memory class: {:?}",
+            bound.best.counts
+        );
+        assert!(bound.best.cost_usd > cheap.best.cost_usd, "the flip is what you pay for");
+        assert_eq!(bound.best.report.shed, 0, "the winning fleet must not shed");
+        assert!(bound.best.report.tokens.conserves());
+        // The capacity-bound fleet itself: probe the cheap winner under
+        // the high-footprint workload — it sheds at admission and fails
+        // the target, at its original size and at the max fleet size.
+        let planner = Planner::new(&net, "mlp", &catalog, &bound_target, &config).unwrap();
+        for counts in [cheap.best.counts.clone(), vec![config.max_replicas, 0]] {
+            let probe = planner.evaluate(&counts);
+            assert!(
+                probe.report.shed > 0,
+                "capacity-bound fleet {counts:?} reported no shed"
+            );
+            assert!(probe.report.tokens.shed > 0);
+            assert!(!probe.meets_target, "capacity-bound fleet {counts:?} met the target");
+            assert!(probe.report.tokens.conserves());
+        }
+        // Flips are deterministic like every other plan.
+        let again = plan(&net, "mlp", &catalog, &bound_target, &config).expect("meetable");
+        assert_eq!(bound.best.counts, again.best.counts);
+        assert!(bound.best.report.snapshot.bitwise_eq(&again.best.report.snapshot));
+        assert_eq!(bound.best.report.tokens, again.best.report.tokens);
+    }
+
+    #[test]
+    fn llm_plan_with_one_shot_config_is_byte_identical_to_the_default() {
+        // The degenerate token config delegates every probe to the
+        // one-shot path: plans are byte-identical to `llm: None`.
+        let net = resnet50();
+        let catalog = default_catalog();
+        let plain_target = quick_target(2500.0, 40.0);
+        let degenerate =
+            PlanTarget { llm: Some(LlmConfig::one_shot()), ..plain_target.clone() };
+        let config = PlanConfig::default();
+        let a = plan(&net, "resnet50", &catalog, &plain_target, &config).expect("meetable");
+        let b = plan(&net, "resnet50", &catalog, &degenerate, &config).expect("meetable");
+        assert_eq!(a.best.counts, b.best.counts);
+        assert_eq!(a.best.cost_usd.to_bits(), b.best.cost_usd.to_bits());
+        assert!(a.best.report.snapshot.bitwise_eq(&b.best.report.snapshot));
+        assert_eq!(b.best.report.tokens, Default::default());
     }
 
     #[test]

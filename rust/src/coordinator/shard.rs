@@ -53,11 +53,12 @@
 
 use crate::coordinator::clock::{Clock, VirtualClock};
 use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryPolicy};
+use crate::coordinator::llm::{KvReport, LlmConfig, TokenLedger};
 use crate::coordinator::metrics::{AvailabilityReport, Metrics};
 use crate::coordinator::simserve::{EnergyReport, SimServeReport, SimServer};
 use crate::sim::sweep::{default_threads, parallel_map_threads};
 use crate::sim::{to_seconds, Time};
-use crate::workloads::generator::TraceRequest;
+use crate::workloads::generator::{decode_marking_rng, DecodeLenIter, TraceRequest};
 use std::sync::Arc;
 
 /// XOR'd into the user seed to derive per-cell streams (b"cell_idx" —
@@ -239,6 +240,121 @@ impl SimServer {
             });
         merge_cell_reports(mix, cells, results)
     }
+
+    /// Sharded token-level (LLM) replay. The decode-length stream is
+    /// drawn over the **full enumerated trace before the front-door
+    /// filter**, so arrival *i* gets the same decode length at every
+    /// cell count — the sharded analogue of the mix-marking rule, and
+    /// the reason per-cell token ledgers sum to the unsharded trace's
+    /// token volume exactly. A [one-shot](LlmConfig::is_one_shot)
+    /// config delegates to [`replay_sharded`](SimServer::replay_sharded)
+    /// wholesale; `plan.cells <= 1` delegates to
+    /// [`replay_llm_stream`](SimServer::replay_llm_stream).
+    pub fn replay_sharded_llm<F, I>(
+        &self,
+        make_trace: F,
+        mix: &[u32],
+        llm: &LlmConfig,
+        seed: u64,
+        plan: &CellPlan,
+    ) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        self.shard_replay_llm(make_trace, mix, llm, seed, None, plan)
+    }
+
+    /// Sharded token-level chaos: per-cell fault plans from
+    /// [`cell_seed`]`(seed, cell)` exactly like
+    /// [`replay_sharded_faulted`](SimServer::replay_sharded_faulted),
+    /// with the decode stream marked ahead of the front door as in
+    /// [`replay_sharded_llm`](SimServer::replay_sharded_llm).
+    #[allow(clippy::too_many_arguments)]
+    pub fn replay_sharded_llm_faulted<F, I>(
+        &self,
+        make_trace: F,
+        mix: &[u32],
+        llm: &LlmConfig,
+        spec: &FaultSpec,
+        retry: &RetryPolicy,
+        seed: u64,
+        horizon: Time,
+        plan: &CellPlan,
+    ) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        self.shard_replay_llm(make_trace, mix, llm, seed, Some((spec, retry, horizon)), plan)
+    }
+
+    fn shard_replay_llm<F, I>(
+        &self,
+        make_trace: F,
+        mix: &[u32],
+        llm: &LlmConfig,
+        seed: u64,
+        chaos: Option<(&FaultSpec, &RetryPolicy, Time)>,
+        plan: &CellPlan,
+    ) -> SimServeReport
+    where
+        F: Fn() -> I + Sync,
+        I: IntoIterator<Item = TraceRequest>,
+    {
+        assert!(!mix.is_empty(), "replica mix must name at least one replica");
+        if llm.is_one_shot() {
+            // The degenerate config is the one-shot system wholesale —
+            // same delegation the serial LLM entry points make.
+            return match chaos {
+                None => self.replay_sharded(make_trace, mix, plan),
+                Some((spec, retry, horizon)) => {
+                    self.replay_sharded_faulted(make_trace, mix, spec, retry, seed, horizon, plan)
+                }
+            };
+        }
+        let cells = plan.cells.max(1).min(mix.len());
+        if cells <= 1 {
+            return match chaos {
+                None => self.replay_llm_stream(make_trace(), mix, llm, seed),
+                Some((spec, retry, horizon)) => {
+                    let fp = FaultPlan::generate(spec, seed, mix.len(), horizon);
+                    self.replay_llm_stream_faulted(make_trace(), mix, llm, seed, &fp, retry)
+                }
+            };
+        }
+        let cell_mixes: Vec<Vec<u32>> = (0..cells)
+            .map(|c| mix.iter().skip(c).step_by(cells).copied().collect())
+            .collect();
+        let threads = if plan.threads == 0 { default_threads() } else { plan.threads };
+        let delay = plan.inter_cell_latency;
+        let cell_ids: Vec<usize> = (0..cells).collect();
+        let results: Vec<(SimServeReport, Metrics)> =
+            parallel_map_threads(&cell_ids, threads, |_, &c| {
+                let cell_mix = &cell_mixes[c];
+                // Mark decode lengths over the FULL stream, then filter:
+                // the draw index is the global arrival index, invariant
+                // under the cell count.
+                let marked = DecodeLenIter::new(
+                    make_trace().into_iter(),
+                    decode_marking_rng(seed),
+                    llm.decode_mean,
+                    &llm.per_model,
+                )
+                .enumerate()
+                .filter(move |(i, _)| cell_of(*i as u64, cells) == c)
+                .map(|(_, r)| r);
+                match chaos {
+                    None => self.replay_llm_cell(marked, cell_mix, llm, None, delay),
+                    Some((spec, retry, horizon)) => {
+                        let fp =
+                            FaultPlan::generate(spec, cell_seed(seed, c), cell_mix.len(), horizon);
+                        self.replay_llm_cell(marked, cell_mix, llm, Some((&fp, retry)), delay)
+                    }
+                }
+            });
+        merge_cell_reports(mix, cells, results)
+    }
 }
 
 /// Fold per-cell reports into one fleet report, in fixed cell order.
@@ -315,6 +431,30 @@ fn merge_cell_reports(
     let dynamic_j: f64 = per_class_dynamic_j.iter().sum();
     let avg_power_w = dynamic_j / sim_duration_s + static_w;
 
+    // Token ledgers are pure integer sums (each term is a per-cell
+    // footprint count); KV vectors un-stride like `per_replica_served`.
+    // One-shot cells report empty KV vectors, and cells are uniform, so
+    // presence in any cell means presence in all.
+    let mut tokens = TokenLedger::default();
+    for (r, _) in &results {
+        tokens.absorb(&r.tokens);
+    }
+    let kv = if results.iter().any(|(r, _)| !r.kv.capacity_bytes.is_empty()) {
+        KvReport {
+            capacity_bytes: (0..replicas)
+                .map(|r| results[r % cells].0.kv.capacity_bytes[r / cells])
+                .collect(),
+            bytes_in_use: (0..replicas)
+                .map(|r| results[r % cells].0.kv.bytes_in_use[r / cells])
+                .collect(),
+            high_water_bytes: (0..replicas)
+                .map(|r| results[r % cells].0.kv.high_water_bytes[r / cells])
+                .collect(),
+        }
+    } else {
+        KvReport::default()
+    };
+
     let total_down_s: f64 = per_replica_downtime_s.iter().sum();
     let availability = AvailabilityReport {
         crashes: sum(|r| r.availability.crashes),
@@ -357,6 +497,8 @@ fn merge_cell_reports(
             energy_j: dynamic_j + static_w * sim_duration_s,
         },
         availability,
+        tokens,
+        kv,
     }
 }
 
@@ -406,6 +548,8 @@ mod tests {
             && a.energy.per_class_busy_ps == b.energy.per_class_busy_ps
             && a.energy.dynamic_j.to_bits() == b.energy.dynamic_j.to_bits()
             && a.energy.energy_j.to_bits() == b.energy.energy_j.to_bits()
+            && a.tokens == b.tokens
+            && a.kv == b.kv
     }
 
     fn conservation(r: &SimServeReport) -> (u64, u64) {
@@ -643,6 +787,190 @@ mod tests {
                 "merged utilization {} > 1.0",
                 serial.replica_utilization
             );
+            Ok(())
+        });
+    }
+
+    fn llm_server(max_batch: u32, queue_capacity: usize) -> SimServer {
+        let config = SimServeConfig {
+            batcher: BatcherConfig { max_batch, max_wait: millis(2) },
+            routing: Policy::LeastLoaded,
+            queue_capacity,
+            shed: None,
+        };
+        let mut s = SimServer::new(SunriseChip::silicon(), config);
+        s.register("mlp", &crate::workloads::mlp::quickstart());
+        s
+    }
+
+    fn mlp_trace(seed: u64, rate: f64, duration_s: f64) -> impl Iterator<Item = TraceRequest> {
+        PoissonTraceIter::new(Rng::new(seed), rate, duration_s, "mlp", 1)
+    }
+
+    #[test]
+    fn llm_cells_1_is_bit_identical_to_the_serial_llm_path() {
+        // The LLM extension of the cells=1 contract: one cell delegates
+        // to the serial token-level replay, quiet and faulted — and a
+        // one-shot config delegates through to the one-shot sharded
+        // path wholesale.
+        let s = llm_server(8, 10_000);
+        let llm = LlmConfig::default();
+        let serial = s.replay_llm_stream(mlp_trace(5, 1500.0, 0.2), &[0, 0], &llm, 5);
+        let sharded =
+            s.replay_sharded_llm(|| mlp_trace(5, 1500.0, 0.2), &[0, 0], &llm, 5, &CellPlan::single());
+        assert!(
+            reports_bitwise_eq(&serial, &sharded),
+            "cells=1 LLM sharded replay diverged from replay_llm_stream"
+        );
+        assert!(serial.tokens.decoded > serial.served, "no token-level work happened");
+
+        let spec = FaultSpec { mttf_s: 0.04, mttr_s: 0.02, error_prob: 0.05, ..FaultSpec::default() };
+        let retry = RetryPolicy::default();
+        let horizon = from_seconds(0.2);
+        let fp = FaultPlan::generate(&spec, 5, 2, horizon);
+        let faulted_serial =
+            s.replay_llm_stream_faulted(mlp_trace(5, 1500.0, 0.2), &[0, 0], &llm, 5, &fp, &retry);
+        let faulted_sharded = s.replay_sharded_llm_faulted(
+            || mlp_trace(5, 1500.0, 0.2),
+            &[0, 0],
+            &llm,
+            &spec,
+            &retry,
+            5,
+            horizon,
+            &CellPlan::single(),
+        );
+        assert!(
+            reports_bitwise_eq(&faulted_serial, &faulted_sharded),
+            "cells=1 faulted LLM sharded replay diverged"
+        );
+
+        let one_shot = LlmConfig::one_shot();
+        let a = s.replay_sharded_llm(
+            || mlp_trace(5, 1500.0, 0.2),
+            &[0, 0],
+            &one_shot,
+            5,
+            &CellPlan::single(),
+        );
+        let b = s.replay_sharded(|| mlp_trace(5, 1500.0, 0.2), &[0, 0], &CellPlan::single());
+        assert!(reports_bitwise_eq(&a, &b), "one-shot LLM sharding diverged from replay_sharded");
+    }
+
+    #[test]
+    fn sharded_llm_merge_is_deterministic_and_conserves_tokens() {
+        // Thread-count invariance extended to LLM traces, plus the
+        // sharded token conservation half of the identity satellite: the
+        // merged token ledger closes exactly because each cell's does.
+        let s = llm_server(8, 100_000);
+        let mix = vec![0u32; 8];
+        let llm = LlmConfig::default();
+        let serial = s.replay_sharded_llm(
+            || mlp_trace(7, 4000.0, 0.2),
+            &mix,
+            &llm,
+            7,
+            &CellPlan { cells: 4, threads: 1, inter_cell_latency: 0 },
+        );
+        let parallel = s.replay_sharded_llm(
+            || mlp_trace(7, 4000.0, 0.2),
+            &mix,
+            &llm,
+            7,
+            &CellPlan { cells: 4, threads: 8, inter_cell_latency: 0 },
+        );
+        assert!(
+            reports_bitwise_eq(&serial, &parallel),
+            "sharded LLM merge diverged between thread counts"
+        );
+        assert!(serial.tokens.conserves(), "merged token ledger broke: {:?}", serial.tokens);
+        let (accounted, offered) = conservation(&serial);
+        assert_eq!(accounted, offered);
+        // KV vectors un-strided to fleet width, bounded by capacity.
+        assert_eq!(serial.kv.capacity_bytes.len(), mix.len());
+        assert!(serial
+            .kv
+            .high_water_bytes
+            .iter()
+            .zip(&serial.kv.capacity_bytes)
+            .all(|(&h, &c)| h <= c));
+        assert!(serial.kv.high_water_bytes.iter().any(|&h| h > 0), "KV never charged");
+        // Decode volume is invariant under the cell count: lengths are
+        // drawn before the front door, so the token ledger's offered
+        // side matches the unsharded replay exactly.
+        let whole = s.replay_llm_stream(mlp_trace(7, 4000.0, 0.2), &mix, &llm, 7);
+        assert_eq!(serial.tokens.offered, whole.tokens.offered);
+        assert_eq!(serial.offered, whole.offered);
+    }
+
+    #[test]
+    fn property_sharded_llm_conserves_tokens_under_chaos() {
+        // Randomized cells × replicas × decode means × fault plans: the
+        // merged token ledger closes and the merge is thread-invariant —
+        // the "including sharded cells" clause of the conservation
+        // satellite.
+        crate::util::proptest::check(0x70C3, 10, |g| {
+            let seed = g.u64_below("seed", 1 << 16);
+            let replicas = g.usize("replicas", 1, 6);
+            let cells = g.usize("cells", 1, 4);
+            let rate = 800.0 + 400.0 * g.usize("rate_step", 0, 4) as f64;
+            let faulty = g.bool("faulty");
+            let llm = LlmConfig {
+                decode_mean: *g.pick("decode_mean", &[1.5, 8.0, 24.0]),
+                per_model: Vec::new(),
+                prefill_tokens: *g.pick("prefill", &[0, 128]),
+                kv_bytes_per_token: *g.pick("bpt", &[0, 65_536]),
+            };
+            let s = llm_server(8, 4_096);
+            let mix = vec![0u32; replicas];
+            let window = 0.12;
+            let horizon = from_seconds(window);
+            let spec = if faulty {
+                FaultSpec { mttf_s: 0.04, mttr_s: 0.02, error_prob: 0.05, ..FaultSpec::default() }
+            } else {
+                FaultSpec::default()
+            };
+            let retry = RetryPolicy::default();
+            let replay = |threads: usize| {
+                let plan = CellPlan { cells, threads, inter_cell_latency: 0 };
+                if spec.is_quiet() {
+                    s.replay_sharded_llm(|| mlp_trace(seed, rate, window), &mix, &llm, seed, &plan)
+                } else {
+                    s.replay_sharded_llm_faulted(
+                        || mlp_trace(seed, rate, window),
+                        &mix,
+                        &llm,
+                        &spec,
+                        &retry,
+                        seed,
+                        horizon,
+                        &plan,
+                    )
+                }
+            };
+            let serial = replay(1);
+            let parallel = replay(8);
+            crate::prop_assert!(
+                reports_bitwise_eq(&serial, &parallel),
+                "serial/parallel sharded LLM merge diverged \
+                 (seed {seed}, {replicas} replicas, {cells} cells)"
+            );
+            crate::prop_assert!(
+                serial.tokens.conserves(),
+                "sharded token conservation broke: {:?}",
+                serial.tokens
+            );
+            let (accounted, offered) = conservation(&serial);
+            crate::prop_assert!(
+                accounted == offered,
+                "sharded request conservation broke: {accounted} != {offered}"
+            );
+            for rep in 0..serial.kv.capacity_bytes.len() {
+                crate::prop_assert!(
+                    serial.kv.high_water_bytes[rep] <= serial.kv.capacity_bytes[rep],
+                    "replica {rep} KV high water over capacity in the merge"
+                );
+            }
             Ok(())
         });
     }

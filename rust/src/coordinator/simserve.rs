@@ -88,6 +88,7 @@ use crate::coordinator::arena::{Arena, Fifo};
 use crate::coordinator::batcher::{Batch, BatcherConfig, DynamicBatcher, ShedPolicy};
 use crate::coordinator::clock::{Clock, VirtualClock};
 use crate::coordinator::fault::{FaultKind, FaultPlan, RetryPolicy, TimedFault};
+use crate::coordinator::llm::{KvReport, TokenLedger};
 use crate::coordinator::metrics::{AvailabilityReport, Metrics, MetricsSnapshot};
 use crate::coordinator::request::{ModelId, ModelRegistry};
 use crate::coordinator::router::{Health, Policy, Router};
@@ -179,6 +180,11 @@ pub struct SimServeReport {
     /// Fault/retry/downtime ledger; all zeros (availability 1.0) on a
     /// fault-free replay.
     pub availability: AvailabilityReport,
+    /// Token-level conservation ledger; all zeros on one-shot replays
+    /// (only the [`llm`](crate::coordinator::llm) paths account tokens).
+    pub tokens: TokenLedger,
+    /// Per-replica KV-cache occupancy ledger; empty on one-shot replays.
+    pub kv: KvReport,
 }
 
 /// Measured busy-time/energy decomposition of one replay. "Measured"
@@ -351,6 +357,25 @@ impl SimServer {
         &self.registry
     }
 
+    /// Full per-class, per-model service tables (shared with the
+    /// token-level [`llm`](crate::coordinator::llm) replay, which lives
+    /// in a sibling module and cannot see the private field).
+    pub(crate) fn service_tables(&self) -> &[Vec<Vec<Time>>] {
+        &self.service
+    }
+
+    /// Per-class, per-model dynamic-energy tables (same sharing story as
+    /// [`service_tables`](Self::service_tables)).
+    pub(crate) fn energy_tables(&self) -> &[Vec<Vec<f64>>] {
+        &self.energy
+    }
+
+    /// The chip backing a class (the llm replay reads its feature-side
+    /// KV capacity).
+    pub(crate) fn class_chip(&self, class: usize) -> &SunriseChip {
+        &self.chips[class]
+    }
+
     /// Class-0 service table for `model`, if registered (shared with the
     /// materialized baseline replay).
     pub(crate) fn service_table(&self, model: ModelId) -> Option<&[Time]> {
@@ -365,7 +390,7 @@ impl SimServer {
     /// the router's depth-normalization weight; only ratios matter, and
     /// uniform mixes produce uniform speeds, preserving the homogeneous
     /// routing choices exactly.
-    fn class_speed(&self, class: usize) -> u64 {
+    pub(crate) fn class_speed(&self, class: usize) -> u64 {
         let max_batch = self.config.batcher.max_batch as u128;
         let mut speed: u128 = 0;
         for table in &self.service[class] {
@@ -528,7 +553,7 @@ impl SimServer {
     /// linear scan (multi-model mixes interleave a handful of pointers;
     /// a single-entry cache would thrash on every alternation), capped so
     /// a pathological trace of unique `Arc`s cannot grow it unboundedly.
-    fn resolver(&self) -> impl FnMut(&Arc<str>) -> Option<ModelId> + '_ {
+    pub(crate) fn resolver(&self) -> impl FnMut(&Arc<str>) -> Option<ModelId> + '_ {
         const MAX_CACHED: usize = 16;
         let mut cache: Vec<(Arc<str>, Option<ModelId>)> = Vec::new();
         move |name: &Arc<str>| {
@@ -786,6 +811,8 @@ impl SimServer {
                 energy_j: dynamic_j + static_w * sim_duration_s,
             },
             availability,
+            tokens: TokenLedger::default(),
+            kv: KvReport::default(),
         };
         (report, world.metrics)
     }

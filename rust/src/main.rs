@@ -15,7 +15,11 @@
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
 //!           `sunrise sweep --faults --mttf 0.05 --mttr 0.02 --error-prob 0.05`
 //!           `sunrise sweep --replicas 8,16 --cells 4`
+//!           `sunrise sweep --workload llm --model mlp --decode-mean 32 \
+//!                          --kv-bytes-per-token 65536`
 //!           `sunrise plan --rate 3000 --p99 30`
+//!           `sunrise plan --workload llm --model mlp --rate 300 --p99 200 \
+//!                         --decode-mean 8 --kv-bytes-per-token 150000`
 //!           `sunrise plan --rate 3000 --p99 30 --mttf 0.1 --mttr 0.03`
 //!           `sunrise plan --rate 3000 --p99 30 --horizon-years 3 \
 //!                         --model-mix resnet50=0.7,mlp=0.3`
@@ -28,6 +32,7 @@ use sunrise::coordinator::capacity::{
     curve, render_grid, saturation_knee, sweep_capacity, GridConfig, TraceShape,
 };
 use sunrise::coordinator::fault::{FaultSpec, RetryPolicy};
+use sunrise::coordinator::llm::LlmConfig;
 use sunrise::coordinator::plan::{
     default_catalog, plan_models, render_plan, ModelShare, Objective, PlanConfig, PlanTarget,
     PowerModel, SearchStrategy,
@@ -215,6 +220,32 @@ fn parse_fault_spec(a: &Args) -> FaultSpec {
     }
 }
 
+/// Parse the shared token-level workload options (`--workload llm` plus
+/// `--decode-mean`/`--prefill-tokens`/`--kv-bytes-per-token`, used by
+/// `sweep` and `plan`). `oneshot` (the default) returns `None`: the exact
+/// pre-LLM replay path. Range checking happens in [`LlmConfig::validate`]
+/// inside the library entry points, surfaced as usage errors.
+fn parse_llm(a: &Args) -> Option<LlmConfig> {
+    match a.get("workload") {
+        "oneshot" => None,
+        "llm" => {
+            let prefill = a.get_usize("prefill-tokens");
+            if prefill > u32::MAX as usize {
+                usage_error("option --prefill-tokens is absurdly large");
+            }
+            Some(LlmConfig {
+                decode_mean: a.get_f64("decode-mean"),
+                prefill_tokens: prefill as u32,
+                kv_bytes_per_token: a.get_u64("kv-bytes-per-token"),
+                ..LlmConfig::default()
+            })
+        }
+        other => {
+            usage_error(&format!("option --workload: unknown workload `{other}` (oneshot|llm)"))
+        }
+    }
+}
+
 /// Parse the shared `--retries`/`--deadline-ms` retry policy
 /// (`--deadline-ms 0` keeps the default "no deadline").
 fn parse_retry(a: &Args) -> RetryPolicy {
@@ -256,7 +287,11 @@ fn cmd_sweep(args: &[String]) {
     .opt("retries", "2", "faults: re-dispatch budget per batch before its requests fail")
     .opt("deadline-ms", "0", "faults: absolute retry deadline from enqueue, ms (0 = none)")
     .opt("cells", "1", "shard each point's fleet into N deterministic cells (1 = unsharded)")
-    .opt("shard-threads", "0", "worker threads per sharded point (0 = one per core)");
+    .opt("shard-threads", "0", "worker threads per sharded point (0 = one per core)")
+    .opt("workload", "oneshot", "request workload: oneshot|llm (token-level autoregressive decode)")
+    .opt("decode-mean", "32", "llm only: mean decode length, tokens (geometric draw per request)")
+    .opt("prefill-tokens", "128", "llm only: prompt tokens charged to KV-cache at admission")
+    .opt("kv-bytes-per-token", "65536", "llm only: KV-cache bytes per token per request");
     let a = cli.parse_slice_or_exit(args);
     let net = net_by_name(a.get("model")).unwrap_or_else(|| {
         eprintln!("unknown model {}", a.get("model"));
@@ -281,6 +316,7 @@ fn cmd_sweep(args: &[String]) {
         retry: parse_retry(&a),
         cells: a.get_usize("cells"),
         shard_threads: a.get_usize("shard-threads"),
+        llm: parse_llm(&a),
         ..GridConfig::default()
     };
     if grid.cells == 0 {
@@ -381,7 +417,11 @@ fn cmd_plan(args: &[String]) {
     .opt("deadline-ms", "0", "chaos axis: absolute retry deadline from enqueue, ms (0 = none)")
     .opt("availability", "0", "minimum measured fleet availability in [0, 1] (0 = no floor)")
     .opt("cells", "1", "shard each probe's fleet into N deterministic cells (1 = unsharded)")
-    .opt("shard-threads", "0", "worker threads per sharded probe (0 = one per core)");
+    .opt("shard-threads", "0", "worker threads per sharded probe (0 = one per core)")
+    .opt("workload", "oneshot", "request workload: oneshot|llm (token-level autoregressive decode)")
+    .opt("decode-mean", "32", "llm only: mean decode length, tokens (geometric draw per request)")
+    .opt("prefill-tokens", "128", "llm only: prompt tokens charged to KV-cache at admission")
+    .opt("kv-bytes-per-token", "65536", "llm only: KV-cache bytes per token per request");
     let a = cli.parse_slice_or_exit(args);
     let mix = parse_model_mix(a.get("model-mix"));
     // The traffic mix defines the model set when given; --model otherwise.
@@ -416,6 +456,7 @@ fn cmd_plan(args: &[String]) {
         faults: parse_fault_spec(&a),
         retry: parse_retry(&a),
         min_availability: a.get_f64("availability"),
+        llm: parse_llm(&a),
     };
     // Same bounds as cmd_sweep: an absurd max_batch would plan
     // 1..=max_batch service tables per chip class before anything runs.
@@ -617,12 +658,14 @@ fn main() {
                  \x20 serve      threaded serving demo over simulated chip replicas (wall clock)\n\
                  \x20 queue-sim  event-driven queueing simulation of raw chips under load\n\
                  \x20 sweep      rate×replicas×batch capacity grid on the virtual-time server;\n\
-                 \x20            optional seeded chaos per point (--faults) and sharded\n\
-                 \x20            parallel replay (--cells)\n\
+                 \x20            optional seeded chaos per point (--faults), sharded parallel\n\
+                 \x20            replay (--cells) and token-level decode (--workload llm)\n\
                  \x20 plan       cheapest chip fleet (mixed configs) meeting a (rate, p99) target;\n\
                  \x20            optional capex+energy objective (--horizon-years), multi-model\n\
-                 \x20            traffic (--model-mix) and a fault axis (--mttf) that prices\n\
-                 \x20            N+1 redundancy\n\
+                 \x20            traffic (--model-mix), a fault axis (--mttf) that prices\n\
+                 \x20            N+1 redundancy, and token-level decode (--workload llm)\n\
+                 \x20            whose KV-cache footprints make memory capacity a binding\n\
+                 \x20            constraint\n\
                  \x20 roofline   ridge points + memory-wall summary (Sunrise vs HBM baseline)\n\
                  \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\n\
                  Every subcommand takes --help."

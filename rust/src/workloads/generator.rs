@@ -296,6 +296,108 @@ impl<I: Iterator<Item = TraceRequest>> Iterator for ModelMixIter<I> {
     }
 }
 
+/// RNG-stream perturbation for decode-length marking: `b"decodlen"` as a
+/// big-endian u64, the same constant-xor idiom as [`mix_marking_rng`]'s
+/// `b"mix_mark"` and the shard router's `b"cell_idx"`.
+pub const DECODE_STREAM: u64 = 0x6465_636F_646C_656E;
+
+/// Hard cap on a single request's decode length. The geometric tail is
+/// unbounded in theory; capping keeps per-request KV footprints finite
+/// and a u=0 draw (ln → −∞) well-defined.
+pub const MAX_DECODE_LEN: u32 = 16_384;
+
+/// The decode-length RNG for a trace seed: independent of both the
+/// arrival stream and the mix-marking stream, so turning the LLM axis on
+/// or off never re-times (or re-marks) a single arrival.
+pub fn decode_marking_rng(seed: u64) -> Rng {
+    Rng::new(seed ^ DECODE_STREAM)
+}
+
+/// Draw one decode length with the given mean.
+///
+/// Always consumes exactly **one** `f64` draw, whatever the mean — so
+/// changing one model's mean never shifts another request's draw (the
+/// stream-stability contract the determinism suite pins). `mean <= 1`
+/// degenerates to a single token (the one-shot oracle case); otherwise
+/// the length is 1 + Geometric with overall mean `mean`, capped at
+/// [`MAX_DECODE_LEN`].
+pub fn decode_length(rng: &mut Rng, mean: f64) -> u32 {
+    let u = rng.f64();
+    if !(mean > 1.0) {
+        return 1;
+    }
+    // Shifted geometric: extra ~ Geom(q) failures with q = 1 - 1/mean,
+    // so E[1 + extra] = 1 + q/(1-q) = mean. Inverse-CDF via one uniform.
+    let q = 1.0 - 1.0 / mean;
+    let extra = u.ln() / q.ln();
+    if !extra.is_finite() || extra >= (MAX_DECODE_LEN - 1) as f64 {
+        MAX_DECODE_LEN
+    } else {
+        1 + extra as u32
+    }
+}
+
+/// Token-level traffic: wrap any trace iterator and mark each arrival
+/// with a decode length drawn from a per-model mean (geometric, see
+/// [`decode_length`]).
+///
+/// Mirrors [`ModelMixIter`]'s two determinism contracts:
+///
+/// - **Arrivals are untouched.** Lengths come from their own RNG stream
+///   ([`decode_marking_rng`]), so the wrapped arrival process — times,
+///   models, samples — is bit-identical to the unmarked trace.
+/// - **One draw per request.** [`decode_length`] consumes exactly one
+///   uniform regardless of the mean, so per-model overrides re-scale
+///   their own requests' lengths without shifting anyone else's draw.
+#[derive(Debug, Clone)]
+pub struct DecodeLenIter<I> {
+    inner: I,
+    rng: Rng,
+    default_mean: f64,
+    /// (model name, mean) overrides; linear scan — mixes are tiny.
+    per_model: Vec<(Arc<str>, f64)>,
+}
+
+impl<I: Iterator<Item = TraceRequest>> DecodeLenIter<I> {
+    pub fn new(
+        inner: I,
+        rng: Rng,
+        default_mean: f64,
+        per_model: &[(String, f64)],
+    ) -> DecodeLenIter<I> {
+        assert!(
+            default_mean.is_finite() && default_mean >= 0.0,
+            "decode mean must be finite and non-negative, got {default_mean}"
+        );
+        assert!(
+            per_model.iter().all(|(_, m)| m.is_finite() && *m >= 0.0),
+            "per-model decode means must be finite and non-negative"
+        );
+        DecodeLenIter {
+            inner,
+            rng,
+            default_mean,
+            per_model: per_model.iter().map(|(m, v)| (Arc::from(m.as_str()), *v)).collect(),
+        }
+    }
+}
+
+impl<I: Iterator<Item = TraceRequest>> Iterator for DecodeLenIter<I> {
+    type Item = (TraceRequest, u32);
+
+    fn next(&mut self) -> Option<(TraceRequest, u32)> {
+        let req = self.inner.next()?;
+        let mean = self
+            .per_model
+            .iter()
+            .find(|(m, _)| **m == *req.model)
+            .map(|(_, v)| *v)
+            .unwrap_or(self.default_mean);
+        let len = decode_length(&mut self.rng, mean);
+        Some((req, len))
+    }
+}
+
 /// Random GEMM-shaped conv layers (for fuzzing the scheduler).
 pub fn random_conv(rng: &mut Rng, id: usize) -> Layer {
     let hw = *rng.choose(&[7u32, 14, 28, 56, 112]);
@@ -463,6 +565,100 @@ mod tests {
             mix_marking_rng(1),
             &shares,
         );
+    }
+
+    #[test]
+    fn decode_stream_constant_is_the_ascii_tag() {
+        // Golden pin, same idiom as b"mix_mark" / b"cell_idx": the
+        // constant IS the ASCII bytes, so it can never silently drift.
+        assert_eq!(DECODE_STREAM, u64::from_be_bytes(*b"decodlen"));
+        assert_eq!(DECODE_STREAM, 0x6465_636F_646C_656E);
+    }
+
+    #[test]
+    fn decode_marking_leaves_arrivals_bit_identical() {
+        // The LLM axis marks traffic; it must never re-time it.
+        let plain: Vec<TraceRequest> =
+            PoissonTraceIter::new(Rng::new(13), 1200.0, 0.5, "m", 2).collect();
+        let marked: Vec<(TraceRequest, u32)> = DecodeLenIter::new(
+            PoissonTraceIter::new(Rng::new(13), 1200.0, 0.5, "m", 2),
+            decode_marking_rng(13),
+            16.0,
+            &[],
+        )
+        .collect();
+        assert_eq!(plain.len(), marked.len());
+        for (p, (m, len)) in plain.iter().zip(&marked) {
+            assert_eq!(p.arrival_s.to_bits(), m.arrival_s.to_bits(), "marking moved an arrival");
+            assert_eq!(p, m);
+            assert!((1..=MAX_DECODE_LEN).contains(len));
+        }
+    }
+
+    #[test]
+    fn decode_lengths_deterministic_per_seed_and_mean_one_is_one() {
+        let gen = |mean: f64| -> Vec<u32> {
+            DecodeLenIter::new(
+                PoissonTraceIter::new(Rng::new(4), 2000.0, 0.5, "m", 1),
+                decode_marking_rng(4),
+                mean,
+                &[],
+            )
+            .map(|(_, l)| l)
+            .collect()
+        };
+        assert_eq!(gen(8.0), gen(8.0), "decode lengths not deterministic per seed");
+        assert!(gen(1.0).iter().all(|&l| l == 1), "mean<=1 must pin every length to 1");
+        assert!(gen(0.0).iter().all(|&l| l == 1));
+        let mean = 12.0;
+        let lens = gen(mean);
+        let avg = lens.iter().map(|&l| l as f64).sum::<f64>() / lens.len() as f64;
+        assert!((avg - mean).abs() < 2.0, "empirical mean {avg} far from {mean}");
+    }
+
+    #[test]
+    fn per_model_mean_override_consumes_one_draw_per_request() {
+        // Changing one model's mean re-scales only that model's lengths:
+        // every request costs exactly one uniform, so the other model's
+        // draws land on the same stream positions either way.
+        let shares: Vec<(Arc<str>, f64)> = vec![(Arc::from("a"), 0.5), (Arc::from("b"), 0.5)];
+        let gen = |b_mean: f64| -> Vec<(TraceRequest, u32)> {
+            DecodeLenIter::new(
+                ModelMixIter::new(
+                    PoissonTraceIter::new(Rng::new(6), 2000.0, 0.5, "a", 1),
+                    mix_marking_rng(6),
+                    &shares,
+                ),
+                decode_marking_rng(6),
+                4.0,
+                &[("b".to_string(), b_mean)],
+            )
+            .collect()
+        };
+        let lo = gen(1.0);
+        let hi = gen(64.0);
+        assert_eq!(lo.len(), hi.len());
+        let mut b_changed = 0;
+        for ((rl, ll), (rh, lh)) in lo.iter().zip(&hi) {
+            assert_eq!(rl, rh);
+            if &*rl.model == "a" {
+                assert_eq!(ll, lh, "a's draw shifted when b's mean changed");
+            } else {
+                assert_eq!(*ll, 1);
+                b_changed += u32::from(*lh > 1);
+            }
+        }
+        assert!(b_changed > 0, "override never applied");
+    }
+
+    #[test]
+    fn decode_length_caps_degenerate_draws() {
+        // mean → huge still yields a bounded, valid length.
+        let mut rng = Rng::new(99);
+        for _ in 0..1000 {
+            let l = decode_length(&mut rng, 1.0e12);
+            assert!((1..=MAX_DECODE_LEN).contains(&l));
+        }
     }
 
     #[test]

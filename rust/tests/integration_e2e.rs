@@ -280,6 +280,90 @@ fn plan_energy_objective_and_model_mix_end_to_end() {
 }
 
 #[test]
+fn sweep_workload_llm_smoke_end_to_end() {
+    // `sunrise sweep --workload llm`: the grid runs token-level decode,
+    // renders the token columns, and stays deterministic across runs.
+    let run = || {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_sunrise"))
+            .args([
+                "sweep", "--workload", "llm", "--model", "mlp", "--rates", "200,400",
+                "--replicas", "1,2", "--max-batch", "4", "--duration", "0.2",
+                "--decode-mean", "4", "--kv-bytes-per-token", "65536", "--seed", "7",
+            ])
+            .output()
+            .expect("spawn the sunrise binary");
+        assert!(
+            out.status.success(),
+            "llm sweep failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+        stdout
+            .lines()
+            .filter(|l| !l.contains("ms wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let a = run();
+    let b = run();
+    assert!(a.contains("tok/s"), "llm sweep table lacks token columns:\n{a}");
+    assert!(a.contains("kv hi %"), "llm sweep table lacks the kv column:\n{a}");
+    assert_eq!(a, b, "llm sweep output not deterministic across runs");
+}
+
+#[test]
+fn plan_workload_llm_flips_the_fleet_under_kv_pressure() {
+    // The tentpole e2e: `sunrise plan --workload llm` makes memory
+    // capacity a binding constraint. At tiny per-token KV footprints the
+    // cheapest (half-memory) class wins; once --kv-bytes-per-token
+    // pushes the minimum request footprint past the half chip's
+    // feature-side DRAM, every request sheds there and the planner flips
+    // to a larger-memory class — a different fleet for the same
+    // (rate, p99) target. Both plans are deterministic.
+    let run = |bpt: &str| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_sunrise"))
+            .args([
+                "plan", "--workload", "llm", "--model", "mlp", "--rate", "120", "--p99",
+                "200", "--duration", "0.2", "--max-replicas", "8", "--decode-mean", "4",
+                "--prefill-tokens", "128", "--kv-bytes-per-token", bpt,
+            ])
+            .output()
+            .expect("spawn the sunrise binary");
+        assert!(
+            out.status.success(),
+            "llm plan (bpt={bpt}) failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+        stdout
+            .lines()
+            .filter(|l| !l.contains("ms wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    // 129 tokens x 1 KB ≈ 132 KB footprints: capacity is a non-issue and
+    // the cheap half-memory class wins on price.
+    let cheap = run("1024");
+    assert!(
+        cheap.contains("sunrise-half"),
+        "low KV pressure should pick the cheap half-memory class:\n{cheap}"
+    );
+    // 129 tokens x 1.2 MB ≈ 155 MB minimum footprints overflow the half
+    // chip's ~141 MB KV capacity: the binding constraint flips from
+    // price to memory and the fleet changes class.
+    let bound = run("1200000");
+    let fleet_line =
+        |s: &str| s.lines().find(|l| l.contains("cheapest fleet")).unwrap_or("").to_string();
+    assert!(
+        !fleet_line(&bound).contains("half"),
+        "capacity-bound plan still bought the half-memory class:\n{bound}"
+    );
+    assert_ne!(fleet_line(&cheap), fleet_line(&bound), "KV pressure did not flip the fleet");
+    // Deterministic like every other plan path.
+    assert_eq!(bound, run("1200000"), "llm plan output not deterministic");
+}
+
+#[test]
 fn firmware_batch_loop_drives_uce_sequences() {
     // Firmware on the 13-bit core arms the UCE 16 times (16 layer batches).
     let mut uce = Uce::new(Sequencer::fixed(sunrise::memory::ns(5_000)));
