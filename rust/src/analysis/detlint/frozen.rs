@@ -1,0 +1,227 @@
+//! Rule family 3: the frozen-baseline guard.
+//!
+//! Three code regions are *frozen* differential oracles: the legacy
+//! heap engine (`sim::engine::legacy`), the PR-2 materializing replay
+//! (`coordinator::baseline`), and the linear-scan router
+//! (`ScanRouter` in `coordinator/router.rs`). Every perf gate and
+//! bit-identity contract in CI measures *against* them, so an edit —
+//! even a well-meaning cleanup — silently invalidates the before/after
+//! story. This rule pins each region's content digest in
+//! `ci/detlint_frozen.toml`; any drift fails the lint until the
+//! manifest is re-blessed in the same diff, which turns "someone
+//! touched a frozen oracle" from a review hope into a machine-checked
+//! property.
+//!
+//! Regions are delimited in-source by marker comments
+//! (`// detlint:frozen-begin(name)` … `// detlint:frozen-end(name)`),
+//! or cover a whole file (`kind = "file"`). The digest is FNV-1a 64
+//! over the region bytes with `\r` dropped (line-ending-proof), which
+//! is plenty for drift detection — the threat model is accidental
+//! edits, not collision forging.
+
+use super::manifest::Entry;
+
+/// One frozen-region spec from `ci/detlint_frozen.toml`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrozenSpec {
+    /// Region name (also the marker label for `kind = "region"`).
+    pub name: String,
+    /// Repo-relative file path.
+    pub file: String,
+    /// `"file"` (digest the whole file) or `"region"` (marker-delimited).
+    pub kind: String,
+    /// Expected FNV-1a 64 digest.
+    pub fnv64: u64,
+    /// Manifest line, for error reporting.
+    pub line: u32,
+}
+
+/// Parse `[[frozen]]` entries, reporting malformed ones.
+pub fn load_manifest(entries: &[Entry]) -> (Vec<FrozenSpec>, Vec<String>) {
+    let mut specs = Vec::new();
+    let mut errors = Vec::new();
+    for e in entries {
+        if e.table != "frozen" {
+            errors.push(format!(
+                "line {}: unexpected table [[{}]] in frozen manifest",
+                e.line, e.table
+            ));
+            continue;
+        }
+        match parse_entry(e) {
+            Ok(s) => specs.push(s),
+            Err(err) => errors.push(err),
+        }
+    }
+    (specs, errors)
+}
+
+fn parse_entry(e: &Entry) -> Result<FrozenSpec, String> {
+    let kind = e.req_str("kind")?.to_string();
+    if kind != "file" && kind != "region" {
+        return Err(format!(
+            "[[frozen]] at line {}: kind must be \"file\" or \"region\", got `{kind}`",
+            e.line
+        ));
+    }
+    Ok(FrozenSpec {
+        name: e.req_str("name")?.to_string(),
+        file: e.req_str("file")?.to_string(),
+        kind,
+        fnv64: e.req_int("fnv64")?,
+        line: e.line,
+    })
+}
+
+/// FNV-1a 64 over `bytes` with every `\r` dropped.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        if b == b'\r' {
+            continue;
+        }
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Check one spec against the source text of its file. Returns a
+/// human-readable problem, or `None` when the digest matches.
+///
+/// For regions, the digested content is every line strictly between the
+/// begin and end marker lines, each with a trailing `\n` — so the
+/// digest is independent of how the file around the region changes.
+pub fn check_region(spec: &FrozenSpec, src: &str) -> Option<String> {
+    let actual = if spec.kind == "file" {
+        fnv64(src.as_bytes())
+    } else {
+        let begin = format!("// detlint:frozen-begin({})", spec.name);
+        let end = format!("// detlint:frozen-end({})", spec.name);
+        let mut inside = false;
+        let mut seen_begin = 0u32;
+        let mut seen_end = 0u32;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut digest_line = |line: &str, h: &mut u64| {
+            for &b in line.as_bytes() {
+                if b == b'\r' {
+                    continue;
+                }
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            *h ^= b'\n' as u64;
+            *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for line in src.lines() {
+            let t = line.trim();
+            if t == begin {
+                seen_begin += 1;
+                inside = true;
+            } else if t == end {
+                seen_end += 1;
+                inside = false;
+            } else if inside {
+                digest_line(line, &mut h);
+            }
+        }
+        if seen_begin != 1 || seen_end != 1 {
+            return Some(format!(
+                "frozen region `{}` in {}: expected exactly one begin/end marker pair, \
+                 found {seen_begin} begin / {seen_end} end",
+                spec.name, spec.file
+            ));
+        }
+        h
+    };
+    if actual != spec.fnv64 {
+        return Some(format!(
+            "frozen {} `{}` in {} drifted: digest {actual:#018x} != pinned {:#018x} \
+             (if the change is intentional, re-bless ci/detlint_frozen.toml in this diff)",
+            spec.kind, spec.name, spec.file, spec.fnv64
+        ));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // Standard FNV-1a 64 test vectors. (Empty input spelled `&[]`:
+        // a bare byte-string literal here would trip rule 2's own scan.)
+        assert_eq!(fnv64(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64("a".as_bytes()), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64("foobar".as_bytes()), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn cr_bytes_are_dropped() {
+        assert_eq!(fnv64("a\r\nb".as_bytes()), fnv64("a\nb".as_bytes()));
+    }
+
+    fn region_src(body: &str) -> String {
+        format!(
+            "fn before() {{}}\n// detlint:frozen-begin(demo)\n{body}\n// detlint:frozen-end(demo)\nfn after() {{}}\n"
+        )
+    }
+
+    fn spec_for(body: &str) -> (FrozenSpec, String) {
+        let src = region_src(body);
+        let digested = format!("{body}\n");
+        let spec = FrozenSpec {
+            name: "demo".into(),
+            file: "x.rs".into(),
+            kind: "region".into(),
+            fnv64: fnv64(digested.as_bytes()),
+            line: 1,
+        };
+        (spec, src)
+    }
+
+    #[test]
+    fn matching_region_passes() {
+        let (spec, src) = spec_for("pub fn frozen() -> u32 { 7 }");
+        assert_eq!(check_region(&spec, &src), None);
+    }
+
+    #[test]
+    fn edited_region_fails_with_both_digests() {
+        let (spec, src) = spec_for("pub fn frozen() -> u32 { 7 }");
+        let tampered = src.replace("7", "8");
+        let msg = check_region(&spec, &tampered).expect("drift must be detected");
+        assert!(msg.contains("drifted"));
+        assert!(msg.contains("re-bless"));
+    }
+
+    #[test]
+    fn changes_outside_the_markers_do_not_drift() {
+        let (spec, src) = spec_for("pub fn frozen() -> u32 { 7 }");
+        let around = src.replace("fn after()", "fn renamed_after()");
+        assert_eq!(check_region(&spec, &around), None);
+    }
+
+    #[test]
+    fn missing_marker_is_reported() {
+        let (spec, src) = spec_for("pub fn frozen() -> u32 { 7 }");
+        let gone = src.replace("// detlint:frozen-end(demo)\n", "");
+        let msg = check_region(&spec, &gone).unwrap();
+        assert!(msg.contains("begin/end marker pair"), "{msg}");
+    }
+
+    #[test]
+    fn whole_file_kind_digests_everything() {
+        let src = "anything at all\n";
+        let spec = FrozenSpec {
+            name: "f".into(),
+            file: "x.rs".into(),
+            kind: "file".into(),
+            fnv64: fnv64(src.as_bytes()),
+            line: 1,
+        };
+        assert_eq!(check_region(&spec, src), None);
+        assert!(check_region(&spec, "anything at all?\n").is_some());
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal TOML-subset reader for the three committed detlint manifests
+//! (`ci/detlint_allow.toml`, `ci/detlint_tags.toml`,
+//! `ci/detlint_frozen.toml`).
+//!
+//! The offline vendor set has no `toml` crate, and the manifests only
+//! need one shape: a sequence of `[[table]]` entries whose values are
+//! strings, integers, or booleans. This reader supports exactly that
+//! (plus `#` comments and blank lines) and rejects everything else with
+//! a line-numbered error — a malformed manifest must fail the lint run
+//! loudly, not silently allow things.
+
+use std::collections::BTreeMap;
+
+/// A manifest value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Value {
+    /// A `"…"` string.
+    Str(String),
+    /// A bare integer (decimal or `0x…` hex).
+    Int(u64),
+    /// A bare `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The integer payload, if this is an integer.
+    pub fn as_int(&self) -> Option<u64> {
+        match self {
+            Value::Int(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The boolean payload, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `[[name]]` entry: its table name, keys, and the manifest line it
+/// starts on (for error reporting).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    /// Table name (the `name` in `[[name]]`).
+    pub table: String,
+    /// Key → value map for this entry.
+    pub keys: BTreeMap<String, Value>,
+    /// 1-based line of the `[[name]]` header.
+    pub line: u32,
+}
+
+impl Entry {
+    /// Fetch a required string key, with a manifest-shaped error.
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.keys.get(key).and_then(Value::as_str).ok_or_else(|| {
+            format!("[[{}]] at line {}: missing string key `{key}`", self.table, self.line)
+        })
+    }
+
+    /// Fetch a required integer key, with a manifest-shaped error.
+    pub fn req_int(&self, key: &str) -> Result<u64, String> {
+        self.keys.get(key).and_then(Value::as_int).ok_or_else(|| {
+            format!("[[{}]] at line {}: missing integer key `{key}`", self.table, self.line)
+        })
+    }
+
+    /// Fetch an optional boolean key (absent ⇒ `false`).
+    pub fn opt_bool(&self, key: &str) -> bool {
+        self.keys.get(key).and_then(Value::as_bool).unwrap_or(false)
+    }
+}
+
+/// Parse manifest text into its `[[table]]` entries, in file order.
+pub fn parse(src: &str) -> Result<Vec<Entry>, String> {
+    let mut entries: Vec<Entry> = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx as u32 + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let Some(name) = rest.strip_suffix("]]") else {
+                return Err(format!("line {lineno}: malformed table header `{line}`"));
+            };
+            let name = name.trim();
+            let name_ok = |c: char| c.is_ascii_alphanumeric() || c == '_' || c == '-';
+            if name.is_empty() || !name.chars().all(name_ok) {
+                return Err(format!("line {lineno}: bad table name `{name}`"));
+            }
+            entries.push(Entry { table: name.to_string(), keys: BTreeMap::new(), line: lineno });
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(format!(
+                "line {lineno}: only `[[table]]` entries are supported, got `{line}`"
+            ));
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            return Err(format!("line {lineno}: expected `key = value`, got `{line}`"));
+        };
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(format!("line {lineno}: bad key `{key}`"));
+        }
+        let value = parse_value(val.trim())
+            .ok_or_else(|| format!("line {lineno}: bad value `{}`", val.trim()))?;
+        let Some(entry) = entries.last_mut() else {
+            return Err(format!("line {lineno}: `{key}` appears before any [[table]] header"));
+        };
+        if entry.keys.insert(key.to_string(), value).is_some() {
+            return Err(format!("line {lineno}: duplicate key `{key}`"));
+        }
+    }
+    Ok(entries)
+}
+
+/// Strip a trailing `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<Value> {
+    if v == "true" {
+        return Some(Value::Bool(true));
+    }
+    if v == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"')?;
+        // The manifests only ever hold paths, rule names and hex digests;
+        // the only escapes honored are `\\` and `\"`.
+        let mut out = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '"' {
+                return None; // embedded unescaped quote
+            }
+            if c == '\\' {
+                match chars.next() {
+                    Some('\\') => out.push('\\'),
+                    Some('"') => out.push('"'),
+                    _ => return None,
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Some(Value::Str(out));
+    }
+    let digits = v.replace('_', "");
+    if let Some(hex) = digits.strip_prefix("0x").or_else(|| digits.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16).ok().map(Value::Int);
+    }
+    digits.parse::<u64>().ok().map(Value::Int)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_array_of_tables() {
+        let src = r##"
+# header comment
+[[allow]]
+file = "rust/src/coordinator/clock.rs"   # trailing comment
+pattern = "instant-now"
+count = 1
+test_only = false
+
+[[allow]]
+file = "rust/src/util/bench.rs"
+pattern = "std-env"
+count = 0x1
+"##;
+        let entries = parse(src).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].table, "allow");
+        assert_eq!(entries[0].req_str("file").unwrap(), "rust/src/coordinator/clock.rs");
+        assert_eq!(entries[0].req_int("count").unwrap(), 1);
+        assert!(!entries[0].opt_bool("test_only"));
+        assert_eq!(entries[1].req_int("count").unwrap(), 1);
+    }
+
+    #[test]
+    fn hex_and_underscores() {
+        let entries = parse("[[tag]]\nvalue = 0x6D69_785F_6D61_726B\n").unwrap();
+        assert_eq!(entries[0].req_int("value").unwrap(), 0x6D69_785F_6D61_726B);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let entries = parse("[[t]]\nreason = \"issue #42\"\n").unwrap();
+        assert_eq!(entries[0].req_str("reason").unwrap(), "issue #42");
+    }
+
+    #[test]
+    fn rejects_key_before_table() {
+        assert!(parse("x = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_plain_table_header() {
+        assert!(parse("[section]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        assert!(parse("[[t]]\na = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_value() {
+        assert!(parse("[[t]]\na = nope\n").is_err());
+    }
+
+    #[test]
+    fn missing_key_error_names_table_and_line() {
+        let entries = parse("\n\n[[allow]]\nfile = \"x\"\n").unwrap();
+        let err = entries[0].req_str("pattern").unwrap_err();
+        assert!(err.contains("[[allow]] at line 3"), "{err}");
+    }
+}

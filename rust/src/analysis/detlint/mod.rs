@@ -1,0 +1,540 @@
+//! **detlint** — the determinism static-analysis pass behind
+//! `sunrise lint`.
+//!
+//! Every claim this reproduction makes about the serving stack — the
+//! bit-identical sharded replays, the disjoint RNG streams behind the
+//! chaos/KV axes, the frozen differential oracles — rests on
+//! determinism contracts that runtime tests alone can't defend: one
+//! stray `Instant::now()`, `HashMap` iteration, or `partial_cmp` sort
+//! key invalidates them without failing any existing assertion (PR 5
+//! fixed exactly this bug class once). detlint proves the contracts at
+//! the *source* level, with every exception committed to a manifest so
+//! violations are diffs, not vibes.
+//!
+//! Four rule families (see ARCHITECTURE.md "Static analysis"):
+//!
+//! 1. **Nondeterminism-source ban** ([`rules`]): `Instant::now`,
+//!    `SystemTime`, `thread_rng`, `std::env` and `HashMap`/`HashSet`
+//!    anywhere in `rust/src/**`, checked against the exact-count
+//!    allowlist `ci/detlint_allow.toml`. In the replay-core module set
+//!    ([`LintConfig::core_modules`]) even allowlisted sites must live
+//!    inside `#[cfg(test)]` modules.
+//! 2. **RNG stream-tag registry** ([`tags`]): every `b"…"` stream tag
+//!    must be 8 bytes, pairwise-distinct, registered in
+//!    `ci/detlint_tags.toml`, and live in the tree.
+//! 3. **Frozen-baseline guard** ([`frozen`]): content digests of the
+//!    frozen oracles (`sim::engine::legacy`, `coordinator::baseline`,
+//!    `ScanRouter`) pinned in `ci/detlint_frozen.toml`.
+//! 4. **Float-ordering lint** ([`rules`]): `partial_cmp` as an
+//!    ordering-combinator key is an error; use `total_cmp`.
+//!
+//! The pass is built on an in-tree lexer ([`lexer`]) rather than `syn`
+//! — the offline vendor set has no proc-macro ecosystem, and token
+//! streams are exactly enough structure for these rules (the same
+//! tradeoff as `util/json.rs`' in-tree parser).
+//!
+//! ```no_run
+//! use sunrise::analysis::detlint::{run_lint, LintConfig};
+//!
+//! let cfg = LintConfig::repo_default(std::path::Path::new("."));
+//! let report = run_lint(&cfg).expect("manifests readable");
+//! print!("{}", report.render());
+//! assert_eq!(report.error_count(), 0, "determinism contracts violated");
+//! ```
+
+pub mod frozen;
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+pub mod tags;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The replay-core module set: files where nondeterminism sources are
+/// forbidden outright — allowlist entries may only cover sites inside
+/// `#[cfg(test)]` modules (e.g. a perf-smoke timing assertion), never
+/// code that can run during a replay.
+pub const REPLAY_CORE: &[&str] = &[
+    "rust/src/sim/wheel.rs",
+    "rust/src/sim/engine.rs",
+    "rust/src/sim/sweep.rs",
+    "rust/src/coordinator/simserve.rs",
+    "rust/src/coordinator/shard.rs",
+    "rust/src/coordinator/llm.rs",
+    "rust/src/coordinator/fault.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/arena.rs",
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/coordinator/capacity.rs",
+    "rust/src/coordinator/plan.rs",
+    "rust/src/coordinator/baseline.rs",
+    "rust/src/workloads/generator.rs",
+];
+
+/// Where and how to lint. [`LintConfig::repo_default`] is the committed
+/// repo policy; the fixture tests build custom configs.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Repo root; all other paths are relative to it.
+    pub root: PathBuf,
+    /// Source directories to scan (relative), e.g. `rust/src`.
+    pub src_dirs: Vec<String>,
+    /// The checked allowlist (relative path).
+    pub allow_path: String,
+    /// The stream-tag registry (relative path).
+    pub tags_path: String,
+    /// The frozen-baseline manifest (relative path).
+    pub frozen_path: String,
+    /// Files under the replay-core no-exceptions policy (relative).
+    pub core_modules: Vec<String>,
+    /// Promote warning-level findings (stale allowlist entries, dead
+    /// registry tags) to errors — the CI posture.
+    pub deny_all: bool,
+}
+
+impl LintConfig {
+    /// The committed repo policy: scan `rust/src`, manifests under
+    /// `ci/`, [`REPLAY_CORE`] as the core set.
+    pub fn repo_default(root: &Path) -> LintConfig {
+        LintConfig {
+            root: root.to_path_buf(),
+            src_dirs: vec!["rust/src".to_string()],
+            allow_path: "ci/detlint_allow.toml".to_string(),
+            tags_path: "ci/detlint_tags.toml".to_string(),
+            frozen_path: "ci/detlint_frozen.toml".to_string(),
+            core_modules: REPLAY_CORE.iter().map(|s| s.to_string()).collect(),
+            deny_all: false,
+        }
+    }
+}
+
+/// Finding severity. `Warning` exists for decay-class findings (stale
+/// allowlist entries, registry tags no longer in the tree); `--deny-all`
+/// promotes them so CI treats decay as failure too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Advisory: the tree still upholds the contracts, but a manifest
+    /// has rotted.
+    Warning,
+    /// A determinism contract is violated (or `--deny-all` is set).
+    Error,
+}
+
+/// One lint finding, addressable as `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule family: `nondet`, `tags`, `frozen`, `float-ord`, `allowlist`.
+    pub rule: &'static str,
+    /// Repo-relative path (`/`-separated).
+    pub file: String,
+    /// 1-based line, or 0 for file/manifest-level findings.
+    pub line: u32,
+    /// Human-readable description.
+    pub message: String,
+    /// Error or warning (after any `--deny-all` promotion).
+    pub severity: Severity,
+}
+
+/// The result of a lint run.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of source files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Number of error-severity findings (nonzero ⇒ exit 1).
+    pub fn error_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn warning_count(&self) -> usize {
+        self.findings.len() - self.error_count()
+    }
+
+    /// Render findings plus a one-line summary, deterministically.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let sev = match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            if f.line > 0 {
+                out.push_str(&format!("{}:{}: {sev} [{}] {}\n", f.file, f.line, f.rule, f.message));
+            } else {
+                out.push_str(&format!("{}: {sev} [{}] {}\n", f.file, f.rule, f.message));
+            }
+        }
+        out.push_str(&format!(
+            "detlint: {} error(s), {} warning(s) across {} file(s)\n",
+            self.error_count(),
+            self.warning_count(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Run every rule family under `cfg`.
+///
+/// `Err` is reserved for environment-level failures (unreadable
+/// manifest, unreadable source tree); everything the *tree* does wrong
+/// comes back as [`Finding`]s in the report.
+pub fn run_lint(cfg: &LintConfig) -> Result<LintReport, String> {
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // ---- load manifests -------------------------------------------------
+    let allow_entries = read_manifest(cfg, &cfg.allow_path)?;
+    let tag_entries = read_manifest(cfg, &cfg.tags_path)?;
+    let frozen_entries = read_manifest(cfg, &cfg.frozen_path)?;
+
+    let allow = load_allowlist(&allow_entries, &cfg.allow_path, &mut findings);
+    let (tag_specs, tag_errors) = tags::load_registry(&tag_entries);
+    for e in tag_errors {
+        findings.push(manifest_finding("tags", &cfg.tags_path, e));
+    }
+    for p in tags::check_registry(&tag_specs) {
+        findings.push(manifest_finding("tags", &cfg.tags_path, p.message));
+    }
+    let (frozen_specs, frozen_errors) = frozen::load_manifest(&frozen_entries);
+    for e in frozen_errors {
+        findings.push(manifest_finding("frozen", &cfg.frozen_path, e));
+    }
+
+    // ---- walk and scan source files -------------------------------------
+    let files = walk_sources(cfg)?;
+    let mut tag_live = vec![false; tag_specs.len()];
+    let mut nondet_seen: BTreeMap<(String, &'static str), Vec<rules::NondetMatch>> =
+        BTreeMap::new();
+    for rel in &files {
+        let src = read_rel(cfg, rel)?;
+        let toks = lexer::lex(&src);
+
+        for m in rules::scan_nondet(&toks) {
+            nondet_seen.entry((rel.clone(), m.pattern)).or_default().push(m);
+        }
+
+        let byte_strs: Vec<(Vec<u8>, u32)> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                lexer::TokKind::ByteStr(b) => Some((b.clone(), t.line)),
+                _ => None,
+            })
+            .collect();
+        let num_lits: Vec<u64> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                lexer::TokKind::Num(text) => tags::parse_u64_literal(text),
+                _ => None,
+            })
+            .collect();
+        for p in tags::check_file_tags(&tag_specs, &byte_strs, &num_lits, &mut tag_live) {
+            findings.push(Finding {
+                rule: "tags",
+                file: rel.clone(),
+                line: p.line,
+                message: p.message,
+                severity: Severity::Error,
+            });
+        }
+
+        for m in rules::scan_float_ordering(&toks) {
+            findings.push(Finding {
+                rule: "float-ord",
+                file: rel.clone(),
+                line: m.line,
+                message: format!(
+                    "`partial_cmp` used as the `{}` comparator — floats need `total_cmp` \
+                     (NaN-total order); see the rule-4 contract in ARCHITECTURE.md",
+                    m.method
+                ),
+                severity: Severity::Error,
+            });
+        }
+    }
+
+    // ---- rule 1: reconcile matches against the allowlist -----------------
+    reconcile_nondet(cfg, &nondet_seen, &allow, &mut findings);
+
+    // ---- rule 2: registry liveness --------------------------------------
+    for p in tags::check_liveness(&tag_specs, &tag_live) {
+        findings.push(Finding {
+            rule: "tags",
+            file: cfg.tags_path.clone(),
+            line: 0,
+            message: p.message,
+            severity: Severity::Warning,
+        });
+    }
+
+    // ---- rule 3: frozen baselines ---------------------------------------
+    for spec in &frozen_specs {
+        match read_rel(cfg, &spec.file) {
+            Ok(src) => {
+                if let Some(msg) = frozen::check_region(spec, &src) {
+                    findings.push(Finding {
+                        rule: "frozen",
+                        file: spec.file.clone(),
+                        line: 0,
+                        message: msg,
+                        severity: Severity::Error,
+                    });
+                }
+            }
+            Err(_) => findings.push(Finding {
+                rule: "frozen",
+                file: cfg.frozen_path.clone(),
+                line: 0,
+                message: format!(
+                    "frozen {} `{}`: file {} is missing from the tree",
+                    spec.kind, spec.name, spec.file
+                ),
+                severity: Severity::Error,
+            }),
+        }
+    }
+
+    // ---- finalize -------------------------------------------------------
+    if cfg.deny_all {
+        for f in &mut findings {
+            f.severity = Severity::Error;
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+/// One checked allowlist entry.
+#[derive(Debug, Clone)]
+struct AllowEntry {
+    file: String,
+    pattern: String,
+    count: u64,
+    line: u32,
+    /// Matches reconciled against this entry (for staleness detection).
+    used: bool,
+}
+
+fn load_allowlist(
+    entries: &[manifest::Entry],
+    path: &str,
+    findings: &mut Vec<Finding>,
+) -> Vec<AllowEntry> {
+    let mut out: Vec<AllowEntry> = Vec::new();
+    for e in entries {
+        if e.table != "allow" {
+            findings.push(manifest_finding(
+                "allowlist",
+                path,
+                format!("line {}: unexpected table [[{}]] in allowlist", e.line, e.table),
+            ));
+            continue;
+        }
+        match parse_allow_entry(e) {
+            Ok(entry) => {
+                if out.iter().any(|x| x.file == entry.file && x.pattern == entry.pattern) {
+                    findings.push(manifest_finding(
+                        "allowlist",
+                        path,
+                        format!(
+                            "[[allow]] at line {}: duplicate entry for ({}, {})",
+                            entry.line, entry.file, entry.pattern
+                        ),
+                    ));
+                } else {
+                    out.push(entry);
+                }
+            }
+            Err(err) => findings.push(manifest_finding("allowlist", path, err)),
+        }
+    }
+    out
+}
+
+fn parse_allow_entry(e: &manifest::Entry) -> Result<AllowEntry, String> {
+    let file = e.req_str("file")?.to_string();
+    let pattern = e.req_str("pattern")?.to_string();
+    if !rules::NONDET_PATTERNS.contains(&pattern.as_str()) {
+        return Err(format!(
+            "[[allow]] at line {}: unknown pattern `{pattern}` (expected one of {})",
+            e.line,
+            rules::NONDET_PATTERNS.join(", ")
+        ));
+    }
+    // Reasons are mandatory: an exception without a recorded
+    // justification is how allowlists decay into noise.
+    let reason = e.req_str("reason")?;
+    if reason.trim().is_empty() {
+        return Err(format!("[[allow]] at line {}: empty reason", e.line));
+    }
+    Ok(AllowEntry { file, pattern, count: e.req_int("count")?, line: e.line, used: false })
+}
+
+fn reconcile_nondet(
+    cfg: &LintConfig,
+    seen: &BTreeMap<(String, &'static str), Vec<rules::NondetMatch>>,
+    allow: &[AllowEntry],
+    findings: &mut Vec<Finding>,
+) {
+    let mut allow: Vec<AllowEntry> = allow.to_vec();
+    for ((file, pattern), matches) in seen {
+        let is_core = cfg.core_modules.iter().any(|c| c == file);
+        let entry = allow.iter_mut().find(|e| &e.file == file && e.pattern == *pattern);
+
+        // Core policy first: production (non-test) sites in replay-core
+        // files are violations no matter what the allowlist says.
+        if is_core {
+            for m in matches.iter().filter(|m| !m.in_test) {
+                findings.push(Finding {
+                    rule: "nondet",
+                    file: file.clone(),
+                    line: m.line,
+                    message: format!(
+                        "`{pattern}` in replay-core module outside #[cfg(test)] — \
+                         not allowlistable; replay code must be deterministic"
+                    ),
+                    severity: Severity::Error,
+                });
+            }
+        }
+
+        match entry {
+            None => {
+                for m in matches {
+                    if is_core && !m.in_test {
+                        continue; // already reported by the core policy
+                    }
+                    findings.push(Finding {
+                        rule: "nondet",
+                        file: file.clone(),
+                        line: m.line,
+                        message: format!(
+                            "banned nondeterminism source `{pattern}` with no \
+                             ci/detlint_allow.toml entry"
+                        ),
+                        severity: Severity::Error,
+                    });
+                }
+            }
+            Some(e) => {
+                e.used = true;
+                if e.count != matches.len() as u64 {
+                    findings.push(Finding {
+                        rule: "allowlist",
+                        file: file.clone(),
+                        line: matches.first().map(|m| m.line).unwrap_or(0),
+                        message: format!(
+                            "allowlist count drift for `{pattern}`: manifest says {} site(s), \
+                             tree has {} — update ci/detlint_allow.toml (entry at line {}) in \
+                             this diff",
+                            e.count,
+                            matches.len(),
+                            e.line
+                        ),
+                        severity: Severity::Error,
+                    });
+                }
+            }
+        }
+    }
+    for e in allow.iter().filter(|e| !e.used) {
+        findings.push(Finding {
+            rule: "allowlist",
+            file: cfg.allow_path.clone(),
+            line: 0,
+            message: format!(
+                "stale allowlist entry at line {}: no `{}` match in {} — remove it",
+                e.line, e.pattern, e.file
+            ),
+            severity: Severity::Warning,
+        });
+    }
+}
+
+fn manifest_finding(rule: &'static str, path: &str, message: String) -> Finding {
+    Finding { rule, file: path.to_string(), line: 0, message, severity: Severity::Error }
+}
+
+fn read_manifest(cfg: &LintConfig, rel: &str) -> Result<Vec<manifest::Entry>, String> {
+    let text = read_rel(cfg, rel)?;
+    manifest::parse(&text).map_err(|e| format!("{rel}: {e}"))
+}
+
+fn read_rel(cfg: &LintConfig, rel: &str) -> Result<String, String> {
+    let path = cfg.root.join(rel);
+    std::fs::read_to_string(&path).map_err(|e| format!("cannot read {}: {e}", path.display()))
+}
+
+/// Recursively collect `.rs` files under every `src_dir`, as sorted
+/// repo-relative `/`-separated paths — the scan order (and therefore
+/// the report) is deterministic by construction.
+fn walk_sources(cfg: &LintConfig) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for dir in &cfg.src_dirs {
+        let abs = cfg.root.join(dir);
+        walk_dir(&abs, dir, &mut out)
+            .map_err(|e| format!("cannot walk {}: {e}", abs.display()))?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk_dir(abs: &Path, rel: &str, out: &mut Vec<String>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(abs)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let child_abs = entry.path();
+        let child_rel = format!("{rel}/{name}");
+        if entry.file_type()?.is_dir() {
+            walk_dir(&child_abs, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_warning_below_error() {
+        assert!(Severity::Warning < Severity::Error);
+    }
+
+    #[test]
+    fn report_render_is_line_per_finding_plus_summary() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: "nondet",
+                file: "rust/src/x.rs".into(),
+                line: 7,
+                message: "banned".into(),
+                severity: Severity::Error,
+            }],
+            files_scanned: 3,
+        };
+        let text = report.render();
+        assert!(text.contains("rust/src/x.rs:7: error [nondet] banned"));
+        assert!(text.contains("1 error(s), 0 warning(s) across 3 file(s)"));
+        assert_eq!(report.error_count(), 1);
+    }
+
+    #[test]
+    fn repo_default_covers_the_issue_module_set() {
+        let cfg = LintConfig::repo_default(Path::new("."));
+        for file in ["rust/src/sim/wheel.rs", "rust/src/coordinator/llm.rs"] {
+            assert!(cfg.core_modules.iter().any(|c| c == file), "{file} missing from core set");
+        }
+        assert!(!cfg.deny_all);
+    }
+}

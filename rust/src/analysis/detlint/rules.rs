@@ -1,0 +1,312 @@
+//! Rule families 1 and 4: nondeterminism-source ban and the
+//! float-ordering lint. Both are token-sequence matchers over the
+//! [`lexer`](super::lexer) stream.
+//!
+//! **Rule 1 — nondeterminism sources.** Wall clocks (`Instant::now`,
+//! `SystemTime`), ambient randomness (`thread_rng`), process environment
+//! (`std::env`) and hash-ordered collections (`HashMap`/`HashSet`) are
+//! banned across the scanned tree. Hash collections are flagged on
+//! *any* appearance, not just iteration: without type inference a lexer
+//! cannot prove a given `.iter()` receiver is a hash map, and a
+//! collection that is never constructed can never be iterated — the
+//! conservative ban is the property that actually closes the PR-5 bug
+//! class. Legitimate sites (the wall-clock serving backend, the bench
+//! harness, argv parsing) are carried in `ci/detlint_allow.toml` with
+//! exact match counts, so any drift — a new site *or* a removed one —
+//! shows up as a manifest diff.
+//!
+//! **Rule 4 — float ordering.** `partial_cmp` used as the comparator of
+//! an ordering combinator (`sort_by`, `sort_unstable_by`, `min_by`,
+//! `max_by`, `binary_search_by`) panics or mis-sorts on NaN; `total_cmp`
+//! (or pre-validated input plus `Ord`) is required. `partial_cmp` inside
+//! a `PartialOrd` *impl* is fine and not matched — the rule only looks
+//! inside ordering-combinator argument lists.
+
+use super::lexer::{ident, is_punct, Tok};
+
+/// One banned-pattern match.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NondetMatch {
+    /// Manifest pattern name (`instant-now`, `std-env`, …).
+    pub pattern: &'static str,
+    /// 1-based source line.
+    pub line: u32,
+    /// Whether the match sits inside a `#[cfg(test)]` module.
+    pub in_test: bool,
+}
+
+/// The banned-pattern names, in manifest order (the allowlist's
+/// `pattern` keys must come from this set).
+pub const NONDET_PATTERNS: &[&str] =
+    &["instant-now", "system-time", "thread-rng", "std-env", "hash-collection"];
+
+/// Scan a token stream for rule-1 banned patterns.
+pub fn scan_nondet(toks: &[Tok]) -> Vec<NondetMatch> {
+    let spans = cfg_test_spans(toks);
+    let mut out = Vec::new();
+    let mut push = |pattern: &'static str, line: u32| {
+        let in_test = spans.iter().any(|&(lo, hi)| (lo..=hi).contains(&line));
+        out.push(NondetMatch { pattern, line, in_test });
+    };
+    let mut i = 0;
+    while i < toks.len() {
+        let line = toks[i].line;
+        match ident(&toks[i]) {
+            Some("Instant") if path_seg(toks, i, "now") => push("instant-now", line),
+            Some("SystemTime") => push("system-time", line),
+            Some("thread_rng") | Some("ThreadRng") => push("thread-rng", line),
+            Some("std") if path_seg(toks, i, "env") => push("std-env", line),
+            Some("HashMap") | Some("HashSet") => push("hash-collection", line),
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Does `toks[i]` begin `<seg0> :: <want>`?
+fn path_seg(toks: &[Tok], i: usize, want: &str) -> bool {
+    toks.len() > i + 3
+        && is_punct(&toks[i + 1], ':')
+        && is_punct(&toks[i + 2], ':')
+        && ident(&toks[i + 3]) == Some(want)
+}
+
+/// Ordering combinators whose comparator argument must not be built on
+/// `partial_cmp`.
+const ORDERING_METHODS: &[&str] =
+    &["sort_by", "sort_unstable_by", "binary_search_by", "min_by", "max_by"];
+
+/// One rule-4 match: `partial_cmp` inside an ordering combinator's
+/// argument list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FloatOrdMatch {
+    /// The combinator (`sort_by`, …) whose argument used `partial_cmp`.
+    pub method: &'static str,
+    /// 1-based line of the `partial_cmp` token.
+    pub line: u32,
+}
+
+/// Scan a token stream for rule-4 matches.
+pub fn scan_float_ordering(toks: &[Tok]) -> Vec<FloatOrdMatch> {
+    let mut out: Vec<FloatOrdMatch> = Vec::new();
+    for i in 0..toks.len() {
+        let Some(name) = ident(&toks[i]) else { continue };
+        let Some(&method) = ORDERING_METHODS.iter().find(|&&m| m == name) else { continue };
+        if i + 1 >= toks.len() || !is_punct(&toks[i + 1], '(') {
+            continue;
+        }
+        // Walk the balanced argument list looking for `partial_cmp`.
+        let mut depth = 0u32;
+        for t in &toks[i + 1..] {
+            if is_punct(t, '(') {
+                depth += 1;
+            } else if is_punct(t, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if ident(t) == Some("partial_cmp") {
+                out.push(FloatOrdMatch { method, line: t.line });
+            }
+        }
+    }
+    // Nested combinators can report the same `partial_cmp` token twice
+    // (once per enclosing argument list); one finding per site is enough.
+    out.sort_by_key(|m| m.line);
+    out.dedup_by_key(|m| m.line);
+    out
+}
+
+/// Line spans (inclusive) of `#[cfg(test)] mod … { … }` bodies.
+///
+/// detlint's core-module policy depends on this: in replay-core files,
+/// banned patterns may only be allowlisted when they sit inside a
+/// `#[cfg(test)]` module (e.g. the engine's perf-smoke timing) — never
+/// in code that can run during a replay.
+pub fn cfg_test_spans(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !starts_cfg_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7; // past `# [ cfg ( test ) ]`
+        // Skip any further attributes between the cfg and the item.
+        while j < toks.len() && is_punct(&toks[j], '#') {
+            j += 1;
+            if j < toks.len() && is_punct(&toks[j], '[') {
+                let mut depth = 0u32;
+                while j < toks.len() {
+                    if is_punct(&toks[j], '[') {
+                        depth += 1;
+                    } else if is_punct(&toks[j], ']') {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+        // `mod <name> {` — anything else under the attribute (a gated
+        // `use`, a gated fn) is not a module span.
+        if j + 2 < toks.len()
+            && ident(&toks[j]) == Some("mod")
+            && ident(&toks[j + 1]).is_some()
+            && is_punct(&toks[j + 2], '{')
+        {
+            let open = j + 2;
+            let mut depth = 0u32;
+            let mut k = open;
+            while k < toks.len() {
+                if is_punct(&toks[k], '{') {
+                    depth += 1;
+                } else if is_punct(&toks[k], '}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            let close_line = toks.get(k).map(|t| t.line).unwrap_or(u32::MAX);
+            spans.push((toks[open].line, close_line));
+            i = open + 1;
+        } else {
+            i = j;
+        }
+    }
+    spans
+}
+
+/// Does `toks[i]` begin exactly `# [ cfg ( test ) ]`?
+fn starts_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && is_punct(&toks[i], '#')
+        && is_punct(&toks[i + 1], '[')
+        && ident(&toks[i + 2]) == Some("cfg")
+        && is_punct(&toks[i + 3], '(')
+        && ident(&toks[i + 4]) == Some("test")
+        && is_punct(&toks[i + 5], ')')
+        && is_punct(&toks[i + 6], ']')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::detlint::lexer::lex;
+
+    #[test]
+    fn flags_wall_clock_and_env() {
+        let toks = lex(r#"
+            let t = std::time::Instant::now();
+            let v = std::env::var_os("X");
+            let s = SystemTime::UNIX_EPOCH;
+            let r = rand::thread_rng();
+        "#);
+        let pats: Vec<&str> = scan_nondet(&toks).iter().map(|m| m.pattern).collect();
+        assert_eq!(pats, vec!["instant-now", "std-env", "system-time", "thread-rng"]);
+    }
+
+    #[test]
+    fn flags_hash_collections_on_any_use() {
+        let toks = lex("use std::collections::HashMap;\nlet s: HashSet<u32> = HashSet::new();");
+        let ms = scan_nondet(&toks);
+        assert_eq!(ms.len(), 3);
+        assert!(ms.iter().all(|m| m.pattern == "hash-collection"));
+    }
+
+    #[test]
+    fn ignores_mentions_in_comments_and_strings() {
+        let toks = lex(r#"
+            // Instant::now() would be wrong here
+            let why = "std::env is banned; HashMap too";
+        "#);
+        assert!(scan_nondet(&toks).is_empty());
+    }
+
+    #[test]
+    fn plain_instant_type_annotation_is_not_a_call() {
+        // Only `Instant::now` is the nondeterminism; carrying an Instant
+        // (e.g. a deadline computed by an allowlisted caller) is not.
+        let toks = lex("fn wait_until(deadline: Instant) {}");
+        assert!(scan_nondet(&toks).is_empty());
+    }
+
+    #[test]
+    fn env_macro_is_not_std_env() {
+        let toks = lex(r#"let dir = env!("CARGO_MANIFEST_DIR");"#);
+        assert!(scan_nondet(&toks).is_empty());
+    }
+
+    #[test]
+    fn marks_matches_inside_cfg_test_modules() {
+        let toks = lex(
+            "fn live() { let t = Instant::now(); }\n\
+             #[cfg(test)]\nmod tests {\n    fn timed() { let t = Instant::now(); }\n}\n",
+        );
+        let ms = scan_nondet(&toks);
+        assert_eq!(ms.len(), 2);
+        assert!(!ms[0].in_test);
+        assert!(ms[1].in_test);
+    }
+
+    #[test]
+    fn cfg_test_span_skips_interleaved_attrs() {
+        let toks = lex("#[cfg(test)]\n#[allow(dead_code)]\nmod t {\n let x = 1;\n}\n");
+        assert_eq!(cfg_test_spans(&toks), vec![(3, 5)]);
+    }
+
+    #[test]
+    fn cfg_test_on_a_fn_is_not_a_module_span() {
+        let toks = lex("#[cfg(test)]\nfn helper() { let t = Instant::now(); }\n");
+        assert!(cfg_test_spans(&toks).is_empty());
+        assert!(!scan_nondet(&toks)[0].in_test);
+    }
+
+    #[test]
+    fn flags_partial_cmp_in_sort_by() {
+        let toks = lex("per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());");
+        let ms = scan_float_ordering(&toks);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].method, "sort_by");
+    }
+
+    #[test]
+    fn flags_min_by_and_max_by() {
+        let toks = lex(
+            "let lo = xs.iter().min_by(|a, b| a.partial_cmp(b).unwrap());\n\
+             let hi = xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap());",
+        );
+        assert_eq!(scan_float_ordering(&toks).len(), 2);
+    }
+
+    #[test]
+    fn total_cmp_comparators_pass() {
+        let toks = lex("rates.sort_by(f64::total_cmp); let m = xs.iter().min_by(f64::total_cmp);");
+        assert!(scan_float_ordering(&toks).is_empty());
+    }
+
+    #[test]
+    fn partial_ord_impls_pass() {
+        let toks = lex(
+            "impl PartialOrd for Node {\n\
+                 fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                     Some(self.cmp(other))\n\
+                 }\n\
+             }",
+        );
+        assert!(scan_float_ordering(&toks).is_empty());
+    }
+
+    #[test]
+    fn nested_combinators_report_once_per_site() {
+        let toks =
+            lex("xs.sort_by(|a, b| key(a).iter().min_by(|x, y| x.partial_cmp(y).unwrap()).cmp());");
+        assert_eq!(scan_float_ordering(&toks).len(), 1);
+    }
+}

@@ -1,0 +1,276 @@
+//! Rule family 2: the RNG stream-tag registry.
+//!
+//! Every independent randomness axis in the replay stack derives its RNG
+//! stream by XOR-ing the user seed with an 8-byte ASCII tag folded into
+//! a `u64` (`seed ^ u64::from_be_bytes(*b"fault_ev")`): arrivals own the
+//! raw seed, faults own `b"fault_ev"`, cells `b"cell_idx"`, model
+//! marking `b"mix_mark"`, decode lengths `b"decodlen"`. Disjointness of
+//! those streams is what lets PR 6/7/9 pin "arrivals are byte-identical
+//! with the axis on/off" — a new axis reusing an existing tag would
+//! alias two streams and silently break every such contract.
+//!
+//! The registry (`ci/detlint_tags.toml`) makes the tag set a committed,
+//! diffable artifact. The rule checks, over the scanned tree:
+//!
+//! 1. every registry entry is exactly 8 ASCII bytes and its declared
+//!    `stream` constant equals `u64::from_be_bytes(tag)`;
+//! 2. entries are pairwise distinct (names and constants);
+//! 3. every byte-string literal found in source is a registered tag —
+//!    an unregistered `b"…"` is how a colliding axis would first appear;
+//! 4. every registered tag is *live*: its bytes appear as a `b"…"`
+//!    literal or its constant appears as a numeric literal somewhere in
+//!    the tree (a stale registry entry is also a finding, so the
+//!    registry can't rot).
+
+use super::manifest::Entry;
+use std::collections::BTreeMap;
+
+/// A registered stream tag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TagSpec {
+    /// The 8-byte ASCII tag, e.g. `fault_ev`.
+    pub name: String,
+    /// `u64::from_be_bytes` of the tag, as committed in the registry.
+    pub stream: u64,
+    /// Manifest line, for error reporting.
+    pub line: u32,
+}
+
+/// A tag-rule problem, reported against the registry or a source site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TagProblem {
+    /// Human-readable description.
+    pub message: String,
+    /// Source line for in-source problems, 0 for registry-level ones.
+    pub line: u32,
+    /// Whether the problem lives in the registry (`true`) or in a
+    /// scanned source file (`false`, `line` is meaningful).
+    pub in_registry: bool,
+}
+
+/// Parse `[[tag]]` entries into specs, reporting malformed ones.
+pub fn load_registry(entries: &[Entry]) -> (Vec<TagSpec>, Vec<String>) {
+    let mut specs = Vec::new();
+    let mut errors = Vec::new();
+    for e in entries {
+        if e.table != "tag" {
+            errors
+                .push(format!("line {}: unexpected table [[{}]] in tag registry", e.line, e.table));
+            continue;
+        }
+        let name = match e.req_str("name") {
+            Ok(n) => n.to_string(),
+            Err(err) => {
+                errors.push(err);
+                continue;
+            }
+        };
+        let stream = match e.req_int("stream") {
+            Ok(s) => s,
+            Err(err) => {
+                errors.push(err);
+                continue;
+            }
+        };
+        specs.push(TagSpec { name, stream, line: e.line });
+    }
+    (specs, errors)
+}
+
+/// Check registry-internal invariants (tag shape, constant consistency,
+/// pairwise distinctness).
+pub fn check_registry(specs: &[TagSpec]) -> Vec<TagProblem> {
+    let mut problems = Vec::new();
+    let mut by_name: BTreeMap<&str, u32> = BTreeMap::new();
+    let mut by_stream: BTreeMap<u64, &str> = BTreeMap::new();
+    for s in specs {
+        if s.name.len() != 8 || !s.name.bytes().all(|b| b.is_ascii_graphic()) {
+            problems.push(registry_problem(format!(
+                "tag `{}` (registry line {}) must be exactly 8 printable ASCII bytes",
+                s.name, s.line
+            )));
+            continue;
+        }
+        let expect = u64::from_be_bytes(s.name.as_bytes().try_into().expect("len checked"));
+        if expect != s.stream {
+            problems.push(registry_problem(format!(
+                "tag `{}` (registry line {}): stream constant {:#018x} != \
+                 u64::from_be_bytes(tag) = {expect:#018x}",
+                s.name, s.line, s.stream
+            )));
+        }
+        if let Some(prev) = by_name.insert(&s.name, s.line) {
+            problems.push(registry_problem(format!(
+                "tag `{}` registered twice (registry lines {prev} and {})",
+                s.name, s.line
+            )));
+        }
+        if let Some(prev) = by_stream.insert(s.stream, &s.name) {
+            if prev != s.name {
+                problems.push(registry_problem(format!(
+                    "tags `{prev}` and `{}` share stream constant {:#018x}",
+                    s.name, s.stream
+                )));
+            }
+        }
+    }
+    problems
+}
+
+/// Check one file's byte-string literals against the registry, and
+/// record which registered tags it proves live.
+///
+/// `byte_strs` are `(bytes, line)` pairs from the lexer; `num_lits` are
+/// the file's numeric literals parsed as `u64` where possible.
+/// `live` accumulates the registry indices seen anywhere in the tree.
+pub fn check_file_tags(
+    specs: &[TagSpec],
+    byte_strs: &[(Vec<u8>, u32)],
+    num_lits: &[u64],
+    live: &mut [bool],
+) -> Vec<TagProblem> {
+    debug_assert_eq!(specs.len(), live.len());
+    let mut problems = Vec::new();
+    for (bytes, line) in byte_strs {
+        match specs.iter().position(|s| s.name.as_bytes() == bytes.as_slice()) {
+            Some(idx) => live[idx] = true,
+            None => {
+                let shown = String::from_utf8_lossy(bytes);
+                let shape = if bytes.len() == 8 {
+                    "is not in the stream-tag registry (ci/detlint_tags.toml)"
+                } else {
+                    "is not a registered 8-byte stream tag"
+                };
+                problems.push(TagProblem {
+                    message: format!("byte-string literal b\"{shown}\" {shape}"),
+                    line: *line,
+                    in_registry: false,
+                });
+            }
+        }
+    }
+    for &n in num_lits {
+        if let Some(idx) = specs.iter().position(|s| s.stream == n) {
+            live[idx] = true;
+        }
+    }
+    problems
+}
+
+/// After all files are scanned: report registry entries never seen in
+/// source (a tag that exists only on paper guards nothing).
+pub fn check_liveness(specs: &[TagSpec], live: &[bool]) -> Vec<TagProblem> {
+    specs
+        .iter()
+        .zip(live)
+        .filter(|&(_, &l)| !l)
+        .map(|(s, _)| {
+            registry_problem(format!(
+                "tag `{}` (registry line {}) appears nowhere in the scanned tree — \
+                 neither as b\"{}\" nor as constant {:#018x}",
+                s.name, s.line, s.name, s.stream
+            ))
+        })
+        .collect()
+}
+
+fn registry_problem(message: String) -> TagProblem {
+    TagProblem { message, line: 0, in_registry: true }
+}
+
+/// Parse a numeric-literal token text as `u64` (underscores stripped,
+/// `0x` hex or decimal, ignoring any type suffix it fails on).
+pub fn parse_u64_literal(text: &str) -> Option<u64> {
+    let digits = text.replace('_', "");
+    if let Some(hex) = digits.strip_prefix("0x").or_else(|| digits.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16).ok();
+    }
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> TagSpec {
+        TagSpec {
+            name: name.to_string(),
+            stream: u64::from_be_bytes(name.as_bytes().try_into().unwrap()),
+            line: 1,
+        }
+    }
+
+    #[test]
+    fn well_formed_registry_passes() {
+        let specs = vec![spec("fault_ev"), spec("cell_idx"), spec("decodlen"), spec("mix_mark")];
+        assert!(check_registry(&specs).is_empty());
+    }
+
+    #[test]
+    fn wrong_length_tag_flagged() {
+        let specs = vec![TagSpec { name: "short".into(), stream: 1, line: 3 }];
+        let p = check_registry(&specs);
+        assert_eq!(p.len(), 1);
+        assert!(p[0].message.contains("8 printable ASCII"));
+    }
+
+    #[test]
+    fn inconsistent_constant_flagged() {
+        let specs = vec![TagSpec { name: "fault_ev".into(), stream: 0xDEAD, line: 2 }];
+        let p = check_registry(&specs);
+        assert!(p[0].message.contains("stream constant"));
+    }
+
+    #[test]
+    fn duplicate_and_colliding_tags_flagged() {
+        let mut a = spec("fault_ev");
+        a.line = 1;
+        let mut b = spec("fault_ev");
+        b.line = 5;
+        let mut c = spec("cell_idx");
+        c.stream = a.stream; // collides with fault_ev's stream
+        let p = check_registry(&[a, b, c]);
+        assert!(p.iter().any(|x| x.message.contains("registered twice")));
+        assert!(p.iter().any(|x| x.message.contains("share stream constant")));
+    }
+
+    #[test]
+    fn unregistered_byte_literal_flagged_registered_is_live() {
+        let specs = vec![spec("fault_ev")];
+        let mut live = vec![false];
+        // Built from str literals: a bare b"newtag00" here would be an
+        // unregistered tag in this very file (rule 2 scans detlint too).
+        let strs =
+            vec![("fault_ev".as_bytes().to_vec(), 10), ("newtag00".as_bytes().to_vec(), 20)];
+        let p = check_file_tags(&specs, &strs, &[], &mut live);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].line, 20);
+        assert!(live[0]);
+    }
+
+    #[test]
+    fn constant_literal_marks_liveness() {
+        let specs = vec![spec("mix_mark")];
+        let mut live = vec![false];
+        let p = check_file_tags(&specs, &[], &[0x6D69_785F_6D61_726B], &mut live);
+        assert!(p.is_empty());
+        assert!(live[0]);
+        assert!(check_liveness(&specs, &live).is_empty());
+    }
+
+    #[test]
+    fn dead_registry_entry_flagged() {
+        let specs = vec![spec("fault_ev")];
+        let p = check_liveness(&specs, &[false]);
+        assert_eq!(p.len(), 1);
+        assert!(p[0].message.contains("appears nowhere"));
+    }
+
+    #[test]
+    fn u64_literal_forms() {
+        assert_eq!(parse_u64_literal("0x6665_6C6C"), Some(0x6665_6C6C));
+        assert_eq!(parse_u64_literal("42"), Some(42));
+        assert_eq!(parse_u64_literal("42u64"), None); // suffixes don't parse — fine
+        assert_eq!(parse_u64_literal("3.5"), None);
+    }
+}

@@ -4,7 +4,10 @@
 //! - [`roofline`] — arithmetic-intensity roofline for the Sunrise config
 //!   (where the memory wall sits, and why 1.8 TB/s clears it).
 //! - [`report`] — table renderers shared by the benches and examples.
+//! - [`detlint`] — the determinism static-analysis pass behind
+//!   `sunrise lint` (source-level proofs of the replay contracts).
 
 pub mod comparison;
+pub mod detlint;
 pub mod report;
 pub mod roofline;

@@ -19,6 +19,10 @@
 //! Not on any hot path. Differential tests pin its counts against the
 //! streaming replay; metric *values* differ only by histogram bucketing
 //! (log-spaced f64 here, log2 integer there).
+//!
+//! Frozen differential oracle: this whole file's digest is pinned in
+//! `ci/detlint_frozen.toml` (`sunrise lint` rule 3) — edits require
+//! re-blessing the manifest in the same diff.
 
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::MetricsSnapshot;

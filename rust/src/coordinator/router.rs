@@ -283,6 +283,7 @@ impl Router {
     }
 }
 
+// detlint:frozen-begin(scan-router)
 /// The **frozen linear-scan router** — the PR-4..7 implementation kept
 /// verbatim, with the O(n) least-loaded scan and O(n) health scans.
 ///
@@ -404,6 +405,7 @@ impl ScanRouter {
         self.inflight[replica]
     }
 }
+// detlint:frozen-end(scan-router)
 
 #[cfg(test)]
 mod tests {

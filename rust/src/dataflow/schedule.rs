@@ -18,6 +18,10 @@ use crate::dataflow::tiling::{plan, PoolLimits};
 use crate::memory::Ps;
 use crate::units::mac::MacArray;
 use crate::workloads::Network;
+// detlint hash-collection allowlist: the schedule cache is a pure
+// key→value memo (get/insert/len/clear below) that is never iterated,
+// so hash ordering cannot leak into any observable result, and the
+// O(1) lookup is the point of the cache.
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 

@@ -24,7 +24,8 @@
 //! - [`workloads`] — ResNet-50, MLP and transformer layer tables.
 //! - [`chip`] — the Sunrise chip model plus the comparison chips A/B/C.
 //! - [`scaling`] — process normalization (Tables V–VII) and cost (Table IV).
-//! - [`analysis`] — die-normalized benchmark computation and report tables.
+//! - [`analysis`] — die-normalized benchmark computation, report tables,
+//!   and the detlint determinism static-analysis pass (`sunrise lint`).
 //! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
 //! - [`coordinator`] — the inference-serving loop (batcher, router,
 //!   metrics) on two backends: threaded wall-clock and deterministic

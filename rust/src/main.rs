@@ -10,6 +10,7 @@
 //!   plan                    cheapest chip fleet for a (rate, p99) target
 //!   roofline                print ridge points + memory-wall summary
 //!   capacity                parameter-capacity projections (§VII)
+//!   lint                    determinism static analysis over rust/src (detlint)
 //!
 //! Examples: `sunrise simulate --model resnet50 --batch 8`
 //!           `sunrise sweep --model resnet50 --rates 500,1000,2000`
@@ -24,7 +25,7 @@
 //!           `sunrise plan --rate 3000 --p99 30 --horizon-years 3 \
 //!                         --model-mix resnet50=0.7,mlp=0.3`
 
-use sunrise::analysis::{report, roofline};
+use sunrise::analysis::{detlint, report, roofline};
 use sunrise::chip::sunrise::{SunriseChip, SunriseConfig};
 use sunrise::config;
 use sunrise::coordinator::batcher::BatcherConfig;
@@ -637,6 +638,31 @@ fn cmd_capacity() {
     }
 }
 
+fn cmd_lint(args: &[String]) {
+    let cli = Cli::new("sunrise lint", "determinism static analysis (detlint) over rust/src")
+        .opt("root", "", "repo root to lint (default: this crate's manifest dir)")
+        .flag("deny-all", "promote warning-level findings (manifest decay) to errors");
+    let a = cli.parse_slice_or_exit(args);
+    let root = if a.get("root").is_empty() {
+        // Compile-time constant — the committed CI posture lints the
+        // checkout that built the binary, with no runtime env reads.
+        env!("CARGO_MANIFEST_DIR").to_string()
+    } else {
+        a.get("root").to_string()
+    };
+    let mut cfg = detlint::LintConfig::repo_default(std::path::Path::new(&root));
+    cfg.deny_all = a.flag("deny-all");
+    match detlint::run_lint(&cfg) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.error_count() > 0 {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => usage_error(&format!("sunrise lint: {e}")),
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match argv.first().map(|s| s.as_str()) {
@@ -648,6 +674,7 @@ fn main() {
         Some("plan") => cmd_plan(&argv[1..]),
         Some("roofline") => cmd_roofline(),
         Some("capacity") => cmd_capacity(),
+        Some("lint") => cmd_lint(&argv[1..]),
         _ => {
             eprintln!(
                 "sunrise — 3D near-memory AI chip framework\n\n\
@@ -667,7 +694,10 @@ fn main() {
                  \x20            whose KV-cache footprints make memory capacity a binding\n\
                  \x20            constraint\n\
                  \x20 roofline   ridge points + memory-wall summary (Sunrise vs HBM baseline)\n\
-                 \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\n\
+                 \x20 capacity   parameter-capacity projections at future DRAM nodes (§VII)\n\
+                 \x20 lint       determinism static analysis (detlint): nondeterminism-source\n\
+                 \x20            ban, RNG stream-tag registry, frozen-baseline digests,\n\
+                 \x20            float-ordering lint (--deny-all for the CI posture)\n\n\
                  Every subcommand takes --help."
             );
             std::process::exit(2);

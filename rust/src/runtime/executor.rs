@@ -45,6 +45,9 @@ pub struct PjrtExecutor {
 // is constructed, moved ONCE into exactly one worker thread, and never
 // aliased or accessed concurrently — plain ownership transfer, which the
 // PJRT C API permits. Do not share a `PjrtExecutor` across threads.
+// This is the crate's one justified unsafe site; the workspace-level
+// `unsafe_code = "deny"` lint is scoped-allowed here only.
+#[allow(unsafe_code)]
 unsafe impl Send for PjrtExecutor {}
 
 impl PjrtExecutor {

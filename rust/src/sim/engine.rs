@@ -157,10 +157,12 @@ impl<E> Engine<E> {
     }
 }
 
+// detlint:frozen-begin(legacy-engine)
 /// The original closure-over-`BinaryHeap` engine, retained verbatim as the
 /// reference semantics for differential tests (and for one-off simulations
 /// where a typed event enum is not worth defining). Not on any hot path:
-/// it allocates one box per event.
+/// it allocates one box per event. Frozen differential oracle — digest
+/// pinned in `ci/detlint_frozen.toml`; edits require re-blessing there.
 pub mod legacy {
     use crate::sim::Time;
     use std::cmp::Reverse;
@@ -295,6 +297,7 @@ pub mod legacy {
         }
     }
 }
+// detlint:frozen-end(legacy-engine)
 
 #[cfg(test)]
 mod tests {

@@ -130,6 +130,9 @@ mod tests {
     /// piling onto the last one.
     #[test]
     fn consecutive_items_land_on_distinct_workers() {
+        // detlint hash-collection allowlist (test-only): the set is used
+        // purely for `.len()` cardinality — iteration order never matters
+        // — and `ThreadId` is not `Ord`, so `BTreeSet` can't replace it.
         use std::collections::HashSet;
         use std::thread::ThreadId;
         let items: Vec<u32> = (0..61).collect();

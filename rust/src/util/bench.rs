@@ -119,7 +119,7 @@ impl Bencher {
             }
             per_iter.push(t.elapsed().as_nanos() as f64 / batch as f64);
         }
-        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_iter.sort_by(f64::total_cmp);
         let m = Measurement {
             name: name.to_string(),
             min_ns: per_iter[0],

@@ -1,0 +1,10 @@
+//! Fixture: rule 1 — nondeterminism sources seeded in a file the suite
+//! configures as replay-core. Never compiled; read only by detlint.
+
+use std::collections::HashMap;
+
+pub fn naughty() -> u128 {
+    let t = std::time::Instant::now();
+    let _m: HashMap<u32, u32> = HashMap::new();
+    t.elapsed().as_nanos()
+}

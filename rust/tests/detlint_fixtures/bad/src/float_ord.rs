@@ -1,0 +1,10 @@
+//! Fixture: rule 4 — `partial_cmp` as an ordering-combinator key.
+//! Never compiled; read only by detlint.
+
+pub fn sort_rates(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn worst(xs: &[f64]) -> Option<&f64> {
+    xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap())
+}

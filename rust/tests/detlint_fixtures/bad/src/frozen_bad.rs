@@ -1,0 +1,7 @@
+//! Fixture: rule 3 — the region between the markers has drifted from
+//! the digest pinned in the fixture manifest (which blesses `{ 7 }`).
+//! Never compiled; read only by detlint.
+
+// detlint:frozen-begin(fixture-frozen)
+pub fn frozen_fn() -> u32 { 99 }
+// detlint:frozen-end(fixture-frozen)

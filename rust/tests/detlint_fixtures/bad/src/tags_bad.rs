@@ -1,0 +1,7 @@
+//! Fixture: rule 2 — an unregistered stream tag (`b"rogue_ax"` is not
+//! in the fixture registry, which instead lists a dead `dead_tag`).
+//! Never compiled; read only by detlint.
+
+pub fn rogue_stream(seed: u64) -> u64 {
+    seed ^ u64::from_be_bytes(*b"rogue_ax")
+}

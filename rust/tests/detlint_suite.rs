@@ -1,0 +1,154 @@
+//! Integration suite for `sunrise lint` (detlint).
+//!
+//! Two halves, mirroring the pass's contract:
+//!
+//! - **The live tree is clean.** `repo_default` over this checkout must
+//!   produce zero findings under `--deny-all` — this test is what makes
+//!   "the replay contracts hold at the source level" a property of every
+//!   commit rather than of the commit that introduced the lint.
+//! - **Seeded violations fire.** The fixture tree under
+//!   `rust/tests/detlint_fixtures/bad/` plants one violation per rule
+//!   family (plus one decay warning per manifest); each must be
+//!   reported. A lint whose failure modes are never exercised is just a
+//!   file walker.
+
+use std::path::Path;
+use sunrise::analysis::detlint::{run_lint, LintConfig, Severity};
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_config(deny_all: bool) -> LintConfig {
+    let root = repo_root().join("rust/tests/detlint_fixtures/bad");
+    LintConfig {
+        root,
+        src_dirs: vec!["src".to_string()],
+        allow_path: "ci/allow.toml".to_string(),
+        tags_path: "ci/tags.toml".to_string(),
+        frozen_path: "ci/frozen.toml".to_string(),
+        core_modules: vec!["src/core_nondet.rs".to_string()],
+        deny_all,
+    }
+}
+
+#[test]
+fn live_tree_is_clean_under_deny_all() {
+    let mut cfg = LintConfig::repo_default(repo_root());
+    cfg.deny_all = true;
+    let report = run_lint(&cfg).expect("live-tree lint must run");
+    assert!(
+        report.findings.is_empty(),
+        "live tree must lint clean; got:\n{}",
+        report.render()
+    );
+    // The walk actually covered the tree (guards against a silently
+    // wrong src_dir turning this test into a no-op).
+    assert!(report.files_scanned > 80, "only {} files scanned", report.files_scanned);
+}
+
+#[test]
+fn live_registry_lists_all_four_stream_tags() {
+    let text = std::fs::read_to_string(repo_root().join("ci/detlint_tags.toml"))
+        .expect("tag registry readable");
+    for tag in ["fault_ev", "cell_idx", "decodlen", "mix_mark"] {
+        assert!(text.contains(tag), "registry is missing stream tag `{tag}`");
+    }
+}
+
+#[test]
+fn fixture_fires_rule1_nondet_in_core_module() {
+    let report = run_lint(&fixture_config(false)).expect("fixture lint must run");
+    let nondet: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "nondet" && f.file == "src/core_nondet.rs")
+        .collect();
+    // Instant::now once, HashMap three times (use / annotation / ::new).
+    assert_eq!(nondet.len(), 4, "got:\n{}", report.render());
+    assert!(nondet.iter().all(|f| f.severity == Severity::Error));
+    assert!(
+        nondet.iter().all(|f| f.message.contains("replay-core")),
+        "core-module findings must cite the no-exceptions policy:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn fixture_fires_rule2_unregistered_tag() {
+    let report = run_lint(&fixture_config(false)).expect("fixture lint must run");
+    assert!(
+        report.findings.iter().any(|f| f.rule == "tags"
+            && f.file == "src/tags_bad.rs"
+            && f.severity == Severity::Error
+            && f.message.contains("rogue_ax")),
+        "unregistered b\"rogue_ax\" must be an error:\n{}",
+        report.render()
+    );
+    // The registered-but-unused fixture tag decays as a warning.
+    assert!(
+        report.findings.iter().any(|f| f.rule == "tags"
+            && f.severity == Severity::Warning
+            && f.message.contains("dead_tag")),
+        "dead registry entry must warn:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn fixture_fires_rule3_frozen_drift() {
+    let report = run_lint(&fixture_config(false)).expect("fixture lint must run");
+    assert!(
+        report.findings.iter().any(|f| f.rule == "frozen"
+            && f.file == "src/frozen_bad.rs"
+            && f.severity == Severity::Error
+            && f.message.contains("drifted")
+            && f.message.contains("re-bless")),
+        "frozen drift must be an error telling the author how to bless:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn fixture_fires_rule4_float_ordering() {
+    let report = run_lint(&fixture_config(false)).expect("fixture lint must run");
+    let hits: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "float-ord").collect();
+    // sort_by and max_by sites in float_ord.rs.
+    assert_eq!(hits.len(), 2, "got:\n{}", report.render());
+    assert!(hits.iter().all(|f| f.file == "src/float_ord.rs"
+        && f.severity == Severity::Error
+        && f.message.contains("total_cmp")));
+}
+
+#[test]
+fn fixture_stale_allowlist_entry_warns_and_deny_all_promotes() {
+    let relaxed = run_lint(&fixture_config(false)).expect("fixture lint must run");
+    let stale = relaxed
+        .findings
+        .iter()
+        .find(|f| f.rule == "allowlist" && f.message.contains("stale"))
+        .expect("stale allowlist entry must be reported");
+    assert_eq!(stale.severity, Severity::Warning);
+    assert!(relaxed.warning_count() >= 2, "stale entry + dead tag");
+
+    let strict = run_lint(&fixture_config(true)).expect("fixture lint must run");
+    assert_eq!(strict.warning_count(), 0, "--deny-all must leave no warnings");
+    assert_eq!(
+        strict.findings.len(),
+        relaxed.findings.len(),
+        "promotion must not add or drop findings"
+    );
+    assert!(strict.error_count() > relaxed.error_count());
+}
+
+#[test]
+fn report_is_deterministic_and_sorted() {
+    let a = run_lint(&fixture_config(true)).expect("fixture lint must run");
+    let b = run_lint(&fixture_config(true)).expect("fixture lint must run");
+    assert_eq!(a.render(), b.render(), "identical inputs must render identically");
+    let keys: Vec<_> = a.findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "findings must arrive sorted by (file, line, rule)");
+}
